@@ -1,0 +1,94 @@
+//! Bench: ablations over the design choices DESIGN.md calls out —
+//!
+//! * allocation policy: pooled LRM (default) vs the strict level-by-level
+//!   Algorithm 1.2 as printed;
+//! * greedy fill on/off (Algorithm 1.3's single remainder pass);
+//! * discrete engine vs continuous Algorithm 1.1 + discretization;
+//! * largest-remainder apportionment vs what a plain proportional floor
+//!   would do (captured as strict/no-fill, which degenerates to it).
+//!
+//! Reports both layout *quality* (C_max, L_max, efficiency, FIFO bits)
+//! and scheduling runtime for each variant on the paper workloads.
+
+use iris::benchkit::{black_box, section, Bencher};
+use iris::layout::metrics::LayoutMetrics;
+use iris::model::{helmholtz_problem, matmul_problem, paper_example, Problem};
+use iris::schedule::{
+    iris_continuous_layout, iris_layout_opts, LevelPolicy, ScheduleOptions,
+};
+use iris::util::table::{pct, Table};
+
+fn variants() -> Vec<(&'static str, Box<dyn Fn(&Problem) -> iris::layout::Layout>)> {
+    vec![
+        (
+            "pooled+fill (default)",
+            Box::new(|p: &Problem| iris_layout_opts(p, &ScheduleOptions::default())),
+        ),
+        (
+            "pooled, no fill",
+            Box::new(|p: &Problem| {
+                iris_layout_opts(
+                    p,
+                    &ScheduleOptions {
+                        policy: LevelPolicy::Pooled,
+                        greedy_fill: false,
+                    },
+                )
+            }),
+        ),
+        (
+            "strict (Alg 1.2 verbatim)",
+            Box::new(|p: &Problem| iris_layout_opts(p, &ScheduleOptions::paper_strict())),
+        ),
+        (
+            "strict + fill",
+            Box::new(|p: &Problem| {
+                iris_layout_opts(
+                    p,
+                    &ScheduleOptions {
+                        policy: LevelPolicy::Strict,
+                        greedy_fill: true,
+                    },
+                )
+            }),
+        ),
+        (
+            "continuous (Alg 1.1)",
+            Box::new(|p: &Problem| iris_continuous_layout(p)),
+        ),
+    ]
+}
+
+fn main() {
+    for (wname, p) in [
+        ("worked example", paper_example()),
+        ("helmholtz", helmholtz_problem()),
+        ("matmul(33,31)", matmul_problem(33, 31)),
+        ("matmul(30,19)", matmul_problem(30, 19)),
+    ] {
+        section(&format!("ablation quality — {wname}"));
+        let mut t = Table::new(vec!["variant", "C_max", "L_max", "B_eff", "FIFO bits"]);
+        for (name, f) in variants() {
+            let l = f(&p);
+            iris::layout::validate::validate(&l, &p).unwrap();
+            let m = LayoutMetrics::compute(&l, &p);
+            t.row(vec![
+                name.to_string(),
+                m.c_max.to_string(),
+                m.l_max.to_string(),
+                pct(m.b_eff),
+                m.fifo.total_bits.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+
+    section("ablation runtime — helmholtz");
+    let p = helmholtz_problem();
+    let b = Bencher::quick();
+    for (name, f) in variants() {
+        b.run(name, || {
+            black_box(f(&p));
+        });
+    }
+}

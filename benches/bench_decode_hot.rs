@@ -1,0 +1,41 @@
+//! Bench: the accelerator-side decode hot path (Listing-2 equivalent) —
+//! GB/s of payload extracted from bus lines, plus the cycle-accurate
+//! stream-decoder simulation cost.
+
+use iris::baselines;
+use iris::benchkit::{black_box, section, Bencher};
+use iris::coordinator::pipeline::synthetic_data;
+use iris::decode::{DecodePlan, StreamDecoder};
+use iris::layout::LayoutKind;
+use iris::model::{helmholtz_problem, matmul_problem, Problem};
+use iris::pack::PackPlan;
+
+fn bench_workload(name: &str, p: &Problem, kind: LayoutKind) {
+    let layout = baselines::generate(kind, p);
+    let plan = PackPlan::compile(&layout, p);
+    let data = synthetic_data(p, 7);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = plan.pack(&refs).unwrap();
+    let dp = DecodePlan::compile(&layout, p);
+    let bytes = p.total_bits() / 8;
+    Bencher::default()
+        .with_bytes(bytes)
+        .run(&format!("decode {name}/{} (plan)", kind.name()), || {
+            black_box(dp.decode(&buf).unwrap());
+        });
+    Bencher::quick()
+        .with_bytes(bytes)
+        .run(&format!("decode {name}/{} (II=1 stream sim)", kind.name()), || {
+            let sd = StreamDecoder::new(&layout, p);
+            black_box(sd.run(&buf).unwrap());
+        });
+}
+
+fn main() {
+    section("decode hot path");
+    let hp = helmholtz_problem();
+    bench_workload("helmholtz", &hp, LayoutKind::Iris);
+    let mp = matmul_problem(33, 31);
+    bench_workload("matmul(33,31)", &mp, LayoutKind::Iris);
+    bench_workload("matmul(33,31)", &mp, LayoutKind::DueAlignedNaive);
+}

@@ -1,0 +1,66 @@
+//! Bench: end-to-end transport pipeline (layout → pack → decode → verify)
+//! per workload and layout policy, plus server throughput under batching.
+//! (PJRT compute timing is reported by `examples/helmholtz_pipeline`; this
+//! bench isolates the coordinator's own costs.)
+
+use iris::benchkit::{black_box, section, Bencher};
+use iris::coordinator::pipeline::{run, synthetic_data, synthetic_problem, PipelineConfig, Workload};
+use iris::coordinator::server::{LayoutServer, TransferRequest};
+use iris::layout::LayoutKind;
+
+fn main() {
+    section("end-to-end transport pipeline");
+    let b = Bencher::quick();
+    for (wl, label) in [
+        (Workload::Helmholtz, "helmholtz"),
+        (Workload::MatMul { w_a: 33, w_b: 31 }, "matmul(33,31)"),
+    ] {
+        for kind in [LayoutKind::Iris, LayoutKind::DueAlignedNaive] {
+            let cfg = PipelineConfig {
+                xla_unpack_check: false,
+                ..PipelineConfig::new(wl, kind)
+            };
+            b.run(&format!("pipeline {label}/{}", kind.name()), || {
+                black_box(run(&cfg, None).unwrap());
+            });
+        }
+    }
+
+    section("multi-channel partitioning (helmholtz, LPT + per-channel iris)");
+    let hp = iris::model::helmholtz_problem();
+    for (k, c_max, l_max, eff) in iris::bus::partition::channel_sweep(&hp, 3) {
+        println!(
+            "k={k}: C_max={c_max} L_max={l_max} aggregate_eff={:.1}%",
+            eff * 100.0
+        );
+    }
+    b.run("partition helmholtz over 3 channels", || {
+        black_box(iris::bus::partition::partition_lpt(&hp, 3).unwrap());
+    });
+
+    section("server throughput (4 workers, batch 8, 64 synthetic requests)");
+    let stats = Bencher {
+        samples: 6,
+        sample_target_ns: 1.0, // one run per sample: server startup included
+        warmup_ns: 1.0,
+        bytes: None,
+    };
+    stats.run("serve 64 requests", || {
+        let server = LayoutServer::start(4, 8);
+        let rxs: Vec<_> = (0..64u64)
+            .map(|seed| {
+                let p = synthetic_problem(8, seed);
+                let data = synthetic_data(&p, seed);
+                server.submit(TransferRequest {
+                    problem: p,
+                    data,
+                    kind: LayoutKind::Iris,
+                })
+            })
+            .collect();
+        for rx in rxs {
+            black_box(rx.recv().unwrap().unwrap());
+        }
+        server.shutdown();
+    });
+}

@@ -1,0 +1,52 @@
+//! Bench: §5 read-module synthesis estimates (Listing 2) — regenerates
+//! the paper's latency/FF/LUT comparison and times codegen + estimation.
+
+use iris::baselines;
+use iris::benchkit::{black_box, section, Bencher};
+use iris::codegen::{c_host, hls_read, CodegenInput};
+use iris::hls;
+use iris::model::{helmholtz_problem, paper_example};
+use iris::schedule::iris_layout;
+use iris::util::table::Table;
+
+fn main() {
+    section("§5 read-module estimates — regenerated");
+    let p = paper_example();
+    let iris_l = iris_layout(&p);
+    let naive_l = baselines::element_naive(&p);
+    let ei = hls::estimate(&iris_l, &p);
+    let en = hls::estimate(&naive_l, &p);
+    let mut t = Table::new(vec!["module", "latency", "FF", "LUT", "fifo bits"]);
+    t.row(vec![
+        "iris (paper: 11/29/194)".to_string(),
+        ei.latency.to_string(),
+        ei.ff.to_string(),
+        ei.lut.to_string(),
+        ei.fifo_bits.to_string(),
+    ]);
+    t.row(vec![
+        "naive (paper: 43/54/452)".to_string(),
+        en.latency.to_string(),
+        en.ff.to_string(),
+        en.lut.to_string(),
+        en.fifo_bits.to_string(),
+    ]);
+    print!("{}", t.render());
+
+    section("codegen + estimation runtime");
+    let b = Bencher::quick();
+    b.run("hls::estimate (example layout)", || {
+        black_box(hls::estimate(&iris_l, &p));
+    });
+    b.run("codegen Listing 1 (C host)", || {
+        black_box(c_host::generate(&CodegenInput::new(&p, &iris_l, "pack")));
+    });
+    b.run("codegen Listing 2 (HLS read)", || {
+        black_box(hls_read::generate(&CodegenInput::new(&p, &iris_l, "read")));
+    });
+    let hp = helmholtz_problem();
+    let hl = iris_layout(&hp);
+    b.run("codegen Listing 2 (helmholtz, 696 cycles)", || {
+        black_box(hls_read::generate(&CodegenInput::new(&hp, &hl, "read")));
+    });
+}

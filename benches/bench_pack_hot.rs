@@ -1,0 +1,49 @@
+//! Bench: the host-side pack hot path (Listing-1 equivalent) — GB/s of
+//! payload packed into bus lines, against a memcpy roofline, for both
+//! paper workloads and both the optimized and reference packers.
+
+use iris::baselines;
+use iris::benchkit::{black_box, section, Bencher};
+use iris::coordinator::pipeline::synthetic_data;
+use iris::layout::LayoutKind;
+use iris::model::{helmholtz_problem, matmul_problem, Problem};
+use iris::pack::{pack_reference, PackPlan};
+
+fn bench_workload(name: &str, p: &Problem, kind: LayoutKind) {
+    let layout = baselines::generate(kind, p);
+    let plan = PackPlan::compile(&layout, p);
+    let data = synthetic_data(p, 7);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let bytes = p.total_bits() / 8;
+    let mut buf = plan.alloc_buffer();
+    let b = Bencher::default().with_bytes(bytes);
+    b.run(&format!("pack {name}/{} (optimized)", kind.name()), || {
+        buf.words_mut().fill(0);
+        plan.pack_into(&refs, &mut buf).unwrap();
+        black_box(&buf);
+    });
+    let b = Bencher::quick().with_bytes(bytes);
+    b.run(&format!("pack {name}/{} (reference)", kind.name()), || {
+        black_box(pack_reference(&plan, &refs).unwrap());
+    });
+}
+
+fn main() {
+    section("pack hot path");
+    let hp = helmholtz_problem();
+    bench_workload("helmholtz", &hp, LayoutKind::Iris);
+    bench_workload("helmholtz", &hp, LayoutKind::DueAlignedNaive);
+    let mp = matmul_problem(33, 31);
+    bench_workload("matmul(33,31)", &mp, LayoutKind::Iris);
+    let mp64 = matmul_problem(64, 64);
+    bench_workload("matmul(64,64)", &mp64, LayoutKind::Iris);
+
+    section("memcpy roofline (same payload)");
+    let bytes = hp.total_bits() as usize / 8;
+    let src = vec![0xA5u8; bytes];
+    let mut dst = vec![0u8; bytes];
+    Bencher::default().with_bytes(bytes as u64).run("memcpy helmholtz payload", || {
+        dst.copy_from_slice(black_box(&src));
+        black_box(&dst);
+    });
+}

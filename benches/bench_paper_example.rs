@@ -1,0 +1,34 @@
+//! Bench: the paper's worked example (§4, Figs. 3–5) — regenerates every
+//! figure metric and times the three layout algorithms on it.
+
+use iris::baselines;
+use iris::benchkit::{black_box, section, Bencher};
+use iris::eval::example::ExampleReport;
+use iris::model::paper_example;
+use iris::schedule::iris_layout;
+
+fn main() {
+    section("paper worked example — regenerated metrics (Figs 3-5)");
+    let report = ExampleReport::run();
+    print!("{}", report.summary());
+    print!(
+        "{}",
+        iris::eval::comparison_table("paper vs measured", &report.comparisons())
+    );
+
+    section("layout-algorithm runtime on the worked example");
+    let p = paper_example();
+    let b = Bencher::quick();
+    b.run("iris (discrete, pooled LRM)", || {
+        black_box(iris_layout(&p));
+    });
+    b.run("iris (continuous Alg 1.1)", || {
+        black_box(iris::schedule::iris_continuous_layout(&p));
+    });
+    b.run("element-naive (Fig 3)", || {
+        black_box(baselines::element_naive(&p));
+    });
+    b.run("packed-naive (Fig 4)", || {
+        black_box(baselines::packed_naive(&p));
+    });
+}

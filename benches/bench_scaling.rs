@@ -1,0 +1,43 @@
+//! Bench: scheduler scaling — Iris is O(n²)-ish in the number of arrays
+//! (the isomorphic problem in [8] is O(n²)); this bench verifies the
+//! practical scaling on synthetic problems up to thousands of arrays.
+
+use iris::benchkit::{black_box, section, Bencher};
+use iris::coordinator::pipeline::synthetic_problem;
+use iris::layout::metrics::LayoutMetrics;
+use iris::schedule::iris_layout;
+
+fn main() {
+    section("iris scheduler scaling (synthetic arrays, m=256)");
+    for n in [10usize, 50, 100, 500, 1000] {
+        let p = synthetic_problem(n, 42);
+        let total_elems: u64 = p.arrays.iter().map(|a| a.depth).sum();
+        let b = if n >= 500 {
+            Bencher {
+                samples: 6,
+                sample_target_ns: 30e6,
+                warmup_ns: 30e6,
+                bytes: None,
+            }
+        } else {
+            Bencher::quick()
+        };
+        let stats = b.run(&format!("iris schedule n={n} ({total_elems} elems)"), || {
+            black_box(iris_layout(&p));
+        });
+        let _ = stats;
+    }
+
+    section("layout quality at scale");
+    for n in [10usize, 100, 1000] {
+        let p = synthetic_problem(n, 42);
+        let l = iris_layout(&p);
+        let m = LayoutMetrics::compute(&l, &p);
+        println!(
+            "n={n:<5} C_max={:<7} lower_bound={:<7} eff={:.2}%",
+            m.c_max,
+            p.c_max_lower_bound(),
+            m.b_eff * 100.0
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Table 6 (Inverse Helmholtz, varied δ/W) and time the
+//! full sweep plus the single-layout scheduling cost.
+
+use iris::benchkit::{black_box, section, Bencher};
+use iris::eval::table6;
+use iris::model::helmholtz_problem;
+use iris::schedule::iris_layout;
+
+fn main() {
+    section("Table 6 — regenerated");
+    let pts = table6::run();
+    print!("{}", table6::render(&pts));
+    print!(
+        "{}",
+        iris::eval::comparison_table("paper vs measured", &table6::comparisons(&pts))
+    );
+
+    section("Table 6 — runtime");
+    let b = Bencher::quick();
+    b.run("full δ/W sweep (5 layouts + metrics)", || {
+        black_box(table6::run());
+    });
+    let p = helmholtz_problem();
+    b.run("iris schedule, helmholtz (2783 elems)", || {
+        black_box(iris_layout(&p));
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Table 7 (MatMul, varied element widths) and time the
+//! precision sweep — the DSE loop the paper motivates ("rapid design-space
+//! exploration while tuning the width of custom-precision data types").
+
+use iris::benchkit::{black_box, section, Bencher};
+use iris::eval::table7;
+use iris::model::matmul_problem;
+use iris::schedule::iris_layout;
+
+fn main() {
+    section("Table 7 — regenerated");
+    let pts = table7::run();
+    print!("{}", table7::render(&pts));
+    print!(
+        "{}",
+        iris::eval::comparison_table("paper vs measured", &table7::comparisons(&pts))
+    );
+
+    section("Table 7 — runtime");
+    let b = Bencher::quick();
+    b.run("full precision sweep (6 layouts + metrics)", || {
+        black_box(table7::run());
+    });
+    for (wa, wb) in table7::WIDTH_PAIRS {
+        let p = matmul_problem(wa, wb);
+        b.run(&format!("iris schedule, matmul ({wa},{wb})"), || {
+            black_box(iris_layout(&p));
+        });
+    }
+    // One DSE probe: 25 width pairs end to end (what a designer iterates).
+    b.run("width DSE probe: 5×5 pairs in [30,34]", || {
+        black_box(iris::dse::best_width_pair(matmul_problem, 30, 34));
+    });
+}

@@ -1,0 +1,61 @@
+//! Custom-precision design-space exploration (the paper's §1 motivation:
+//! "rapid design-space exploration while tuning the width of
+//! custom-precision data types").
+//!
+//! Reproduces Table 7 (naive vs Iris for (64,64), (33,31), (30,19)),
+//! runs the quantized matmul end to end through pack → bus → decode →
+//! dequantizing AOT kernel for each width pair, then sweeps a width range
+//! to find the best-packing precision on the 256-bit bus.
+//!
+//! Run: `cargo run --release --example matmul_precision_dse`
+//! (add `--no-xla` as an env IRIS_NO_XLA=1 to skip the PJRT stages)
+
+use iris::coordinator::pipeline::{run, PipelineConfig, Workload};
+use iris::dse;
+use iris::eval::table7;
+use iris::layout::LayoutKind;
+use iris::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // --- Table 7 reproduction -------------------------------------
+    let pts = table7::run();
+    println!("{}", table7::render(&pts));
+    println!(
+        "{}",
+        iris::eval::comparison_table("Table 7: paper vs measured", &table7::comparisons(&pts))
+    );
+
+    // --- end-to-end quantized matmul per width pair ----------------
+    let skip_xla = std::env::var_os("IRIS_NO_XLA").is_some();
+    let mut rt = if skip_xla {
+        None
+    } else {
+        Some(Runtime::new(Runtime::default_dir())?)
+    };
+    for (wa, wb) in table7::WIDTH_PAIRS {
+        let mut cfg = PipelineConfig::new(Workload::MatMul { w_a: wa, w_b: wb }, LayoutKind::Iris);
+        cfg.xla_unpack_check = !skip_xla;
+        let report = run(&cfg, rt.as_mut())?;
+        println!("{}", report.summary());
+        if !skip_xla {
+            assert!(report.ok(), "verification failed for ({wa},{wb})");
+        }
+    }
+
+    // --- width sweep: which precision packs best? ------------------
+    println!("\nwidth sweep on m=256 (Iris efficiency per (W_A, W_B)):");
+    let mut rows = Vec::new();
+    for w in [19u32, 24, 30, 31, 33, 40, 48, 64] {
+        let p = iris::model::matmul_problem(w, w);
+        let l = iris::schedule::iris_layout(&p);
+        let m = iris::layout::metrics::LayoutMetrics::compute(&l, &p);
+        rows.push((w, m.b_eff, m.c_max));
+    }
+    for (w, eff, c) in &rows {
+        println!("  W={w:>2}: eff {:>6.2}%  C_max {c}", eff * 100.0);
+    }
+    let (wa, wb, eff) = dse::best_width_pair(iris::model::matmul_problem, 30, 34);
+    println!("\nbest pair in [30,34]: ({wa},{wb}) at {:.2}% efficiency", eff * 100.0);
+    println!("matmul_precision_dse OK");
+    Ok(())
+}

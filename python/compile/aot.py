@@ -1,0 +1,178 @@
+"""AOT bridge: lower every L2 model to HLO **text** + write a manifest.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple1()``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Word-buffer capacities (u64 words) for the unpack artifacts. Generous
+# enough for every layout of the corresponding workload, including the
+# element-naive baseline (helmholtz: 2783 cycles x 4 words; matmul:
+# 1250 x 4). The Rust coordinator zero-pads to these static shapes.
+HELMHOLTZ_WORDS = 12288
+MATMUL_WORDS = 5120
+
+N = model.MATMUL_N
+H = model.HELMHOLTZ_N
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """(name, fn, [input ShapeDtypeStructs]) for every artifact."""
+    f32, f64, u64, i32 = jnp.float32, jnp.float64, jnp.uint64, jnp.int32
+    return [
+        (
+            "matmul25_f32",
+            model.matmul_f32,
+            [spec((N, N), f32), spec((N, N), f32)],
+        ),
+        (
+            "matmul25_dequant",
+            model.matmul_dequant,
+            [
+                spec((N * N,), u64),
+                spec((N * N,), u64),
+                spec((1,), u64),
+                spec((1,), u64),
+                spec((1,), f32),
+                spec((1,), f32),
+            ],
+        ),
+        (
+            "helmholtz11_f64",
+            model.inv_helmholtz,
+            [spec((H, H, H), f64), spec((H, H), f64), spec((H, H, H), f64)],
+        ),
+        (
+            "helmholtz11_from_bits",
+            model.inv_helmholtz_from_bits,
+            [spec((H**3,), u64), spec((H**2,), u64), spec((H**3,), u64)],
+        ),
+        (
+            "helmholtz11_batched8_f64",
+            model.inv_helmholtz_batched,
+            [
+                spec((8, H, H, H), f64),
+                spec((H, H), f64),
+                spec((8, H, H, H), f64),
+            ],
+        ),
+        # Read-module artifacts: one per (stream length, word capacity).
+        (
+            "unpack_1331_helmholtz",
+            model.unpack_words,
+            [
+                spec((HELMHOLTZ_WORDS,), u64),
+                spec((H**3,), i32),
+                spec((H**3,), i32),
+                spec((1,), u64),
+            ],
+        ),
+        (
+            "unpack_121_helmholtz",
+            model.unpack_words,
+            [
+                spec((HELMHOLTZ_WORDS,), u64),
+                spec((H**2,), i32),
+                spec((H**2,), i32),
+                spec((1,), u64),
+            ],
+        ),
+        (
+            "unpack_625_matmul",
+            model.unpack_words,
+            [
+                spec((MATMUL_WORDS,), u64),
+                spec((N * N,), i32),
+                spec((N * N,), i32),
+                spec((1,), u64),
+            ],
+        ),
+        (
+            "unpack_dequant_625_matmul",
+            model.unpack_dequant,
+            [
+                spec((MATMUL_WORDS,), u64),
+                spec((N * N,), i32),
+                spec((N * N,), i32),
+                spec((1,), u64),
+                spec((1,), jnp.float32),
+            ],
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, in_specs):
+    return jax.jit(fn).lower(*in_specs)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="artifact name filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, in_specs in artifact_specs():
+        if args.only and args.only != name:
+            continue
+        lowered = lower_artifact(fn, in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_specs = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)}
+            for o in lowered.out_info
+        ]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+                ],
+                "outputs": out_specs,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: tiled matrix multiply.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+accelerators are HLS pipelines on an Alveo u280; on TPU the matmul
+hot-spot maps to the MXU systolic array. We tile for VMEM with BlockSpec:
+each grid step holds one (BM, K) A-panel, one (K, BN) B-panel and one
+(BM, BN) accumulator in VMEM. For the paper's 25x25 workload a single
+padded 32x32 tile suffices; the same kernel serves larger shapes with a
+grid.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and correctness is validated against `ref.matmul_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid cell (i, j): O[i, j] = A[i, :] @ B[:, j] with the full K panels
+    resident in VMEM (paper-scale K is tiny; a K-grid with accumulation
+    would only pay extra HBM traffic here)."""
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _round_up(n, b):
+    return (n + b - 1) // b * b
+
+
+def matmul(a, b, block=32):
+    """Tiled Pallas matmul for arbitrary (M, K) @ (K, N) f32 inputs.
+
+    Shapes are padded up to the block size; the grid walks (M/BM, N/BN)
+    output tiles with the full K panels resident in VMEM (the paper-scale
+    problems have tiny K).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    bm = min(block, _round_up(m, 8))
+    bn = min(block, _round_up(n, 8))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, 8), _round_up(n, bn)
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]

@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness
+ground truth, checked by pytest + hypothesis at build time).
+
+Everything here is straight-line jax.numpy with no Pallas — slow but
+obviously correct.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain matrix multiply."""
+    return jnp.matmul(a, b)
+
+
+def apply3_ref(s, x):
+    """Apply operator `s` along each of the three axes of a rank-3 tensor:
+    t_{abc} = sum_{ijk} s_{ai} s_{bj} s_{ck} x_{ijk}.
+    """
+    return jnp.einsum("ai,bj,ck,ijk->abc", s, s, s, x)
+
+
+def inv_helmholtz_ref(f, s, d_inv):
+    """Inverse Helmholtz operator of the spectral-element method ([22] in
+    the paper): u = S^T ( D^{-1} * (S f) ) where S is applied along every
+    axis of the 3-D element tensor and D^{-1} is an elementwise scale.
+    """
+    t = apply3_ref(s, f)
+    w = t * d_inv
+    return apply3_ref(s.T, w)
+
+
+def sign_extend_ref(raw, width):
+    """Two's-complement sign extension of the low `width` bits of u64.
+
+    `width` may be a scalar or an array (broadcast); 1 <= width <= 64.
+    """
+    shift = (64 - jnp.asarray(width, dtype=jnp.uint64)).astype(jnp.uint64)
+    v = jnp.left_shift(raw, shift).astype(jnp.int64)
+    return jnp.right_shift(v, shift.astype(jnp.int64))
+
+
+def dequant_ref(raw, width, scale):
+    """Symmetric signed fixed-point dequantization: f = sext(raw, W)*scale."""
+    return sign_extend_ref(raw, width).astype(jnp.float32) * scale
+
+
+def unpack_ref(words, idx, off, width):
+    """Extract `width`-bit fields from a little-endian u64 word stream.
+
+    Element k lives at bit offset ``off[k]`` of word ``idx[k]`` and may
+    straddle into word ``idx[k]+1``. Matches rust `BitVec::get_bits`.
+    """
+    n_words = words.shape[0]
+    w0 = words[idx]
+    w1 = words[jnp.minimum(idx + 1, n_words - 1)]
+    off64 = off.astype(jnp.uint64)
+    lo = jnp.right_shift(w0, off64)
+    # (w1 << (64-off)) — guard the off == 0 case (shift by 64 is undefined).
+    hi_shift = (jnp.uint64(64) - off64) % jnp.uint64(64)
+    hi = jnp.where(off64 == jnp.uint64(0), jnp.uint64(0), jnp.left_shift(w1, hi_shift))
+    width64 = jnp.asarray(width, dtype=jnp.uint64)
+    mask = jnp.where(
+        width64 == jnp.uint64(64),
+        jnp.uint64(0xFFFFFFFFFFFFFFFF),
+        jnp.left_shift(jnp.uint64(1), width64 % jnp.uint64(64)) - jnp.uint64(1),
+    )
+    return (lo | hi) & mask

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: accelerator-side bus-word decode ("read module").
+
+This is the paper's Listing-2 data-read module re-thought for a vector
+unit: instead of an II=1 scalar pipeline with per-cycle if/else branches,
+the whole packed buffer is decoded in one vectorized sweep — every element
+k extracts bits [off[k], off[k]+W) of the little-endian u64 word stream at
+word idx[k], handling fields that straddle a word boundary with a
+two-word fetch. The (idx, off) tables are produced by the Rust coordinator
+from the layout (statically known, like the paper's generated module).
+
+`interpret=True` as required for CPU-PJRT execution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _unpack_kernel(words_ref, idx_ref, off_ref, width_ref, o_ref):
+    # NB: all scalar constants are built inside the kernel body — Pallas
+    # rejects closure-captured arrays.
+    u64 = jnp.uint64
+    words = words_ref[...]
+    idx = idx_ref[...]
+    off = off_ref[...].astype(u64)
+    width = width_ref[0].astype(u64)
+    n_words = words.shape[0]
+    w0 = words[idx]
+    w1 = words[jnp.minimum(idx + 1, n_words - 1)]
+    lo = jnp.right_shift(w0, off)
+    hi_shift = (u64(64) - off) % u64(64)
+    hi = jnp.where(off == u64(0), u64(0), jnp.left_shift(w1, hi_shift))
+    mask = jnp.where(
+        width == u64(64),
+        u64(0xFFFFFFFFFFFFFFFF),
+        jnp.left_shift(u64(1), width % u64(64)) - u64(1),
+    )
+    o_ref[...] = (lo | hi) & mask
+
+
+def unpack(words, idx, off, width):
+    """Decode `idx.shape[0]` elements of `width` bits from `words` (u64).
+
+    `width` is a rank-1 length-1 u64 array so one compiled artifact serves
+    every precision in a DSE sweep.
+    """
+    assert words.dtype == jnp.uint64
+    n = idx.shape[0]
+    return pl.pallas_call(
+        _unpack_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint64),
+        interpret=True,
+    )(words, idx.astype(jnp.int32), off.astype(jnp.int32), width.reshape(1).astype(jnp.uint64))
+
+
+def _dequant_kernel(raw_ref, width_ref, scale_ref, o_ref):
+    u64 = jnp.uint64
+    raw = raw_ref[...]
+    width = width_ref[0].astype(u64)
+    shift = (u64(64) - width).astype(u64)
+    v = jnp.left_shift(raw, shift).astype(jnp.int64)
+    v = jnp.right_shift(v, shift.astype(jnp.int64))
+    o_ref[...] = v.astype(jnp.float32) * scale_ref[0]
+
+
+def dequant(raw, width, scale):
+    """Symmetric signed fixed-point dequantization: sext(raw, W)·scale."""
+    n = raw.shape[0]
+    return pl.pallas_call(
+        _dequant_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(
+        raw.astype(jnp.uint64),
+        jnp.asarray(width).reshape(1).astype(jnp.uint64),
+        jnp.asarray(scale).reshape(1).astype(jnp.float32),
+    )

@@ -1,0 +1,12 @@
+"""Shared pytest config: 64-bit mode must be on before any jax import
+(the bus carries u64 words and f64 payloads), and the `compile` package
+must resolve whether pytest runs from the repo root or from python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

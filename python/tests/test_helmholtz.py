@@ -1,0 +1,72 @@
+"""L1 inverse-Helmholtz Pallas kernel vs the einsum oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import helmholtz as hk
+from compile.kernels import ref
+
+
+def _case(seed, n, dtype=jnp.float64):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    f = jax.random.normal(k1, (n, n, n)).astype(dtype)
+    s = jax.random.normal(k2, (n, n)).astype(dtype)
+    # Keep the diagonal away from zero like a real Helmholtz operator.
+    d_inv = (jax.random.uniform(k3, (n, n, n)) + 0.5).astype(dtype)
+    return f, s, d_inv
+
+
+def test_paper_geometry_11cubed():
+    f, s, d_inv = _case(0, 11)
+    got = hk.inv_helmholtz(f, s, d_inv)
+    np.testing.assert_allclose(got, ref.inv_helmholtz_ref(f, s, d_inv), rtol=1e-10)
+
+
+def test_identity_operator_reduces_to_scale():
+    n = 5
+    f, _, d_inv = _case(1, n)
+    eye = jnp.eye(n, dtype=jnp.float64)
+    got = hk.inv_helmholtz(f, eye, d_inv)
+    np.testing.assert_allclose(got, f * d_inv, rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 9))
+def test_arbitrary_sizes_match_ref(seed, n):
+    f, s, d_inv = _case(seed, n)
+    got = hk.inv_helmholtz(f, s, d_inv)
+    np.testing.assert_allclose(got, ref.inv_helmholtz_ref(f, s, d_inv), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), e=st.integers(1, 6))
+def test_batched_matches_per_element(seed, e):
+    n = 7
+    f, s, d_inv = _case(seed, n)
+    fb = jnp.stack([f * (i + 1) for i in range(e)])
+    db = jnp.stack([d_inv] * e)
+    got = hk.inv_helmholtz_batched(fb, s, db)
+    assert got.shape == (e, n, n, n)
+    for i in range(e):
+        np.testing.assert_allclose(
+            got[i], ref.inv_helmholtz_ref(fb[i], s, d_inv), rtol=1e-9, atol=1e-9
+        )
+
+
+def test_linearity():
+    """The operator is linear in f: H(a·f1 + f2) = a·H(f1) + H(f2)."""
+    f1, s, d_inv = _case(3, 6)
+    f2, _, _ = _case(4, 6)
+    lhs = hk.inv_helmholtz(2.5 * f1 + f2, s, d_inv)
+    rhs = 2.5 * hk.inv_helmholtz(f1, s, d_inv) + hk.inv_helmholtz(f2, s, d_inv)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+def test_f32_variant():
+    f, s, d_inv = _case(5, 8, dtype=jnp.float32)
+    got = hk.inv_helmholtz(f, s, d_inv)
+    np.testing.assert_allclose(
+        got, ref.inv_helmholtz_ref(f, s, d_inv), rtol=2e-3, atol=2e-3
+    )

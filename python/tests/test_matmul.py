@@ -1,0 +1,74 @@
+"""L1 matmul Pallas kernel vs the pure-jnp oracle (hypothesis sweeps
+shapes and value ranges)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def test_paper_shape_25x25():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = _rand(k1, (25, 25), jnp.float32)
+    b = _rand(k2, (25, 25), jnp.float32)
+    np.testing.assert_allclose(mk.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_identity_and_zeros():
+    eye = jnp.eye(25, dtype=jnp.float32)
+    x = jnp.arange(625, dtype=jnp.float32).reshape(25, 25)
+    np.testing.assert_allclose(mk.matmul(eye, x), x, atol=0)
+    np.testing.assert_allclose(
+        mk.matmul(jnp.zeros_like(x), x), jnp.zeros_like(x), atol=0
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_arbitrary_shapes_match_ref(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (m, k), jnp.float32)
+    b = _rand(k2, (k, n), jnp.float32)
+    got = mk.matmul(a, b)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), block=st.sampled_from([8, 16, 32, 64]))
+def test_block_size_invariance(seed, block):
+    """The tile size is a performance knob, never a numerics knob."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (40, 24), jnp.float32)
+    b = _rand(k2, (24, 40), jnp.float32)
+    np.testing.assert_allclose(
+        mk.matmul(a, b, block=block), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_f64_support():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a = _rand(k1, (25, 25), jnp.float64)
+    b = _rand(k2, (25, 25), jnp.float64)
+    np.testing.assert_allclose(mk.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-12)
+
+
+@pytest.mark.parametrize("bad", [((3, 4), (5, 6))])
+def test_shape_mismatch_raises(bad):
+    a = jnp.zeros(bad[0], jnp.float32)
+    b = jnp.zeros(bad[1], jnp.float32)
+    with pytest.raises(AssertionError):
+        mk.matmul(a, b)

@@ -1,0 +1,228 @@
+//! Accelerator wrappers + golden references.
+//!
+//! Each wrapper feeds decoded bus streams into the corresponding AOT
+//! artifact via the PJRT runtime; each golden function computes the same
+//! thing in plain Rust so end-to-end numerics can be verified without
+//! trusting the path under test.
+
+use crate::quant;
+use crate::runtime::{lit, Runtime};
+use anyhow::Result;
+
+pub const MATMUL_N: usize = 25;
+pub const HELMHOLTZ_N: usize = 11;
+
+// ---------------------------------------------------------------- golden
+
+/// Golden f64 matmul (row-major `n×n`).
+pub fn golden_matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            for j in 0..n {
+                out[i * n + j] += aik * b[k * n + j];
+            }
+        }
+    }
+    out
+}
+
+/// Apply `s` (n×n) along each axis of the rank-3 tensor `x` (n³):
+/// t_{abc} = Σ_{ijk} s_{ai} s_{bj} s_{ck} x_{ijk}.
+pub fn golden_apply3(s: &[f64], x: &[f64], n: usize) -> Vec<f64> {
+    let idx = |a: usize, b: usize, c: usize| (a * n + b) * n + c;
+    // axis 0
+    let mut t1 = vec![0.0; n * n * n];
+    for a in 0..n {
+        for i in 0..n {
+            let sai = s[a * n + i];
+            for b in 0..n {
+                for c in 0..n {
+                    t1[idx(a, b, c)] += sai * x[idx(i, b, c)];
+                }
+            }
+        }
+    }
+    // axis 1
+    let mut t2 = vec![0.0; n * n * n];
+    for b in 0..n {
+        for j in 0..n {
+            let sbj = s[b * n + j];
+            for a in 0..n {
+                for c in 0..n {
+                    t2[idx(a, b, c)] += sbj * t1[idx(a, j, c)];
+                }
+            }
+        }
+    }
+    // axis 2
+    let mut t3 = vec![0.0; n * n * n];
+    for c in 0..n {
+        for k in 0..n {
+            let sck = s[c * n + k];
+            for a in 0..n {
+                for b in 0..n {
+                    t3[idx(a, b, c)] += sck * t2[idx(a, b, k)];
+                }
+            }
+        }
+    }
+    t3
+}
+
+/// Golden inverse Helmholtz: u = Sᵀ(D^{-1} ⊙ (S f)).
+pub fn golden_inv_helmholtz(f: &[f64], s: &[f64], d: &[f64], n: usize) -> Vec<f64> {
+    let mut st = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            st[j * n + i] = s[i * n + j];
+        }
+    }
+    let t = golden_apply3(s, f, n);
+    let w: Vec<f64> = t.iter().zip(d.iter()).map(|(t, d)| t / d).collect();
+    golden_apply3(&st, &w, n)
+}
+
+// --------------------------------------------------------------- wrappers
+
+/// Run the f32 matmul artifact on raw row-major operands.
+pub fn run_matmul_f32(rt: &mut Runtime, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    let out = rt.exec(
+        "matmul25_f32",
+        &[
+            lit::f32_2d(a, MATMUL_N, MATMUL_N)?,
+            lit::f32_2d(b, MATMUL_N, MATMUL_N)?,
+        ],
+    )?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+/// Run the dequantizing matmul artifact on raw W-bit operand streams (as
+/// decoded from the bus).
+pub fn run_matmul_dequant(
+    rt: &mut Runtime,
+    a: &quant::Quantized,
+    b: &quant::Quantized,
+) -> Result<Vec<f32>> {
+    let out = rt.exec(
+        "matmul25_dequant",
+        &[
+            lit::u64_1d(&a.raw),
+            lit::u64_1d(&b.raw),
+            lit::u64_1d(&[a.width as u64]),
+            lit::u64_1d(&[b.width as u64]),
+            lit::f32_1d(&[a.scale as f32]),
+            lit::f32_1d(&[b.scale as f32]),
+        ],
+    )?;
+    Ok(out.to_vec::<f32>()?)
+}
+
+/// Run the Helmholtz artifact on the three decoded u64 bit streams
+/// (u = f, S, D in Table-5 order).
+pub fn run_helmholtz_from_bits(
+    rt: &mut Runtime,
+    f_bits: &[u64],
+    s_bits: &[u64],
+    d_bits: &[u64],
+) -> Result<Vec<f64>> {
+    let out = rt.exec(
+        "helmholtz11_from_bits",
+        &[
+            lit::u64_1d(f_bits),
+            lit::u64_1d(s_bits),
+            lit::u64_1d(d_bits),
+        ],
+    )?;
+    Ok(out.to_vec::<f64>()?)
+}
+
+/// Run an unpack artifact: decode `idx.len()` elements from the packed
+/// buffer words (zero-padded to the artifact capacity).
+pub fn run_unpack(
+    rt: &mut Runtime,
+    artifact: &str,
+    capacity_words: usize,
+    words: &[u64],
+    idx: &[i32],
+    off: &[i32],
+    width: u32,
+) -> Result<Vec<u64>> {
+    let out = rt.exec(
+        artifact,
+        &[
+            lit::u64_1d_padded(words, capacity_words)?,
+            lit::i32_1d(idx),
+            lit::i32_1d(off),
+            lit::u64_1d(&[width as u64]),
+        ],
+    )?;
+    Ok(out.to_vec::<u64>()?)
+}
+
+/// Artifact capacities (must match python/compile/aot.py).
+pub const HELMHOLTZ_WORDS: usize = 12288;
+pub const MATMUL_WORDS: usize = 5120;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_matmul_identity() {
+        let n = 4;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let x: Vec<f64> = (0..n * n).map(|i| i as f64).collect();
+        assert_eq!(golden_matmul(&eye, &x, n), x);
+    }
+
+    #[test]
+    fn golden_apply3_identity() {
+        let n = 3;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let x: Vec<f64> = (0..27).map(|i| i as f64 * 0.5).collect();
+        assert_eq!(golden_apply3(&eye, &x, n), x);
+    }
+
+    #[test]
+    fn golden_helmholtz_identity_operator() {
+        let n = 3;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let f: Vec<f64> = (0..27).map(|i| (i as f64).sin()).collect();
+        let d: Vec<f64> = (0..27).map(|i| 1.0 + (i % 5) as f64).collect();
+        let got = golden_inv_helmholtz(&f, &eye, &d, n);
+        for i in 0..27 {
+            assert!((got[i] - f[i] / d[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn golden_helmholtz_linearity() {
+        let n = 4;
+        let s: Vec<f64> = (0..n * n).map(|i| ((i * 7 % 11) as f64 - 5.0) * 0.1).collect();
+        let f1: Vec<f64> = (0..64).map(|i| (i as f64).cos()).collect();
+        let f2: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+        let d: Vec<f64> = (0..64).map(|i| 2.0 + (i % 3) as f64).collect();
+        let lhs = golden_inv_helmholtz(
+            &f1.iter().zip(&f2).map(|(a, b)| 2.0 * a + b).collect::<Vec<_>>(),
+            &s,
+            &d,
+            n,
+        );
+        let r1 = golden_inv_helmholtz(&f1, &s, &d, n);
+        let r2 = golden_inv_helmholtz(&f2, &s, &d, n);
+        for i in 0..64 {
+            assert!((lhs[i] - (2.0 * r1[i] + r2[i])).abs() < 1e-9);
+        }
+    }
+}

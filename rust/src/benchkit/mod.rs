@@ -1,0 +1,195 @@
+//! Criterion-style micro-benchmark harness (criterion itself is
+//! unavailable offline). Provides warm-up, automatic iteration-count
+//! calibration, robust statistics (median/MAD plus mean/σ), throughput
+//! reporting, and a `black_box` to defeat const-folding.
+//!
+//! Used by every `benches/bench_*.rs` target (`harness = false`).
+
+use crate::util::human_ns;
+use std::time::Instant;
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Statistics over one benchmark's samples (per-iteration nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub mad_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    /// Optional bytes processed per iteration, for GB/s reporting.
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Stats {
+    pub fn throughput_gbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.median_ns.max(1e-9))
+    }
+
+    /// Render a single criterion-like report line.
+    pub fn report_line(&self) -> String {
+        let mut line = format!(
+            "{:<44} time: [{} ± {}]  (mean {}, n={}×{})",
+            self.name,
+            human_ns(self.median_ns),
+            human_ns(self.mad_ns),
+            human_ns(self.mean_ns),
+            self.samples,
+            self.iters_per_sample
+        );
+        if let Some(gbs) = self.throughput_gbs() {
+            line.push_str(&format!("  thrpt: {gbs:.3} GB/s"));
+        }
+        line
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Target wall time per sample (ns).
+    pub sample_target_ns: f64,
+    /// Number of samples to collect.
+    pub samples: usize,
+    /// Warm-up time (ns).
+    pub warmup_ns: f64,
+    /// Optional bytes/iteration for throughput reporting.
+    pub bytes: Option<u64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Modest defaults keep full `cargo bench` runs in minutes while
+        // holding median jitter low; override per-bench when needed.
+        Bencher {
+            sample_target_ns: 20e6,
+            samples: 12,
+            warmup_ns: 200e6,
+            bytes: None,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher {
+            sample_target_ns: 5e6,
+            samples: 8,
+            warmup_ns: 50e6,
+            bytes: None,
+        }
+    }
+
+    pub fn with_bytes(mut self, bytes: u64) -> Bencher {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    /// Run `f` under this configuration and print + return the stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        // Warm-up and single-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        loop {
+            f();
+            warm_iters += 1;
+            if warm_start.elapsed().as_nanos() as f64 >= self.warmup_ns {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+        let iters = ((self.sample_target_ns / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let stats = summarize(name, &mut samples_ns, iters, self.bytes);
+        println!("{}", stats.report_line());
+        stats
+    }
+}
+
+fn summarize(name: &str, samples: &mut [f64], iters: u64, bytes: Option<u64>) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        0.5 * (samples[n / 2 - 1] + samples[n / 2])
+    };
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n.max(1) as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = if n % 2 == 1 {
+        devs[n / 2]
+    } else {
+        0.5 * (devs[n / 2 - 1] + devs[n / 2])
+    };
+    Stats {
+        name: name.to_string(),
+        samples: n,
+        iters_per_sample: iters,
+        mean_ns: mean,
+        median_ns: median,
+        stddev_ns: var.sqrt(),
+        mad_ns: mad,
+        min_ns: samples[0],
+        max_ns: samples[n - 1],
+        bytes_per_iter: bytes,
+    }
+}
+
+/// Group header for bench output, mirroring criterion's sections.
+pub fn section(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let b = Bencher {
+            sample_target_ns: 1e5,
+            samples: 5,
+            warmup_ns: 1e5,
+            bytes: Some(1024),
+        };
+        let mut acc = 0u64;
+        let s = b.run("benchkit-selftest", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+        assert!(s.throughput_gbs().unwrap() > 0.0);
+        assert_eq!(s.samples, 5);
+    }
+
+    #[test]
+    fn summarize_odd_even() {
+        let mut odd = vec![3.0, 1.0, 2.0];
+        let s = summarize("x", &mut odd, 1, None);
+        assert_eq!(s.median_ns, 2.0);
+        let mut even = vec![4.0, 1.0, 2.0, 3.0];
+        let s = summarize("x", &mut even, 1, None);
+        assert_eq!(s.median_ns, 2.5);
+    }
+}

@@ -1,0 +1,231 @@
+//! Bus / HBM channel substrate: the cycle-accurate transport model that
+//! stands in for the Alveo u280 HBM subsystem (DESIGN.md
+//! §Hardware-Adaptation).
+//!
+//! * [`BusStream`] — chunk a packed buffer into per-cycle m-bit lines.
+//! * [`HbmChannel`] — one pseudo-channel with clock, width, and
+//!   per-transaction overhead ("transactions should be as large as
+//!   possible to minimize the overhead per transaction", §2 [22]).
+//! * [`MultiChannel`] — stripe independent layouts over several channels
+//!   and aggregate achieved bandwidth, as HBM designs split arrays across
+//!   pseudo-channels.
+
+pub mod partition;
+
+use crate::util::bitvec::BitVec;
+
+/// Iterator over per-cycle bus lines of a packed buffer.
+pub struct BusStream<'a> {
+    buf: &'a BitVec,
+    m: u32,
+    cycles: u64,
+    next: u64,
+}
+
+impl<'a> BusStream<'a> {
+    pub fn new(buf: &'a BitVec, m: u32, cycles: u64) -> BusStream<'a> {
+        assert!(buf.len_bits() as u64 >= cycles * m as u64);
+        BusStream {
+            buf,
+            m,
+            cycles,
+            next: 0,
+        }
+    }
+
+    /// Words per line (u64-padded).
+    pub fn words_per_line(&self) -> usize {
+        ((self.m + 63) / 64) as usize
+    }
+}
+
+impl<'a> Iterator for BusStream<'a> {
+    type Item = Vec<u64>;
+
+    fn next(&mut self) -> Option<Vec<u64>> {
+        if self.next >= self.cycles {
+            return None;
+        }
+        let base = self.next * self.m as u64;
+        let mut line = Vec::with_capacity(self.words_per_line());
+        let mut got = 0u32;
+        while got < self.m {
+            let chunk = (self.m - got).min(64);
+            line.push(self.buf.get_bits((base + got as u64) as usize, chunk));
+            got += chunk;
+        }
+        self.next += 1;
+        Some(line)
+    }
+}
+
+/// One HBM pseudo-channel's timing model.
+#[derive(Debug, Clone, Copy)]
+pub struct HbmChannel {
+    /// Data width per beat in bits (256 for u280 @ 450 MHz, §2).
+    pub width_bits: u32,
+    /// Channel clock in MHz.
+    pub clock_mhz: f64,
+    /// Maximum beats per transaction (AXI burst length).
+    pub burst_beats: u32,
+    /// Fixed overhead cycles per transaction (address/turnaround).
+    pub overhead_cycles: u32,
+}
+
+impl HbmChannel {
+    /// Alveo u280 pseudo-channel: 256 bits @ 450 MHz (paper §2).
+    pub fn alveo_u280() -> HbmChannel {
+        HbmChannel {
+            width_bits: 256,
+            clock_mhz: 450.0,
+            burst_beats: 64,
+            overhead_cycles: 4,
+        }
+    }
+
+    /// Theoretical peak bandwidth in GB/s.
+    pub fn peak_gbs(&self) -> f64 {
+        self.width_bits as f64 / 8.0 * self.clock_mhz * 1e6 / 1e9
+    }
+
+    /// Cycles to transfer `beats` data beats, including per-transaction
+    /// overhead.
+    pub fn transfer_cycles(&self, beats: u64) -> u64 {
+        if beats == 0 {
+            return 0;
+        }
+        let txns = crate::util::ceil_div(beats, self.burst_beats as u64);
+        beats + txns * self.overhead_cycles as u64
+    }
+
+    /// Achieved bandwidth streaming `payload_bits` over `beats` beats.
+    pub fn achieved_gbs(&self, payload_bits: u64, beats: u64) -> f64 {
+        let cycles = self.transfer_cycles(beats);
+        if cycles == 0 {
+            return 0.0;
+        }
+        let seconds = cycles as f64 / (self.clock_mhz * 1e6);
+        payload_bits as f64 / 8.0 / seconds / 1e9
+    }
+
+    /// Wall-clock seconds for `beats` beats.
+    pub fn seconds(&self, beats: u64) -> f64 {
+        self.transfer_cycles(beats) as f64 / (self.clock_mhz * 1e6)
+    }
+}
+
+/// Aggregate view of a design striped over several pseudo-channels, each
+/// carrying its own layout.
+#[derive(Debug, Clone)]
+pub struct MultiChannel {
+    pub channel: HbmChannel,
+    /// Per-channel (payload_bits, beats).
+    pub loads: Vec<(u64, u64)>,
+}
+
+impl MultiChannel {
+    pub fn new(channel: HbmChannel) -> MultiChannel {
+        MultiChannel {
+            channel,
+            loads: Vec::new(),
+        }
+    }
+
+    pub fn add_layout(&mut self, payload_bits: u64, cycles: u64) -> &mut Self {
+        self.loads.push((payload_bits, cycles));
+        self
+    }
+
+    /// Makespan is set by the slowest channel.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.loads
+            .iter()
+            .map(|&(_, beats)| self.channel.transfer_cycles(beats))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Aggregate achieved bandwidth across channels (payload over the
+    /// slowest channel's wall clock).
+    pub fn aggregate_gbs(&self) -> f64 {
+        let total_bits: u64 = self.loads.iter().map(|&(p, _)| p).sum();
+        let cycles = self.makespan_cycles();
+        if cycles == 0 {
+            return 0.0;
+        }
+        let seconds = cycles as f64 / (self.channel.clock_mhz * 1e6);
+        total_bits as f64 / 8.0 / seconds / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::paper_example;
+    use crate::pack::PackPlan;
+    use crate::schedule::iris_layout;
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bus_stream_chunks_lines() {
+        let p = paper_example();
+        let l = iris_layout(&p);
+        let plan = PackPlan::compile(&l, &p);
+        let mut rng = Rng::new(1);
+        let arrays: Vec<Vec<u64>> = p
+            .arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect();
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = plan.pack(&refs).unwrap();
+        let lines: Vec<Vec<u64>> = BusStream::new(&buf, 8, plan.cycles).collect();
+        assert_eq!(lines.len(), 9);
+        for (t, line) in lines.iter().enumerate() {
+            assert_eq!(line.len(), 1);
+            assert_eq!(line[0], buf.get_bits(t * 8, 8));
+            assert!(line[0] < 256); // 8-bit lines
+        }
+    }
+
+    #[test]
+    fn wide_bus_lines_use_multiple_words() {
+        let buf = BitVec::zeros(512);
+        let s = BusStream::new(&buf, 256, 2);
+        assert_eq!(s.words_per_line(), 4);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn u280_peak_bandwidth() {
+        // 256 bit · 450 MHz = 14.4 GB/s per pseudo-channel; 32 channels
+        // give the headline 460 GB/s (§1).
+        let ch = HbmChannel::alveo_u280();
+        assert!((ch.peak_gbs() - 14.4).abs() < 0.01);
+        assert!((32.0 * ch.peak_gbs() - 460.8).abs() < 0.1);
+    }
+
+    #[test]
+    fn transaction_overhead_amortizes_with_burst_length() {
+        let ch = HbmChannel::alveo_u280();
+        let short = ch.achieved_gbs(256 * 8, 8); // one tiny transaction
+        let long = ch.achieved_gbs(256 * 512, 512); // long bursts
+        assert!(long > short);
+        assert!(long <= ch.peak_gbs());
+        // §2: large transactions approach peak.
+        assert!(long / ch.peak_gbs() > 0.9);
+    }
+
+    #[test]
+    fn multichannel_slowest_sets_makespan() {
+        let mut mc = MultiChannel::new(HbmChannel::alveo_u280());
+        mc.add_layout(256 * 100, 100);
+        mc.add_layout(256 * 500, 500);
+        assert_eq!(
+            mc.makespan_cycles(),
+            HbmChannel::alveo_u280().transfer_cycles(500)
+        );
+        assert!(mc.aggregate_gbs() > 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Code generation (paper §5): from a layout, emit
+//!
+//! * the host-side C pack function (Listing 1) — [`c_host`],
+//! * the accelerator-side HLS read module (Listing 2) — [`hls_read`],
+//! * an equivalent Rust pack function — [`rust_pack`] (demonstrates that
+//!   the same layout drives multiple host targets).
+//!
+//! All generators share run-length detection: consecutive cycles with an
+//! identical placement *pattern* (same arrays, lanes, widths — element
+//! indices advancing) collapse into loops, exactly like the `for` loop
+//! over cycles 7–8 in the paper's Listing 1.
+
+pub mod c_host;
+pub mod hls_read;
+pub mod rust_pack;
+
+use crate::layout::{Layout, Placement};
+use crate::model::Problem;
+
+/// The lane signature of one cycle: (array, bit_lo, width) triples in lane
+/// order. Two cycles with equal signatures differ only in element indices.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CyclePattern(pub Vec<(u32, u32, u32)>);
+
+impl CyclePattern {
+    pub fn of(placements: &[Placement]) -> CyclePattern {
+        let mut v: Vec<(u32, u32, u32)> = placements
+            .iter()
+            .map(|p| (p.array, p.bit_lo, p.width))
+            .collect();
+        v.sort_by_key(|&(_, lo, _)| lo);
+        CyclePattern(v)
+    }
+}
+
+/// A run of `len` consecutive cycles starting at `start`, all with the
+/// same pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Run {
+    pub start: u64,
+    pub len: u64,
+    pub pattern: CyclePattern,
+}
+
+/// Detect maximal runs of identical cycle patterns.
+pub fn detect_runs(layout: &Layout) -> Vec<Run> {
+    let mut runs: Vec<Run> = Vec::new();
+    for (t, ps) in layout.cycles.iter().enumerate() {
+        let pat = CyclePattern::of(ps);
+        match runs.last_mut() {
+            Some(run) if run.pattern == pat && run.start + run.len == t as u64 => {
+                run.len += 1;
+            }
+            _ => runs.push(Run {
+                start: t as u64,
+                len: 1,
+                pattern: pat,
+            }),
+        }
+    }
+    runs
+}
+
+/// Sanitize an array name into a C/Rust identifier.
+pub fn ident(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    if s.is_empty() || s.chars().next().unwrap().is_ascii_digit() {
+        s.insert(0, 'a');
+    }
+    s
+}
+
+/// Convenience bundle handed to the generators.
+pub struct CodegenInput<'a> {
+    pub problem: &'a Problem,
+    pub layout: &'a Layout,
+    pub runs: Vec<Run>,
+    /// Function/module base name.
+    pub name: String,
+}
+
+impl<'a> CodegenInput<'a> {
+    pub fn new(problem: &'a Problem, layout: &'a Layout, name: &str) -> CodegenInput<'a> {
+        CodegenInput {
+            problem,
+            layout,
+            runs: detect_runs(layout),
+            name: name.to_string(),
+        }
+    }
+
+    pub fn array_ident(&self, a: u32) -> String {
+        ident(&self.problem.arrays[a as usize].name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::model::paper_example;
+
+    #[test]
+    fn runs_collapse_identical_cycles() {
+        let p = paper_example();
+        // Packed naive: A×2, C×2, E×2, B×3(2+2+1), D×4 — the trailing
+        // partial cycles differ from the full ones.
+        let l = baselines::packed_naive(&p);
+        let runs = detect_runs(&l);
+        let total: u64 = runs.iter().map(|r| r.len).sum();
+        assert_eq!(total, l.n_cycles());
+        assert!(runs.len() < l.n_cycles() as usize, "some cycles must merge");
+        // First run: one full cycle of 4×A (the second A cycle holds the
+        // 1-element remainder, a different pattern). B's two full 2-element
+        // cycles merge into a length-2 run.
+        assert_eq!(runs[0].len, 1);
+        assert_eq!(runs[0].pattern.0.len(), 4);
+        assert!(runs.iter().any(|r| r.len == 2 && r.pattern.0.len() == 2));
+    }
+
+    #[test]
+    fn element_naive_runs_merge_per_array() {
+        let p = paper_example();
+        let l = baselines::element_naive(&p);
+        let runs = detect_runs(&l);
+        // One run per array (5 arrays): all cycles of an array share the
+        // single-placement pattern.
+        assert_eq!(runs.len(), 5);
+    }
+
+    #[test]
+    fn ident_sanitization() {
+        assert_eq!(ident("u"), "u");
+        assert_eq!(ident("my-array"), "my_array");
+        assert_eq!(ident("1bad"), "a1bad");
+        assert_eq!(ident(""), "a");
+    }
+}

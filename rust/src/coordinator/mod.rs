@@ -1,0 +1,66 @@
+//! L3 coordinator: the end-to-end streaming pipeline
+//! (pack → bus → decode → compute → verify) and a threaded layout/transfer
+//! server with request batching. Rust owns the event loop, process
+//! topology and metrics; compiled XLA artifacts are the only compute
+//! dependency (Python is build-time-only).
+
+pub mod pipeline;
+pub mod server;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free counters shared by the server workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub total_latency_ns: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record(&self, latency_ns: u64, ok: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_ns(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.total_latency_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} errors={} batches={} mean_latency={}",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            crate::util::human_ns(self.mean_latency_ns()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_accumulate() {
+        let m = Metrics::default();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record(100, true);
+        m.record(300, false);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+        assert!((m.mean_latency_ns() - 200.0).abs() < 1e-9);
+        assert!(m.summary().contains("completed=2"));
+    }
+}

@@ -1,0 +1,393 @@
+//! The end-to-end pipeline: real data → quantize → Iris/baseline layout →
+//! host pack → (simulated HBM) bus stream → II=1 decode with FIFO
+//! tracking → AOT-compiled accelerator compute via PJRT → numeric
+//! verification against golden Rust references.
+//!
+//! This is what `examples/helmholtz_pipeline.rs` drives and what
+//! EXPERIMENTS.md records as the end-to-end validation.
+
+use crate::accel;
+use crate::baselines;
+use crate::bus::HbmChannel;
+use crate::decode::{DecodePlan, StreamDecoder};
+use crate::layout::metrics::LayoutMetrics;
+use crate::layout::LayoutKind;
+use crate::model::{helmholtz_problem, matmul_problem, Problem};
+use crate::pack::PackPlan;
+use crate::quant;
+use crate::runtime::Runtime;
+use crate::testing::gen::random_elements;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Which paper workload to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Inverse Helmholtz (Table 5): u/S/D as f64 bit streams.
+    Helmholtz,
+    /// Matrix multiply (Table 5) with custom operand widths.
+    MatMul { w_a: u32, w_b: u32 },
+}
+
+impl Workload {
+    pub fn problem(&self) -> Problem {
+        match self {
+            Workload::Helmholtz => helmholtz_problem(),
+            Workload::MatMul { w_a, w_b } => matmul_problem(*w_a, *w_b),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Workload::Helmholtz => "helmholtz".into(),
+            Workload::MatMul { w_a, w_b } => format!("matmul({w_a},{w_b})"),
+        }
+    }
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub workload: Workload,
+    pub kind: LayoutKind,
+    pub seed: u64,
+    /// Cross-check the Rust decoder against the `unpack_*` XLA artifacts
+    /// (the accelerator-side read module lowered through Pallas).
+    pub xla_unpack_check: bool,
+}
+
+impl PipelineConfig {
+    pub fn new(workload: Workload, kind: LayoutKind) -> PipelineConfig {
+        PipelineConfig {
+            workload,
+            kind,
+            seed: 0x1215,
+            xla_unpack_check: true,
+        }
+    }
+}
+
+/// End-to-end results.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub workload: String,
+    pub layout: &'static str,
+    pub metrics: LayoutMetrics,
+    pub pack_ns: u64,
+    pub decode_ns: u64,
+    pub compute_ns: u64,
+    /// Decoded streams bit-exact vs the source arrays.
+    pub decode_exact: bool,
+    /// XLA unpack artifacts agree with the Rust decoder (None if skipped).
+    pub xla_unpack_exact: Option<bool>,
+    /// Max |err| between accelerator output and golden reference.
+    pub max_abs_err: f64,
+    /// Tolerance used for the verdict.
+    pub tolerance: f64,
+    /// Modeled wall-clock on one u280 HBM channel and achieved GB/s.
+    pub hbm_seconds: f64,
+    pub hbm_gbs: f64,
+}
+
+impl PipelineReport {
+    pub fn ok(&self) -> bool {
+        self.decode_exact
+            && self.xla_unpack_exact.unwrap_or(true)
+            && self.max_abs_err <= self.tolerance
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}]: C_max={} L_max={} eff={} | pack {} decode {} compute {} | \
+             decode_exact={} xla_unpack={:?} max_err={:.2e} (tol {:.1e}) | \
+             HBM: {:.1} µs @ {:.2} GB/s",
+            self.workload,
+            self.layout,
+            self.metrics.c_max,
+            self.metrics.l_max,
+            crate::util::table::pct(self.metrics.b_eff),
+            crate::util::human_ns(self.pack_ns as f64),
+            crate::util::human_ns(self.decode_ns as f64),
+            crate::util::human_ns(self.compute_ns as f64),
+            self.decode_exact,
+            self.xla_unpack_exact,
+            self.max_abs_err,
+            self.tolerance,
+            self.hbm_seconds * 1e6,
+            self.hbm_gbs,
+        )
+    }
+}
+
+/// Run the full pipeline. `rt = None` skips the PJRT compute+unpack
+/// stages (pure transport validation).
+pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<PipelineReport> {
+    let problem = cfg.workload.problem();
+    let mut rng = Rng::new(cfg.seed);
+
+    // ------------------------------------------------ source data
+    // Real values for each array; the bus carries their raw bit streams.
+    let (raw_arrays, real_arrays, scales): (Vec<Vec<u64>>, Vec<Vec<f64>>, Vec<f64>) =
+        match cfg.workload {
+            Workload::Helmholtz => {
+                let n3 = accel::HELMHOLTZ_N.pow(3);
+                let n2 = accel::HELMHOLTZ_N.pow(2);
+                let f: Vec<f64> = (0..n3).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+                let s: Vec<f64> = (0..n2).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+                let d: Vec<f64> = (0..n3).map(|_| rng.f64_range(0.5, 2.0)).collect();
+                let raw = vec![
+                    quant::f64_to_bits(&f),
+                    quant::f64_to_bits(&s),
+                    quant::f64_to_bits(&d),
+                ];
+                (raw, vec![f, s, d], vec![1.0, 1.0, 1.0])
+            }
+            Workload::MatMul { w_a, w_b } => {
+                let vals = |rng: &mut Rng| -> Vec<f64> {
+                    (0..625).map(|_| rng.f64_range(-1.0, 1.0)).collect()
+                };
+                let (af, bf) = (vals(&mut rng), vals(&mut rng));
+                if w_a == 64 && w_b == 64 {
+                    (
+                        vec![quant::f64_to_bits(&af), quant::f64_to_bits(&bf)],
+                        vec![af, bf],
+                        vec![1.0, 1.0],
+                    )
+                } else {
+                    let qa = quant::quantize(&af, w_a);
+                    let qb = quant::quantize(&bf, w_b);
+                    // Golden reference uses the dequantized values so the
+                    // only residual error is f32-vs-f64 compute.
+                    let adq = quant::dequantize(&qa);
+                    let bdq = quant::dequantize(&qb);
+                    (
+                        vec![qa.raw.clone(), qb.raw.clone()],
+                        vec![adq, bdq],
+                        vec![qa.scale, qb.scale],
+                    )
+                }
+            }
+        };
+
+    // ------------------------------------------------ layout + pack
+    let layout = baselines::generate(cfg.kind, &problem);
+    crate::layout::validate::validate(&layout, &problem)?;
+    let metrics = LayoutMetrics::compute(&layout, &problem);
+    let plan = PackPlan::compile(&layout, &problem);
+    let refs: Vec<&[u64]> = raw_arrays.iter().map(|v| v.as_slice()).collect();
+    let t0 = Instant::now();
+    let buf = plan.pack(&refs)?;
+    let pack_ns = t0.elapsed().as_nanos() as u64;
+
+    // ------------------------------------------------ bus model
+    let channel = HbmChannel::alveo_u280();
+    let beats = metrics.c_max; // one layout cycle = one 256-bit beat
+    let hbm_seconds = channel.seconds(beats);
+    let hbm_gbs = channel.achieved_gbs(problem.total_bits(), beats);
+
+    // ------------------------------------------------ decode (II=1 sim)
+    let t1 = Instant::now();
+    let dp = DecodePlan::compile(&layout, &problem);
+    let decoded = dp.decode(&buf)?;
+    let decode_ns = t1.elapsed().as_nanos() as u64;
+    let decode_exact = decoded == raw_arrays;
+    // Cycle-accurate stream decoder must agree with the static analysis.
+    let sd = StreamDecoder::new(&layout, &problem);
+    let trace = sd.run(&buf)?;
+    sd.verify_against_analysis(&trace)?;
+    if trace.streams != raw_arrays {
+        bail!("stream decoder produced wrong element order");
+    }
+
+    // ------------------------------------------------ XLA unpack check
+    let mut xla_unpack_exact = None;
+    if cfg.xla_unpack_check {
+        if let Some(rt) = rt.as_deref_mut() {
+            let mut all_ok = true;
+            for (a, raw) in raw_arrays.iter().enumerate() {
+                let (idx, off) = dp.word_tables(a);
+                let (artifact, cap) = match cfg.workload {
+                    Workload::Helmholtz => {
+                        if raw.len() == 121 {
+                            ("unpack_121_helmholtz", accel::HELMHOLTZ_WORDS)
+                        } else {
+                            ("unpack_1331_helmholtz", accel::HELMHOLTZ_WORDS)
+                        }
+                    }
+                    Workload::MatMul { .. } => ("unpack_625_matmul", accel::MATMUL_WORDS),
+                };
+                let got = accel::run_unpack(
+                    rt,
+                    artifact,
+                    cap,
+                    buf.words(),
+                    &idx,
+                    &off,
+                    problem.arrays[a].width,
+                )?;
+                all_ok &= &got == raw;
+            }
+            xla_unpack_exact = Some(all_ok);
+        }
+    }
+
+    // ------------------------------------------------ compute + verify
+    let (compute_ns, max_abs_err, tolerance) = if let Some(rt) = rt.as_deref_mut() {
+        match cfg.workload {
+            Workload::Helmholtz => {
+                let t2 = Instant::now();
+                let got = accel::run_helmholtz_from_bits(rt, &decoded[0], &decoded[1], &decoded[2])?;
+                let ns = t2.elapsed().as_nanos() as u64;
+                let want = accel::golden_inv_helmholtz(
+                    &real_arrays[0],
+                    &real_arrays[1],
+                    &real_arrays[2],
+                    accel::HELMHOLTZ_N,
+                );
+                let err = max_err(&got, &want);
+                (ns, err, 1e-9)
+            }
+            Workload::MatMul { w_a, w_b } => {
+                let qa = quant::Quantized {
+                    width: w_a,
+                    scale: scales[0],
+                    raw: decoded[0].clone(),
+                };
+                let qb = quant::Quantized {
+                    width: w_b,
+                    scale: scales[1],
+                    raw: decoded[1].clone(),
+                };
+                let t2 = Instant::now();
+                let got = if w_a == 64 && w_b == 64 {
+                    // 64-bit path: bit-exact f64 transport, f32 compute.
+                    let a32: Vec<f32> =
+                        real_arrays[0].iter().map(|&v| v as f32).collect();
+                    let b32: Vec<f32> =
+                        real_arrays[1].iter().map(|&v| v as f32).collect();
+                    accel::run_matmul_f32(rt, &a32, &b32)?
+                } else {
+                    accel::run_matmul_dequant(rt, &qa, &qb)?
+                };
+                let ns = t2.elapsed().as_nanos() as u64;
+                let want64 =
+                    accel::golden_matmul(&real_arrays[0], &real_arrays[1], accel::MATMUL_N);
+                let got64: Vec<f64> = got.iter().map(|&v| v as f64).collect();
+                let err = max_err(&got64, &want64);
+                // f32 accumulate over K=25 of O(1) values: generous bound.
+                (ns, err, 5e-4)
+            }
+        }
+    } else {
+        (0, 0.0, f64::INFINITY)
+    };
+
+    Ok(PipelineReport {
+        workload: cfg.workload.name(),
+        layout: cfg.kind.name(),
+        metrics,
+        pack_ns,
+        decode_ns,
+        compute_ns,
+        decode_exact,
+        xla_unpack_exact,
+        max_abs_err,
+        tolerance,
+        hbm_seconds,
+        hbm_gbs,
+    })
+}
+
+fn max_err(got: &[f64], want: &[f64]) -> f64 {
+    got.iter()
+        .zip(want.iter())
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Synthetic stress workload: many arrays with random widths/dues on a
+/// 256-bit bus — used by the server example and the scaling bench.
+pub fn synthetic_problem(n_arrays: usize, seed: u64) -> Problem {
+    let mut rng = Rng::new(seed);
+    let arrays = (0..n_arrays)
+        .map(|i| {
+            let width = rng.range_u32(4, 64);
+            let depth = rng.range_u64(16, 512);
+            let due = rng.range_u64(1, 400);
+            crate::model::ArraySpec::new(&format!("arr{i}"), width, depth, due)
+        })
+        .collect();
+    Problem::new(crate::model::BusConfig::alveo_u280(), arrays).unwrap()
+}
+
+/// Random per-array data for a problem (raw W-bit values).
+pub fn synthetic_data(problem: &Problem, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    problem
+        .arrays
+        .iter()
+        .map(|a| random_elements(&mut rng, a.width, a.depth))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_only_pipeline_all_workloads_all_layouts() {
+        for wl in [
+            Workload::Helmholtz,
+            Workload::MatMul { w_a: 64, w_b: 64 },
+            Workload::MatMul { w_a: 33, w_b: 31 },
+            Workload::MatMul { w_a: 30, w_b: 19 },
+        ] {
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PackedNaive,
+            ] {
+                let cfg = PipelineConfig {
+                    xla_unpack_check: false,
+                    ..PipelineConfig::new(wl, kind)
+                };
+                let r = run(&cfg, None).unwrap();
+                assert!(r.decode_exact, "{}", r.summary());
+            }
+        }
+    }
+
+    #[test]
+    fn iris_pipeline_beats_naive_on_bus_time() {
+        let iris = run(
+            &PipelineConfig {
+                xla_unpack_check: false,
+                ..PipelineConfig::new(Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::Iris)
+            },
+            None,
+        )
+        .unwrap();
+        let naive = run(
+            &PipelineConfig {
+                xla_unpack_check: false,
+                ..PipelineConfig::new(
+                    Workload::MatMul { w_a: 33, w_b: 31 },
+                    LayoutKind::DueAlignedNaive,
+                )
+            },
+            None,
+        )
+        .unwrap();
+        assert!(iris.hbm_seconds < naive.hbm_seconds);
+        assert!(iris.hbm_gbs > naive.hbm_gbs);
+    }
+
+    #[test]
+    fn synthetic_problem_valid() {
+        let p = synthetic_problem(20, 9);
+        assert_eq!(p.arrays.len(), 20);
+        let data = synthetic_data(&p, 9);
+        assert_eq!(data.len(), 20);
+    }
+}

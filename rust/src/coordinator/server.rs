@@ -1,0 +1,218 @@
+//! Threaded layout/transfer server: the serving face of the coordinator.
+//!
+//! Clients submit [`TransferRequest`]s (a problem plus its data); worker
+//! threads batch greedily (dynamic batching: drain whatever is queued, up
+//! to `max_batch`), compute the Iris layout, pack, stream-decode, and
+//! return per-request [`TransferResponse`]s with layout metrics and
+//! modeled HBM timing. std::thread + mpsc stand in for tokio (offline
+//! environment; see DESIGN.md).
+
+use super::Metrics;
+use crate::bus::HbmChannel;
+use crate::decode::DecodePlan;
+use crate::layout::metrics::LayoutMetrics;
+use crate::layout::LayoutKind;
+use crate::model::Problem;
+use crate::pack::PackPlan;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One transfer job.
+pub struct TransferRequest {
+    pub problem: Problem,
+    pub data: Vec<Vec<u64>>,
+    pub kind: LayoutKind,
+}
+
+/// Result returned to the submitter.
+#[derive(Debug)]
+pub struct TransferResponse {
+    pub c_max: u64,
+    pub l_max: i64,
+    pub b_eff: f64,
+    pub decode_exact: bool,
+    pub hbm_seconds: f64,
+    pub latency_ns: u64,
+}
+
+type Job = (TransferRequest, Sender<Result<TransferResponse>>);
+
+/// The server: worker pool + shared queue + metrics.
+pub struct LayoutServer {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub max_batch: usize,
+}
+
+impl LayoutServer {
+    /// Spawn `n_workers` workers with the given batching cap.
+    pub fn start(n_workers: usize, max_batch: usize) -> LayoutServer {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let metrics = Arc::clone(&metrics);
+                std::thread::spawn(move || worker_loop(rx, metrics, max_batch))
+            })
+            .collect();
+        LayoutServer {
+            tx: Some(tx),
+            workers,
+            metrics,
+            max_batch,
+        }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: TransferRequest) -> Receiver<Result<TransferResponse>> {
+        self.metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send((req, rtx))
+            .expect("workers alive");
+        rrx
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, metrics: Arc<Metrics>, max_batch: usize) {
+    loop {
+        // Dynamic batching: block for one job, then greedily drain the
+        // queue up to max_batch.
+        let mut batch: Vec<Job> = Vec::new();
+        {
+            let guard = rx.lock().expect("queue lock");
+            match guard.recv() {
+                Ok(job) => batch.push(job),
+                Err(_) => return, // queue closed
+            }
+            while batch.len() < max_batch {
+                match guard.try_recv() {
+                    Ok(job) => batch.push(job),
+                    Err(_) => break,
+                }
+            }
+        }
+        metrics
+            .batches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        for (req, resp_tx) in batch {
+            let t0 = Instant::now();
+            let result = process(&req);
+            let latency = t0.elapsed().as_nanos() as u64;
+            metrics.record(latency, result.is_ok());
+            let result = result.map(|mut r| {
+                r.latency_ns = latency;
+                r
+            });
+            let _ = resp_tx.send(result);
+        }
+    }
+}
+
+fn process(req: &TransferRequest) -> Result<TransferResponse> {
+    let layout = crate::baselines::generate(req.kind, &req.problem);
+    crate::layout::validate::validate(&layout, &req.problem)?;
+    let metrics = LayoutMetrics::compute(&layout, &req.problem);
+    let plan = PackPlan::compile(&layout, &req.problem);
+    let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
+    let buf = plan.pack(&refs)?;
+    let decoded = DecodePlan::compile(&layout, &req.problem).decode(&buf)?;
+    let channel = HbmChannel::alveo_u280();
+    Ok(TransferResponse {
+        c_max: metrics.c_max,
+        l_max: metrics.l_max,
+        b_eff: metrics.b_eff,
+        decode_exact: decoded == req.data,
+        hbm_seconds: channel.seconds(metrics.c_max),
+        latency_ns: 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{synthetic_data, synthetic_problem};
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let server = LayoutServer::start(4, 8);
+        let mut rxs = Vec::new();
+        for seed in 0..24u64 {
+            let p = synthetic_problem(6, seed);
+            let data = synthetic_data(&p, seed);
+            rxs.push(server.submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+            }));
+        }
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert!(resp.decode_exact);
+            assert!(resp.b_eff > 0.0 && resp.b_eff <= 1.0);
+        }
+        assert_eq!(
+            server
+                .metrics
+                .completed
+                .load(std::sync::atomic::Ordering::Relaxed),
+            24
+        );
+        assert_eq!(
+            server
+                .metrics
+                .errors
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_counter_advances() {
+        let server = LayoutServer::start(1, 4);
+        let mut rxs = Vec::new();
+        for seed in 0..8u64 {
+            let p = synthetic_problem(3, seed);
+            let data = synthetic_data(&p, seed);
+            rxs.push(server.submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+            }));
+        }
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let batches = server
+            .metrics
+            .batches
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(batches >= 1 && batches <= 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let server = LayoutServer::start(2, 2);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,324 @@
+//! Accelerator-side decoding (paper §5, "Accelerator-Side Decoding",
+//! Listing 2): interpret the packed buffer back into per-array element
+//! streams, and simulate the II=1 read module with its shift-register
+//! FIFOs to verify the depths the layout analysis predicted.
+//!
+//! Two decoders are provided:
+//!
+//! * [`DecodePlan`] — the direct inverse of `pack::PackPlan`: per-array
+//!   absolute bit offsets, decoded with two-word shift-or reads. This is
+//!   the L3 hot path (same role as the generated HLS module's wiring) and
+//!   the producer of the `(word_idx, bit_off)` tables fed to the L1
+//!   `unpack` Pallas kernel.
+//! * [`StreamDecoder`] — a cycle-accurate model of the read module: every
+//!   cycle it pulls one m-bit bus line, forwards at most one element per
+//!   array to the kernel stream, and parks the surplus in per-array
+//!   FIFOs, tracking occupancy so the required depth is *measured*, not
+//!   just predicted.
+
+use crate::layout::fifo::FifoAnalysis;
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::pack::PackPlan;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Decode plan: inverse of the pack plan (same offset tables).
+#[derive(Debug, Clone)]
+pub struct DecodePlan {
+    pub m: u32,
+    pub widths: Vec<u32>,
+    pub offsets: Vec<Vec<u64>>,
+}
+
+impl DecodePlan {
+    pub fn compile(layout: &Layout, problem: &Problem) -> DecodePlan {
+        let pp = PackPlan::compile(layout, problem);
+        DecodePlan {
+            m: pp.m,
+            widths: pp.widths,
+            offsets: pp.offsets,
+        }
+    }
+
+    /// Decode all arrays from the packed buffer.
+    pub fn decode(&self, buf: &BitVec) -> Result<Vec<Vec<u64>>> {
+        let mut out = Vec::with_capacity(self.offsets.len());
+        for a in 0..self.offsets.len() {
+            out.push(self.decode_array(buf, a)?);
+        }
+        Ok(out)
+    }
+
+    /// Decode one array (hot path: two-word shift-or, no allocation per
+    /// element beyond the output push).
+    pub fn decode_array(&self, buf: &BitVec, a: usize) -> Result<Vec<u64>> {
+        let offs = &self.offsets[a];
+        let w = self.widths[a];
+        let need = offs.last().map(|&o| o + w as u64).unwrap_or(0);
+        if (buf.len_bits() as u64) < need {
+            bail!("decode: buffer too small ({} < {need} bits)", buf.len_bits());
+        }
+        let words = buf.words();
+        let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+        let mut out = Vec::with_capacity(offs.len());
+        // Branch-free fast path when the buffer carries the pack guard
+        // word (every buffer from `PackPlan::alloc_buffer` does): the
+        // straddle word is fetched unconditionally and the two-step shift
+        // `(hi << 1) << (63−b)` vanishes for non-straddling fields.
+        let max_wi = offs.last().map(|&o| (o >> 6) as usize).unwrap_or(0);
+        if max_wi + 1 < words.len() {
+            for &off in offs {
+                let wi = (off >> 6) as usize;
+                let b = (off & 63) as u32;
+                let lo = words[wi] >> b;
+                let hi = (words[wi + 1] << 1) << (63 - b);
+                out.push((lo | hi) & mask);
+            }
+        } else {
+            for &off in offs {
+                let wi = (off >> 6) as usize;
+                let b = (off & 63) as u32;
+                let lo = words[wi] >> b;
+                let val = if b + w as u32 <= 64 {
+                    lo & mask
+                } else {
+                    (lo | (words[wi + 1] << (64 - b))) & mask
+                };
+                out.push(val);
+            }
+        }
+        Ok(out)
+    }
+
+    /// `(word_idx, bit_off)` tables for array `a` — the inputs of the L1
+    /// `unpack` Pallas kernel / `unpack_*` HLO artifacts.
+    pub fn word_tables(&self, a: usize) -> (Vec<i32>, Vec<i32>) {
+        let idx = self.offsets[a].iter().map(|&o| (o >> 6) as i32).collect();
+        let off = self.offsets[a].iter().map(|&o| (o & 63) as i32).collect();
+        (idx, off)
+    }
+}
+
+/// Result of the cycle-accurate stream simulation.
+#[derive(Debug, Clone)]
+pub struct StreamTrace {
+    /// Decoded streams (elements in order) per array.
+    pub streams: Vec<Vec<u64>>,
+    /// Measured peak FIFO occupancy per array.
+    pub peak_fifo: Vec<u64>,
+    /// Measured peak same-cycle element count per array (write ports).
+    pub peak_ports: Vec<u32>,
+    /// Total simulated cycles (bus cycles plus drain tail).
+    pub total_cycles: u64,
+    /// Cycle at which each array's stream completed (1-based).
+    pub stream_completion: Vec<u64>,
+}
+
+/// Cycle-accurate II=1 read-module model.
+pub struct StreamDecoder<'a> {
+    layout: &'a Layout,
+    problem: &'a Problem,
+}
+
+impl<'a> StreamDecoder<'a> {
+    pub fn new(layout: &'a Layout, problem: &'a Problem) -> StreamDecoder<'a> {
+        StreamDecoder { layout, problem }
+    }
+
+    /// Run the simulation over a packed buffer.
+    ///
+    /// Per bus cycle: read the m-bit line, extract each placement, push
+    /// into that array's FIFO; then every non-empty FIFO forwards exactly
+    /// one element to its kernel stream (the 1-element/cycle drain model
+    /// of the FIFO analysis). After the last bus cycle the FIFOs drain.
+    pub fn run(&self, buf: &BitVec) -> Result<StreamTrace> {
+        let n = self.problem.arrays.len();
+        let m = self.layout.m as u64;
+        let mut fifos: Vec<VecDeque<u64>> = vec![VecDeque::new(); n];
+        let mut streams: Vec<Vec<u64>> = self
+            .problem
+            .arrays
+            .iter()
+            .map(|a| Vec::with_capacity(a.depth as usize))
+            .collect();
+        let mut peak_fifo = vec![0u64; n];
+        let mut peak_ports = vec![0u32; n];
+        let mut completion = vec![0u64; n];
+        if (buf.len_bits() as u64) < self.layout.n_cycles() * m {
+            bail!("stream decode: buffer smaller than layout span");
+        }
+        let mut t: u64 = 0;
+        for (cyc, ps) in self.layout.cycles.iter().enumerate() {
+            let base = cyc as u64 * m;
+            let mut ports = vec![0u32; n];
+            for p in ps {
+                let a = p.array as usize;
+                let v = buf.get_bits((base + p.bit_lo as u64) as usize, p.width);
+                fifos[a].push_back(v);
+                ports[a] += 1;
+            }
+            for a in 0..n {
+                peak_ports[a] = peak_ports[a].max(ports[a]);
+            }
+            // Drain phase of the same cycle: one element per stream.
+            for a in 0..n {
+                if let Some(v) = fifos[a].pop_front() {
+                    streams[a].push(v);
+                    if streams[a].len() as u64 == self.problem.arrays[a].depth {
+                        completion[a] = t + 1;
+                    }
+                }
+                peak_fifo[a] = peak_fifo[a].max(fifos[a].len() as u64);
+            }
+            t += 1;
+        }
+        // Tail drain after the bus goes quiet.
+        while fifos.iter().any(|f| !f.is_empty()) {
+            for a in 0..n {
+                if let Some(v) = fifos[a].pop_front() {
+                    streams[a].push(v);
+                    if streams[a].len() as u64 == self.problem.arrays[a].depth {
+                        completion[a] = t + 1;
+                    }
+                }
+            }
+            t += 1;
+        }
+        Ok(StreamTrace {
+            streams,
+            peak_fifo,
+            peak_ports,
+            total_cycles: t,
+            stream_completion: completion,
+        })
+    }
+
+    /// Cross-check the measured FIFO peaks against the static analysis.
+    pub fn verify_against_analysis(&self, trace: &StreamTrace) -> Result<()> {
+        let fa = FifoAnalysis::compute(self.layout, self.problem);
+        for a in 0..self.problem.arrays.len() {
+            if trace.peak_fifo[a] != fa.depth[a] {
+                bail!(
+                    "array '{}': measured FIFO {} != predicted {}",
+                    self.problem.arrays[a].name,
+                    trace.peak_fifo[a],
+                    fa.depth[a]
+                );
+            }
+            if trace.peak_ports[a] != fa.write_ports[a] {
+                bail!(
+                    "array '{}': measured ports {} != predicted {}",
+                    self.problem.arrays[a].name,
+                    trace.peak_ports[a],
+                    fa.write_ports[a]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{helmholtz_problem, matmul_problem, paper_example, Problem};
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn arrays_for(p: &Problem, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        p.arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    fn roundtrip(kind: LayoutKind, p: &Problem, seed: u64) {
+        let l = baselines::generate(kind, p);
+        let arrays = arrays_for(p, seed);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let plan = PackPlan::compile(&l, p);
+        let buf = plan.pack(&refs).unwrap();
+        let dp = DecodePlan::compile(&l, p);
+        let decoded = dp.decode(&buf).unwrap();
+        assert_eq!(decoded, arrays, "{}", kind.name());
+    }
+
+    #[test]
+    fn pack_decode_roundtrip_every_layout() {
+        for p in [
+            paper_example(),
+            matmul_problem(33, 31),
+            matmul_problem(30, 19),
+            helmholtz_problem(),
+        ] {
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::IrisContinuous,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+            ] {
+                roundtrip(kind, &p, 7 + p.m() as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_decoder_preserves_order_and_matches_analysis() {
+        let p = paper_example();
+        let l = crate::schedule::iris_layout(&p);
+        let arrays = arrays_for(&p, 3);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = PackPlan::compile(&l, &p).pack(&refs).unwrap();
+        let sd = StreamDecoder::new(&l, &p);
+        let trace = sd.run(&buf).unwrap();
+        assert_eq!(trace.streams, arrays);
+        sd.verify_against_analysis(&trace).unwrap();
+    }
+
+    #[test]
+    fn stream_decoder_helmholtz_fifo_depths() {
+        // The measured FIFO peaks on the naive Helmholtz layout are the
+        // paper's Table 6 numbers: 998 / 90 / 998.
+        let p = helmholtz_problem();
+        let l = baselines::due_aligned_naive(&p);
+        let arrays = arrays_for(&p, 4);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = PackPlan::compile(&l, &p).pack(&refs).unwrap();
+        let sd = StreamDecoder::new(&l, &p);
+        let trace = sd.run(&buf).unwrap();
+        sd.verify_against_analysis(&trace).unwrap();
+        let iu = p.array_index("u").unwrap();
+        assert_eq!(trace.peak_fifo[iu], 998);
+        assert_eq!(trace.peak_ports[iu], 4);
+    }
+
+    #[test]
+    fn word_tables_match_offsets() {
+        let p = paper_example();
+        let l = crate::schedule::iris_layout(&p);
+        let dp = DecodePlan::compile(&l, &p);
+        for a in 0..p.arrays.len() {
+            let (idx, off) = dp.word_tables(a);
+            for (k, &o) in dp.offsets[a].iter().enumerate() {
+                assert_eq!(idx[k] as u64, o / 64);
+                assert_eq!(off[k] as u64, o % 64);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_short_buffer() {
+        let p = paper_example();
+        let l = crate::schedule::iris_layout(&p);
+        let dp = DecodePlan::compile(&l, &p);
+        let buf = BitVec::zeros(8);
+        assert!(dp.decode(&buf).is_err());
+    }
+}

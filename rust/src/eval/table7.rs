@@ -1,0 +1,156 @@
+//! Table 7: Matrix-multiply layout metrics with varied element widths.
+//!
+//! Paper values (m = 256, depths 625/625, dues 157/157):
+//!
+//! | (W_A,W_B)  | (64,64)       | (33,31)       | (30,19)       |
+//! |            | Naive | Iris  | Naive | Iris  | Naive | Iris  |
+//! | Efficiency | 99.5% | 99.8% | 92.5% | 98.9% | 93.5% | 97.3% |
+//! | C_max      | 314   | 313   | 236   | 225   | 206   | 201   |
+//! | L_max      | 157   | 156   | 79    | 68    | 49    | 44    |
+//! | FIFO A     | 468   | 312   | 535   | 467   | 546   | 502   |
+//! | FIFO B     | 468   | 312   | 546   | 478   | 576   | 532   |
+//!
+//! Reproduction notes (full derivation in DESIGN.md): the naive columns
+//! are matched exactly by the due-aligned dense baseline with efficiency
+//! computed over occupied cycles. For the custom-width Iris columns the
+//! paper's own algorithm (as printed) yields *denser* schedules than the
+//! numbers reported — e.g. (33,31) mixes 4·33 + 4·31 = 256 bits/cycle, so
+//! C_max ≈ 157, not 225. We therefore expect Iris-measured ≤ Iris-paper,
+//! with every paper-claimed ordering (Iris better than naive on all
+//! metrics) preserved.
+
+use super::Comparison;
+use crate::dse::{precision_sweep, DesignPoint};
+use crate::model::matmul_problem;
+use crate::util::table::{pct, Table};
+
+/// Paper reference values: (label, eff, c_max, l_max, fifo_a, fifo_b).
+pub const PAPER: [(&str, &str, u64, i64, u64, u64); 6] = [
+    ("naive (64,64)", "99.5%", 314, 157, 468, 468),
+    ("iris (64,64)", "99.8%", 313, 156, 312, 312),
+    ("naive (33,31)", "92.5%", 236, 79, 535, 546),
+    ("iris (33,31)", "98.9%", 225, 68, 467, 478),
+    ("naive (30,19)", "93.5%", 206, 49, 546, 576),
+    ("iris (30,19)", "97.3%", 201, 44, 502, 532),
+];
+
+pub const WIDTH_PAIRS: [(u32, u32); 3] = [(64, 64), (33, 31), (30, 19)];
+
+/// Run the sweep: naive + iris per width pair.
+pub fn run() -> Vec<DesignPoint> {
+    precision_sweep(matmul_problem, &WIDTH_PAIRS)
+}
+
+/// Render the measured Table 7 (both efficiency variants).
+pub fn render(points: &[DesignPoint]) -> String {
+    let mut t = Table::new(vec![
+        "", "B_eff", "B_eff(occ)", "C_max", "L_max", "FIFO A", "FIFO B",
+    ])
+    .title("Table 7 (measured): MatMul, varied element widths");
+    for pt in points {
+        t.row(vec![
+            pt.label.clone(),
+            pct(pt.metrics.b_eff),
+            pct(pt.metrics.b_eff_occupied),
+            pt.metrics.c_max.to_string(),
+            pt.metrics.l_max.to_string(),
+            pt.metrics.fifo.depth[0].to_string(),
+            pt.metrics.fifo.depth[1].to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Paper-vs-measured comparisons (naive rows use occupied-cycle
+/// efficiency, the variant the paper's numbers are consistent with).
+pub fn comparisons(points: &[DesignPoint]) -> Vec<Comparison> {
+    let mut rows = Vec::new();
+    for (pt, &(label, eff, c_max, l_max, fa, fb)) in points.iter().zip(PAPER.iter()) {
+        let m = &pt.metrics;
+        let measured_eff = if label.starts_with("naive") {
+            m.b_eff_occupied
+        } else {
+            m.b_eff
+        };
+        rows.push(Comparison::new(&format!("{label} efficiency"), eff, pct(measured_eff)));
+        rows.push(Comparison::new(&format!("{label} C_max"), c_max, m.c_max));
+        rows.push(Comparison::new(&format!("{label} L_max"), l_max, m.l_max));
+        rows.push(Comparison::new(&format!("{label} FIFO A"), fa, m.fifo.depth[0]));
+        rows.push(Comparison::new(&format!("{label} FIFO B"), fb, m.fifo.depth[1]));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn w64_columns_match_paper_exactly() {
+        let pts = run();
+        let naive = &pts[0].metrics;
+        assert_eq!(naive.c_max, 314);
+        assert_eq!(naive.l_max, 157);
+        assert_eq!(naive.fifo.depth, vec![468, 468]);
+        assert!((naive.b_eff - 0.995).abs() < 0.001);
+        let iris = &pts[1].metrics;
+        assert_eq!(iris.c_max, 313);
+        assert_eq!(iris.l_max, 156);
+        assert_eq!(iris.fifo.depth, vec![312, 312]);
+        assert!((iris.b_eff - 0.998).abs() < 0.001);
+    }
+
+    #[test]
+    fn custom_width_naive_columns_match_paper_exactly() {
+        let pts = run();
+        for (i, (c_max, l_max, fa, fb, eff_occ)) in
+            [(236u64, 79i64, 535u64, 546u64, 0.925), (206, 49, 546, 576, 0.935)]
+                .iter()
+                .enumerate()
+        {
+            let naive = &pts[2 + 2 * i].metrics;
+            assert_eq!(naive.c_max, *c_max);
+            assert_eq!(naive.l_max, *l_max);
+            assert_eq!(naive.fifo.depth, vec![*fa, *fb]);
+            assert!((naive.b_eff_occupied - eff_occ).abs() < 0.001);
+        }
+    }
+
+    #[test]
+    fn custom_width_iris_beats_paper_reported_values() {
+        let pts = run();
+        // (33,31): paper iris C_max 225; our LRM finds the dense 4+4 mix.
+        let iris_3331 = &pts[3].metrics;
+        assert!(iris_3331.c_max <= 225, "C_max {}", iris_3331.c_max);
+        assert!(iris_3331.c_max <= 160, "expected dense mix, got {}", iris_3331.c_max);
+        assert!(iris_3331.l_max <= 68);
+        // (30,19): paper iris C_max 201.
+        let iris_3019 = &pts[5].metrics;
+        assert!(iris_3019.c_max <= 201);
+        assert!(iris_3019.l_max <= 44);
+    }
+
+    #[test]
+    fn orderings_hold_everywhere() {
+        let pts = run();
+        for pair in pts.chunks(2) {
+            let (n, i) = (&pair[0].metrics, &pair[1].metrics);
+            assert!(i.c_max <= n.c_max);
+            assert!(i.l_max <= n.l_max);
+            assert!(i.fifo.depth[0] <= n.fifo.depth[0]);
+            assert!(i.fifo.depth[1] <= n.fifo.depth[1]);
+            assert!(i.b_eff >= n.b_eff - 1e-9);
+        }
+    }
+
+    #[test]
+    fn render_and_compare() {
+        let pts = run();
+        assert!(render(&pts).contains("iris (30,19)"));
+        let rows = comparisons(&pts);
+        assert_eq!(rows.len(), 30);
+        let exact = rows.iter().filter(|c| c.matches()).count();
+        // All 15 naive-side rows and the W=64 iris rows must be exact.
+        assert!(exact >= 18, "only {exact}/30 exact:\n{}", crate::eval::comparison_table("t7", &rows));
+    }
+}

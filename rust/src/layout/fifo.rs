@@ -1,0 +1,160 @@
+//! FIFO / shift-register sizing analysis (paper §5, "Accelerator-Side
+//! Decoding", and the FIFO-depth rows of Tables 6–7).
+//!
+//! The data-read module runs at initiation interval 1: every cycle it pulls
+//! one bus line and must dispose of all elements on it. Each array's kernel
+//! stream consumes **one element per cycle** once its first element has
+//! arrived, so any surplus must sit in a FIFO/shift register. The maximum
+//! backlog over the schedule — "determined during layout creation by a
+//! running sum over each schedule interval" — is the required depth. The
+//! number of elements of one array in a single cycle determines the number
+//! of write ports.
+
+use super::Layout;
+use crate::model::Problem;
+
+/// Per-array FIFO sizing results.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FifoAnalysis {
+    /// Required FIFO depth per array (max backlog, elements).
+    pub depth: Vec<u64>,
+    /// Maximum elements of the array on the bus in any single cycle
+    /// (= write ports needed on the FIFO).
+    pub write_ports: Vec<u32>,
+    /// Cycle of first arrival per array (None if never placed).
+    pub first_arrival: Vec<Option<u64>>,
+    /// Total FIFO bits (Σ depth·W) — the BRAM proxy the paper optimizes.
+    pub total_bits: u64,
+}
+
+impl FifoAnalysis {
+    /// Analyze a layout under the 1-element/cycle drain model.
+    pub fn compute(layout: &Layout, problem: &Problem) -> FifoAnalysis {
+        let n = problem.arrays.len();
+        let mut backlog = vec![0u64; n];
+        let mut first = vec![None::<u64>; n];
+        let mut depth = vec![0u64; n];
+        let mut ports = vec![0u32; n];
+        for (t, ps) in layout.cycles.iter().enumerate() {
+            let mut this_cycle = vec![0u32; n];
+            for p in ps {
+                let a = p.array as usize;
+                this_cycle[a] += 1;
+                if first[a].is_none() {
+                    first[a] = Some(t as u64);
+                }
+            }
+            for a in 0..n {
+                if this_cycle[a] > ports[a] {
+                    ports[a] = this_cycle[a];
+                }
+                if first[a].is_some() {
+                    // True FIFO recurrence: arrivals land, then the kernel
+                    // consumes one element if any is available. A cycle
+                    // with an empty FIFO wastes its drain slot (drain
+                    // capacity is NOT banked across gaps).
+                    let b = backlog[a] + this_cycle[a] as u64;
+                    backlog[a] = b.saturating_sub(1);
+                    if backlog[a] > depth[a] {
+                        depth[a] = backlog[a];
+                    }
+                }
+            }
+        }
+        let total_bits = depth
+            .iter()
+            .zip(problem.arrays.iter())
+            .map(|(d, a)| d * a.width as u64)
+            .sum();
+        FifoAnalysis {
+            depth,
+            write_ports: ports,
+            first_arrival: first,
+            total_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Placement;
+    use crate::model::{ArraySpec, BusConfig, Problem};
+
+    fn problem_one(width: u32, depth: u64) -> Problem {
+        Problem::new(
+            BusConfig::new(256),
+            vec![ArraySpec::new("u", width, depth, 1)],
+        )
+        .unwrap()
+    }
+
+    /// Layout delivering `per_cycle` elements each cycle until exhausted.
+    fn uniform_layout(problem: &Problem, per_cycle: u32) -> Layout {
+        let spec = &problem.arrays[0];
+        let mut l = Layout::new(problem.m());
+        let mut e = 0u64;
+        while e < spec.depth {
+            let mut cyc = Vec::new();
+            for k in 0..per_cycle {
+                if e >= spec.depth {
+                    break;
+                }
+                cyc.push(Placement {
+                    array: 0,
+                    elem: e,
+                    bit_lo: k * spec.width,
+                    width: spec.width,
+                });
+                e += 1;
+            }
+            l.cycles.push(cyc);
+        }
+        l
+    }
+
+    #[test]
+    fn paper_naive_helmholtz_u_fifo() {
+        // u: 1331 elements at 4/cycle over 333 cycles ⇒ depth 1331−333 = 998
+        // (Table 6, naive column).
+        let p = problem_one(64, 1331);
+        let l = uniform_layout(&p, 4);
+        let f = FifoAnalysis::compute(&l, &p);
+        assert_eq!(l.n_cycles(), 333);
+        assert_eq!(f.depth[0], 998);
+        assert_eq!(f.write_ports[0], 4);
+    }
+
+    #[test]
+    fn one_per_cycle_needs_no_fifo() {
+        // Table 6, δ/W = 1 column: FIFO depth 0.
+        let p = problem_one(64, 100);
+        let l = uniform_layout(&p, 1);
+        let f = FifoAnalysis::compute(&l, &p);
+        assert_eq!(f.depth[0], 0);
+        assert_eq!(f.write_ports[0], 1);
+    }
+
+    #[test]
+    fn s_array_naive_fifo() {
+        // S: 121 elements at 4/cycle over 31 cycles ⇒ 121−31 = 90 (Table 6).
+        let p = problem_one(64, 121);
+        let l = uniform_layout(&p, 4);
+        assert_eq!(FifoAnalysis::compute(&l, &p).depth[0], 90);
+    }
+
+    #[test]
+    fn gap_lets_fifo_drain() {
+        // 4 elements in cycle 0, then idle: backlog 3 after cycle 0,
+        // drains fully by cycle 3.
+        let p = problem_one(8, 4);
+        let mut l = uniform_layout(&p, 4);
+        l.cycles.push(vec![]);
+        l.cycles.push(vec![]);
+        l.cycles.push(vec![]);
+        let f = FifoAnalysis::compute(&l, &p);
+        assert_eq!(f.depth[0], 3);
+        assert_eq!(f.first_arrival[0], Some(0));
+        assert_eq!(f.total_bits, 24);
+    }
+}

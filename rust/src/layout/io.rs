@@ -1,0 +1,151 @@
+//! Layout (de)serialization: the generated layout is the *product* the
+//! paper's flow hands to the host-side packer and the HLS read module, so
+//! it must round-trip through a toolchain-friendly format. Schema:
+//!
+//! ```json
+//! {
+//!   "m": 8,
+//!   "cycles": [
+//!     [ {"array": "D", "elem": 0, "bit_lo": 0, "width": 5},
+//!       {"array": "B", "elem": 0, "bit_lo": 5, "width": 3} ],
+//!     []
+//!   ]
+//! }
+//! ```
+//!
+//! Arrays are referenced by name (stable across tool versions); loading
+//! validates against the problem.
+
+use super::{Layout, Placement};
+use crate::model::Problem;
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+
+/// Serialize a layout to pretty JSON (array names from `problem`).
+pub fn layout_to_json(layout: &Layout, problem: &Problem) -> String {
+    let cycles: Vec<Json> = layout
+        .cycles
+        .iter()
+        .map(|ps| {
+            Json::Arr(
+                ps.iter()
+                    .map(|p| {
+                        let mut o = Json::obj();
+                        o.set(
+                            "array",
+                            Json::Str(problem.arrays[p.array as usize].name.clone()),
+                        );
+                        o.set("elem", Json::Num(p.elem as f64));
+                        o.set("bit_lo", Json::Num(p.bit_lo as f64));
+                        o.set("width", Json::Num(p.width as f64));
+                        o
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("m", Json::Num(layout.m as f64));
+    root.set("cycles", Json::Arr(cycles));
+    root.to_string_pretty()
+}
+
+/// Parse a layout from JSON and validate it against `problem`.
+pub fn layout_from_json(text: &str, problem: &Problem) -> Result<Layout> {
+    let v = parse(text).map_err(|e| anyhow!("{e}"))?;
+    let m = v
+        .get("m")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing 'm'"))? as u32;
+    let cycles_v = v
+        .get("cycles")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'cycles'"))?;
+    let mut layout = Layout::new(m);
+    for (t, cyc) in cycles_v.iter().enumerate() {
+        let ps = cyc
+            .as_arr()
+            .ok_or_else(|| anyhow!("cycle {t} is not a list"))?;
+        let mut placements = Vec::with_capacity(ps.len());
+        for p in ps {
+            let name = p
+                .get("array")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("cycle {t}: placement missing 'array'"))?;
+            let array = problem
+                .array_index(name)
+                .ok_or_else(|| anyhow!("cycle {t}: unknown array '{name}'"))?;
+            let get = |k: &str| -> Result<u64> {
+                p.get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("cycle {t}: placement missing '{k}'"))
+            };
+            placements.push(Placement {
+                array: array as u32,
+                elem: get("elem")?,
+                bit_lo: get("bit_lo")? as u32,
+                width: get("width")? as u32,
+            });
+        }
+        layout.cycles.push(placements);
+    }
+    super::validate::validate(&layout, problem).context("loaded layout failed validation")?;
+    Ok(layout)
+}
+
+/// Save a layout (with validation metadata) to a file.
+pub fn save_layout(layout: &Layout, problem: &Problem, path: &str) -> Result<()> {
+    std::fs::write(path, layout_to_json(layout, problem))
+        .with_context(|| format!("writing {path}"))
+}
+
+/// Load a layout from a file, validating against `problem`.
+pub fn load_layout(path: &str, problem: &Problem) -> Result<Layout> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading layout file {path}"))?;
+    layout_from_json(&text, problem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{matmul_problem, paper_example};
+    use crate::schedule::iris_layout;
+
+    #[test]
+    fn roundtrip_paper_example() {
+        let p = paper_example();
+        let l = iris_layout(&p);
+        let text = layout_to_json(&l, &p);
+        let back = layout_from_json(&text, &p).unwrap();
+        assert_eq!(l, back);
+    }
+
+    #[test]
+    fn roundtrip_with_idle_cycles() {
+        let p = matmul_problem(33, 31);
+        let l = crate::baselines::due_aligned_naive(&p);
+        let back = layout_from_json(&layout_to_json(&l, &p), &p).unwrap();
+        assert_eq!(l, back);
+        assert!(back.cycles[0].is_empty()); // alignment gap preserved
+    }
+
+    #[test]
+    fn load_validates_against_problem() {
+        let p = paper_example();
+        let l = iris_layout(&p);
+        let text = layout_to_json(&l, &p);
+        // Same layout against a problem with a different depth must fail.
+        let mut p2 = p.clone();
+        p2.arrays[0].depth += 1;
+        let e = layout_from_json(&text, &p2).unwrap_err();
+        assert!(format!("{e:#}").contains("validation"));
+    }
+
+    #[test]
+    fn unknown_array_rejected() {
+        let p = paper_example();
+        let text = r#"{"m": 8, "cycles": [[{"array": "Z", "elem": 0, "bit_lo": 0, "width": 2}]]}"#;
+        assert!(layout_from_json(text, &p).is_err());
+    }
+}

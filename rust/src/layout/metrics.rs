@@ -1,0 +1,158 @@
+//! Layout quality metrics (paper §4, Eq. 1 and Tables 6–7):
+//!
+//! * `C_max` — makespan: number of cycles to the last element.
+//! * `C_j`  — completion: last cycle (1-based end) array `j` is on the bus.
+//! * `L_j = C_j − d_j` — lateness; `L_max = max_j L_j`.
+//! * `B_eff = p_tot / (C_max · m)` — Eq. 1 bandwidth efficiency.
+//! * `B_eff^occ = p_tot / (occupied_cycles · m)` — efficiency over non-idle
+//!   cycles only. The paper's Table 7 "Efficiency" row for the naive
+//!   layouts is consistent with this variant (see DESIGN.md); we report
+//!   both.
+
+use super::fifo::FifoAnalysis;
+use super::Layout;
+use crate::model::Problem;
+
+/// Full metric set for one layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutMetrics {
+    /// Makespan in cycles.
+    pub c_max: u64,
+    /// Completion time (1-based end cycle) per array.
+    pub completion: Vec<u64>,
+    /// Lateness per array (may be negative: early arrival).
+    pub lateness: Vec<i64>,
+    /// Maximum lateness over all arrays.
+    pub l_max: i64,
+    /// Eq. 1 bandwidth efficiency `p_tot/(C_max·m)`.
+    pub b_eff: f64,
+    /// Efficiency over occupied (non-idle) cycles.
+    pub b_eff_occupied: f64,
+    /// Number of non-idle cycles.
+    pub occupied_cycles: u64,
+    /// Total wasted bandwidth bits (`C_max·m − p_tot`).
+    pub wasted_bits: u64,
+    /// FIFO sizing under the II=1 / 1-elem-per-cycle drain model.
+    pub fifo: FifoAnalysis,
+}
+
+impl LayoutMetrics {
+    pub fn compute(layout: &Layout, problem: &Problem) -> LayoutMetrics {
+        let n = problem.arrays.len();
+        let m = problem.m() as u64;
+        let mut completion = vec![0u64; n];
+        let mut occupied = 0u64;
+        for (t, ps) in layout.cycles.iter().enumerate() {
+            if !ps.is_empty() {
+                occupied += 1;
+            }
+            for p in ps {
+                // 1-based end-of-cycle completion, matching the paper's
+                // C_j convention (an element on cycle t is available at
+                // the end of that cycle).
+                completion[p.array as usize] = completion[p.array as usize].max(t as u64 + 1);
+            }
+        }
+        let c_max = layout.n_cycles();
+        let p_tot = problem.total_bits() as f64;
+        let lateness: Vec<i64> = completion
+            .iter()
+            .zip(problem.arrays.iter())
+            .map(|(&c, a)| c as i64 - a.due as i64)
+            .collect();
+        let l_max = lateness.iter().copied().max().unwrap_or(0);
+        let denom = (c_max * m) as f64;
+        let occ_denom = (occupied.max(1) * m) as f64;
+        LayoutMetrics {
+            c_max,
+            completion,
+            lateness,
+            l_max,
+            b_eff: if denom > 0.0 { p_tot / denom } else { 0.0 },
+            b_eff_occupied: p_tot / occ_denom,
+            occupied_cycles: occupied,
+            wasted_bits: c_max * m - problem.total_bits(),
+            fifo: FifoAnalysis::compute(layout, problem),
+        }
+    }
+
+    /// One-line summary used by reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "C_max={} L_max={} B_eff={} (occ {}) fifo_bits={}",
+            self.c_max,
+            self.l_max,
+            crate::util::table::pct(self.b_eff),
+            crate::util::table::pct(self.b_eff_occupied),
+            self.fifo.total_bits
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Placement;
+    use crate::model::{paper_example, ArraySpec, BusConfig, Problem};
+
+    #[test]
+    fn fig3_element_naive_metrics() {
+        // Build Fig. 3 by hand: one element per cycle, due-date order
+        // A(5) C(3) E(2) B(5) D(4) ⇒ 19 cycles, eff 45.4%, L_max 13.
+        let p = paper_example();
+        let order = ["A", "C", "E", "B", "D"];
+        let mut l = Layout::new(8);
+        for name in order {
+            let a = p.array_index(name).unwrap();
+            let spec = &p.arrays[a];
+            for e in 0..spec.depth {
+                l.cycles.push(vec![Placement {
+                    array: a as u32,
+                    elem: e,
+                    bit_lo: 0,
+                    width: spec.width,
+                }]);
+            }
+        }
+        crate::layout::validate::validate(&l, &p).unwrap();
+        let m = LayoutMetrics::compute(&l, &p);
+        assert_eq!(m.c_max, 19);
+        assert_eq!(m.l_max, 13); // array D: C=19, d=6
+        assert!((m.b_eff - 0.454).abs() < 0.0006, "B_eff {}", m.b_eff);
+    }
+
+    #[test]
+    fn idle_cycles_separate_eff_variants() {
+        let p = Problem::new(BusConfig::new(8), vec![ArraySpec::new("A", 8, 1, 2)]).unwrap();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![]);
+        l.cycles.push(vec![Placement {
+            array: 0,
+            elem: 0,
+            bit_lo: 0,
+            width: 8,
+        }]);
+        let m = LayoutMetrics::compute(&l, &p);
+        assert_eq!(m.c_max, 2);
+        assert_eq!(m.occupied_cycles, 1);
+        assert!((m.b_eff - 0.5).abs() < 1e-12);
+        assert!((m.b_eff_occupied - 1.0).abs() < 1e-12);
+        assert_eq!(m.l_max, 0);
+        assert_eq!(m.wasted_bits, 8);
+    }
+
+    #[test]
+    fn negative_lateness_reported() {
+        let p = Problem::new(BusConfig::new(8), vec![ArraySpec::new("A", 8, 1, 5)]).unwrap();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![Placement {
+            array: 0,
+            elem: 0,
+            bit_lo: 0,
+            width: 8,
+        }]);
+        let m = LayoutMetrics::compute(&l, &p);
+        assert_eq!(m.lateness[0], -4);
+        assert_eq!(m.l_max, -4);
+    }
+}

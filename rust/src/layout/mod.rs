@@ -1,0 +1,177 @@
+//! Layout representation: the output of Iris and of the baselines — an
+//! assignment of every array element to a (cycle, bit-range) slot on the
+//! bus (paper Figs. 3–5).
+
+pub mod fifo;
+pub mod io;
+pub mod metrics;
+pub mod validate;
+
+use crate::model::Problem;
+
+/// One element placed on the bus in a given cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Index of the array in `Problem::arrays`.
+    pub array: u32,
+    /// Element index within the array (0-based; streamed in order).
+    pub elem: u64,
+    /// Lowest bit lane occupied (bits `[bit_lo, bit_lo + width)`).
+    pub bit_lo: u32,
+    /// Element width in bits (copied from the spec for self-containment).
+    pub width: u32,
+}
+
+/// A complete bus layout: for each cycle, the placements on the `m`-bit bus.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layout {
+    /// Bus width in bits.
+    pub m: u32,
+    /// Placements per cycle; empty vectors are idle cycles.
+    pub cycles: Vec<Vec<Placement>>,
+}
+
+impl Layout {
+    pub fn new(m: u32) -> Layout {
+        Layout {
+            m,
+            cycles: Vec::new(),
+        }
+    }
+
+    /// Number of cycles (`C_max` when the last cycle is non-idle).
+    pub fn n_cycles(&self) -> u64 {
+        self.cycles.len() as u64
+    }
+
+    /// Bits of payload in cycle `t`.
+    pub fn used_bits(&self, t: usize) -> u64 {
+        self.cycles[t].iter().map(|p| p.width as u64).sum()
+    }
+
+    /// Total elements placed.
+    pub fn total_elements(&self) -> u64 {
+        self.cycles.iter().map(|c| c.len() as u64).sum()
+    }
+
+    /// Total payload bits across all cycles.
+    pub fn total_bits(&self) -> u64 {
+        (0..self.cycles.len()).map(|t| self.used_bits(t)).sum()
+    }
+
+    /// Trim trailing idle cycles (can appear after schedule reversal of
+    /// instances whose first forward cycles were idle).
+    pub fn trim_trailing_idle(&mut self) {
+        while matches!(self.cycles.last(), Some(c) if c.is_empty()) {
+            self.cycles.pop();
+        }
+    }
+
+    /// Iterate `(cycle, &Placement)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &Placement)> {
+        self.cycles
+            .iter()
+            .enumerate()
+            .flat_map(|(t, ps)| ps.iter().map(move |p| (t, p)))
+    }
+
+    /// ASCII rendering in the style of the paper's Figs. 3–5: one line per
+    /// cycle, one letter (array name initial) per bit lane, '.' for idle.
+    pub fn render_ascii(&self, problem: &Problem) -> String {
+        let mut out = String::new();
+        for (t, ps) in self.cycles.iter().enumerate() {
+            let mut lanes: Vec<char> = vec!['.'; self.m as usize];
+            for p in ps {
+                let c = problem.arrays[p.array as usize]
+                    .name
+                    .chars()
+                    .next()
+                    .unwrap_or('?');
+                for b in p.bit_lo..p.bit_lo + p.width {
+                    lanes[b as usize] = c;
+                }
+            }
+            // Render MSB on the left like the paper's figures.
+            let line: String = lanes.iter().rev().collect();
+            out.push_str(&format!("{t:4} |{line}|\n"));
+        }
+        out
+    }
+}
+
+/// Identifies which algorithm produced a layout (reports & benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutKind {
+    /// One element per cycle, arrays sequential by due date (Fig. 3).
+    ElementNaive,
+    /// Homogeneous dense packing, arrays sequential by due date (Fig. 4).
+    PackedNaive,
+    /// Dense packing with each array aligned to finish at/after its due
+    /// date (the "Naive" of Tables 6–7).
+    DueAlignedNaive,
+    /// Dense packing with element widths padded to the next power of two.
+    PaddedPow2,
+    /// Iris discrete engine (default).
+    Iris,
+    /// Iris continuous (Drozdowski interval) engine.
+    IrisContinuous,
+}
+
+impl LayoutKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayoutKind::ElementNaive => "element-naive",
+            LayoutKind::PackedNaive => "packed-naive",
+            LayoutKind::DueAlignedNaive => "due-aligned-naive",
+            LayoutKind::PaddedPow2 => "padded-pow2",
+            LayoutKind::Iris => "iris",
+            LayoutKind::IrisContinuous => "iris-continuous",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::paper_example;
+
+    #[test]
+    fn accessors() {
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![
+            Placement {
+                array: 0,
+                elem: 0,
+                bit_lo: 0,
+                width: 5,
+            },
+            Placement {
+                array: 1,
+                elem: 0,
+                bit_lo: 5,
+                width: 3,
+            },
+        ]);
+        l.cycles.push(vec![]);
+        assert_eq!(l.used_bits(0), 8);
+        assert_eq!(l.used_bits(1), 0);
+        assert_eq!(l.total_elements(), 2);
+        assert_eq!(l.total_bits(), 8);
+        l.trim_trailing_idle();
+        assert_eq!(l.n_cycles(), 1);
+    }
+
+    #[test]
+    fn ascii_rendering() {
+        let p = paper_example();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![Placement {
+            array: 0, // "A", width 2
+            elem: 0,
+            bit_lo: 0,
+            width: 2,
+        }]);
+        let s = l.render_ascii(&p);
+        assert!(s.contains("|......AA|"), "{s}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Layout invariant checker. Every layout produced by any algorithm must
+//! satisfy, for the given problem:
+//!
+//! 1. placements fit on the bus (`bit_lo + width ≤ m`) and match the
+//!    array's declared width;
+//! 2. no two placements in a cycle overlap in bit lanes;
+//! 3. every element of every array is placed **exactly once**;
+//! 4. elements of an array appear in nondecreasing cycle order, and
+//!    within a cycle in order of their bit lanes — i.e. each array is a
+//!    valid *stream* the decode module can forward in order;
+//! 5. the per-cycle element count never exceeds `δ_j/W_j` (the cap the
+//!    decode module's write ports are sized for).
+//!
+//! These are the invariants the property-based tests drive.
+
+use super::Layout;
+use crate::model::Problem;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+
+/// Validate all invariants; returns an error naming the first violation.
+pub fn validate(layout: &Layout, problem: &Problem) -> Result<()> {
+    let m = layout.m;
+    if m != problem.m() {
+        bail!("layout bus width {} != problem bus width {}", m, problem.m());
+    }
+    let n = problem.arrays.len();
+    // Next expected element per array (order) + placement counts.
+    let mut next_elem: Vec<u64> = vec![0; n];
+    for (t, ps) in layout.cycles.iter().enumerate() {
+        let mut occ = BitVec::zeros(m as usize);
+        // Sort a copy by bit_lo to check intra-cycle ordering per array.
+        let mut sorted: Vec<_> = ps.iter().collect();
+        sorted.sort_by_key(|p| p.bit_lo);
+        let mut per_cycle_count = vec![0u32; n];
+        for p in &sorted {
+            let a = p.array as usize;
+            if a >= n {
+                bail!("cycle {t}: placement references array #{a} out of range");
+            }
+            let spec = &problem.arrays[a];
+            if p.width != spec.width {
+                bail!(
+                    "cycle {t}: array '{}' placement width {} != spec width {}",
+                    spec.name,
+                    p.width,
+                    spec.width
+                );
+            }
+            if p.bit_lo + p.width > m {
+                bail!(
+                    "cycle {t}: array '{}' element {} exceeds bus ({}+{} > {m})",
+                    spec.name,
+                    p.elem,
+                    p.bit_lo,
+                    p.width
+                );
+            }
+            for b in p.bit_lo..p.bit_lo + p.width {
+                if occ.get(b as usize) {
+                    bail!(
+                        "cycle {t}: bit lane {b} double-booked (array '{}')",
+                        spec.name
+                    );
+                }
+                occ.set(b as usize);
+            }
+            if p.elem != next_elem[a] {
+                bail!(
+                    "array '{}': element {} out of order (expected {}) at cycle {t}",
+                    spec.name,
+                    p.elem,
+                    next_elem[a]
+                );
+            }
+            next_elem[a] += 1;
+            per_cycle_count[a] += 1;
+        }
+        for (a, &cnt) in per_cycle_count.iter().enumerate() {
+            let cap = problem.arrays[a].delta_elems(m);
+            if cnt > cap {
+                bail!(
+                    "cycle {t}: array '{}' has {cnt} elements on the bus, cap δ/W = {cap}",
+                    problem.arrays[a].name
+                );
+            }
+        }
+    }
+    for (a, spec) in problem.arrays.iter().enumerate() {
+        if next_elem[a] != spec.depth {
+            bail!(
+                "array '{}': {} of {} elements placed",
+                spec.name,
+                next_elem[a],
+                spec.depth
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::Placement;
+    use crate::model::{ArraySpec, BusConfig, Problem};
+
+    fn tiny_problem() -> Problem {
+        Problem::new(
+            BusConfig::new(8),
+            vec![ArraySpec::new("A", 3, 2, 1)],
+        )
+        .unwrap()
+    }
+
+    fn place(array: u32, elem: u64, bit_lo: u32, width: u32) -> Placement {
+        Placement {
+            array,
+            elem,
+            bit_lo,
+            width,
+        }
+    }
+
+    #[test]
+    fn accepts_valid_layout() {
+        let p = tiny_problem();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![place(0, 0, 0, 3), place(0, 1, 3, 3)]);
+        validate(&l, &p).unwrap();
+    }
+
+    #[test]
+    fn rejects_overlap() {
+        let p = tiny_problem();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![place(0, 0, 0, 3), place(0, 1, 2, 3)]);
+        let e = validate(&l, &p).unwrap_err();
+        assert!(format!("{e}").contains("double-booked"));
+    }
+
+    #[test]
+    fn rejects_missing_and_duplicate_elements() {
+        let p = tiny_problem();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![place(0, 0, 0, 3)]);
+        assert!(validate(&l, &p).is_err()); // element 1 missing
+        let mut l2 = Layout::new(8);
+        l2.cycles.push(vec![place(0, 0, 0, 3)]);
+        l2.cycles.push(vec![place(0, 0, 0, 3)]); // duplicate elem 0
+        assert!(validate(&l2, &p).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_order_stream() {
+        let p = tiny_problem();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![place(0, 1, 0, 3)]);
+        l.cycles.push(vec![place(0, 0, 0, 3)]);
+        let e = validate(&l, &p).unwrap_err();
+        assert!(format!("{e}").contains("out of order"));
+    }
+
+    #[test]
+    fn rejects_bus_overflow_and_wrong_width() {
+        let p = tiny_problem();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![place(0, 0, 6, 3)]);
+        assert!(validate(&l, &p).is_err());
+        let mut l2 = Layout::new(8);
+        l2.cycles.push(vec![place(0, 0, 0, 4)]);
+        assert!(validate(&l2, &p).is_err());
+    }
+
+    #[test]
+    fn rejects_delta_cap_violation() {
+        // Array capped to 1 element/cycle but layout places 2.
+        let p = Problem::new(
+            BusConfig::new(8),
+            vec![ArraySpec::new("A", 3, 2, 1).with_cap(1)],
+        )
+        .unwrap();
+        let mut l = Layout::new(8);
+        l.cycles.push(vec![place(0, 0, 0, 3), place(0, 1, 3, 3)]);
+        let e = validate(&l, &p).unwrap_err();
+        assert!(format!("{e}").contains("cap"));
+    }
+}

@@ -1,0 +1,75 @@
+//! # Iris — automatic generation of efficient data layouts for high
+//! bandwidth utilization
+//!
+//! Reproduction of Soldavini, Sciuto, Pilato, *"Iris: Automatic Generation
+//! of Efficient Data Layouts for High Bandwidth Utilization"* (2022).
+//!
+//! Iris packs heterogeneous, custom-bit-width accelerator arrays onto a
+//! fixed-width memory bus by casting the problem as preemptive
+//! multiprocessor scheduling with linear speedup: the `m`-bit bus is `m`
+//! identical processors, arrays are tasks with processing time
+//! `p_j = W_j·D_j` bits, per-cycle cap `δ_j = ⌊m/W_j⌋·W_j`, and due dates
+//! derived from the accelerator dataflow graph. Due dates convert to
+//! release times (`r_j = d_max − d_j`); the schedule is built forward
+//! minimizing makespan and read backward to minimize maximum lateness.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * L3 (this crate): scheduling, layout materialization, host-side
+//!   packing, cycle-accurate bus/HBM model, accelerator-side decode with
+//!   shift-register FIFO tracking, code generation (Listing-1 C host
+//!   packer, Listing-2 ap_uint HLS read module), HLS resource estimation,
+//!   design-space exploration, and an end-to-end streaming pipeline.
+//! * L2 (JAX, build time): accelerator compute graphs (matrix multiply,
+//!   inverse Helmholtz) lowered once to HLO text (`make artifacts`).
+//! * L1 (Pallas, build time): the compute hot spots (tiled matmul, 3-axis
+//!   spectral contraction, vectorized bus-word unpack) inlined into L2.
+//!
+//! At runtime the coordinator loads `artifacts/*.hlo.txt` via PJRT
+//! ([`runtime`]) — Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use iris::model::{ArraySpec, BusConfig, Problem};
+//! use iris::schedule::iris_layout;
+//! use iris::layout::metrics::LayoutMetrics;
+//!
+//! // The paper's worked example (Table 3): five arrays on an 8-bit bus.
+//! let problem = Problem::new(
+//!     BusConfig::new(8),
+//!     vec![
+//!         ArraySpec::new("A", 2, 5, 2),
+//!         ArraySpec::new("B", 3, 5, 6),
+//!         ArraySpec::new("C", 4, 3, 3),
+//!         ArraySpec::new("D", 5, 4, 6),
+//!         ArraySpec::new("E", 6, 2, 3),
+//!     ],
+//! ).unwrap();
+//! let layout = iris_layout(&problem);
+//! let m = LayoutMetrics::compute(&layout, &problem);
+//! assert_eq!(m.c_max, 9);        // Fig. 5
+//! assert_eq!(m.l_max, 3);
+//! ```
+
+pub mod util;
+pub mod testing;
+pub mod benchkit;
+pub mod model;
+pub mod schedule;
+pub mod layout;
+pub mod baselines;
+pub mod bus;
+pub mod pack;
+pub mod decode;
+pub mod quant;
+pub mod codegen;
+pub mod hls;
+pub mod dse;
+pub mod runtime;
+pub mod accel;
+pub mod coordinator;
+pub mod eval;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

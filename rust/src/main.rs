@@ -1,0 +1,318 @@
+//! `iris` — CLI for the Iris data-layout coordinator.
+//!
+//! Subcommands:
+//!   example              worked example (§4): Tables 3–4, Figs 2–5 + HLS estimates
+//!   figures              Figs 1–5 reproductions (ASCII)
+//!   table6               Table 6 sweep (Inverse Helmholtz, δ/W)
+//!   table7               Table 7 sweep (MatMul precision)
+//!   layout FILE.json     compute a layout for a JSON problem
+//!       [--algo iris|iris-continuous|element-naive|packed-naive|
+//!        due-aligned-naive|padded-pow2] [--ascii] [--paper-strict]
+//!   codegen FILE.json    emit generated code [--host] [--hls] [--rust] [--algo ...]
+//!   dfg                  derive Table-5 due dates from the accelerator DFGs
+//!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
+//!                        [--wa W] [--wb W] [--algo ...] [--no-xla]
+//!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
+//!   dse                  width search demo [--lo W] [--hi W]
+//!   perf                 quick hot-path perf summary (see EXPERIMENTS.md §Perf)
+
+use anyhow::{anyhow, bail, Result};
+use iris::baselines;
+use iris::coordinator::pipeline::{self, PipelineConfig, Workload};
+use iris::coordinator::server::{LayoutServer, TransferRequest};
+use iris::eval::{comparison_table, example::ExampleReport, figures, table6, table7};
+use iris::layout::metrics::LayoutMetrics;
+use iris::layout::LayoutKind;
+use iris::model::{dfg, io, BusConfig};
+use iris::runtime::Runtime;
+use iris::schedule::{iris_layout_opts, ScheduleOptions};
+use iris::util::cli::Args;
+
+fn parse_kind(s: &str) -> Result<LayoutKind> {
+    Ok(match s {
+        "iris" => LayoutKind::Iris,
+        "iris-continuous" => LayoutKind::IrisContinuous,
+        "element-naive" => LayoutKind::ElementNaive,
+        "packed-naive" => LayoutKind::PackedNaive,
+        "due-aligned-naive" | "naive" => LayoutKind::DueAlignedNaive,
+        "padded-pow2" => LayoutKind::PaddedPow2,
+        other => bail!("unknown layout algorithm '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("example") => cmd_example(),
+        Some("figures") => cmd_figures(),
+        Some("table6") => cmd_table6(),
+        Some("table7") => cmd_table7(),
+        Some("layout") => cmd_layout(&args),
+        Some("codegen") => cmd_codegen(&args),
+        Some("dfg") => cmd_dfg(),
+        Some("e2e") => cmd_e2e(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("channels") => cmd_channels(&args),
+        Some("perf") => cmd_perf(),
+        _ => {
+            eprint!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+iris — automatic generation of efficient data layouts (paper reproduction)
+
+usage: iris <subcommand> [options]
+  example | figures | table6 | table7 | dfg | perf
+  layout FILE.json [--algo KIND] [--ascii] [--paper-strict]
+  codegen FILE.json [--host] [--hls] [--rust] [--algo KIND]
+  e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla]
+  serve [--workers N] [--requests N] [--batch B]
+  dse [--lo W] [--hi W]
+  channels [FILE.json] [--max-k K]   multi-channel partition sweep
+";
+
+fn cmd_example() -> Result<()> {
+    let r = ExampleReport::run();
+    println!("{}", r.table4());
+    println!("{}", r.summary());
+    println!("{}", comparison_table("Paper vs measured (Figs 3–5)", &r.comparisons()));
+    println!(
+        "{}",
+        comparison_table("Paper vs measured (§5 HLS estimates)", &r.hls_comparisons())
+    );
+    Ok(())
+}
+
+fn cmd_figures() -> Result<()> {
+    println!("{}", figures::figure1());
+    println!("{}", figures::figure2());
+    println!("{}", figures::figures345());
+    Ok(())
+}
+
+fn cmd_table6() -> Result<()> {
+    let pts = table6::run();
+    println!("{}", table6::render(&pts));
+    println!(
+        "{}",
+        comparison_table("Table 6: paper vs measured", &table6::comparisons(&pts))
+    );
+    Ok(())
+}
+
+fn cmd_table7() -> Result<()> {
+    let pts = table7::run();
+    println!("{}", table7::render(&pts));
+    println!(
+        "{}",
+        comparison_table("Table 7: paper vs measured", &table7::comparisons(&pts))
+    );
+    Ok(())
+}
+
+fn load_problem_arg(args: &Args) -> Result<iris::model::Problem> {
+    let path = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow!("expected a problem JSON file (see `iris dfg` for schema)"))?;
+    io::load_problem(path)
+}
+
+fn cmd_layout(args: &Args) -> Result<()> {
+    let problem = load_problem_arg(args)?;
+    let kind = parse_kind(args.opt_str("algo", "iris"))?;
+    let layout = if args.flag("paper-strict") && kind == LayoutKind::Iris {
+        iris_layout_opts(&problem, &ScheduleOptions::paper_strict())
+    } else {
+        baselines::generate(kind, &problem)
+    };
+    iris::layout::validate::validate(&layout, &problem)?;
+    let m = LayoutMetrics::compute(&layout, &problem);
+    println!("algorithm: {}", kind.name());
+    println!("{}", m.summary());
+    for (a, spec) in problem.arrays.iter().enumerate() {
+        println!(
+            "  {:>8}: W={:<2} D={:<6} due={:<6} C_j={:<6} L_j={:<5} fifo={} ports={}",
+            spec.name,
+            spec.width,
+            spec.depth,
+            spec.due,
+            m.completion[a],
+            m.lateness[a],
+            m.fifo.depth[a],
+            m.fifo.write_ports[a]
+        );
+    }
+    if args.flag("ascii") {
+        println!("{}", layout.render_ascii(&problem));
+    }
+    if let Some(out) = args.opt("out") {
+        iris::layout::io::save_layout(&layout, &problem, out)?;
+        println!("layout written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> Result<()> {
+    let problem = load_problem_arg(args)?;
+    let kind = parse_kind(args.opt_str("algo", "iris"))?;
+    let layout = baselines::generate(kind, &problem);
+    let input = iris::codegen::CodegenInput::new(&problem, &layout, "pack_data");
+    let all = !(args.flag("host") || args.flag("hls") || args.flag("rust"));
+    if args.flag("host") || all {
+        println!("// ===== host-side C pack function (Listing 1) =====");
+        println!("{}", iris::codegen::c_host::generate(&input));
+    }
+    if args.flag("hls") || all {
+        let input = iris::codegen::CodegenInput::new(&problem, &layout, "read_data");
+        println!("// ===== accelerator-side HLS read module (Listing 2) =====");
+        println!("{}", iris::codegen::hls_read::generate(&input));
+    }
+    if args.flag("rust") || all {
+        println!("// ===== Rust pack function =====");
+        println!("{}", iris::codegen::rust_pack::generate(&input));
+    }
+    let est = iris::hls::estimate(&layout, &problem);
+    println!(
+        "// HLS estimate: latency={} II={} FF={} LUT={} fifo_bits={}",
+        est.latency, est.ii, est.ff, est.lut, est.fifo_bits
+    );
+    Ok(())
+}
+
+fn cmd_dfg() -> Result<()> {
+    println!("Inverse Helmholtz DFG → due dates (Table 5):");
+    let p = dfg::helmholtz_dfg().derive_problem(BusConfig::alveo_u280())?;
+    println!("{}", io::problem_to_json(&p));
+    println!("\nMatMul DFG → due dates (Table 5):");
+    let p = dfg::matmul_dfg(64, 64).derive_problem(BusConfig::alveo_u280())?;
+    println!("{}", io::problem_to_json(&p));
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let workload = match args.opt_str("workload", "helmholtz") {
+        "helmholtz" => Workload::Helmholtz,
+        "matmul" => Workload::MatMul {
+            w_a: args.opt_u32("wa", 64)?,
+            w_b: args.opt_u32("wb", 64)?,
+        },
+        other => bail!("unknown workload '{other}'"),
+    };
+    let kind = parse_kind(args.opt_str("algo", "iris"))?;
+    let mut cfg = PipelineConfig::new(workload, kind);
+    let mut rt = if args.flag("no-xla") {
+        cfg.xla_unpack_check = false;
+        None
+    } else {
+        Some(Runtime::new(Runtime::default_dir())?)
+    };
+    let report = pipeline::run(&cfg, rt.as_mut())?;
+    println!("{}", report.summary());
+    if !report.ok() {
+        bail!("pipeline verification FAILED");
+    }
+    println!("pipeline OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.opt_u64("workers", 4)? as usize;
+    let requests = args.opt_u64("requests", 64)?;
+    let batch = args.opt_u64("batch", 8)? as usize;
+    let server = LayoutServer::start(workers, batch);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|seed| {
+            let p = pipeline::synthetic_problem(8, seed);
+            let data = pipeline::synthetic_data(&p, seed);
+            server.submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv()??;
+        if resp.decode_exact {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!("{}", server.metrics.summary());
+    println!(
+        "{ok}/{requests} exact; wall {:.1} ms; throughput {:.0} req/s",
+        dt.as_secs_f64() * 1e3,
+        requests as f64 / dt.as_secs_f64()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let lo = args.opt_u32("lo", 16)?;
+    let hi = args.opt_u32("hi", 34)?;
+    println!("searching matmul operand widths in [{lo},{hi}] on a 256-bit bus…");
+    let (wa, wb, eff) = iris::dse::best_width_pair(iris::model::matmul_problem, lo, hi);
+    println!("best: (W_A, W_B) = ({wa},{wb}) with Iris efficiency {:.2}%", eff * 100.0);
+    Ok(())
+}
+
+fn cmd_channels(args: &Args) -> Result<()> {
+    use iris::bus::partition::channel_sweep;
+    let problem = if args.positionals.is_empty() {
+        iris::model::helmholtz_problem()
+    } else {
+        load_problem_arg(args)?
+    };
+    let max_k = args.opt_u64("max-k", 4)? as usize;
+    println!(
+        "multi-channel LPT partition sweep ({} arrays, m={}):",
+        problem.arrays.len(),
+        problem.m()
+    );
+    let mut t = iris::util::table::Table::new(vec!["k", "C_max", "L_max", "aggregate eff"]);
+    for (k, c_max, l_max, eff) in channel_sweep(&problem, max_k) {
+        t.row(vec![
+            k.to_string(),
+            c_max.to_string(),
+            l_max.to_string(),
+            iris::util::table::pct(eff),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_perf() -> Result<()> {
+    use iris::benchkit::{black_box, Bencher};
+    use iris::decode::DecodePlan;
+    use iris::pack::PackPlan;
+    let p = iris::model::helmholtz_problem();
+    let l = iris::schedule::iris_layout(&p);
+    let plan = PackPlan::compile(&l, &p);
+    let data = pipeline::synthetic_data(&p, 1);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let bytes = p.total_bits() / 8;
+    let mut buf = plan.alloc_buffer();
+    Bencher::quick().with_bytes(bytes).run("pack helmholtz/iris", || {
+        buf.words_mut().fill(0);
+        plan.pack_into(&refs, &mut buf).unwrap();
+        black_box(&buf);
+    });
+    let dp = DecodePlan::compile(&l, &p);
+    let buf = plan.pack(&refs)?;
+    Bencher::quick().with_bytes(bytes).run("decode helmholtz/iris", || {
+        black_box(dp.decode(&buf).unwrap());
+    });
+    Bencher::quick().run("schedule helmholtz (iris discrete)", || {
+        black_box(iris::schedule::iris_layout(&p));
+    });
+    Ok(())
+}

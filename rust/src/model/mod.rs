@@ -1,0 +1,307 @@
+//! Problem model: accelerator arrays, bus configuration, and the layout
+//! problem instance (paper §3, Tables 1–3).
+//!
+//! Notation mapping (Table 1):
+//! * `m`   — bus width in bits → [`BusConfig::width_bits`]
+//! * task `j` — an accelerator array → [`ArraySpec`]
+//! * `W_j` — element bit width → [`ArraySpec::width`]
+//! * `D_j` — array depth in elements → [`ArraySpec::depth`]
+//! * `p_j = W_j·D_j` — processing time in bit·cycles → [`ArraySpec::bits`]
+//! * `d_j` — due date → [`ArraySpec::due`]
+//! * `δ_j = ⌊m/W_j⌋·W_j` — max bits per cycle → [`ArraySpec::delta_bits`]
+
+pub mod dfg;
+pub mod io;
+
+use anyhow::{bail, Result};
+
+/// Bus (HBM channel) configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BusConfig {
+    /// `m`: bus width in bits (e.g. 256 for one Alveo u280 HBM channel).
+    pub width_bits: u32,
+    /// Host machine word size used by the generated pack function
+    /// (Listing 1 builds bus lines out of host words).
+    pub host_word_bits: u32,
+}
+
+impl BusConfig {
+    pub fn new(width_bits: u32) -> BusConfig {
+        BusConfig {
+            width_bits,
+            host_word_bits: 64,
+        }
+    }
+
+    /// Bus width of one Alveo u280 HBM pseudo-channel at 450 MHz (paper §2).
+    pub fn alveo_u280() -> BusConfig {
+        BusConfig::new(256)
+    }
+}
+
+/// One accelerator input array (a "task" in the scheduling formulation).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArraySpec {
+    pub name: String,
+    /// `W_j`: element width in bits, 1..=64.
+    pub width: u32,
+    /// `D_j`: number of elements.
+    pub depth: u64,
+    /// `d_j`: due date in bus cycles (derived from the accelerator DFG).
+    pub due: u64,
+    /// Optional cap on elements per cycle (the δ/W knob of Table 6);
+    /// `None` means the natural `⌊m/W⌋`.
+    pub max_elems_per_cycle: Option<u32>,
+}
+
+impl ArraySpec {
+    pub fn new(name: &str, width: u32, depth: u64, due: u64) -> ArraySpec {
+        ArraySpec {
+            name: name.to_string(),
+            width,
+            depth,
+            due,
+            max_elems_per_cycle: None,
+        }
+    }
+
+    /// Builder-style δ/W cap (Table 6 sweep).
+    pub fn with_cap(mut self, elems_per_cycle: u32) -> ArraySpec {
+        self.max_elems_per_cycle = Some(elems_per_cycle);
+        self
+    }
+
+    /// `p_j = W_j · D_j` in bits.
+    pub fn bits(&self) -> u64 {
+        self.width as u64 * self.depth
+    }
+
+    /// Elements-per-cycle cap `δ_j / W_j` for bus width `m`.
+    pub fn delta_elems(&self, m: u32) -> u32 {
+        let natural = m / self.width;
+        let capped = match self.max_elems_per_cycle {
+            Some(c) => natural.min(c),
+            None => natural,
+        };
+        capped.max(1).min(self.depth.min(u32::MAX as u64) as u32)
+    }
+
+    /// `δ_j = ⌊m/W_j⌋·W_j` (possibly reduced by the cap), in bits.
+    pub fn delta_bits(&self, m: u32) -> u32 {
+        self.delta_elems(m) * self.width
+    }
+
+    /// Task height `h(j) = p_j/δ_j` — remaining cycles at maximum rate
+    /// (real-valued, as in Algorithm 1.1).
+    pub fn height(&self, m: u32) -> f64 {
+        self.bits() as f64 / self.delta_bits(m) as f64
+    }
+}
+
+/// A complete layout problem instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Problem {
+    pub bus: BusConfig,
+    pub arrays: Vec<ArraySpec>,
+}
+
+impl Problem {
+    /// Validated constructor.
+    pub fn new(bus: BusConfig, arrays: Vec<ArraySpec>) -> Result<Problem> {
+        if bus.width_bits == 0 {
+            bail!("bus width must be positive");
+        }
+        if !(8..=4096).contains(&bus.width_bits) {
+            bail!("bus width {} out of supported range 8..=4096", bus.width_bits);
+        }
+        if arrays.is_empty() {
+            bail!("problem needs at least one array");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for a in &arrays {
+            if a.width == 0 || a.width > 64 {
+                bail!("array '{}': width {} not in 1..=64", a.name, a.width);
+            }
+            if a.width > bus.width_bits {
+                bail!(
+                    "array '{}': element width {} exceeds bus width {}",
+                    a.name,
+                    a.width,
+                    bus.width_bits
+                );
+            }
+            if a.depth == 0 {
+                bail!("array '{}': depth must be positive", a.name);
+            }
+            if let Some(c) = a.max_elems_per_cycle {
+                if c == 0 {
+                    bail!("array '{}': elems-per-cycle cap must be positive", a.name);
+                }
+            }
+            if !seen.insert(a.name.clone()) {
+                bail!("duplicate array name '{}'", a.name);
+            }
+        }
+        Ok(Problem { bus, arrays })
+    }
+
+    /// `m` in the scheduling formulation.
+    pub fn m(&self) -> u32 {
+        self.bus.width_bits
+    }
+
+    /// `p_tot`: total bits across all arrays (numerator of Eq. 1).
+    pub fn total_bits(&self) -> u64 {
+        self.arrays.iter().map(|a| a.bits()).sum()
+    }
+
+    /// `d_max`: latest due date.
+    pub fn d_max(&self) -> u64 {
+        self.arrays.iter().map(|a| a.due).max().unwrap_or(0)
+    }
+
+    /// Release time `r_j = d_max − d_j` of array `j` (paper §4).
+    pub fn release(&self, j: usize) -> u64 {
+        self.d_max() - self.arrays[j].due
+    }
+
+    /// Lower bound on makespan: `⌈p_tot / m⌉` (perfect packing).
+    pub fn c_max_lower_bound(&self) -> u64 {
+        crate::util::ceil_div(self.total_bits(), self.m() as u64)
+    }
+
+    /// Apply a δ/W cap uniformly to all arrays (Table 6 sweep).
+    pub fn with_uniform_cap(&self, elems_per_cycle: u32) -> Problem {
+        let mut p = self.clone();
+        for a in &mut p.arrays {
+            a.max_elems_per_cycle = Some(elems_per_cycle);
+        }
+        p
+    }
+
+    pub fn array_index(&self, name: &str) -> Option<usize> {
+        self.arrays.iter().position(|a| a.name == name)
+    }
+}
+
+/// The paper's worked example (Table 3): five arrays on an 8-bit bus.
+pub fn paper_example() -> Problem {
+    Problem::new(
+        BusConfig::new(8),
+        vec![
+            ArraySpec::new("A", 2, 5, 2),
+            ArraySpec::new("B", 3, 5, 6),
+            ArraySpec::new("C", 4, 3, 3),
+            ArraySpec::new("D", 5, 4, 6),
+            ArraySpec::new("E", 6, 2, 3),
+        ],
+    )
+    .expect("paper example is valid")
+}
+
+/// Inverse Helmholtz inputs (Table 5): u, S, D at 64-bit on a 256-bit bus.
+pub fn helmholtz_problem() -> Problem {
+    Problem::new(
+        BusConfig::alveo_u280(),
+        vec![
+            ArraySpec::new("u", 64, 1331, 333),
+            ArraySpec::new("S", 64, 121, 31),
+            ArraySpec::new("D", 64, 1331, 363),
+        ],
+    )
+    .expect("helmholtz problem is valid")
+}
+
+/// Matrix-multiplication inputs (Table 5) with configurable element widths
+/// (Table 7 varies `(W_A, W_B)` ∈ {(64,64),(33,31),(30,19)}).
+pub fn matmul_problem(w_a: u32, w_b: u32) -> Problem {
+    Problem::new(
+        BusConfig::alveo_u280(),
+        vec![
+            ArraySpec::new("A", w_a, 625, 157),
+            ArraySpec::new("B", w_b, 625, 157),
+        ],
+    )
+    .expect("matmul problem is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_delta_and_heights() {
+        // Table 4 of the paper: δ_j for the worked example on m=8.
+        let p = paper_example();
+        let m = p.m();
+        let delta: Vec<u32> = p.arrays.iter().map(|a| a.delta_bits(m)).collect();
+        assert_eq!(delta, vec![8, 6, 8, 5, 6]); // A,B,C,D,E
+        // Integer heights ⌈D/(δ/W)⌉ from Table 4: A2 B3 C2 D4 E2.
+        let h: Vec<u64> = p
+            .arrays
+            .iter()
+            .map(|a| crate::util::ceil_div(a.depth, a.delta_elems(m) as u64))
+            .collect();
+        assert_eq!(h, vec![2, 3, 2, 4, 2]);
+    }
+
+    #[test]
+    fn release_times_match_table4() {
+        let p = paper_example();
+        assert_eq!(p.d_max(), 6);
+        let r: Vec<u64> = (0..5).map(|j| p.release(j)).collect();
+        assert_eq!(r, vec![4, 0, 3, 0, 3]); // A,B,C,D,E
+    }
+
+    #[test]
+    fn totals() {
+        let p = paper_example();
+        assert_eq!(p.total_bits(), 69);
+        assert_eq!(p.c_max_lower_bound(), 9); // ⌈69/8⌉ — Iris achieves this
+        let h = helmholtz_problem();
+        assert_eq!(h.total_bits(), 178_112);
+        assert_eq!(h.c_max_lower_bound(), 696);
+        let mm = matmul_problem(64, 64);
+        assert_eq!(mm.total_bits(), 80_000);
+        assert_eq!(mm.c_max_lower_bound(), 313);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(Problem::new(BusConfig::new(8), vec![]).is_err());
+        assert!(Problem::new(BusConfig::new(0), vec![ArraySpec::new("a", 2, 2, 0)]).is_err());
+        assert!(
+            Problem::new(BusConfig::new(8), vec![ArraySpec::new("a", 0, 2, 0)]).is_err(),
+            "zero width"
+        );
+        assert!(
+            Problem::new(BusConfig::new(8), vec![ArraySpec::new("a", 16, 2, 0)]).is_err(),
+            "wider than bus"
+        );
+        assert!(
+            Problem::new(BusConfig::new(8), vec![ArraySpec::new("a", 2, 0, 0)]).is_err(),
+            "zero depth"
+        );
+        assert!(Problem::new(
+            BusConfig::new(8),
+            vec![ArraySpec::new("a", 2, 2, 0), ArraySpec::new("a", 2, 2, 0)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cap_reduces_delta() {
+        let p = helmholtz_problem().with_uniform_cap(1);
+        for a in &p.arrays {
+            assert_eq!(a.delta_elems(p.m()), 1);
+            assert_eq!(a.delta_bits(p.m()), 64);
+        }
+    }
+
+    #[test]
+    fn delta_clamped_by_depth() {
+        // A 2-element array can never put more than 2 elements on the bus.
+        let a = ArraySpec::new("x", 8, 2, 0);
+        assert_eq!(a.delta_elems(256), 2);
+    }
+}

@@ -1,0 +1,268 @@
+//! Host-side data organization (paper §5, "Host-Side Organization",
+//! Listing 1): given a layout and the source arrays, build the unified
+//! memory buffer that is streamed over the bus.
+//!
+//! The layout is first *compiled* into a [`PackPlan`] — a flat, per-array
+//! table of absolute bit offsets (cycle·m + lane). Packing then walks each
+//! source array sequentially and shift-or's elements into u64 words,
+//! exactly like the generated C function ("we organize the memory line in
+//! four adjacent uint64 elements … when an element spans across words, it
+//! shifts in the remaining bits to the top of the next word").
+//!
+//! This is an L3 hot path: `pack_into` is allocation-free and uses
+//! aligned-word fast paths; see EXPERIMENTS.md §Perf.
+
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+
+/// Compiled pack plan: for each array, the absolute bit offset of every
+/// element in the unified buffer (indexed by element number).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackPlan {
+    /// Bus width m (bits per cycle).
+    pub m: u32,
+    /// Total cycles (buffer is `cycles·m` bits).
+    pub cycles: u64,
+    /// Per-array element widths.
+    pub widths: Vec<u32>,
+    /// `offsets[a][e]` = absolute bit position of element `e` of array `a`.
+    pub offsets: Vec<Vec<u64>>,
+}
+
+impl PackPlan {
+    /// Compile a layout into a plan. The layout must be valid for the
+    /// problem (see `layout::validate`): elements in stream order.
+    pub fn compile(layout: &Layout, problem: &Problem) -> PackPlan {
+        let n = problem.arrays.len();
+        let mut offsets: Vec<Vec<u64>> = problem
+            .arrays
+            .iter()
+            .map(|a| Vec::with_capacity(a.depth as usize))
+            .collect();
+        for (t, ps) in layout.cycles.iter().enumerate() {
+            let base = t as u64 * layout.m as u64;
+            for p in ps {
+                let a = p.array as usize;
+                debug_assert_eq!(offsets[a].len() as u64, p.elem);
+                offsets[a].push(base + p.bit_lo as u64);
+            }
+        }
+        debug_assert_eq!(offsets.len(), n);
+        PackPlan {
+            m: layout.m,
+            cycles: layout.n_cycles(),
+            widths: problem.arrays.iter().map(|a| a.width).collect(),
+            offsets,
+        }
+    }
+
+    /// Buffer size in bits (payload span; excludes the guard word).
+    pub fn buffer_bits(&self) -> u64 {
+        self.cycles * self.m as u64
+    }
+
+    /// Buffer size in u64 words, **including one trailing guard word**.
+    /// The guard lets the hot loop write the straddle word
+    /// unconditionally (branch-free) even for fields ending exactly at
+    /// the payload boundary; it always reads back as zero.
+    pub fn buffer_words(&self) -> usize {
+        ((self.buffer_bits() + 63) / 64) as usize + 1
+    }
+
+    /// Allocate a zeroed buffer of the right size (payload + guard).
+    pub fn alloc_buffer(&self) -> BitVec {
+        BitVec::zeros(self.buffer_words() * 64)
+    }
+
+    /// Validate that `arrays` matches the plan's geometry.
+    fn check_inputs(&self, arrays: &[&[u64]]) -> Result<()> {
+        if arrays.len() != self.offsets.len() {
+            bail!(
+                "pack: expected {} arrays, got {}",
+                self.offsets.len(),
+                arrays.len()
+            );
+        }
+        for (a, (vals, offs)) in arrays.iter().zip(self.offsets.iter()).enumerate() {
+            if vals.len() != offs.len() {
+                bail!(
+                    "pack: array #{a} has {} elements, plan expects {}",
+                    vals.len(),
+                    offs.len()
+                );
+            }
+            let w = self.widths[a];
+            if w < 64 {
+                if let Some(v) = vals.iter().find(|&&v| v >> w != 0) {
+                    bail!("pack: array #{a} value {v:#x} wider than {w} bits");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack source arrays into a fresh buffer.
+    pub fn pack(&self, arrays: &[&[u64]]) -> Result<BitVec> {
+        let mut buf = self.alloc_buffer();
+        self.pack_into(arrays, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Pack into an existing zeroed buffer (hot path; no allocation).
+    /// The buffer must include the guard word ([`PackPlan::alloc_buffer`]).
+    ///
+    /// Every field write is **branch-free**: the low part is shift-or'd
+    /// into its word and the (possibly empty) spill into the next word
+    /// via the two-step shift `(v >> (63−b)) >> 1`, which is exactly zero
+    /// when the field does not straddle (b + w ≤ 64) — no per-element
+    /// branch on the straddle condition, which is data-dependent and
+    /// unpredictable for custom widths. See EXPERIMENTS.md §Perf.
+    pub fn pack_into(&self, arrays: &[&[u64]], buf: &mut BitVec) -> Result<()> {
+        self.check_inputs(arrays)?;
+        if buf.len_bits() < self.buffer_words() * 64 {
+            bail!(
+                "pack: buffer too small ({} < {} bits incl. guard word)",
+                buf.len_bits(),
+                self.buffer_words() * 64
+            );
+        }
+        let words = buf.words_mut();
+        for (a, vals) in arrays.iter().enumerate() {
+            let w = self.widths[a];
+            let offs = &self.offsets[a];
+            if w == 64 {
+                // 64-bit elements: the field owns its lanes entirely, so
+                // the aligned case is a plain store.
+                for (&off, &v) in offs.iter().zip(vals.iter()) {
+                    let wi = (off >> 6) as usize;
+                    let b = (off & 63) as u32;
+                    if b == 0 {
+                        words[wi] = v;
+                    } else {
+                        words[wi] |= v << b;
+                        words[wi + 1] |= v >> (64 - b);
+                    }
+                }
+            } else {
+                for (&off, &v) in offs.iter().zip(vals.iter()) {
+                    let wi = (off >> 6) as usize;
+                    let b = (off & 63) as u32;
+                    words[wi] |= v << b;
+                    // Spill bits v >> (64−b); written as a two-step shift
+                    // so b = 0 (and non-straddling fields, whose spill is
+                    // all-zero) stay in range. The guard word absorbs the
+                    // write for fields ending at the payload boundary.
+                    words[wi + 1] |= (v >> (63 - b)) >> 1;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reference scalar packer: builds the buffer with `BitVec::set_bits`
+/// field by field (used to cross-check the optimized path).
+pub fn pack_reference(plan: &PackPlan, arrays: &[&[u64]]) -> Result<BitVec> {
+    plan.check_inputs(arrays)?;
+    let mut buf = plan.alloc_buffer();
+    for (a, vals) in arrays.iter().enumerate() {
+        let w = plan.widths[a];
+        for (&off, &v) in plan.offsets[a].iter().zip(vals.iter()) {
+            buf.set_bits(off as usize, w, v);
+        }
+    }
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{matmul_problem, paper_example};
+    use crate::schedule::iris_layout;
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn example_arrays(problem: &crate::model::Problem, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        problem
+            .arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    #[test]
+    fn plan_geometry() {
+        let p = paper_example();
+        let l = iris_layout(&p);
+        let plan = PackPlan::compile(&l, &p);
+        assert_eq!(plan.m, 8);
+        assert_eq!(plan.cycles, 9);
+        assert_eq!(plan.buffer_bits(), 72);
+        assert_eq!(plan.buffer_words(), 3); // 2 payload + 1 guard
+        for (a, spec) in p.arrays.iter().enumerate() {
+            assert_eq!(plan.offsets[a].len() as u64, spec.depth);
+        }
+    }
+
+    #[test]
+    fn optimized_matches_reference_all_layouts() {
+        for p in [paper_example(), matmul_problem(33, 31), matmul_problem(64, 64)] {
+            let arrays = example_arrays(&p, 42);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+            ] {
+                let l = baselines::generate(kind, &p);
+                let plan = PackPlan::compile(&l, &p);
+                let fast = plan.pack(&refs).unwrap();
+                let slow = pack_reference(&plan, &refs).unwrap();
+                assert_eq!(fast, slow, "{} on m={}", kind.name(), p.m());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let p = paper_example();
+        let plan = PackPlan::compile(&iris_layout(&p), &p);
+        let arrays = example_arrays(&p, 1);
+        let mut refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        // Wrong array count.
+        assert!(plan.pack(&refs[..4]).is_err());
+        // Wrong element count.
+        let short = vec![0u64; 2];
+        refs[0] = &short;
+        assert!(plan.pack(&refs).is_err());
+        // Value wider than field.
+        let wide = vec![0xFFu64; 5];
+        let arrays2 = example_arrays(&p, 1);
+        let mut refs2: Vec<&[u64]> = arrays2.iter().map(|v| v.as_slice()).collect();
+        refs2[0] = &wide; // array A is 2-bit
+        assert!(plan.pack(&refs2).is_err());
+    }
+
+    #[test]
+    fn packed_fields_readable_via_bitvec() {
+        let p = paper_example();
+        let l = iris_layout(&p);
+        let plan = PackPlan::compile(&l, &p);
+        let arrays = example_arrays(&p, 7);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = plan.pack(&refs).unwrap();
+        for (a, vals) in arrays.iter().enumerate() {
+            for (e, &v) in vals.iter().enumerate() {
+                let got = buf.get_bits(plan.offsets[a][e] as usize, plan.widths[a]);
+                assert_eq!(got, v, "array {a} elem {e}");
+            }
+        }
+    }
+}

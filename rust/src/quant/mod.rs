@@ -1,0 +1,155 @@
+//! Custom-precision quantization substrate.
+//!
+//! The paper motivates Iris with "custom-precision data types increasingly
+//! used in ML applications" — arbitrary W-bit elements that don't divide
+//! the bus width. This module provides the numeric side: symmetric signed
+//! fixed-point quantization of f64/f32 data into W-bit two's-complement
+//! raw values (what travels on the bus) and exact dequantization, matching
+//! the L1 `dequant` Pallas kernel bit-for-bit.
+
+/// A quantized array: raw W-bit two's-complement values (stored in the low
+/// bits of u64) plus the scale to reconstruct real values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub width: u32,
+    pub scale: f64,
+    pub raw: Vec<u64>,
+}
+
+/// Mask of the low `width` bits.
+#[inline]
+pub fn mask(width: u32) -> u64 {
+    if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Sign-extend the low `width` bits of `raw` (two's complement).
+#[inline]
+pub fn sign_extend(raw: u64, width: u32) -> i64 {
+    debug_assert!((1..=64).contains(&width));
+    let shift = 64 - width;
+    ((raw << shift) as i64) >> shift
+}
+
+/// Largest representable magnitude for a signed W-bit value.
+#[inline]
+pub fn q_max(width: u32) -> i64 {
+    if width == 64 {
+        i64::MAX
+    } else {
+        (1i64 << (width - 1)) - 1
+    }
+}
+
+/// Quantize real values to symmetric signed W-bit fixed point
+/// (round-to-nearest, saturating). The scale is chosen from the maximum
+/// absolute value so the full range is used.
+pub fn quantize(values: &[f64], width: u32) -> Quantized {
+    assert!((2..=64).contains(&width), "width {width} not in 2..=64");
+    let max_abs = values.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let qm = q_max(width) as f64;
+    let scale = if max_abs == 0.0 { 1.0 } else { max_abs / qm };
+    let qm_i = q_max(width);
+    let raw = values
+        .iter()
+        .map(|&v| {
+            // Clamp in the integer domain: for wide types q_max is not
+            // exactly representable in f64 (e.g. W=63: 2^62−1 rounds up to
+            // 2^62, which would flip the sign bit).
+            let q = ((v / scale).round() as i64).clamp(-qm_i, qm_i);
+            (q as u64) & mask(width)
+        })
+        .collect();
+    Quantized { width, scale, raw }
+}
+
+/// Dequantize back to f64 (inverse of [`quantize`] up to rounding error).
+pub fn dequantize(q: &Quantized) -> Vec<f64> {
+    q.raw
+        .iter()
+        .map(|&r| sign_extend(r, q.width) as f64 * q.scale)
+        .collect()
+}
+
+/// W=64 exact transport of f64 data: raw IEEE-754 bit patterns (what the
+/// Helmholtz accelerator streams — "due to the physical nature of the
+/// values, each array element uses 64 bits (double)").
+pub fn f64_to_bits(values: &[f64]) -> Vec<u64> {
+    values.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Inverse of [`f64_to_bits`].
+pub fn bits_to_f64(bits: &[u64]) -> Vec<f64> {
+    bits.iter().map(|&b| f64::from_bits(b)).collect()
+}
+
+/// Worst-case absolute quantization error for the given data (half an LSB).
+pub fn quantization_error_bound(q: &Quantized) -> f64 {
+    0.5 * q.scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sign_extend_basics() {
+        assert_eq!(sign_extend(0b11111, 5), -1);
+        assert_eq!(sign_extend(0b01111, 5), 15);
+        assert_eq!(sign_extend(0b10000, 5), -16);
+        assert_eq!(sign_extend(u64::MAX, 64), -1);
+        assert_eq!(sign_extend(1, 64), 1);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut rng = Rng::new(5);
+        for width in [4u32, 8, 13, 17, 24, 33, 48, 63] {
+            let values: Vec<f64> = (0..500).map(|_| rng.f64_range(-10.0, 10.0)).collect();
+            let q = quantize(&values, width);
+            let back = dequantize(&q);
+            let bound = quantization_error_bound(&q) + 1e-12;
+            for (v, b) in values.iter().zip(back.iter()) {
+                assert!(
+                    (v - b).abs() <= bound,
+                    "width {width}: |{v} - {b}| > {bound}"
+                );
+            }
+            // Raw values fit in W bits.
+            for &r in &q.raw {
+                assert_eq!(r & !mask(width), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_saturates_and_handles_zero() {
+        let q = quantize(&[0.0, 0.0], 8);
+        assert_eq!(dequantize(&q), vec![0.0, 0.0]);
+        let q = quantize(&[1.0, -1.0], 8);
+        assert_eq!(q.raw[0], 127);
+        assert_eq!(q.raw[1], (-127i64 as u64) & mask(8));
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_exact() {
+        let vals = [0.0, -0.0, 1.5, -2.75e-308, f64::INFINITY, 3.1415926535];
+        let back = bits_to_f64(&f64_to_bits(&vals));
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn matches_python_dequant_convention() {
+        // Mirror python/tests/test_unpack.py::test_dequant_known_values:
+        // 17-bit raw 0x1FFFF = -1, 1 = +1, 0x10000 = -65536.
+        assert_eq!(sign_extend(0x1FFFF, 17), -1);
+        assert_eq!(sign_extend(0x10000, 17), -65536);
+        assert_eq!(sign_extend(1, 17), 1);
+    }
+}

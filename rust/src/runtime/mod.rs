@@ -1,0 +1,153 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the CPU PJRT client.
+//! This is the only place the coordinator touches XLA; Python is never on
+//! the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, unwrapping the 1-tuple results
+//! (`return_tuple=True` at lowering).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub use xla::Literal;
+
+/// Lazily-compiled artifact registry backed by one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.join("manifest.json").exists() {
+            bail!(
+                "artifacts manifest not found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir,
+            exes: BTreeMap::new(),
+        })
+    }
+
+    /// Default artifacts location relative to the repo root, overridable
+    /// via `IRIS_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("IRIS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the unwrapped single output literal.
+    pub fn exec(&mut self, name: &str, inputs: &[Literal]) -> Result<Literal> {
+        self.load(name)?;
+        let exe = self.exes.get(name).unwrap();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing artifact '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        // Lowered with return_tuple=True ⇒ 1-tuple.
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Names of currently compiled artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Literal constructors for the shapes this project uses.
+pub mod lit {
+    use super::*;
+
+    pub fn f32_1d(v: &[f32]) -> Literal {
+        Literal::vec1(v)
+    }
+
+    pub fn f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+        assert_eq!(v.len(), rows * cols);
+        Ok(Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    pub fn f64_3d(v: &[f64], n: usize) -> Result<Literal> {
+        assert_eq!(v.len(), n * n * n);
+        Ok(Literal::vec1(v).reshape(&[n as i64, n as i64, n as i64])?)
+    }
+
+    pub fn f64_2d(v: &[f64], rows: usize, cols: usize) -> Result<Literal> {
+        assert_eq!(v.len(), rows * cols);
+        Ok(Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    pub fn u64_1d(v: &[u64]) -> Literal {
+        Literal::vec1(v)
+    }
+
+    pub fn i32_1d(v: &[i32]) -> Literal {
+        Literal::vec1(v)
+    }
+
+    /// Zero-pad `v` to `len` and build a u64 literal (the unpack
+    /// artifacts take fixed-capacity word buffers).
+    pub fn u64_1d_padded(v: &[u64], len: usize) -> Result<Literal> {
+        if v.len() > len {
+            bail!("buffer of {} words exceeds artifact capacity {len}", v.len());
+        }
+        let mut padded = v.to_vec();
+        padded.resize(len, 0);
+        Ok(Literal::vec1(&padded[..]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Compile/execute tests live in rust/tests/runtime_e2e.rs (they need
+    // `make artifacts`); here we only cover the artifact-missing path.
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let e = match Runtime::new("/nonexistent-dir") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing manifest"),
+        };
+        assert!(format!("{e}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn padded_literal_rejects_overflow() {
+        assert!(lit::u64_1d_padded(&[1, 2, 3], 2).is_err());
+    }
+}

@@ -1,0 +1,382 @@
+//! Discrete cycle-by-cycle Iris engine (the default).
+//!
+//! Each bus cycle is allocated independently: ready tasks (release time
+//! reached, work remaining) are prioritized by remaining height
+//! `h(j) = remaining_j / (δ_j/W_j)` — the number of full-rate cycles the
+//! task still needs — and bus lanes are apportioned with the modified
+//! largest-remainder method ([`super::lrm`]). Because every cycle carries
+//! whole elements, the schedule *is* the layout; no post-hoc rounding of a
+//! continuous solution is needed (contrast [`super::drozdowski`]).
+
+use super::lrm::{self, LrmTask};
+use super::{ForwardSchedule, LevelPolicy, ScheduleOptions};
+use crate::model::Problem;
+
+/// Per-task view used during allocation.
+#[derive(Debug, Clone, Copy)]
+struct View {
+    task: usize,
+    width: u32,
+    /// Natural per-cycle element cap `δ_j/W_j` (with any user δ/W cap).
+    delta_elems: u32,
+    /// Elements still to schedule.
+    remaining: u64,
+}
+
+impl View {
+    /// Cap for this cycle: can't place more than remain.
+    fn cap_elems(&self) -> u32 {
+        (self.remaining.min(self.delta_elems as u64)) as u32
+    }
+}
+
+/// Exact comparison of heights `h(a) = rem_a/δe_a` vs `h(b)` without
+/// floating point: `rem_a·δe_b ? rem_b·δe_a` in 128-bit.
+fn cmp_height(a: &View, b: &View) -> std::cmp::Ordering {
+    let lhs = a.remaining as u128 * b.delta_elems as u128;
+    let rhs = b.remaining as u128 * a.delta_elems as u128;
+    lhs.cmp(&rhs)
+}
+
+/// Build the forward (release-time domain) schedule.
+pub fn forward_schedule(problem: &Problem, opts: &ScheduleOptions) -> ForwardSchedule {
+    let n = problem.arrays.len();
+    let m = problem.m();
+    let releases: Vec<u64> = (0..n).map(|j| problem.release(j)).collect();
+    let mut remaining: Vec<u64> = problem.arrays.iter().map(|a| a.depth).collect();
+    let delta_elems: Vec<u32> = problem.arrays.iter().map(|a| a.delta_elems(m)).collect();
+    let mut pending: u64 = remaining.iter().sum();
+    let mut cycles: Vec<Vec<(usize, u32)>> = Vec::new();
+    let mut t: u64 = 0;
+    while pending > 0 {
+        // Ready set.
+        let mut views: Vec<View> = (0..n)
+            .filter(|&j| releases[j] <= t && remaining[j] > 0)
+            .map(|j| View {
+                task: j,
+                width: problem.arrays[j].width,
+                delta_elems: delta_elems[j],
+                remaining: remaining[j],
+            })
+            .collect();
+        if views.is_empty() {
+            // Idle until the next release. (Can only happen when all
+            // currently-released arrays are finished early.)
+            let next = (0..n)
+                .filter(|&j| remaining[j] > 0)
+                .map(|j| releases[j])
+                .min()
+                .expect("pending > 0 implies an unreleased task exists");
+            debug_assert!(next > t);
+            for _ in t..next {
+                cycles.push(Vec::new());
+            }
+            t = next;
+            continue;
+        }
+        // Order by nonincreasing h(j); deterministic tie-break on index.
+        views.sort_by(|a, b| cmp_height(b, a).then(a.task.cmp(&b.task)));
+        let alloc = allocate_cycle(&views, m, opts);
+        debug_assert!(
+            alloc.iter().map(|&(_, e)| e).sum::<u32>() > 0,
+            "a ready cycle must place at least one element"
+        );
+        // Event batching (the τ-interval idea of Algorithm 1.1, in exact
+        // integer arithmetic): this allocation repeats verbatim until the
+        // next event — a release, a task's remaining work dropping below
+        // its per-cycle cap, or two heights crossing (which would change
+        // the priority order and hence tie-breaks). Emitting all `k`
+        // identical cycles at once turns the per-cycle O(n log n) loop
+        // into an O(#events) loop, which is what makes 1000-array
+        // problems schedule in milliseconds (see EXPERIMENTS.md §Perf).
+        let k = stable_cycles(&views, &alloc, &releases, &remaining, t).max(1);
+        for &(j, e) in &alloc {
+            remaining[j] -= k * e as u64;
+            pending -= k * e as u64;
+        }
+        for _ in 0..k {
+            cycles.push(alloc.clone());
+        }
+        t += k;
+    }
+    ForwardSchedule { cycles }
+}
+
+/// Number of consecutive cycles (≥1) the allocation provably repeats.
+fn stable_cycles(
+    views: &[View],
+    alloc: &[(usize, u32)],
+    releases: &[u64],
+    remaining: &[u64],
+    t: u64,
+) -> u64 {
+    // Per-view allocation rate in elements/cycle (0 for unallocated).
+    // `alloc` preserves `views` order, so a single linear merge suffices.
+    let mut rate = vec![0u64; views.len()];
+    let mut ai = 0;
+    for (i, v) in views.iter().enumerate() {
+        if ai < alloc.len() && alloc[ai].0 == v.task {
+            rate[i] = alloc[ai].1 as u64;
+            ai += 1;
+        }
+    }
+    debug_assert_eq!(ai, alloc.len());
+    let mut k = u64::MAX;
+    // Event 1: next release of a pending task.
+    for (j, &r) in releases.iter().enumerate() {
+        if r > t && remaining[j] > 0 {
+            k = k.min(r - t);
+        }
+    }
+    // Event 2: a task's remaining work drops below its per-cycle cap
+    // (changing cap_elems), or an allocated task runs dry.
+    for (v, &e) in views.iter().zip(rate.iter()) {
+        if e > 0 {
+            let rem = v.remaining;
+            // Keep cap_elems() == delta_elems: need rem - i·e ≥ δe for all
+            // emitted cycles, i.e. i ≤ (rem − δe)/e; if already below the
+            // cap we are in the end-game — no batching.
+            if rem < v.delta_elems as u64 + e {
+                return 1;
+            }
+            k = k.min((rem - v.delta_elems as u64) / e + 1);
+        }
+    }
+    // Event 3: two heights cross (only adjacent pairs in the sorted order
+    // can cross first). h_j(i) = (rem_j − i·e_j)/δe_j; the order between
+    // adjacent (a, b) with h_a ≥ h_b is preserved while
+    //   (rem_a − i·e_a)·δe_b ≥ (rem_b − i·e_b)·δe_a
+    // ⇔ d0 − i·dr ≥ 0 with d0 = rem_a·δe_b − rem_b·δe_a and
+    //   dr = e_a·δe_b − e_b·δe_a. First violation at i = ⌊d0/dr⌋ + 1.
+    for i in 0..views.len().saturating_sub(1) {
+        let (a, b) = (&views[i], &views[i + 1]);
+        let (ea, eb) = (rate[i] as i128, rate[i + 1] as i128);
+        let d0 = a.remaining as i128 * b.delta_elems as i128
+            - b.remaining as i128 * a.delta_elems as i128;
+        let dr = ea * b.delta_elems as i128 - eb * a.delta_elems as i128;
+        if dr > 0 {
+            // First cycle index whose *state* differs: heights become
+            // equal at i = d0/dr (exact division — a group merge matters
+            // for the strict policy) or cross just after.
+            let event = if d0 > 0 && d0 % dr == 0 {
+                (d0 / dr) as u64
+            } else {
+                (d0 / dr) as u64 + 1
+            };
+            k = k.min(event.max(1));
+        }
+    }
+    if k == u64::MAX {
+        1
+    } else {
+        k.max(1)
+    }
+}
+
+/// Allocate one bus cycle among the ready tasks (sorted by priority).
+/// Returns `(task, elements)` pairs in priority order, zero entries
+/// omitted.
+fn allocate_cycle(views: &[View], m: u32, opts: &ScheduleOptions) -> Vec<(usize, u32)> {
+    let total_demand: u64 = views
+        .iter()
+        .map(|v| v.cap_elems() as u64 * v.width as u64)
+        .sum();
+    let mut elems: Vec<u32> = if total_demand <= m as u64 {
+        // Everything fits: grant all demands (FIND_CAPABILITIES line 29).
+        views.iter().map(|v| v.cap_elems()).collect()
+    } else {
+        match opts.policy {
+            LevelPolicy::Pooled => {
+                let tasks: Vec<LrmTask> = views
+                    .iter()
+                    .map(|v| LrmTask {
+                        width: v.width,
+                        cap_elems: v.cap_elems(),
+                    })
+                    .collect();
+                lrm::allocate(&tasks, m, opts.greedy_fill).elems
+            }
+            LevelPolicy::Strict => allocate_strict(views, m, opts),
+        }
+    };
+    // Final greedy fill across every ready task (cheap, never increases
+    // C_max): only when enabled and lanes remain.
+    if opts.greedy_fill {
+        let mut used: u64 = elems
+            .iter()
+            .zip(views.iter())
+            .map(|(&e, v)| e as u64 * v.width as u64)
+            .sum();
+        loop {
+            let mut progressed = false;
+            for (i, v) in views.iter().enumerate() {
+                if elems[i] < v.cap_elems() && used + v.width as u64 <= m as u64 {
+                    elems[i] += 1;
+                    used += v.width as u64;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+    // Densest-alone override: with indivisible elements the fair mixed
+    // split can be strictly sparser than dedicating the cycle to one
+    // array (e.g. W = {5, 7} on m = 16: mix 5+7 = 12 bits, but one array
+    // alone fills 14–15). If a single task beats the mix, give it the
+    // cycle — this never hurts makespan and is what keeps Iris at least
+    // as dense as the homogeneous packed baseline. Ties keep the mix
+    // (interleaving relieves FIFO pressure, §6).
+    let mix_bits: u64 = elems
+        .iter()
+        .zip(views.iter())
+        .map(|(&e, v)| e as u64 * v.width as u64)
+        .sum();
+    if let Some(best) = views
+        .iter()
+        .enumerate()
+        .max_by_key(|(i, v)| (v.cap_elems() as u64 * v.width as u64, usize::MAX - i))
+    {
+        let alone_bits = best.1.cap_elems() as u64 * best.1.width as u64;
+        if alone_bits > mix_bits {
+            let mut solo = vec![0u32; views.len()];
+            solo[best.0] = best.1.cap_elems();
+            elems = solo;
+        }
+    }
+    views
+        .iter()
+        .zip(elems.iter())
+        .filter(|&(_, &e)| e > 0)
+        .map(|(v, &e)| (v.task, e))
+        .collect()
+}
+
+/// Algorithm 1.2 as printed: serve equal-height groups from the top;
+/// after an LRM split no lower group is served (`avail := 0`).
+fn allocate_strict(views: &[View], m: u32, opts: &ScheduleOptions) -> Vec<u32> {
+    let mut elems = vec![0u32; views.len()];
+    let mut avail = m as i64;
+    let mut i = 0;
+    while i < views.len() && avail > 0 {
+        // Group of equal-height tasks starting at i.
+        let mut j = i + 1;
+        while j < views.len() && cmp_height(&views[i], &views[j]) == std::cmp::Ordering::Equal {
+            j += 1;
+        }
+        let group = &views[i..j];
+        let demand: u64 = group
+            .iter()
+            .map(|v| v.cap_elems() as u64 * v.width as u64)
+            .sum();
+        if demand <= avail as u64 {
+            for (k, v) in group.iter().enumerate() {
+                elems[i + k] = v.cap_elems();
+            }
+            avail -= demand as i64;
+        } else {
+            let tasks: Vec<LrmTask> = group
+                .iter()
+                .map(|v| LrmTask {
+                    width: v.width,
+                    cap_elems: v.cap_elems(),
+                })
+                .collect();
+            let r = lrm::allocate(&tasks, avail as u32, opts.greedy_fill);
+            for (k, &e) in r.elems.iter().enumerate() {
+                elems[i + k] = e;
+            }
+            avail = 0; // paper: tasks in T can use at most avail processors
+        }
+        i = j;
+    }
+    elems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{helmholtz_problem, matmul_problem, paper_example};
+    use crate::schedule::ScheduleOptions;
+
+    fn counts(cycle: &[(usize, u32)]) -> Vec<(usize, u32)> {
+        cycle.to_vec()
+    }
+
+    #[test]
+    fn worked_example_forward_trace() {
+        // Hand-verified forward trace of the paper example (pooled LRM +
+        // greedy fill): 9 cycles totaling 19 elements / 69 bits.
+        let p = paper_example();
+        let fwd = forward_schedule(&p, &ScheduleOptions::default());
+        assert_eq!(fwd.n_cycles(), 9);
+        let total_elems: u64 = (0..5).map(|j| fwd.elements_of(j)).sum();
+        assert_eq!(total_elems, 19);
+        for (j, a) in p.arrays.iter().enumerate() {
+            assert_eq!(fwd.elements_of(j), a.depth, "array {}", a.name);
+        }
+        // t=0..2: only D (r=0) and B (r=0) ready: one element each (8 bits).
+        let d = p.array_index("D").unwrap();
+        let b = p.array_index("B").unwrap();
+        for t in 0..3 {
+            assert_eq!(counts(&fwd.cycles[t]), vec![(d, 1), (b, 1)]);
+        }
+    }
+
+    #[test]
+    fn helmholtz_hits_makespan_lower_bound() {
+        // All widths 64 on m=256: every cycle carries 4 elements until the
+        // tail, so C_max = ⌈2783/4⌉ = 696 (paper: 696).
+        let p = helmholtz_problem();
+        let fwd = forward_schedule(&p, &ScheduleOptions::default());
+        assert_eq!(fwd.n_cycles(), 696);
+    }
+
+    #[test]
+    fn matmul_64_dense() {
+        let p = matmul_problem(64, 64);
+        let fwd = forward_schedule(&p, &ScheduleOptions::default());
+        assert_eq!(fwd.n_cycles(), 313); // paper Iris: 313 (naive 314)
+    }
+
+    #[test]
+    fn matmul_custom_widths_beat_naive_packing() {
+        // (33,31): mixed 4+4 cycles use all 256 bits ⇒ C_max ≈ ⌈40000/256⌉.
+        let p = matmul_problem(33, 31);
+        let fwd = forward_schedule(&p, &ScheduleOptions::default());
+        assert!(
+            fwd.n_cycles() <= 160,
+            "C_max {} should be near the 157-cycle bound",
+            fwd.n_cycles()
+        );
+    }
+
+    #[test]
+    fn strict_policy_schedules_everything() {
+        let p = paper_example();
+        let fwd = forward_schedule(&p, &ScheduleOptions::paper_strict());
+        for (j, a) in p.arrays.iter().enumerate() {
+            assert_eq!(fwd.elements_of(j), a.depth);
+        }
+    }
+
+    #[test]
+    fn idle_gap_when_released_work_finishes_early() {
+        // One tiny array due late (released early in the forward domain)
+        // and a big one due early (released late): the gap between them
+        // must appear as idle cycles.
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        let p = Problem::new(
+            BusConfig::new(8),
+            vec![
+                ArraySpec::new("tiny", 8, 1, 10), // r = 0
+                ArraySpec::new("big", 8, 4, 1),   // r = 9
+            ],
+        )
+        .unwrap();
+        let fwd = forward_schedule(&p, &ScheduleOptions::default());
+        assert_eq!(fwd.n_cycles(), 13); // 1 busy + 8 idle + 4 busy
+        assert!(fwd.cycles[1].is_empty() && fwd.cycles[8].is_empty());
+    }
+}

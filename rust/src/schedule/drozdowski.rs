@@ -1,0 +1,330 @@
+//! Continuous interval engine — Algorithm 1.1 as printed (after
+//! Drozdowski 1996, "Real-time scheduling of linear speedup parallel
+//! tasks"), followed by an accumulator-based discretization into whole
+//! elements per cycle.
+//!
+//! Tasks are grouped by release time `R_k`; within a group, intervals are
+//! cut wherever (a) two task heights equalize (`τ'`), (b) a task completes
+//! (`τ''`), or (c) the next release arrives. Lane capabilities `β_j` are
+//! found level-by-level over equal-height sets with largest-remainder
+//! apportionment in element multiples.
+//!
+//! The discrete engine ([`super::discrete`]) supersedes this for layout
+//! generation (it never needs rounding); this implementation exists to
+//! compare against the paper's algorithm verbatim (ablation bench) and to
+//! cross-check makespans.
+
+use super::lrm::{self, LrmTask};
+use super::ForwardSchedule;
+use crate::model::Problem;
+
+const EPS: f64 = 1e-9;
+
+/// A scheduling interval: for `len` cycles starting at `start`, task `j`
+/// streams at `rate_bits[j]` bits per cycle.
+#[derive(Debug, Clone)]
+pub struct Interval {
+    pub start: f64,
+    pub len: f64,
+    /// Parallel to `Problem::arrays`; 0.0 for idle tasks.
+    pub rate_bits: Vec<f64>,
+}
+
+/// Continuous schedule: the interval list plus the total span.
+#[derive(Debug, Clone)]
+pub struct ContinuousSchedule {
+    pub intervals: Vec<Interval>,
+    pub span: f64,
+}
+
+/// Run Algorithm 1.1 in the (converted) release-time domain.
+pub fn continuous_schedule(problem: &Problem) -> ContinuousSchedule {
+    let n = problem.arrays.len();
+    let m = problem.m();
+    let releases: Vec<u64> = (0..n).map(|j| problem.release(j)).collect();
+    let delta_bits: Vec<f64> = problem
+        .arrays
+        .iter()
+        .map(|a| a.delta_bits(m) as f64)
+        .collect();
+    let delta_elems: Vec<u32> = problem.arrays.iter().map(|a| a.delta_elems(m)).collect();
+    // Heights in full-rate cycles: h(j) = p_j / δ_j.
+    let mut h: Vec<f64> = problem
+        .arrays
+        .iter()
+        .enumerate()
+        .map(|(j, a)| a.bits() as f64 / delta_bits[j])
+        .collect();
+    let mut release_points: Vec<u64> = releases.clone();
+    release_points.sort_unstable();
+    release_points.dedup();
+
+    let mut t = 0.0f64;
+    let mut intervals = Vec::new();
+    loop {
+        // Active set: released with height remaining.
+        let mut active: Vec<usize> = (0..n)
+            .filter(|&j| (releases[j] as f64) <= t + EPS && h[j] > EPS)
+            .collect();
+        let next_release = release_points
+            .iter()
+            .copied()
+            .map(|r| r as f64)
+            .find(|&r| r > t + EPS);
+        if active.is_empty() {
+            match next_release {
+                Some(r) if (0..n).any(|j| h[j] > EPS) => {
+                    // Idle until the next release.
+                    intervals.push(Interval {
+                        start: t,
+                        len: r - t,
+                        rate_bits: vec![0.0; n],
+                    });
+                    t = r;
+                    continue;
+                }
+                _ => break, // all done
+            }
+        }
+        // Order by nonincreasing height.
+        active.sort_by(|&a, &b| h[b].partial_cmp(&h[a]).unwrap().then(a.cmp(&b)));
+        // FIND_CAPABILITIES: level-by-level over equal heights.
+        let beta = find_capabilities(&active, &h, &delta_bits, &delta_elems, problem, m);
+        let rate: Vec<f64> = (0..n).map(|j| beta[j] / delta_bits[j]).collect();
+        debug_assert!(
+            beta.iter().sum::<f64>() > 0.0,
+            "active set must make progress"
+        );
+        // τ': first moment two adjacent (by height) tasks equalize.
+        let mut tau1 = f64::INFINITY;
+        for w in active.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if h[a] - h[b] > EPS && rate[a] - rate[b] > EPS {
+                tau1 = tau1.min((h[a] - h[b]) / (rate[a] - rate[b]));
+            }
+        }
+        // τ'': first completion among progressing tasks.
+        let mut tau2 = f64::INFINITY;
+        for &j in &active {
+            if rate[j] > EPS {
+                tau2 = tau2.min(h[j] / rate[j]);
+            }
+        }
+        // Next release boundary.
+        let tau3 = next_release.map(|r| r - t).unwrap_or(f64::INFINITY);
+        let tau = tau1.min(tau2).min(tau3).max(EPS);
+        assert!(tau.is_finite(), "no progress bound found");
+        intervals.push(Interval {
+            start: t,
+            len: tau,
+            rate_bits: beta.clone(),
+        });
+        for &j in &active {
+            h[j] = (h[j] - tau * rate[j]).max(0.0);
+        }
+        t += tau;
+        if (0..n).all(|j| h[j] <= EPS) {
+            break;
+        }
+    }
+    ContinuousSchedule {
+        intervals,
+        span: t,
+    }
+}
+
+/// Level-by-level lane assignment over equal-height groups (Alg. 1.2).
+/// Returns β in bits per task (full vector, zeros for inactive).
+fn find_capabilities(
+    active: &[usize],
+    h: &[f64],
+    delta_bits: &[f64],
+    delta_elems: &[u32],
+    problem: &Problem,
+    m: u32,
+) -> Vec<f64> {
+    let n = problem.arrays.len();
+    let mut beta = vec![0.0; n];
+    let mut avail = m as i64;
+    let mut i = 0;
+    while i < active.len() && avail > 0 {
+        let mut j = i + 1;
+        while j < active.len() && (h[active[i]] - h[active[j]]).abs() <= 1e-6 {
+            j += 1;
+        }
+        let group = &active[i..j];
+        let demand: f64 = group.iter().map(|&g| delta_bits[g]).sum();
+        if demand <= avail as f64 + EPS {
+            for &g in group {
+                beta[g] = delta_bits[g];
+            }
+            avail -= demand.round() as i64;
+        } else {
+            let tasks: Vec<LrmTask> = group
+                .iter()
+                .map(|&g| LrmTask {
+                    width: problem.arrays[g].width,
+                    cap_elems: delta_elems[g],
+                })
+                .collect();
+            let r = lrm::allocate(&tasks, avail as u32, false);
+            for (k, &g) in group.iter().enumerate() {
+                beta[g] = (r.elems[k] * problem.arrays[g].width) as f64;
+            }
+            avail = 0; // paper: avail := 0 after an LRM split
+        }
+        i = j;
+    }
+    beta
+}
+
+/// Discretize the continuous schedule into whole elements per cycle using
+/// per-task bit accumulators, then flush any rounding residue.
+pub fn forward_schedule(problem: &Problem) -> ForwardSchedule {
+    let cont = continuous_schedule(problem);
+    let n = problem.arrays.len();
+    let m = problem.m() as u64;
+    let widths: Vec<u64> = problem.arrays.iter().map(|a| a.width as u64).collect();
+    let delta_elems: Vec<u32> = problem
+        .arrays
+        .iter()
+        .map(|a| a.delta_elems(problem.m()))
+        .collect();
+    let mut remaining: Vec<u64> = problem.arrays.iter().map(|a| a.depth).collect();
+    let mut acc = vec![0.0f64; n];
+    let n_cycles = cont.span.ceil() as u64;
+    let mut cycles: Vec<Vec<(usize, u32)>> = Vec::with_capacity(n_cycles as usize);
+    let mut iv = 0usize;
+    for c in 0..n_cycles {
+        let (lo, hi) = (c as f64, (c + 1) as f64);
+        // Accumulate bits earned during [lo, hi) from overlapping intervals.
+        while iv < cont.intervals.len() && cont.intervals[iv].start + cont.intervals[iv].len <= lo {
+            iv += 1;
+        }
+        let mut k = iv;
+        while k < cont.intervals.len() && cont.intervals[k].start < hi {
+            let int = &cont.intervals[k];
+            let overlap = (int.start + int.len).min(hi) - int.start.max(lo);
+            if overlap > 0.0 {
+                for j in 0..n {
+                    acc[j] += int.rate_bits[j] * overlap;
+                }
+            }
+            k += 1;
+        }
+        // Emit whole elements, highest accumulator first, bounded by the
+        // bus width, the per-cycle cap, and the remaining depth.
+        let mut order: Vec<usize> = (0..n).filter(|&j| remaining[j] > 0).collect();
+        order.sort_by(|&a, &b| acc[b].partial_cmp(&acc[a]).unwrap().then(a.cmp(&b)));
+        let mut used = 0u64;
+        let mut alloc = Vec::new();
+        for &j in &order {
+            let fit = (m - used) / widths[j];
+            // Round-to-nearest keeps the integral schedule tight against
+            // the continuous one (pure floor defers too much work to the
+            // flush phase and inflates C_max on small buses).
+            let want = (acc[j] / widths[j] as f64 + 0.5).floor() as u64;
+            let e = want
+                .min(fit)
+                .min(delta_elems[j] as u64)
+                .min(remaining[j]) as u32;
+            if e > 0 {
+                alloc.push((j, e));
+                used += e as u64 * widths[j];
+                acc[j] -= (e as u64 * widths[j]) as f64;
+                remaining[j] -= e as u64;
+            }
+        }
+        cycles.push(alloc);
+    }
+    // Flush rounding residue: any still-unplaced elements go in extra
+    // cycles (priority: most remaining first).
+    while remaining.iter().any(|&r| r > 0) {
+        let mut order: Vec<usize> = (0..n).filter(|&j| remaining[j] > 0).collect();
+        order.sort_by(|&a, &b| remaining[b].cmp(&remaining[a]).then(a.cmp(&b)));
+        let mut used = 0u64;
+        let mut alloc = Vec::new();
+        for &j in &order {
+            let fit = (m - used) / widths[j];
+            let e = fit.min(delta_elems[j] as u64).min(remaining[j]) as u32;
+            if e > 0 {
+                alloc.push((j, e));
+                used += e as u64 * widths[j];
+                remaining[j] -= e as u64;
+            }
+        }
+        assert!(!alloc.is_empty(), "flush must progress");
+        cycles.push(alloc);
+    }
+    // Drop trailing empty allocation cycles introduced by ceil(span).
+    while matches!(cycles.last(), Some(c) if c.is_empty()) {
+        cycles.pop();
+    }
+    ForwardSchedule { cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::metrics::LayoutMetrics;
+    use crate::layout::validate::validate;
+    use crate::model::{helmholtz_problem, matmul_problem, paper_example};
+    use crate::schedule::reverse::materialize_reversed;
+
+    #[test]
+    fn continuous_span_matches_lower_bound_when_dense() {
+        // Helmholtz: widths all divide the bus; the continuous span is
+        // p_tot/m = 695.75.
+        let p = helmholtz_problem();
+        let c = continuous_schedule(&p);
+        assert!((c.span - 695.75).abs() < 1e-6, "span {}", c.span);
+    }
+
+    #[test]
+    fn worked_example_continuous_close_to_discrete() {
+        let p = paper_example();
+        let fwd = forward_schedule(&p);
+        let l = materialize_reversed(&fwd, &p);
+        validate(&l, &p).unwrap();
+        let m = LayoutMetrics::compute(&l, &p);
+        // Discretization may cost a cycle or two over the exact 9.
+        assert!(m.c_max <= 11, "continuous C_max {}", m.c_max);
+    }
+
+    #[test]
+    fn helmholtz_layout_valid_and_tight() {
+        let p = helmholtz_problem();
+        let fwd = forward_schedule(&p);
+        let l = materialize_reversed(&fwd, &p);
+        validate(&l, &p).unwrap();
+        let m = LayoutMetrics::compute(&l, &p);
+        assert!(m.c_max <= 700, "C_max {}", m.c_max); // paper: 696
+    }
+
+    #[test]
+    fn matmul_custom_widths_valid() {
+        let p = matmul_problem(33, 31);
+        let fwd = forward_schedule(&p);
+        let l = materialize_reversed(&fwd, &p);
+        validate(&l, &p).unwrap();
+    }
+
+    #[test]
+    fn intervals_cover_all_work() {
+        let p = paper_example();
+        let c = continuous_schedule(&p);
+        for (j, a) in p.arrays.iter().enumerate() {
+            let bits: f64 = c
+                .intervals
+                .iter()
+                .map(|i| i.rate_bits[j] * i.len)
+                .sum();
+            assert!(
+                (bits - a.bits() as f64).abs() < 1e-6,
+                "array {} got {bits} of {} bits",
+                a.name,
+                a.bits()
+            );
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Largest-remainder (Hamilton) apportionment of bus bit-lanes to tasks —
+//! the paper's Algorithm 1.3, modified so allocations are **multiples of
+//! each task's element width** (array elements are indivisible: a 17-bit
+//! element may use 17, 34, 51 bits of a 64-bit bus, never 20).
+
+/// A task competing for bus lanes in one allocation round.
+#[derive(Debug, Clone, Copy)]
+pub struct LrmTask {
+    /// Element width `W_j` in bits.
+    pub width: u32,
+    /// Maximum elements this round: `min(δ_j/W_j, remaining_j)`.
+    pub cap_elems: u32,
+}
+
+impl LrmTask {
+    /// Capped `δ'_j` in bits.
+    pub fn delta_bits(&self) -> u64 {
+        self.width as u64 * self.cap_elems as u64
+    }
+}
+
+/// Result of one apportionment round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LrmResult {
+    /// Elements allocated per task (same order as input).
+    pub elems: Vec<u32>,
+    /// Unallocated bits left on the bus.
+    pub leftover_bits: u32,
+}
+
+/// Apportion `avail_bits` lanes among `tasks` (which together demand more
+/// than `avail_bits`, otherwise the caller should grant everything).
+///
+/// Steps (Algorithm 1.3):
+/// 1. Hare quota: `v_j = δ'_j · avail / Σδ'` — each task's fair share.
+/// 2. Integral allocation: `β_j = ⌊v_j/W_j⌋` elements (largest multiple of
+///    the element width below the share), capped at `cap_elems`.
+/// 3. Remainder pass: tasks sorted by decreasing remainder receive one
+///    extra element while it fits.
+/// 4. Optional greedy fill (`greedy_fill`): keep adding elements in the
+///    same priority order until nothing fits — never increases `C_max`,
+///    strictly reduces wasted bandwidth. Disabled when reproducing the
+///    paper's algorithm verbatim.
+pub fn allocate(tasks: &[LrmTask], avail_bits: u32, greedy_fill: bool) -> LrmResult {
+    let n = tasks.len();
+    let mut elems = vec![0u32; n];
+    if n == 0 || avail_bits == 0 {
+        return LrmResult {
+            elems,
+            leftover_bits: avail_bits,
+        };
+    }
+    let sum_delta: u64 = tasks.iter().map(|t| t.delta_bits()).sum();
+    debug_assert!(sum_delta > 0);
+    let mut left = avail_bits as i64;
+    let mut remainders: Vec<(usize, f64)> = Vec::with_capacity(n);
+    for (j, t) in tasks.iter().enumerate() {
+        // Fair share in bits (real-valued).
+        let v = t.delta_bits() as f64 * avail_bits as f64 / sum_delta as f64;
+        let beta = ((v / t.width as f64).floor() as u32).min(t.cap_elems);
+        elems[j] = beta;
+        left -= beta as i64 * t.width as i64;
+        remainders.push((j, v - (beta * t.width) as f64));
+    }
+    debug_assert!(left >= 0, "floor allocation cannot exceed avail");
+    // Sort by decreasing remainder; stable tie-break on input order keeps
+    // the outcome deterministic.
+    remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    // Single remainder pass (paper line 43–47).
+    for &(j, _) in &remainders {
+        let t = &tasks[j];
+        if left >= t.width as i64 && elems[j] < t.cap_elems {
+            elems[j] += 1;
+            left -= t.width as i64;
+        }
+    }
+    // Greedy fill: repeat passes until a full pass makes no progress.
+    if greedy_fill {
+        loop {
+            let mut progressed = false;
+            for &(j, _) in &remainders {
+                let t = &tasks[j];
+                if left >= t.width as i64 && elems[j] < t.cap_elems {
+                    elems[j] += 1;
+                    left -= t.width as i64;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+    LrmResult {
+        elems,
+        leftover_bits: left as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(width: u32, cap_elems: u32) -> LrmTask {
+        LrmTask { width, cap_elems }
+    }
+
+    #[test]
+    fn paper_example_t0_allocation() {
+        // Worked example, t=0: D (W=5, δ=5) and B (W=3, δ=6) on an 8-bit
+        // bus. Expected: one element each (5+3 = 8 bits, bus full).
+        let r = allocate(&[task(5, 1), task(3, 2)], 8, true);
+        assert_eq!(r.elems, vec![1, 1]);
+        assert_eq!(r.leftover_bits, 0);
+    }
+
+    #[test]
+    fn matmul_33_31_dense_mix() {
+        // (W_A, W_B) = (33, 31) on m=256: fair shares 123.5/132.5 bits ⇒
+        // 3 and 4 elements; remainder pass gives A one more (33 bits fit in
+        // the 33 leftover) ⇒ 4·33 + 4·31 = 256 exactly. This is the dense
+        // mixed cycle that lets Iris beat the paper's own reported C_max.
+        let r = allocate(&[task(33, 7), task(31, 8)], 256, true);
+        assert_eq!(r.elems, vec![4, 4]);
+        assert_eq!(r.leftover_bits, 0);
+    }
+
+    #[test]
+    fn respects_caps() {
+        // Fair shares: 5.02 bits (⇒ 0 elems) and 250.98 bits (⇒ 31 elems);
+        // the remainder pass tops up task 0 by one element. Caps hold.
+        let r = allocate(&[task(8, 2), task(8, 100)], 256, true);
+        assert_eq!(r.elems, vec![1, 31]);
+        assert_eq!(r.leftover_bits, 0);
+        // With a binding cap the shrunken share loses the remainder race
+        // and the surplus flows to the uncapped task.
+        let r2 = allocate(&[task(8, 1), task(8, 100)], 256, true);
+        assert_eq!(r2.elems, vec![0, 32]);
+    }
+
+    #[test]
+    fn single_pass_vs_greedy_fill() {
+        // Three 3-bit tasks on a 10-bit bus, huge caps: quota gives 3/3/3;
+        // single remainder pass adds at most one each ⇒ waste possible;
+        // greedy fill packs to ≤ W-1 leftover.
+        let single = allocate(&[task(3, 10), task(3, 10), task(3, 10)], 10, false);
+        let greedy = allocate(&[task(3, 10), task(3, 10), task(3, 10)], 10, true);
+        assert!(single.leftover_bits >= greedy.leftover_bits);
+        assert!(greedy.leftover_bits < 3);
+        let total: u32 = greedy.elems.iter().sum();
+        assert_eq!(total, 3); // 3·3 = 9 ≤ 10
+    }
+
+    #[test]
+    fn always_places_at_least_one_element_when_possible() {
+        // Degenerate shares can floor to zero everywhere; the remainder
+        // pass must still place something if any element fits.
+        let tasks: Vec<LrmTask> = (0..20).map(|_| task(7, 5)).collect();
+        let r = allocate(&tasks, 8, false);
+        assert_eq!(r.elems.iter().sum::<u32>(), 1);
+    }
+
+    #[test]
+    fn empty_and_zero_avail() {
+        assert_eq!(allocate(&[], 8, true).leftover_bits, 8);
+        let r = allocate(&[task(4, 1)], 0, true);
+        assert_eq!(r.elems, vec![0]);
+    }
+
+    #[test]
+    fn never_exceeds_avail_property() {
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..500 {
+            let n = rng.range_usize(1, 8);
+            let tasks: Vec<LrmTask> = (0..n)
+                .map(|_| task(rng.range_u32(1, 64), rng.range_u32(1, 16)))
+                .collect();
+            let avail = rng.range_u32(1, 512);
+            for fill in [false, true] {
+                let r = allocate(&tasks, avail, fill);
+                let used: u64 = r
+                    .elems
+                    .iter()
+                    .zip(tasks.iter())
+                    .map(|(&e, t)| e as u64 * t.width as u64)
+                    .sum();
+                assert!(used + r.leftover_bits as u64 == avail as u64);
+                for (e, t) in r.elems.iter().zip(tasks.iter()) {
+                    assert!(*e <= t.cap_elems);
+                }
+            }
+        }
+    }
+}

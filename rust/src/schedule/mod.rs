@@ -1,0 +1,151 @@
+//! The Iris scheduling core (paper §3–4, Algorithms 1.1–1.3).
+//!
+//! The bus-layout problem is solved as preemptive multiprocessor scheduling
+//! with linear speedup: due dates are converted to release times
+//! (`r_j = d_max − d_j`), a forward schedule minimizing makespan is built,
+//! and the schedule is read **backward** so the original due-date problem's
+//! maximum lateness `L_max` is minimized (Fig. 1).
+//!
+//! Two engines are provided:
+//!
+//! * [`discrete`] — the default. Allocates whole elements cycle-by-cycle
+//!   with largest-remainder apportionment ([`lrm`]). Produces integral
+//!   layouts directly and reproduces the paper's worked example exactly
+//!   (Fig. 5: C_max=9, L_max=3, 95.8%).
+//! * [`drozdowski`] — a faithful continuous implementation of Algorithm
+//!   1.1 (interval-based, real-valued heights) followed by an
+//!   accumulator-based discretization. Kept for fidelity comparison and
+//!   ablation benches.
+
+pub mod bound;
+pub mod discrete;
+pub mod drozdowski;
+pub mod lrm;
+pub mod reverse;
+
+use crate::layout::Layout;
+use crate::model::Problem;
+
+/// How bus lanes are shared among ready tasks when contended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelPolicy {
+    /// Largest-remainder apportionment over **all** ready tasks. This is
+    /// what reproduces the paper's measured FIFO interleaving ("the three
+    /// arrays are often interleaved together in the same cycle").
+    Pooled,
+    /// Level-by-level as literally written in Algorithm 1.2: the
+    /// highest-`h` group is served first; remaining lanes go to the next
+    /// group, and after an LRM split no further group is served.
+    Strict,
+}
+
+/// Scheduling options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleOptions {
+    pub policy: LevelPolicy,
+    /// After apportionment, keep adding elements (in priority order) while
+    /// they fit. The paper's Algorithm 1.3 does a single remainder pass;
+    /// greedy fill strictly reduces wasted bits and never hurts `C_max`.
+    pub greedy_fill: bool,
+}
+
+impl Default for ScheduleOptions {
+    fn default() -> Self {
+        ScheduleOptions {
+            policy: LevelPolicy::Pooled,
+            greedy_fill: true,
+        }
+    }
+}
+
+impl ScheduleOptions {
+    /// The paper's Algorithms 1.2–1.3 as printed (ablation).
+    pub fn paper_strict() -> ScheduleOptions {
+        ScheduleOptions {
+            policy: LevelPolicy::Strict,
+            greedy_fill: false,
+        }
+    }
+}
+
+/// A forward (release-time-domain) schedule: per cycle, `(task, elements)`
+/// allocations in priority order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ForwardSchedule {
+    pub cycles: Vec<Vec<(usize, u32)>>,
+}
+
+impl ForwardSchedule {
+    pub fn n_cycles(&self) -> u64 {
+        self.cycles.len() as u64
+    }
+
+    /// Total elements allocated to task `j`.
+    pub fn elements_of(&self, j: usize) -> u64 {
+        self.cycles
+            .iter()
+            .flat_map(|c| c.iter())
+            .filter(|&&(t, _)| t == j)
+            .map(|&(_, e)| e as u64)
+            .sum()
+    }
+}
+
+/// Run Iris with default options (discrete engine, pooled LRM, greedy
+/// fill) and return the final **reversed** layout.
+pub fn iris_layout(problem: &Problem) -> Layout {
+    iris_layout_opts(problem, &ScheduleOptions::default())
+}
+
+/// Run Iris with explicit options.
+pub fn iris_layout_opts(problem: &Problem, opts: &ScheduleOptions) -> Layout {
+    let fwd = discrete::forward_schedule(problem, opts);
+    reverse::materialize_reversed(&fwd, problem)
+}
+
+/// Run the continuous (Algorithm 1.1) engine.
+pub fn iris_continuous_layout(problem: &Problem) -> Layout {
+    let fwd = drozdowski::forward_schedule(problem);
+    reverse::materialize_reversed(&fwd, problem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::metrics::LayoutMetrics;
+    use crate::layout::validate::validate;
+    use crate::model::paper_example;
+
+    #[test]
+    fn fig5_worked_example_exact() {
+        // The paper's headline example: C_max=9, L_max=3, B_eff=95.8%.
+        let p = paper_example();
+        let l = iris_layout(&p);
+        validate(&l, &p).unwrap();
+        let m = LayoutMetrics::compute(&l, &p);
+        assert_eq!(m.c_max, 9, "Fig. 5 C_max");
+        assert_eq!(m.l_max, 3, "Fig. 5 L_max");
+        assert!((m.b_eff - 69.0 / 72.0).abs() < 1e-12, "95.8% efficiency");
+    }
+
+    #[test]
+    fn strict_paper_options_also_valid() {
+        let p = paper_example();
+        let l = iris_layout_opts(&p, &ScheduleOptions::paper_strict());
+        validate(&l, &p).unwrap();
+        let m = LayoutMetrics::compute(&l, &p);
+        // Strict/no-fill may waste bits but must still finish and beat the
+        // element-naive bound of 19 cycles.
+        assert!(m.c_max <= 13, "strict C_max {}", m.c_max);
+    }
+
+    #[test]
+    fn forward_schedule_accessors() {
+        let fwd = ForwardSchedule {
+            cycles: vec![vec![(0, 2), (1, 1)], vec![(0, 1)]],
+        };
+        assert_eq!(fwd.n_cycles(), 2);
+        assert_eq!(fwd.elements_of(0), 3);
+        assert_eq!(fwd.elements_of(1), 1);
+    }
+}

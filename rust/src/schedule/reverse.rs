@@ -1,0 +1,129 @@
+//! Schedule reversal and layout materialization (paper §4, Fig. 1).
+//!
+//! The forward schedule minimizes makespan under release times
+//! `r_j = d_max − d_j`. Reading it **backward** yields the layout that
+//! minimizes maximum lateness under the original due dates: tasks with the
+//! latest due dates had the earliest release times, so after reversal they
+//! occupy the latest cycles — arriving as shortly after their due date as
+//! possible.
+
+use super::ForwardSchedule;
+use crate::layout::{Layout, Placement};
+use crate::model::Problem;
+
+/// Reverse the forward schedule and materialize placements: element
+/// indices are assigned in stream order (0,1,2,… per array) over the
+/// reversed cycle sequence, and bit lanes are packed from lane 0 upward in
+/// allocation-priority order within each cycle.
+pub fn materialize_reversed(fwd: &ForwardSchedule, problem: &Problem) -> Layout {
+    materialize(fwd.cycles.iter().rev(), problem)
+}
+
+/// Materialize the forward schedule as-is (used by the continuous engine's
+/// diagnostics and the Fig. 1 demo; the real layouts are reversed).
+pub fn materialize_forward(fwd: &ForwardSchedule, problem: &Problem) -> Layout {
+    materialize(fwd.cycles.iter(), problem)
+}
+
+fn materialize<'a, I>(cycles: I, problem: &Problem) -> Layout
+where
+    I: Iterator<Item = &'a Vec<(usize, u32)>>,
+{
+    let mut layout = Layout::new(problem.m());
+    let mut next_elem = vec![0u64; problem.arrays.len()];
+    for alloc in cycles {
+        let mut placements = Vec::with_capacity(alloc.len());
+        let mut bit = 0u32;
+        for &(j, count) in alloc {
+            let w = problem.arrays[j].width;
+            for _ in 0..count {
+                placements.push(Placement {
+                    array: j as u32,
+                    elem: next_elem[j],
+                    bit_lo: bit,
+                    width: w,
+                });
+                next_elem[j] += 1;
+                bit += w;
+            }
+        }
+        debug_assert!(bit <= problem.m(), "cycle overcommitted: {bit} bits");
+        layout.cycles.push(placements);
+    }
+    layout.trim_trailing_idle();
+    layout
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::validate::validate;
+    use crate::model::{ArraySpec, BusConfig, Problem};
+
+    fn two_array_problem() -> Problem {
+        Problem::new(
+            BusConfig::new(8),
+            vec![
+                ArraySpec::new("X", 4, 3, 1),
+                ArraySpec::new("Y", 4, 2, 2),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reversal_assigns_elements_in_stream_order() {
+        let p = two_array_problem();
+        // Forward: Y first (released first), then X.
+        let fwd = ForwardSchedule {
+            cycles: vec![vec![(1, 2)], vec![(0, 2)], vec![(0, 1)]],
+        };
+        let l = materialize_reversed(&fwd, &p);
+        validate(&l, &p).unwrap();
+        // Reversed order: X(1) | X(2) | Y(2): X's element 0 must be in the
+        // first cycle.
+        assert_eq!(l.cycles[0][0].array, 0);
+        assert_eq!(l.cycles[0][0].elem, 0);
+        assert_eq!(l.cycles[2][0].array, 1);
+        assert_eq!(l.cycles[2][0].elem, 0);
+        assert_eq!(l.cycles[2][1].elem, 1);
+    }
+
+    #[test]
+    fn forward_materialization_matches_counts() {
+        let p = two_array_problem();
+        let fwd = ForwardSchedule {
+            cycles: vec![vec![(0, 1), (1, 1)], vec![(0, 1), (1, 1)], vec![(0, 1)]],
+        };
+        let l = materialize_forward(&fwd, &p);
+        validate(&l, &p).unwrap();
+        assert_eq!(l.used_bits(0), 8);
+        assert_eq!(l.used_bits(2), 4);
+    }
+
+    #[test]
+    fn bit_lanes_pack_from_zero_in_priority_order() {
+        let p = two_array_problem();
+        let fwd = ForwardSchedule {
+            cycles: vec![vec![(1, 1), (0, 1)], vec![(0, 2)], vec![(1, 1)]],
+        };
+        let l = materialize_reversed(&fwd, &p);
+        // Last forward cycle is first reversed: Y then nothing else.
+        assert_eq!(l.cycles[0][0].bit_lo, 0);
+        // Second reversed cycle: two X elements at lanes 0 and 4.
+        assert_eq!(l.cycles[1][0].bit_lo, 0);
+        assert_eq!(l.cycles[1][1].bit_lo, 4);
+    }
+
+    #[test]
+    fn trailing_idle_trimmed() {
+        let p = two_array_problem();
+        let fwd = ForwardSchedule {
+            cycles: vec![vec![], vec![(0, 2)], vec![(1, 2)]],
+        };
+        let l = materialize_reversed(&fwd, &p);
+        // The forward leading idle cycle becomes trailing after reversal
+        // and is trimmed.
+        assert_eq!(l.n_cycles(), 2);
+    }
+}

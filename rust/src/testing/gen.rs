@@ -1,0 +1,166 @@
+//! Random problem generators + shrinkers for property-based tests.
+
+use crate::model::{ArraySpec, BusConfig, Problem};
+use crate::util::rng::Rng;
+
+/// Tunable random-problem generator.
+#[derive(Debug, Clone)]
+pub struct ProblemGen {
+    pub max_arrays: usize,
+    pub max_width: u32,
+    pub max_depth: u64,
+    pub max_due: u64,
+    pub bus_widths: Vec<u32>,
+    /// Probability of attaching a δ/W cap to an array.
+    pub cap_prob: f64,
+}
+
+impl Default for ProblemGen {
+    fn default() -> Self {
+        ProblemGen {
+            max_arrays: 8,
+            max_width: 64,
+            max_depth: 64,
+            max_due: 200,
+            bus_widths: vec![8, 16, 32, 64, 128, 256],
+            cap_prob: 0.25,
+        }
+    }
+}
+
+impl ProblemGen {
+    /// Generate a random valid problem.
+    pub fn generate(&self, rng: &mut Rng) -> Problem {
+        loop {
+            let m = *rng.choose(&self.bus_widths);
+            let n = rng.range_usize(1, self.max_arrays);
+            let arrays: Vec<ArraySpec> = (0..n)
+                .map(|i| {
+                    let width = rng.range_u32(1, self.max_width.min(m));
+                    let depth = rng.range_u64(1, self.max_depth);
+                    let due = rng.range_u64(0, self.max_due);
+                    let mut a = ArraySpec::new(&format!("a{i}"), width, depth, due);
+                    if rng.f64() < self.cap_prob {
+                        a.max_elems_per_cycle = Some(rng.range_u32(1, (m / width).max(1)));
+                    }
+                    a
+                })
+                .collect();
+            if let Ok(p) = Problem::new(BusConfig::new(m), arrays) {
+                return p;
+            }
+        }
+    }
+}
+
+/// Shrinker: propose structurally simpler problems that often preserve a
+/// failure (fewer arrays, shallower arrays, smaller dues, dropped caps).
+pub fn shrink_problem(p: &Problem) -> Vec<Problem> {
+    let mut out = Vec::new();
+    // Drop one array at a time.
+    if p.arrays.len() > 1 {
+        for i in 0..p.arrays.len() {
+            let mut arrays = p.arrays.clone();
+            arrays.remove(i);
+            if let Ok(q) = Problem::new(p.bus, arrays) {
+                out.push(q);
+            }
+        }
+    }
+    // Halve depths.
+    if p.arrays.iter().any(|a| a.depth > 1) {
+        let arrays = p
+            .arrays
+            .iter()
+            .map(|a| {
+                let mut b = a.clone();
+                b.depth = (b.depth / 2).max(1);
+                b
+            })
+            .collect();
+        if let Ok(q) = Problem::new(p.bus, arrays) {
+            out.push(q);
+        }
+    }
+    // Zero the due dates.
+    if p.arrays.iter().any(|a| a.due > 0) {
+        let arrays = p
+            .arrays
+            .iter()
+            .map(|a| {
+                let mut b = a.clone();
+                b.due /= 2;
+                b
+            })
+            .collect();
+        if let Ok(q) = Problem::new(p.bus, arrays) {
+            out.push(q);
+        }
+    }
+    // Remove caps.
+    if p.arrays.iter().any(|a| a.max_elems_per_cycle.is_some()) {
+        let arrays = p
+            .arrays
+            .iter()
+            .map(|a| {
+                let mut b = a.clone();
+                b.max_elems_per_cycle = None;
+                b
+            })
+            .collect();
+        if let Ok(q) = Problem::new(p.bus, arrays) {
+            out.push(q);
+        }
+    }
+    out
+}
+
+/// Deterministic pseudo-random data for an array: `depth` values fitting
+/// in `width` bits (used by pack/decode and end-to-end tests).
+pub fn random_elements(rng: &mut Rng, width: u32, depth: u64) -> Vec<u64> {
+    let mask = if width == 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    };
+    (0..depth).map(|_| rng.next_u64() & mask).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_problems_are_valid() {
+        let g = ProblemGen::default();
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let p = g.generate(&mut rng);
+            assert!(!p.arrays.is_empty());
+            assert!(p.total_bits() > 0);
+        }
+    }
+
+    #[test]
+    fn shrinker_produces_valid_simpler_instances() {
+        let g = ProblemGen::default();
+        let mut rng = Rng::new(12);
+        let p = g.generate(&mut rng);
+        for q in shrink_problem(&p) {
+            assert!(q.arrays.len() <= p.arrays.len());
+            assert!(q.total_bits() <= p.total_bits());
+        }
+    }
+
+    #[test]
+    fn random_elements_respect_width() {
+        let mut rng = Rng::new(13);
+        for w in [1u32, 7, 17, 33, 63, 64] {
+            for v in random_elements(&mut rng, w, 100) {
+                if w < 64 {
+                    assert!(v < (1u64 << w));
+                }
+            }
+        }
+    }
+}

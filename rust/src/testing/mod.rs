@@ -1,0 +1,158 @@
+//! Property-based testing substrate (proptest/quickcheck are unavailable
+//! offline). Provides a `forall` runner with deterministic seeding,
+//! counterexample shrinking, and generators for the domain types.
+
+pub mod gen;
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to try.
+    pub cases: usize,
+    /// Seed for the generator stream (deterministic reruns).
+    pub seed: u64,
+    /// Maximum shrink iterations once a counterexample is found.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 256,
+            seed: 0xDA7A_1AE0,
+            max_shrink: 500,
+        }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random values from `generate`; on failure, try
+/// to shrink via `shrink` (which proposes simpler candidates) and panic
+/// with the minimal counterexample.
+pub fn forall_shrink<T, G, S, P>(cfg: &Config, generate: G, shrink: S, prop: P)
+where
+    T: Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink: repeatedly take the first failing simpler candidate.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  counterexample: {best:?}\n  reason: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// `forall` without shrinking.
+pub fn forall<T, G, P>(cfg: &Config, generate: G, prop: P)
+where
+    T: Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> PropResult,
+{
+    forall_shrink(cfg, generate, |_| Vec::new(), prop);
+}
+
+/// Helper: assert-style check inside a property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Helper: equality check with value reporting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config {
+            cases: 50,
+            ..Config::default()
+        };
+        forall(&cfg, |r| r.range_u64(0, 100), |x| {
+            if *x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample: 10")]
+    fn shrinking_finds_minimal_failure() {
+        // Fails for x >= 10; halving-style shrinker should land exactly on 10.
+        let cfg = Config {
+            cases: 100,
+            ..Config::default()
+        };
+        forall_shrink(
+            &cfg,
+            |r| r.range_u64(0, 1000),
+            |x| {
+                let mut c = Vec::new();
+                if *x > 0 {
+                    c.push(x / 2);
+                    c.push(x - 1);
+                }
+                c
+            },
+            |x| {
+                if *x < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 10"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Fixed-size bit vector over `u64` words with arbitrary-width field
+//! access. This is the storage substrate for packed bus lines: the packer
+//! writes W-bit elements at arbitrary bit offsets, the decoder reads them
+//! back; both must agree bit-exactly with the generated C code (Listing 1).
+//!
+//! Bit order: bit `i` of the vector is bit `i % 64` of word `i / 64`
+//! (little-endian bit numbering, LSB-first), matching how a little-endian
+//! host builds bus lines with shift-left/or as in the paper's Listing 1.
+
+/// Growable/fixed bit vector with u64 field accessors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len_bits: usize,
+}
+
+impl BitVec {
+    /// All-zero bit vector of `len_bits` bits.
+    pub fn zeros(len_bits: usize) -> BitVec {
+        BitVec {
+            words: vec![0; (len_bits + 63) / 64],
+            len_bits,
+        }
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    pub fn into_words(self) -> Vec<u64> {
+        self.words
+    }
+
+    /// Construct from raw words (length in bits must be ≤ 64·words.len()).
+    pub fn from_words(words: Vec<u64>, len_bits: usize) -> BitVec {
+        assert!(len_bits <= words.len() * 64);
+        BitVec { words, len_bits }
+    }
+
+    /// Write the low `width` bits of `value` at bit offset `off`.
+    /// `width` ∈ [1, 64]. Bits above `width` in `value` must be zero.
+    #[inline]
+    pub fn set_bits(&mut self, off: usize, width: u32, value: u64) {
+        debug_assert!(width >= 1 && width <= 64);
+        debug_assert!(off + width as usize <= self.len_bits, "field out of range");
+        debug_assert!(width == 64 || value < (1u64 << width), "value wider than field");
+        let w = off / 64;
+        let b = (off % 64) as u32;
+        if b == 0 && width == 64 {
+            self.words[w] = value;
+            return;
+        }
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        // `b ≤ 63` so these shifts are in range; high bits that spill past
+        // the word boundary are handled below.
+        self.words[w] &= !(mask << b);
+        self.words[w] |= value << b;
+        let spill = b + width;
+        if spill > 64 {
+            // The field straddles into the next word.
+            let hi_bits = spill - 64;
+            let hi_mask = (1u64 << hi_bits) - 1;
+            let hi_val = value >> (width - hi_bits);
+            self.words[w + 1] &= !hi_mask;
+            self.words[w + 1] |= hi_val;
+        }
+    }
+
+    /// Read `width` bits at bit offset `off` (inverse of [`set_bits`]).
+    #[inline]
+    pub fn get_bits(&self, off: usize, width: u32) -> u64 {
+        debug_assert!(width >= 1 && width <= 64);
+        debug_assert!(off + width as usize <= self.len_bits, "field out of range");
+        let w = off / 64;
+        let b = (off % 64) as u32;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let lo = self.words[w].checked_shr(b).unwrap_or(0);
+        let spill = b + width;
+        if spill <= 64 {
+            lo & mask
+        } else {
+            let hi_bits = spill - 64;
+            let hi = self.words[w + 1] & ((1u64 << hi_bits) - 1);
+            (lo | (hi << (64 - b))) & mask
+        }
+    }
+
+    /// Set a single bit.
+    pub fn set(&mut self, idx: usize) {
+        self.set_bits(idx, 1, 1);
+    }
+
+    pub fn get(&self, idx: usize) -> bool {
+        self.get_bits(idx, 1) == 1
+    }
+
+    /// Count of set bits in the whole vector.
+    pub fn count_ones(&self) -> u64 {
+        let mut total: u64 = self.words.iter().map(|w| w.count_ones() as u64).sum();
+        // Mask out any bits beyond len_bits in the last word.
+        let tail = self.len_bits % 64;
+        if tail != 0 {
+            let last = *self.words.last().unwrap();
+            total -= (last >> tail).count_ones() as u64;
+        }
+        total
+    }
+
+    /// View as bytes (little-endian within each word).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.truncate((self.len_bits + 7) / 8);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_within_word() {
+        let mut bv = BitVec::zeros(64);
+        bv.set_bits(3, 5, 0b10110);
+        assert_eq!(bv.get_bits(3, 5), 0b10110);
+        assert_eq!(bv.words()[0], 0b10110 << 3);
+    }
+
+    #[test]
+    fn set_get_straddling_words() {
+        let mut bv = BitVec::zeros(128);
+        bv.set_bits(60, 17, 0x1ABCD);
+        assert_eq!(bv.get_bits(60, 17), 0x1ABCD);
+        // neighbours untouched
+        assert_eq!(bv.get_bits(0, 60), 0);
+        assert_eq!(bv.get_bits(77, 51), 0);
+    }
+
+    #[test]
+    fn full_word_fields() {
+        let mut bv = BitVec::zeros(192);
+        bv.set_bits(64, 64, u64::MAX);
+        assert_eq!(bv.get_bits(64, 64), u64::MAX);
+        bv.set_bits(32, 64, 0xDEADBEEF_CAFEBABE);
+        assert_eq!(bv.get_bits(32, 64), 0xDEADBEEF_CAFEBABE);
+    }
+
+    #[test]
+    fn overwrite_clears_previous() {
+        let mut bv = BitVec::zeros(64);
+        bv.set_bits(10, 6, 0b111111);
+        bv.set_bits(10, 6, 0b000001);
+        assert_eq!(bv.get_bits(10, 6), 1);
+    }
+
+    #[test]
+    fn count_ones_respects_len() {
+        let mut bv = BitVec::zeros(70);
+        bv.set(0);
+        bv.set(69);
+        assert_eq!(bv.count_ones(), 2);
+    }
+
+    #[test]
+    fn exhaustive_small_roundtrip() {
+        // Every (offset, width) pair in a 3-word vector, pseudo-random values.
+        let mut rng = crate::util::rng::Rng::new(42);
+        for width in 1..=64u32 {
+            for off in 0..(192 - width as usize) {
+                let mut bv = BitVec::zeros(192);
+                let val = if width == 64 {
+                    rng.next_u64()
+                } else {
+                    rng.next_u64() & ((1 << width) - 1)
+                };
+                bv.set_bits(off, width, val);
+                assert_eq!(bv.get_bits(off, width), val, "off={off} width={width}");
+                assert_eq!(bv.count_ones(), val.count_ones() as u64);
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is unavailable offline): positional
+//! subcommand followed by `--key value` options and `--flag` booleans.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: `prog SUBCOMMAND [positionals] [--opt v] [--flag]`.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn opt_u32(&self, name: &str, default: u32) -> anyhow::Result<u32> {
+        Ok(self.opt_u64(name, default as u64)? as u32)
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["layout", "in.json", "--bus", "256", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("layout"));
+        assert_eq!(a.positionals, vec!["in.json"]);
+        assert_eq!(a.opt("bus"), Some("256"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_u64("bus", 8).unwrap(), 256);
+    }
+
+    #[test]
+    fn equals_style_options() {
+        let a = parse(&["x", "--k=v", "--n=3"]);
+        assert_eq!(a.opt("k"), Some("v"));
+        assert_eq!(a.opt_u32("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn flag_at_end_and_bad_int() {
+        let a = parse(&["x", "--flag"]);
+        assert!(a.flag("flag"));
+        let b = parse(&["x", "--n", "abc"]);
+        assert!(b.opt_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["cmd"]);
+        assert_eq!(a.opt_u64("missing", 42).unwrap(), 42);
+        assert_eq!(a.opt_str("missing", "d"), "d");
+    }
+}

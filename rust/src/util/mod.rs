@@ -1,0 +1,75 @@
+//! Substrate utilities implemented in-repo (the build environment has no
+//! crates.io access beyond the `xla` closure): JSON, CLI parsing, PRNG,
+//! bit vectors, and report-table formatting.
+
+pub mod bitvec;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Integer ceiling division for unsigned 64-bit values.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Next power of two ≥ `x` (x ≥ 1).
+#[inline]
+pub fn next_pow2(x: u32) -> u32 {
+    x.next_power_of_two()
+}
+
+/// Human-readable byte count (e.g. "1.50 GiB").
+pub fn human_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Human-readable duration from nanoseconds (ns/µs/ms/s).
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(625, 4), 157); // matmul W=64: ⌈625/4⌉
+    }
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(31), 32);
+        assert_eq!(next_pow2(33), 64);
+        assert_eq!(next_pow2(64), 64);
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_bytes(1536.0), "1.50 KiB");
+        assert_eq!(human_ns(2500.0), "2.50 µs");
+    }
+}

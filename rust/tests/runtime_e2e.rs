@@ -1,0 +1,136 @@
+//! PJRT end-to-end tests: require `make artifacts` (skipped with a clear
+//! message otherwise). These exercise the full three-layer stack: AOT
+//! HLO artifacts (lowered from JAX+Pallas) executed by the Rust runtime
+//! against golden Rust references, and the pipeline compositions.
+
+use iris::accel;
+use iris::coordinator::pipeline::{run, PipelineConfig, Workload};
+use iris::layout::LayoutKind;
+use iris::quant;
+use iris::runtime::Runtime;
+use iris::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn matmul_f32_artifact_matches_golden() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let a: Vec<f32> = (0..625).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..625).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+    let got = accel::run_matmul_f32(&mut rt, &a, &b).unwrap();
+    let want = accel::golden_matmul(
+        &a.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        &b.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        25,
+    );
+    for (g, w) in got.iter().zip(want.iter()) {
+        assert!((*g as f64 - w).abs() < 1e-4, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn matmul_dequant_artifact_matches_golden() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    for (wa, wb) in [(33u32, 31u32), (30, 19), (17, 13)] {
+        let a_real: Vec<f64> = (0..625).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+        let b_real: Vec<f64> = (0..625).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+        let qa = quant::quantize(&a_real, wa);
+        let qb = quant::quantize(&b_real, wb);
+        let got = accel::run_matmul_dequant(&mut rt, &qa, &qb).unwrap();
+        let want = accel::golden_matmul(&quant::dequantize(&qa), &quant::dequantize(&qb), 25);
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert!(
+                (*g as f64 - w).abs() < 5e-4,
+                "({wa},{wb}): {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn helmholtz_artifact_matches_golden() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let n3 = 1331;
+    let f: Vec<f64> = (0..n3).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    let s: Vec<f64> = (0..121).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    let d: Vec<f64> = (0..n3).map(|_| rng.f64_range(0.5, 2.0)).collect();
+    let got = accel::run_helmholtz_from_bits(
+        &mut rt,
+        &quant::f64_to_bits(&f),
+        &quant::f64_to_bits(&s),
+        &quant::f64_to_bits(&d),
+    )
+    .unwrap();
+    let want = accel::golden_inv_helmholtz(&f, &s, &d, 11);
+    let max_err = got
+        .iter()
+        .zip(want.iter())
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 1e-9, "max err {max_err}");
+}
+
+#[test]
+fn xla_unpack_agrees_with_rust_decoder() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Covered through the pipeline's xla_unpack_check on both workloads.
+    for wl in [Workload::Helmholtz, Workload::MatMul { w_a: 33, w_b: 31 }] {
+        let cfg = PipelineConfig::new(wl, LayoutKind::Iris);
+        let r = run(&cfg, Some(&mut rt)).unwrap();
+        assert_eq!(r.xla_unpack_exact, Some(true), "{}", r.summary());
+        assert!(r.ok(), "{}", r.summary());
+    }
+}
+
+#[test]
+fn full_pipeline_helmholtz_iris_vs_naive() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let iris = run(
+        &PipelineConfig::new(Workload::Helmholtz, LayoutKind::Iris),
+        Some(&mut rt),
+    )
+    .unwrap();
+    let naive = run(
+        &PipelineConfig::new(Workload::Helmholtz, LayoutKind::DueAlignedNaive),
+        Some(&mut rt),
+    )
+    .unwrap();
+    assert!(iris.ok(), "{}", iris.summary());
+    assert!(naive.ok(), "{}", naive.summary());
+    assert_eq!(iris.metrics.c_max, 696);
+    assert_eq!(naive.metrics.c_max, 697);
+    assert!(iris.metrics.fifo.total_bits < naive.metrics.fifo.total_bits);
+}
+
+#[test]
+fn full_pipeline_matmul_all_width_pairs() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for (wa, wb) in [(64, 64), (33, 31), (30, 19)] {
+        let r = run(
+            &PipelineConfig::new(Workload::MatMul { w_a: wa, w_b: wb }, LayoutKind::Iris),
+            Some(&mut rt),
+        )
+        .unwrap();
+        assert!(r.ok(), "({wa},{wb}): {}", r.summary());
+    }
+}
+
+#[test]
+fn runtime_caches_compiled_artifacts() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    rt.load("matmul25_f32").unwrap();
+    rt.load("matmul25_f32").unwrap(); // idempotent
+    assert!(rt.loaded().contains(&"matmul25_f32"));
+    assert!(rt.load("does_not_exist").is_err());
+}
