@@ -10,8 +10,10 @@
 //! Reports both layout *quality* (C_max, L_max, efficiency, FIFO bits)
 //! and scheduling runtime for each variant on the paper workloads.
 
-use iris::benchkit::{black_box, section, Bencher};
+use iris::benchkit::{black_box, compare, section, Bencher};
+use iris::layout::cache::LayoutCache;
 use iris::layout::metrics::LayoutMetrics;
+use iris::layout::LayoutKind;
 use iris::model::{helmholtz_problem, matmul_problem, paper_example, Problem};
 use iris::schedule::{
     iris_continuous_layout, iris_layout_opts, LevelPolicy, ScheduleOptions,
@@ -91,4 +93,24 @@ fn main() {
             black_box(f(&p));
         });
     }
+
+    // Memoization ablation: the same repeated-problem serving pattern with
+    // the LayoutCache on vs off (DESIGN.md §Memoization). The warm path
+    // skips Algorithm 1.2 entirely and degenerates to a hash lookup plus
+    // an Arc clone.
+    section("memoization ablation — repeated helmholtz layout requests");
+    let uncached = b.run("schedule every request (no cache)", || {
+        black_box(iris_layout_opts(&p, &ScheduleOptions::default()));
+    });
+    let cache = LayoutCache::new();
+    cache.layout_for(LayoutKind::Iris, &p); // prime
+    let cached = b.run("memoized request (warm cache)", || {
+        black_box(cache.layout_for(LayoutKind::Iris, &p));
+    });
+    compare("warm cache vs rescheduling", &cached, &uncached);
+    let s = cache.stats();
+    println!(
+        "cache after bench: {} hits / {} misses ({} entries)",
+        s.hits, s.misses, s.entries
+    );
 }

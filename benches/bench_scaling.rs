@@ -1,11 +1,18 @@
 //! Bench: scheduler scaling — Iris is O(n²)-ish in the number of arrays
 //! (the isomorphic problem in [8] is O(n²)); this bench verifies the
-//! practical scaling on synthetic problems up to thousands of arrays.
+//! practical scaling on synthetic problems up to thousands of arrays —
+//! plus the two serving-path levers on top of the raw scheduler:
+//! parallel DSE fan-out and layout memoization (EXPERIMENTS.md §DSE).
 
-use iris::benchkit::{black_box, section, Bencher};
+use iris::benchkit::{black_box, compare, section, Bencher};
 use iris::coordinator::pipeline::synthetic_problem;
+use iris::dse::{delta_sweep, DseEngine};
+use iris::layout::cache::LayoutCache;
 use iris::layout::metrics::LayoutMetrics;
+use iris::layout::LayoutKind;
+use iris::model::helmholtz_problem;
 use iris::schedule::iris_layout;
+use std::sync::Arc;
 
 fn main() {
     section("iris scheduler scaling (synthetic arrays, m=256)");
@@ -40,4 +47,47 @@ fn main() {
             m.b_eff * 100.0
         );
     }
+
+    section("DSE fan-out — Table-6 δ/W sweep (helmholtz, ratios 4/3/2/1)");
+    let p = helmholtz_problem();
+    let ratios = [4u32, 3, 2, 1];
+    let serial = Bencher::quick().run("delta_sweep serial", || {
+        black_box(delta_sweep(&p, &ratios));
+    });
+    let par_cold = Bencher::quick().run("delta_sweep parallel (cold cache)", || {
+        let engine = DseEngine::new().threads(4);
+        black_box(engine.delta_sweep(&p, &ratios));
+    });
+    let warm_engine = DseEngine::new().threads(4);
+    warm_engine.delta_sweep(&p, &ratios); // prime the memo table
+    let par_warm = Bencher::quick().run("delta_sweep parallel (warm cache)", || {
+        black_box(warm_engine.delta_sweep(&p, &ratios));
+    });
+    compare("parallel cold vs serial", &par_cold, &serial);
+    compare("parallel warm vs serial", &par_warm, &serial);
+
+    section("layout cache hit rate on repeated synthetic problems");
+    let cache = Arc::new(LayoutCache::new());
+    let rounds = 3u64;
+    let distinct = 8u64;
+    for _round in 0..rounds {
+        for seed in 0..distinct {
+            let p = synthetic_problem(8, seed);
+            black_box(cache.layout_for(LayoutKind::Iris, &p));
+        }
+    }
+    let s = cache.stats();
+    println!(
+        "{} lookups → {} hits / {} misses over {} entries (hit rate {:.1}%)",
+        s.hits + s.misses,
+        s.hits,
+        s.misses,
+        s.entries,
+        100.0 * s.hit_rate()
+    );
+    assert!(
+        s.hit_rate() > 0.0,
+        "repeated problems must be served from cache"
+    );
+    assert_eq!(s.misses, distinct, "one scheduler run per distinct problem");
 }

@@ -1,8 +1,9 @@
 //! Serving demo: the threaded coordinator under a stream of transfer
 //! requests with dynamic batching — synthetic problems with random
 //! widths/dues (the "many custom-precision kernels" scenario of §1),
-//! measuring throughput, mean latency, and aggregate modeled HBM time
-//! for Iris vs the naive layout policy.
+//! submitted through the batched API, measuring throughput, mean latency,
+//! layout-cache hit rate, and aggregate modeled HBM time for Iris vs the
+//! naive layout policy.
 //!
 //! Run: `cargo run --release --example layout_server`
 
@@ -11,35 +12,51 @@ use iris::coordinator::server::{LayoutServer, TransferRequest};
 use iris::layout::LayoutKind;
 use std::time::Instant;
 
+/// Distinct synthetic problems per batch; repeats across batches exercise
+/// the layout cache exactly like recurring tenant workloads would.
+const DISTINCT_PROBLEMS: u64 = 32;
+
 fn drive(kind: LayoutKind, requests: u64) -> anyhow::Result<(f64, f64, f64)> {
     let server = LayoutServer::start(4, 8);
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|seed| {
+    let reqs: Vec<TransferRequest> = (0..requests)
+        .map(|i| {
+            let seed = i % DISTINCT_PROBLEMS;
             let p = synthetic_problem(10, seed);
             let data = synthetic_data(&p, seed ^ 0xABCD);
-            server.submit(TransferRequest {
+            TransferRequest {
                 problem: p,
                 data,
                 kind,
-            })
+            }
         })
         .collect();
+    let ticket = server.submit_batch(reqs);
     let mut hbm_total = 0.0;
     let mut eff_sum = 0.0;
-    for rx in rxs {
-        let resp = rx.recv()??;
+    let mut cache_hits = 0u64;
+    for resp in ticket.wait() {
+        let resp = resp?;
         assert!(resp.decode_exact, "decode mismatch under load");
         hbm_total += resp.hbm_seconds;
         eff_sum += resp.b_eff;
+        cache_hits += resp.cache_hit as u64;
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "[{:<18}] {}  wall={:.1} ms  throughput={:.0} req/s",
+        "[{:<18}] {}  wall={:.1} ms  throughput={:.0} req/s  cache_hits={}/{}",
         kind.name(),
         server.metrics.summary(),
         wall * 1e3,
-        requests as f64 / wall
+        requests as f64 / wall,
+        cache_hits,
+        requests
+    );
+    // Concurrent duplicates can race past a cold entry, so demand hits
+    // rather than a hard count.
+    assert!(
+        cache_hits > 0,
+        "repeated problems must be served from the layout cache"
     );
     server.shutdown();
     Ok((

@@ -11,7 +11,7 @@
 //! (add `--no-xla` as an env IRIS_NO_XLA=1 to skip the PJRT stages)
 
 use iris::coordinator::pipeline::{run, PipelineConfig, Workload};
-use iris::dse;
+use iris::dse::DseEngine;
 use iris::eval::table7;
 use iris::layout::LayoutKind;
 use iris::runtime::Runtime;
@@ -43,19 +43,36 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- width sweep: which precision packs best? ------------------
+    // The parallel memoized engine fans design points out over a worker
+    // pool; a shared LayoutCache dedups the symmetric/(repeated) problems.
+    let engine = DseEngine::new();
     println!("\nwidth sweep on m=256 (Iris efficiency per (W_A, W_B)):");
-    let mut rows = Vec::new();
-    for w in [19u32, 24, 30, 31, 33, 40, 48, 64] {
-        let p = iris::model::matmul_problem(w, w);
-        let l = iris::schedule::iris_layout(&p);
-        let m = iris::layout::metrics::LayoutMetrics::compute(&l, &p);
-        rows.push((w, m.b_eff, m.c_max));
+    let square_pairs: Vec<(u32, u32)> = [19u32, 24, 30, 31, 33, 40, 48, 64]
+        .iter()
+        .map(|&w| (w, w))
+        .collect();
+    let pts = engine.precision_sweep(iris::model::matmul_problem, &square_pairs);
+    // precision_sweep interleaves naive/iris; report the iris points.
+    for pt in pts.iter().filter(|pt| pt.kind == LayoutKind::Iris) {
+        println!(
+            "  {}: eff {:>6.2}%  C_max {}",
+            pt.label,
+            pt.metrics.b_eff * 100.0,
+            pt.metrics.c_max
+        );
     }
-    for (w, eff, c) in &rows {
-        println!("  W={w:>2}: eff {:>6.2}%  C_max {c}", eff * 100.0);
-    }
-    let (wa, wb, eff) = dse::best_width_pair(iris::model::matmul_problem, 30, 34);
+    // Parallel == serial is guaranteed by unit/property tests; no need to
+    // re-run the serial sweep here.
+    let (wa, wb, eff) = engine.best_width_pair(iris::model::matmul_problem, 30, 34);
     println!("\nbest pair in [30,34]: ({wa},{wb}) at {:.2}% efficiency", eff * 100.0);
+    let stats = engine.cache().stats();
+    println!(
+        "layout cache: {} hits / {} misses over {} entries (hit rate {:.1}%)",
+        stats.hits,
+        stats.misses,
+        stats.entries,
+        100.0 * stats.hit_rate()
+    );
     println!("matmul_precision_dse OK");
     Ok(())
 }

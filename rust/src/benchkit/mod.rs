@@ -37,6 +37,11 @@ impl Stats {
             .map(|b| b as f64 / self.median_ns.max(1e-9))
     }
 
+    /// Median speedup of `self` relative to `baseline` (>1 means faster).
+    pub fn speedup_vs(&self, baseline: &Stats) -> f64 {
+        baseline.median_ns / self.median_ns.max(1e-9)
+    }
+
     /// Render a single criterion-like report line.
     pub fn report_line(&self) -> String {
         let mut line = format!(
@@ -161,6 +166,17 @@ pub fn section(title: &str) {
     println!("\n== {title} ==");
 }
 
+/// Print a one-line speedup comparison of `contender` against `baseline`.
+pub fn compare(label: &str, contender: &Stats, baseline: &Stats) {
+    println!(
+        "{label}: {:.2}× vs '{}' ({} vs {})",
+        contender.speedup_vs(baseline),
+        baseline.name,
+        human_ns(contender.median_ns),
+        human_ns(baseline.median_ns),
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +197,27 @@ mod tests {
         assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
         assert!(s.throughput_gbs().unwrap() > 0.0);
         assert_eq!(s.samples, 5);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |median: f64| Stats {
+            name: "x".to_string(),
+            samples: 1,
+            iters_per_sample: 1,
+            mean_ns: median,
+            median_ns: median,
+            stddev_ns: 0.0,
+            mad_ns: 0.0,
+            min_ns: median,
+            max_ns: median,
+            bytes_per_iter: None,
+        };
+        let fast = mk(100.0);
+        let slow = mk(400.0);
+        assert!((fast.speedup_vs(&slow) - 4.0).abs() < 1e-12);
+        assert!((slow.speedup_vs(&fast) - 0.25).abs() < 1e-12);
+        compare("selftest", &fast, &slow);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! L3 coordinator: the end-to-end streaming pipeline
 //! (pack → bus → decode → compute → verify) and a threaded layout/transfer
-//! server with request batching. Rust owns the event loop, process
+//! server with request batching, batched submission, a DSE endpoint, and
+//! a shared memoized layout cache. Rust owns the event loop, process
 //! topology and metrics; compiled XLA artifacts are the only compute
 //! dependency (Python is build-time-only).
 
@@ -17,6 +18,16 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub total_latency_ns: AtomicU64,
     pub batches: AtomicU64,
+    /// Largest single-request latency observed (tail proxy).
+    pub max_latency_ns: AtomicU64,
+    /// Layout-cache outcomes observed by the workers.
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    /// DSE endpoint: sweep submissions, design points evaluated, and the
+    /// time spent evaluating them (for per-point latency).
+    pub dse_requests: AtomicU64,
+    pub dse_points: AtomicU64,
+    pub dse_point_latency_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -26,6 +37,23 @@ impl Metrics {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
         self.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+        self.max_latency_ns.fetch_max(latency_ns, Ordering::Relaxed);
+    }
+
+    /// Count one layout-cache lookup outcome.
+    pub fn record_cache(&self, hit: bool) {
+        if hit {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one completed DSE sweep of `points` design points.
+    pub fn record_dse(&self, points: u64, latency_ns: u64) {
+        self.dse_points.fetch_add(points, Ordering::Relaxed);
+        self.dse_point_latency_ns
+            .fetch_add(latency_ns, Ordering::Relaxed);
     }
 
     pub fn mean_latency_ns(&self) -> f64 {
@@ -36,14 +64,39 @@ impl Metrics {
         self.total_latency_ns.load(Ordering::Relaxed) as f64 / n as f64
     }
 
+    /// Layout-cache hit rate over all worker lookups (0.0 before any).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let total = hits + self.cache_misses.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Mean time per evaluated DSE design point (0.0 before any).
+    pub fn mean_dse_point_latency_ns(&self) -> f64 {
+        let n = self.dse_points.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.dse_point_latency_ns.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} errors={} batches={} mean_latency={}",
+            "requests={} completed={} errors={} batches={} mean_latency={} \
+             max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             crate::util::human_ns(self.mean_latency_ns()),
+            crate::util::human_ns(self.max_latency_ns.load(Ordering::Relaxed) as f64),
+            100.0 * self.cache_hit_rate(),
+            self.dse_points.load(Ordering::Relaxed),
+            crate::util::human_ns(self.mean_dse_point_latency_ns()),
         )
     }
 }
@@ -61,6 +114,23 @@ mod tests {
         assert_eq!(m.completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.errors.load(Ordering::Relaxed), 1);
         assert!((m.mean_latency_ns() - 200.0).abs() < 1e-9);
+        assert_eq!(m.max_latency_ns.load(Ordering::Relaxed), 300);
         assert!(m.summary().contains("completed=2"));
+    }
+
+    #[test]
+    fn cache_and_dse_counters() {
+        let m = Metrics::default();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.mean_dse_point_latency_ns(), 0.0);
+        m.record_cache(true);
+        m.record_cache(true);
+        m.record_cache(false);
+        assert!((m.cache_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        m.record_dse(5, 1000);
+        m.record_dse(5, 3000);
+        assert_eq!(m.dse_points.load(Ordering::Relaxed), 10);
+        assert!((m.mean_dse_point_latency_ns() - 400.0).abs() < 1e-9);
+        assert!(m.summary().contains("dse_points=10"));
     }
 }

@@ -10,8 +10,9 @@ use crate::accel;
 use crate::baselines;
 use crate::bus::HbmChannel;
 use crate::decode::{DecodePlan, StreamDecoder};
+use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
-use crate::layout::LayoutKind;
+use crate::layout::{Layout, LayoutKind};
 use crate::model::{helmholtz_problem, matmul_problem, Problem};
 use crate::pack::PackPlan;
 use crate::quant;
@@ -19,6 +20,7 @@ use crate::runtime::Runtime;
 use crate::testing::gen::random_elements;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Which paper workload to run.
@@ -55,6 +57,10 @@ pub struct PipelineConfig {
     /// Cross-check the Rust decoder against the `unpack_*` XLA artifacts
     /// (the accelerator-side read module lowered through Pallas).
     pub xla_unpack_check: bool,
+    /// Optional shared layout cache: when set, the layout step goes
+    /// through the memo table (identical results; scheduling skipped on
+    /// repeats). `None` keeps the standalone direct path.
+    pub cache: Option<Arc<LayoutCache>>,
 }
 
 impl PipelineConfig {
@@ -64,7 +70,14 @@ impl PipelineConfig {
             kind,
             seed: 0x1215,
             xla_unpack_check: true,
+            cache: None,
         }
+    }
+
+    /// Builder-style: route the layout step through `cache`.
+    pub fn with_cache(mut self, cache: Arc<LayoutCache>) -> PipelineConfig {
+        self.cache = Some(cache);
+        self
     }
 }
 
@@ -171,7 +184,10 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
         };
 
     // ------------------------------------------------ layout + pack
-    let layout = baselines::generate(cfg.kind, &problem);
+    let layout: Arc<Layout> = match &cfg.cache {
+        Some(cache) => cache.layout_for(cfg.kind, &problem),
+        None => Arc::new(baselines::generate(cfg.kind, &problem)),
+    };
     crate::layout::validate::validate(&layout, &problem)?;
     let metrics = LayoutMetrics::compute(&layout, &problem);
     let plan = PackPlan::compile(&layout, &problem);
@@ -381,6 +397,26 @@ mod tests {
         .unwrap();
         assert!(iris.hbm_seconds < naive.hbm_seconds);
         assert!(iris.hbm_gbs > naive.hbm_gbs);
+    }
+
+    #[test]
+    fn cached_pipeline_matches_uncached() {
+        let mk = || PipelineConfig {
+            xla_unpack_check: false,
+            ..PipelineConfig::new(Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::Iris)
+        };
+        let plain = run(&mk(), None).unwrap();
+        let cache = Arc::new(LayoutCache::new());
+        let warm1 = run(&mk().with_cache(Arc::clone(&cache)), None).unwrap();
+        let warm2 = run(&mk().with_cache(Arc::clone(&cache)), None).unwrap();
+        for r in [&warm1, &warm2] {
+            assert_eq!(r.metrics, plain.metrics);
+            assert!(r.decode_exact);
+            assert_eq!(r.hbm_seconds, plain.hbm_seconds);
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
     }
 
     #[test]

@@ -1,20 +1,26 @@
 //! Threaded layout/transfer server: the serving face of the coordinator.
 //!
-//! Clients submit [`TransferRequest`]s (a problem plus its data); worker
-//! threads batch greedily (dynamic batching: drain whatever is queued, up
-//! to `max_batch`), compute the Iris layout, pack, stream-decode, and
+//! Clients submit [`TransferRequest`]s (a problem plus its data) one at a
+//! time ([`LayoutServer::submit`]) or as an ordered batch
+//! ([`LayoutServer::submit_batch`]); design-space sweeps go through the
+//! DSE endpoint ([`LayoutServer::submit_dse`]). Worker threads batch
+//! greedily (dynamic batching: drain whatever is queued, up to
+//! `max_batch`), fetch the layout from the shared memoized
+//! [`LayoutCache`] (scheduling only on a miss), pack, stream-decode, and
 //! return per-request [`TransferResponse`]s with layout metrics and
 //! modeled HBM timing. std::thread + mpsc stand in for tokio (offline
-//! environment; see DESIGN.md).
+//! environment; see DESIGN.md §Threading).
 
 use super::Metrics;
 use crate::bus::HbmChannel;
 use crate::decode::DecodePlan;
+use crate::dse::{DesignPoint, DseEngine};
+use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
 use crate::pack::PackPlan;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -36,21 +42,83 @@ pub struct TransferResponse {
     pub decode_exact: bool,
     pub hbm_seconds: f64,
     pub latency_ns: u64,
+    /// Whether the layout was served from the shared [`LayoutCache`].
+    pub cache_hit: bool,
 }
 
-type Job = (TransferRequest, Sender<Result<TransferResponse>>);
+/// One δ/W design-space sweep job for the DSE endpoint.
+pub struct DseRequest {
+    pub problem: Problem,
+    /// δ/W ratios to sweep (Table-6 style); the naive reference point is
+    /// always included first, exactly like [`crate::dse::delta_sweep`].
+    pub ratios: Vec<u32>,
+}
 
-/// The server: worker pool + shared queue + metrics.
+/// Ordered sweep results (same order and values as the direct serial
+/// `delta_sweep`).
+#[derive(Debug)]
+pub struct DseResponse {
+    pub points: Vec<DesignPoint>,
+    pub latency_ns: u64,
+}
+
+enum Job {
+    Transfer(TransferRequest, Sender<Result<TransferResponse>>),
+    Dse(DseRequest, Sender<Result<DseResponse>>),
+}
+
+/// Handle to an in-flight batch; [`BatchTicket::wait`] returns responses
+/// in submission order regardless of worker completion order.
+pub struct BatchTicket {
+    rxs: Vec<Receiver<Result<TransferResponse>>>,
+}
+
+impl BatchTicket {
+    pub fn len(&self) -> usize {
+        self.rxs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rxs.is_empty()
+    }
+
+    /// Block until every response of the batch has arrived.
+    pub fn wait(self) -> Vec<Result<TransferResponse>> {
+        self.rxs
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err(anyhow!("layout server worker disconnected")))
+            })
+            .collect()
+    }
+}
+
+/// The server: worker pool + shared queue + metrics + layout cache.
 pub struct LayoutServer {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// Shared schedule memo table; pass your own via
+    /// [`LayoutServer::start_with_cache`] to share it with a [`DseEngine`].
+    pub cache: Arc<LayoutCache>,
     pub max_batch: usize,
 }
 
 impl LayoutServer {
-    /// Spawn `n_workers` workers with the given batching cap.
+    /// Spawn `n_workers` workers with the given batching cap and a fresh
+    /// private layout cache.
     pub fn start(n_workers: usize, max_batch: usize) -> LayoutServer {
+        LayoutServer::start_with_cache(n_workers, max_batch, Arc::new(LayoutCache::new()))
+    }
+
+    /// Spawn workers sharing an existing layout cache (e.g. one already
+    /// warmed by a [`DseEngine`]).
+    pub fn start_with_cache(
+        n_workers: usize,
+        max_batch: usize,
+        cache: Arc<LayoutCache>,
+    ) -> LayoutServer {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
@@ -58,13 +126,15 @@ impl LayoutServer {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
-                std::thread::spawn(move || worker_loop(rx, metrics, max_batch))
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || worker_loop(rx, metrics, cache, max_batch))
             })
             .collect();
         LayoutServer {
             tx: Some(tx),
             workers,
             metrics,
+            cache,
             max_batch,
         }
     }
@@ -78,7 +148,32 @@ impl LayoutServer {
         self.tx
             .as_ref()
             .expect("server running")
-            .send((req, rtx))
+            .send(Job::Transfer(req, rtx))
+            .expect("workers alive");
+        rrx
+    }
+
+    /// Submit an ordered batch in one call. Jobs fan out across the
+    /// worker pool; the ticket reassembles responses in submission order,
+    /// so results match `submit`-ing each request individually.
+    pub fn submit_batch(&self, reqs: Vec<TransferRequest>) -> BatchTicket {
+        BatchTicket {
+            rxs: reqs.into_iter().map(|r| self.submit(r)).collect(),
+        }
+    }
+
+    /// Submit a δ/W design-space sweep; the worker evaluates it through
+    /// the shared layout cache and reports per-point latency in
+    /// [`Metrics`].
+    pub fn submit_dse(&self, req: DseRequest) -> Receiver<Result<DseResponse>> {
+        self.metrics
+            .dse_requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Job::Dse(req, rtx))
             .expect("workers alive");
         rrx
     }
@@ -92,7 +187,12 @@ impl LayoutServer {
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, metrics: Arc<Metrics>, max_batch: usize) {
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+    cache: Arc<LayoutCache>,
+    max_batch: usize,
+) {
     loop {
         // Dynamic batching: block for one job, then greedily drain the
         // queue up to max_batch.
@@ -113,36 +213,61 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, metrics: Arc<Metrics>, max_batch: 
         metrics
             .batches
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        for (req, resp_tx) in batch {
-            let t0 = Instant::now();
-            let result = process(&req);
-            let latency = t0.elapsed().as_nanos() as u64;
-            metrics.record(latency, result.is_ok());
-            let result = result.map(|mut r| {
-                r.latency_ns = latency;
-                r
-            });
-            let _ = resp_tx.send(result);
+        for job in batch {
+            match job {
+                Job::Transfer(req, resp_tx) => {
+                    let t0 = Instant::now();
+                    let result = process(&req, &cache, &metrics);
+                    let latency = t0.elapsed().as_nanos() as u64;
+                    metrics.record(latency, result.is_ok());
+                    let result = result.map(|mut r| {
+                        r.latency_ns = latency;
+                        r
+                    });
+                    let _ = resp_tx.send(result);
+                }
+                Job::Dse(req, resp_tx) => {
+                    // The worker pool is the parallelism: each sweep runs
+                    // single-threaded through the shared cache so
+                    // concurrent sweeps never oversubscribe the host
+                    // (DESIGN.md §Threading).
+                    let engine = DseEngine::with_cache(Arc::clone(&cache)).threads(1);
+                    let t0 = Instant::now();
+                    let points = engine.delta_sweep(&req.problem, &req.ratios);
+                    let latency = t0.elapsed().as_nanos() as u64;
+                    metrics.record_dse(points.len() as u64, latency);
+                    let _ = resp_tx.send(Ok(DseResponse {
+                        points,
+                        latency_ns: latency,
+                    }));
+                }
+            }
         }
     }
 }
 
-fn process(req: &TransferRequest) -> Result<TransferResponse> {
-    let layout = crate::baselines::generate(req.kind, &req.problem);
+fn process(
+    req: &TransferRequest,
+    cache: &LayoutCache,
+    metrics: &Metrics,
+) -> Result<TransferResponse> {
+    let (layout, cache_hit) = cache.layout_for_tracked(req.kind, &req.problem);
+    metrics.record_cache(cache_hit);
     crate::layout::validate::validate(&layout, &req.problem)?;
-    let metrics = LayoutMetrics::compute(&layout, &req.problem);
+    let layout_metrics = LayoutMetrics::compute(&layout, &req.problem);
     let plan = PackPlan::compile(&layout, &req.problem);
     let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
     let buf = plan.pack(&refs)?;
     let decoded = DecodePlan::compile(&layout, &req.problem).decode(&buf)?;
     let channel = HbmChannel::alveo_u280();
     Ok(TransferResponse {
-        c_max: metrics.c_max,
-        l_max: metrics.l_max,
-        b_eff: metrics.b_eff,
+        c_max: layout_metrics.c_max,
+        l_max: layout_metrics.l_max,
+        b_eff: layout_metrics.b_eff,
         decode_exact: decoded == req.data,
-        hbm_seconds: channel.seconds(metrics.c_max),
+        hbm_seconds: channel.seconds(layout_metrics.c_max),
         latency_ns: 0,
+        cache_hit,
     })
 }
 
@@ -150,39 +275,32 @@ fn process(req: &TransferRequest) -> Result<TransferResponse> {
 mod tests {
     use super::*;
     use crate::coordinator::pipeline::{synthetic_data, synthetic_problem};
+    use std::sync::atomic::Ordering;
+
+    fn request(n_arrays: usize, seed: u64) -> TransferRequest {
+        let p = synthetic_problem(n_arrays, seed);
+        let data = synthetic_data(&p, seed);
+        TransferRequest {
+            problem: p,
+            data,
+            kind: LayoutKind::Iris,
+        }
+    }
 
     #[test]
     fn serves_concurrent_requests() {
         let server = LayoutServer::start(4, 8);
         let mut rxs = Vec::new();
         for seed in 0..24u64 {
-            let p = synthetic_problem(6, seed);
-            let data = synthetic_data(&p, seed);
-            rxs.push(server.submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-            }));
+            rxs.push(server.submit(request(6, seed)));
         }
         for rx in rxs {
             let resp = rx.recv().unwrap().unwrap();
             assert!(resp.decode_exact);
             assert!(resp.b_eff > 0.0 && resp.b_eff <= 1.0);
         }
-        assert_eq!(
-            server
-                .metrics
-                .completed
-                .load(std::sync::atomic::Ordering::Relaxed),
-            24
-        );
-        assert_eq!(
-            server
-                .metrics
-                .errors
-                .load(std::sync::atomic::Ordering::Relaxed),
-            0
-        );
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 24);
+        assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
         server.shutdown();
     }
 
@@ -191,21 +309,12 @@ mod tests {
         let server = LayoutServer::start(1, 4);
         let mut rxs = Vec::new();
         for seed in 0..8u64 {
-            let p = synthetic_problem(3, seed);
-            let data = synthetic_data(&p, seed);
-            rxs.push(server.submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-            }));
+            rxs.push(server.submit(request(3, seed)));
         }
         for rx in rxs {
             rx.recv().unwrap().unwrap();
         }
-        let batches = server
-            .metrics
-            .batches
-            .load(std::sync::atomic::Ordering::Relaxed);
+        let batches = server.metrics.batches.load(Ordering::Relaxed);
         assert!(batches >= 1 && batches <= 8);
         server.shutdown();
     }
@@ -213,6 +322,84 @@ mod tests {
     #[test]
     fn shutdown_joins_cleanly() {
         let server = LayoutServer::start(2, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batch_responses_match_single_submissions() {
+        // Reference: one-at-a-time on a single-worker server.
+        let reference = LayoutServer::start(1, 1);
+        let singles: Vec<TransferResponse> = (0..12u64)
+            .map(|seed| reference.submit(request(5, seed)).recv().unwrap().unwrap())
+            .collect();
+        reference.shutdown();
+
+        let server = LayoutServer::start(4, 8);
+        let reqs: Vec<TransferRequest> = (0..12u64).map(|seed| request(5, seed)).collect();
+        let ticket = server.submit_batch(reqs);
+        assert_eq!(ticket.len(), 12);
+        let batch = ticket.wait();
+        for (b, s) in batch.iter().zip(singles.iter()) {
+            let b = b.as_ref().unwrap();
+            assert_eq!(b.c_max, s.c_max);
+            assert_eq!(b.l_max, s.l_max);
+            assert!((b.b_eff - s.b_eff).abs() < 1e-15);
+            assert_eq!(b.hbm_seconds, s.hbm_seconds);
+            assert!(b.decode_exact && s.decode_exact);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn repeated_problems_hit_the_cache() {
+        let server = LayoutServer::start(2, 4);
+        for _round in 0..3 {
+            let ticket = server.submit_batch((0..4u64).map(|seed| request(4, seed)).collect());
+            for resp in ticket.wait() {
+                assert!(resp.unwrap().decode_exact);
+            }
+        }
+        // 4 distinct problems over 3 rounds: ≥ 8 hits once warm.
+        assert!(server.metrics.cache_hits.load(Ordering::Relaxed) >= 8);
+        assert!(server.metrics.cache_hit_rate() > 0.0);
+        assert!(server.cache.stats().hits >= 8);
+        // Rounds synchronize on ticket.wait(), so only round one misses.
+        assert_eq!(server.cache.stats().misses, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn dse_endpoint_matches_direct_sweep() {
+        let server = LayoutServer::start(2, 4);
+        let p = synthetic_problem(6, 7);
+        let rx = server.submit_dse(DseRequest {
+            problem: p.clone(),
+            ratios: vec![4, 2, 1],
+        });
+        let resp = rx.recv().unwrap().unwrap();
+        let direct = crate::dse::delta_sweep(&p, &[4, 2, 1]);
+        assert_eq!(resp.points.len(), direct.len());
+        for (a, b) in resp.points.iter().zip(direct.iter()) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.metrics, b.metrics);
+        }
+        assert_eq!(server.metrics.dse_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            server.metrics.dse_points.load(Ordering::Relaxed),
+            direct.len() as u64
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn second_identical_transfer_is_a_cache_hit() {
+        let server = LayoutServer::start(1, 2);
+        let r1 = server.submit(request(5, 99)).recv().unwrap().unwrap();
+        let r2 = server.submit(request(5, 99)).recv().unwrap().unwrap();
+        assert!(!r1.cache_hit);
+        assert!(r2.cache_hit);
+        assert_eq!(r1.c_max, r2.c_max);
         server.shutdown();
     }
 }

@@ -1,15 +1,30 @@
 //! Design-space exploration (paper §1: "rapid design-space exploration
 //! while tuning the width of custom-precision data types"; §6: the δ/W
 //! sweep of Table 6 and the precision sweep of Table 7).
+//!
+//! Two execution paths are provided:
+//!
+//! * the free functions ([`delta_sweep`], [`precision_sweep`],
+//!   [`best_width_pair`]) — the serial reference implementations, one
+//!   scheduler run per design point;
+//! * [`DseEngine`] — the serving path: design points fan out over a
+//!   worker pool and every scheduler run goes through a shared
+//!   [`LayoutCache`], so identical sub-problems across sweeps (and across
+//!   repeated sweeps) are solved once. Results are returned in the same
+//!   deterministic order as the serial path, and are bit-identical to it
+//!   (see `rust/tests/properties.rs`).
 
 use crate::baselines;
+use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
 use crate::schedule::iris_layout;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// One evaluated design point.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesignPoint {
     pub label: String,
     pub kind: LayoutKind,
@@ -29,10 +44,206 @@ impl DesignPoint {
             problem: problem.clone(),
         }
     }
+
+    /// Like [`DesignPoint::evaluate`], but layouts come from (and
+    /// populate) `cache`. A cold cache produces bit-identical results to
+    /// the uncached path; a warm cache skips the scheduler entirely.
+    pub fn evaluate_cached(
+        label: &str,
+        kind: LayoutKind,
+        problem: &Problem,
+        cache: &LayoutCache,
+    ) -> DesignPoint {
+        let layout = cache.layout_for(kind, problem);
+        debug_assert!(crate::layout::validate::validate(&layout, problem).is_ok());
+        DesignPoint {
+            label: label.to_string(),
+            kind,
+            metrics: LayoutMetrics::compute(&layout, problem),
+            problem: problem.clone(),
+        }
+    }
+}
+
+/// A unit of DSE work: evaluate `kind` on `problem` under `label`.
+#[derive(Debug, Clone)]
+pub struct PointSpec {
+    pub label: String,
+    pub kind: LayoutKind,
+    pub problem: Problem,
+}
+
+/// Parallel, memoized design-point evaluator.
+///
+/// Construction is cheap (an [`Arc`] and a thread count); engines are
+/// usually long-lived so the cache warms across sweeps. Share one cache
+/// between an engine and a [`crate::coordinator::server::LayoutServer`]
+/// to let interactive DSE reuse schedules the serving path already paid
+/// for (and vice versa).
+#[derive(Debug, Clone)]
+pub struct DseEngine {
+    cache: Arc<LayoutCache>,
+    threads: usize,
+}
+
+impl Default for DseEngine {
+    fn default() -> Self {
+        DseEngine::new()
+    }
+}
+
+impl DseEngine {
+    /// Engine with a private cache and one worker per available core.
+    pub fn new() -> DseEngine {
+        DseEngine::with_cache(Arc::new(LayoutCache::new()))
+    }
+
+    /// Engine sharing an existing cache.
+    pub fn with_cache(cache: Arc<LayoutCache>) -> DseEngine {
+        DseEngine {
+            cache,
+            threads: default_threads(),
+        }
+    }
+
+    /// Override the worker count (builder-style; clamped to ≥ 1).
+    pub fn threads(mut self, n: usize) -> DseEngine {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// The shared layout cache (hit-rate reporting, cross-wiring).
+    pub fn cache(&self) -> &Arc<LayoutCache> {
+        &self.cache
+    }
+
+    /// Evaluate every spec, fanning out over the worker pool. The result
+    /// order matches `specs` exactly regardless of completion order.
+    pub fn evaluate_many(&self, specs: &[PointSpec]) -> Vec<DesignPoint> {
+        let n = specs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            return specs
+                .iter()
+                .map(|s| DesignPoint::evaluate_cached(&s.label, s.kind, &s.problem, &self.cache))
+                .collect();
+        }
+        // Work-stealing by atomic cursor; each worker writes only its own
+        // slots, so ordering is deterministic by construction.
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<DesignPoint>>> =
+            specs.iter().map(|_| Mutex::new(None)).collect();
+        let cache = &self.cache;
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let s = &specs[i];
+                    let dp = DesignPoint::evaluate_cached(&s.label, s.kind, &s.problem, cache);
+                    *slots[i].lock().expect("slot lock") = Some(dp);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("slot lock")
+                    .expect("every slot filled before scope exit")
+            })
+            .collect()
+    }
+
+    /// Parallel, memoized version of [`delta_sweep`]; identical output.
+    pub fn delta_sweep(&self, problem: &Problem, ratios: &[u32]) -> Vec<DesignPoint> {
+        let mut specs = Vec::with_capacity(ratios.len() + 1);
+        specs.push(PointSpec {
+            label: "naive".to_string(),
+            kind: LayoutKind::DueAlignedNaive,
+            problem: problem.clone(),
+        });
+        for &r in ratios {
+            specs.push(PointSpec {
+                label: format!("iris δ/W={r}"),
+                kind: LayoutKind::Iris,
+                problem: problem.with_uniform_cap(r),
+            });
+        }
+        self.evaluate_many(&specs)
+    }
+
+    /// Parallel, memoized version of [`precision_sweep`]; identical output.
+    pub fn precision_sweep<F>(
+        &self,
+        make_problem: F,
+        width_pairs: &[(u32, u32)],
+    ) -> Vec<DesignPoint>
+    where
+        F: Fn(u32, u32) -> Problem,
+    {
+        let mut specs = Vec::with_capacity(width_pairs.len() * 2);
+        for &(wa, wb) in width_pairs {
+            let p = make_problem(wa, wb);
+            specs.push(PointSpec {
+                label: format!("naive ({wa},{wb})"),
+                kind: LayoutKind::DueAlignedNaive,
+                problem: p.clone(),
+            });
+            specs.push(PointSpec {
+                label: format!("iris ({wa},{wb})"),
+                kind: LayoutKind::Iris,
+                problem: p,
+            });
+        }
+        self.evaluate_many(&specs)
+    }
+
+    /// Parallel, memoized version of [`best_width_pair`]: same winner,
+    /// same tie-breaking (row-major first-strictly-better), evaluated
+    /// across the worker pool.
+    pub fn best_width_pair<F>(&self, make_problem: F, lo: u32, hi: u32) -> (u32, u32, f64)
+    where
+        F: Fn(u32, u32) -> Problem,
+    {
+        let mut pairs = Vec::new();
+        let mut specs = Vec::new();
+        for wa in lo..=hi {
+            for wb in lo..=hi {
+                pairs.push((wa, wb));
+                specs.push(PointSpec {
+                    label: format!("iris ({wa},{wb})"),
+                    kind: LayoutKind::Iris,
+                    problem: make_problem(wa, wb),
+                });
+            }
+        }
+        let pts = self.evaluate_many(&specs);
+        let mut best = (lo, lo, -1.0f64);
+        for (&(wa, wb), pt) in pairs.iter().zip(pts.iter()) {
+            if pt.metrics.b_eff > best.2 {
+                best = (wa, wb, pt.metrics.b_eff);
+            }
+        }
+        best
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 8)
 }
 
 /// Table-6 style δ/W sweep: Iris layouts with every array capped to
-/// `ratio` elements per cycle, plus the naive reference.
+/// `ratio` elements per cycle, plus the naive reference. Serial reference
+/// path; see [`DseEngine::delta_sweep`] for the parallel one.
 pub fn delta_sweep(problem: &Problem, ratios: &[u32]) -> Vec<DesignPoint> {
     let mut out = Vec::new();
     out.push(DesignPoint::evaluate(
@@ -52,6 +263,7 @@ pub fn delta_sweep(problem: &Problem, ratios: &[u32]) -> Vec<DesignPoint> {
 }
 
 /// Table-7 style precision sweep: naive vs Iris for each `(W_A, W_B)`.
+/// Serial reference path; see [`DseEngine::precision_sweep`].
 pub fn precision_sweep<F>(make_problem: F, width_pairs: &[(u32, u32)]) -> Vec<DesignPoint>
 where
     F: Fn(u32, u32) -> Problem,
@@ -95,7 +307,8 @@ pub fn pareto_front(points: &[DesignPoint]) -> Vec<usize> {
 /// Exhaustive width search: for a fixed bus, find element widths in
 /// `[lo, hi]` whose Iris layout maximizes Eq.-1 efficiency. Used by the
 /// `matmul_precision_dse` example to answer "which custom precision packs
-/// best on this bus?".
+/// best on this bus?". Serial reference path; see
+/// [`DseEngine::best_width_pair`].
 pub fn best_width_pair<F>(make_problem: F, lo: u32, hi: u32) -> (u32, u32, f64)
 where
     F: Fn(u32, u32) -> Problem,
@@ -180,5 +393,71 @@ mod tests {
         // 4+4 lanes, or (7,9) mixing 2·7+2·9 = 32); the winner must be
         // one of the perfect packers.
         assert!(eff > 0.99, "eff {eff} for ({wa},{wb})");
+    }
+
+    #[test]
+    fn parallel_delta_sweep_matches_serial_exactly() {
+        let p = helmholtz_problem();
+        let serial = delta_sweep(&p, &[4, 3, 2, 1]);
+        let engine = DseEngine::new().threads(4);
+        let parallel = engine.delta_sweep(&p, &[4, 3, 2, 1]);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn parallel_precision_sweep_matches_serial_exactly() {
+        let pairs = [(64, 64), (33, 31), (30, 19)];
+        let serial = precision_sweep(matmul_problem, &pairs);
+        let engine = DseEngine::new().threads(3);
+        let parallel = engine.precision_sweep(matmul_problem, &pairs);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn repeated_sweeps_hit_the_cache() {
+        let engine = DseEngine::new().threads(2);
+        let p = helmholtz_problem();
+        let first = engine.delta_sweep(&p, &[4, 2, 1]);
+        let misses_after_first = engine.cache().stats().misses;
+        let second = engine.delta_sweep(&p, &[4, 2, 1]);
+        let stats = engine.cache().stats();
+        assert_eq!(first, second, "warm results identical to cold");
+        assert_eq!(stats.misses, misses_after_first, "no rescheduling");
+        assert!(stats.hits >= 4, "all repeat points served from cache");
+        assert!(stats.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn engine_best_width_pair_matches_serial() {
+        fn mk(a: u32, b: u32) -> Problem {
+            crate::model::Problem::new(
+                crate::model::BusConfig::new(32),
+                vec![
+                    crate::model::ArraySpec::new("A", a, 40, 10),
+                    crate::model::ArraySpec::new("B", b, 40, 10),
+                ],
+            )
+            .unwrap()
+        }
+        let serial = best_width_pair(mk, 7, 9);
+        let engine = DseEngine::new().threads(4);
+        let parallel = engine.best_width_pair(mk, 7, 9);
+        assert_eq!(serial.0, parallel.0);
+        assert_eq!(serial.1, parallel.1);
+        assert!((serial.2 - parallel.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn evaluate_many_handles_empty_and_single() {
+        let engine = DseEngine::new();
+        assert!(engine.evaluate_many(&[]).is_empty());
+        let p = matmul_problem(33, 31);
+        let one = engine.evaluate_many(&[PointSpec {
+            label: "solo".to_string(),
+            kind: LayoutKind::Iris,
+            problem: p.clone(),
+        }]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], DesignPoint::evaluate("solo", LayoutKind::Iris, &p));
     }
 }

@@ -1,0 +1,320 @@
+//! Memoized layout store — the serving-path cache behind the parallel DSE
+//! engine and the coordinator's batched API (DESIGN.md §Memoization).
+//!
+//! Scheduling is the expensive step of every layout request: Algorithm
+//! 1.2 re-runs from scratch even when the coordinator has already solved
+//! an identical problem (repeated [`crate::coordinator::server::TransferRequest`]s,
+//! the shared sub-problems of `delta_sweep`/precision sweeps). The cache
+//! keys finished layouts by a *canonical problem signature* — bus width,
+//! layout algorithm, schedule options, and the array `(W_j, D_j, d_j, cap)`
+//! tuples in sorted order — so two problems that differ only in array
+//! naming/order share one entry.
+//!
+//! Guarantees:
+//!
+//! * **Miss transparency** — on a miss the problem is scheduled exactly as
+//!   given (no canonical reordering), so a cold cache is bit-identical to
+//!   calling the scheduler directly.
+//! * **Hit fidelity** — a hit for a problem with the same array order as
+//!   the stored one returns the stored layout unchanged (zero-copy via
+//!   [`Arc`]); a hit for a permuted problem returns the stored layout with
+//!   array indices remapped through the canonical order, which preserves
+//!   validity and every aggregate metric.
+//! * **Thread safety** — the cache is `Sync`; share it behind an `Arc`
+//!   across server workers and DSE threads. Hit/miss counters are lock-free.
+
+use super::{Layout, LayoutKind, Placement};
+use crate::model::Problem;
+use crate::schedule::ScheduleOptions;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Canonical cache key: everything the scheduler's output depends on,
+/// with arrays order-normalized.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CacheKey {
+    m: u32,
+    kind: LayoutKind,
+    opts: ScheduleOptions,
+    /// `(width, depth, due, elems-per-cycle cap)` in canonical order.
+    entries: Vec<(u32, u64, u64, Option<u32>)>,
+}
+
+/// One stored layout plus the canonical→stored-index permutation needed
+/// to serve permuted problems.
+#[derive(Debug, Clone)]
+struct Entry {
+    layout: Arc<Layout>,
+    /// `perm[k]` = index, in the problem that produced `layout`, of the
+    /// array at canonical position `k`.
+    perm: Vec<usize>,
+}
+
+/// Point-in-time cache counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Hits over total lookups (0.0 when no lookups yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Shared, thread-safe layout memo table.
+#[derive(Debug, Default)]
+pub struct LayoutCache {
+    entries: Mutex<HashMap<CacheKey, Entry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl LayoutCache {
+    pub fn new() -> LayoutCache {
+        LayoutCache::default()
+    }
+
+    /// Array indices sorted by the canonical `(W, D, d, cap)` key
+    /// (stable: ties keep input order).
+    fn canonical_perm(problem: &Problem) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..problem.arrays.len()).collect();
+        idx.sort_by_key(|&j| {
+            let a = &problem.arrays[j];
+            (a.width, a.depth, a.due, a.max_elems_per_cycle, j)
+        });
+        idx
+    }
+
+    fn key(
+        problem: &Problem,
+        kind: LayoutKind,
+        opts: &ScheduleOptions,
+        perm: &[usize],
+    ) -> CacheKey {
+        CacheKey {
+            m: problem.m(),
+            kind,
+            opts: *opts,
+            entries: perm
+                .iter()
+                .map(|&j| {
+                    let a = &problem.arrays[j];
+                    (a.width, a.depth, a.due, a.max_elems_per_cycle)
+                })
+                .collect(),
+        }
+    }
+
+    /// Look up (or compute and insert) the layout for `problem` under the
+    /// default schedule options. Returns the layout and whether it was
+    /// served from cache.
+    pub fn layout_for_tracked(&self, kind: LayoutKind, problem: &Problem) -> (Arc<Layout>, bool) {
+        self.layout_for_opts_tracked(kind, problem, &ScheduleOptions::default())
+    }
+
+    /// [`LayoutCache::layout_for_tracked`] without the hit flag.
+    pub fn layout_for(&self, kind: LayoutKind, problem: &Problem) -> Arc<Layout> {
+        self.layout_for_tracked(kind, problem).0
+    }
+
+    /// Full-control lookup: explicit schedule options (only meaningful for
+    /// [`LayoutKind::Iris`]; other kinds normalize the options away so one
+    /// baseline layout is never stored twice).
+    pub fn layout_for_opts_tracked(
+        &self,
+        kind: LayoutKind,
+        problem: &Problem,
+        opts: &ScheduleOptions,
+    ) -> (Arc<Layout>, bool) {
+        let opts = if kind == LayoutKind::Iris {
+            *opts
+        } else {
+            ScheduleOptions::default()
+        };
+        let perm = Self::canonical_perm(problem);
+        let key = Self::key(problem, kind, &opts, &perm);
+        let cached = self.entries.lock().expect("cache lock").get(&key).cloned();
+        if let Some(entry) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            let layout = if entry.perm == perm {
+                Arc::clone(&entry.layout)
+            } else {
+                Arc::new(remap(&entry.layout, &entry.perm, &perm))
+            };
+            return (layout, true);
+        }
+        // Miss: schedule the problem exactly as given — identical to the
+        // uncached path, so cold-cache results are bit-for-bit reproducible.
+        let layout = Arc::new(if kind == LayoutKind::Iris {
+            crate::schedule::iris_layout_opts(problem, &opts)
+        } else {
+            crate::baselines::generate(kind, problem)
+        });
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.entries
+            .lock()
+            .expect("cache lock")
+            .entry(key)
+            .or_insert(Entry {
+                layout: Arc::clone(&layout),
+                perm,
+            });
+        (layout, false)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.entries.lock().expect("cache lock").len(),
+        }
+    }
+
+    /// Hits over total lookups so far.
+    pub fn hit_rate(&self) -> f64 {
+        self.stats().hit_rate()
+    }
+
+    /// Number of stored layouts.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("cache lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all entries (counters keep accumulating).
+    pub fn clear(&self) {
+        self.entries.lock().expect("cache lock").clear();
+    }
+}
+
+/// Relabel a stored layout for a problem whose arrays are a permutation
+/// of the stored problem's: canonical position `k` maps stored index
+/// `stored_perm[k]` to target index `target_perm[k]`. Stream order per
+/// array is untouched, so the result stays valid.
+fn remap(stored: &Layout, stored_perm: &[usize], target_perm: &[usize]) -> Layout {
+    debug_assert_eq!(stored_perm.len(), target_perm.len());
+    let mut map = vec![0u32; stored_perm.len()];
+    for (&s, &t) in stored_perm.iter().zip(target_perm.iter()) {
+        map[s] = t as u32;
+    }
+    Layout {
+        m: stored.m,
+        cycles: stored
+            .cycles
+            .iter()
+            .map(|ps| {
+                ps.iter()
+                    .map(|p| Placement {
+                        array: map[p.array as usize],
+                        ..*p
+                    })
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::metrics::LayoutMetrics;
+    use crate::layout::validate::validate;
+    use crate::model::{helmholtz_problem, paper_example};
+    use crate::schedule::iris_layout;
+
+    #[test]
+    fn miss_then_hit_is_bit_identical_to_fresh() {
+        let cache = LayoutCache::new();
+        let p = paper_example();
+        let fresh = iris_layout(&p);
+        let (first, hit0) = cache.layout_for_tracked(LayoutKind::Iris, &p);
+        let (second, hit1) = cache.layout_for_tracked(LayoutKind::Iris, &p);
+        assert!(!hit0 && hit1);
+        assert_eq!(*first, fresh);
+        assert_eq!(*second, fresh);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_problem_hits_and_remaps_validly() {
+        let cache = LayoutCache::new();
+        let p = helmholtz_problem();
+        let (orig, _) = cache.layout_for_tracked(LayoutKind::Iris, &p);
+        let mut rev = p.clone();
+        rev.arrays.reverse();
+        let (remapped, hit) = cache.layout_for_tracked(LayoutKind::Iris, &rev);
+        assert!(hit, "same multiset of arrays must share the cache entry");
+        validate(&remapped, &rev).unwrap();
+        let a = LayoutMetrics::compute(&orig, &p);
+        let b = LayoutMetrics::compute(&remapped, &rev);
+        assert_eq!(a.c_max, b.c_max);
+        assert_eq!(a.l_max, b.l_max);
+        assert_eq!(a.fifo.total_bits, b.fifo.total_bits);
+        assert!((a.b_eff - b.b_eff).abs() < 1e-15);
+    }
+
+    #[test]
+    fn distinct_kinds_options_and_caps_do_not_collide() {
+        let cache = LayoutCache::new();
+        let p = helmholtz_problem();
+        let (_, h1) = cache.layout_for_tracked(LayoutKind::Iris, &p);
+        let (_, h2) = cache.layout_for_tracked(LayoutKind::DueAlignedNaive, &p);
+        let (_, h3) = cache.layout_for_opts_tracked(
+            LayoutKind::Iris,
+            &p,
+            &ScheduleOptions::paper_strict(),
+        );
+        let (_, h4) = cache.layout_for_tracked(LayoutKind::Iris, &p.with_uniform_cap(1));
+        assert!(!h1 && !h2 && !h3 && !h4, "all four keys are distinct");
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn baseline_options_are_normalized() {
+        // Non-Iris kinds ignore schedule options, so the entry is shared.
+        let cache = LayoutCache::new();
+        let p = paper_example();
+        let (_, h1) = cache.layout_for_opts_tracked(
+            LayoutKind::PackedNaive,
+            &p,
+            &ScheduleOptions::default(),
+        );
+        let (_, h2) = cache.layout_for_opts_tracked(
+            LayoutKind::PackedNaive,
+            &p,
+            &ScheduleOptions::paper_strict(),
+        );
+        assert!(!h1 && h2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let cache = LayoutCache::new();
+        let p = paper_example();
+        cache.layout_for(LayoutKind::Iris, &p);
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+        // Re-lookup schedules again (a second miss).
+        cache.layout_for(LayoutKind::Iris, &p);
+        assert_eq!(cache.stats().misses, 2);
+    }
+}

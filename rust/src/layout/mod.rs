@@ -2,6 +2,7 @@
 //! assignment of every array element to a (cycle, bit-range) slot on the
 //! bus (paper Figs. 3–5).
 
+pub mod cache;
 pub mod fifo;
 pub mod io;
 pub mod metrics;
@@ -100,7 +101,8 @@ impl Layout {
 }
 
 /// Identifies which algorithm produced a layout (reports & benches).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// `Hash` so the kind can be part of a [`cache::LayoutCache`] key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayoutKind {
     /// One element per cycle, arrays sequential by due date (Fig. 3).
     ElementNaive,

@@ -27,7 +27,7 @@ use crate::layout::Layout;
 use crate::model::Problem;
 
 /// How bus lanes are shared among ready tasks when contended.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LevelPolicy {
     /// Largest-remainder apportionment over **all** ready tasks. This is
     /// what reproduces the paper's measured FIFO interleaving ("the three
@@ -39,8 +39,10 @@ pub enum LevelPolicy {
     Strict,
 }
 
-/// Scheduling options.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Scheduling options. `Hash` because the options are part of the
+/// [`crate::layout::cache::LayoutCache`] key — two requests with different
+/// options must never share a memoized schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ScheduleOptions {
     pub policy: LevelPolicy,
     /// After apportionment, keep adding elements (in priority order) while

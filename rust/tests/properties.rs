@@ -7,10 +7,15 @@
 //! 3. pack→decode is the identity on random data for every algorithm;
 //! 4. FIFO analysis equals the cycle-accurate stream simulation;
 //! 5. Eq.-1 efficiency is in (0, 1] and consistent with C_max;
-//! 6. reversal optimality signal: Iris L_max ≤ packed-naive L_max.
+//! 6. reversal optimality signal: Iris L_max ≤ packed-naive L_max;
+//! 7. the layout cache is transparent: hits are bit-identical to fresh
+//!    schedules, permuted-problem hits stay valid and metric-equal;
+//! 8. the parallel DSE engine reproduces the serial sweeps exactly.
 
 use iris::baselines;
 use iris::decode::{DecodePlan, StreamDecoder};
+use iris::dse::{self, DseEngine};
+use iris::layout::cache::LayoutCache;
 use iris::layout::metrics::LayoutMetrics;
 use iris::layout::validate::validate;
 use iris::layout::LayoutKind;
@@ -254,6 +259,102 @@ fn prop_hls_estimates_well_formed() {
                     );
                 }
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_hit_layout_bit_identical_to_fresh_schedule() {
+    forall_shrink(
+        &cfg(60),
+        |rng| gen().generate(rng),
+        shrink_problem,
+        |p: &Problem| {
+            let cache = LayoutCache::new();
+            for kind in [LayoutKind::Iris, LayoutKind::DueAlignedNaive] {
+                let fresh = baselines::generate(kind, p);
+                let (first, hit0) = cache.layout_for_tracked(kind, p);
+                let (second, hit1) = cache.layout_for_tracked(kind, p);
+                iris::prop_assert!(!hit0, "{}: first lookup must miss", kind.name());
+                iris::prop_assert!(hit1, "{}: second lookup must hit", kind.name());
+                iris::prop_assert!(
+                    *first == fresh,
+                    "{}: miss layout differs from fresh schedule",
+                    kind.name()
+                );
+                iris::prop_assert!(
+                    *second == fresh,
+                    "{}: cache-hit layout differs from fresh schedule",
+                    kind.name()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cache_hit_on_permuted_problem_valid_and_metric_equal() {
+    forall_shrink(
+        &cfg(60),
+        |rng| gen().generate(rng),
+        shrink_problem,
+        |p: &Problem| {
+            if p.arrays.len() < 2 {
+                return Ok(());
+            }
+            let cache = LayoutCache::new();
+            let (orig, _) = cache.layout_for_tracked(LayoutKind::Iris, p);
+            let mut rev = p.clone();
+            rev.arrays.reverse();
+            let (remapped, hit) = cache.layout_for_tracked(LayoutKind::Iris, &rev);
+            iris::prop_assert!(hit, "permuted problem must share the cache entry");
+            validate(&remapped, &rev).map_err(|e| format!("remapped layout invalid: {e}"))?;
+            let a = LayoutMetrics::compute(&orig, p);
+            let b = LayoutMetrics::compute(&remapped, &rev);
+            iris::prop_assert!(
+                a.c_max == b.c_max
+                    && a.l_max == b.l_max
+                    && a.occupied_cycles == b.occupied_cycles
+                    && a.fifo.total_bits == b.fifo.total_bits,
+                "metrics changed under remap: {a:?} vs {b:?}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_delta_sweep_matches_serial() {
+    forall_shrink(
+        &cfg(40),
+        |rng| gen().generate(rng),
+        shrink_problem,
+        |p: &Problem| {
+            let serial = dse::delta_sweep(p, &[4, 2, 1]);
+            let engine = DseEngine::new().threads(4);
+            let parallel = engine.delta_sweep(p, &[4, 2, 1]);
+            iris::prop_assert!(
+                serial.len() == parallel.len(),
+                "length {} vs {}",
+                serial.len(),
+                parallel.len()
+            );
+            for (s, q) in serial.iter().zip(parallel.iter()) {
+                iris::prop_assert!(
+                    s == q,
+                    "design point '{}' differs between serial and parallel",
+                    s.label
+                );
+            }
+            // A second, warm run must also be identical.
+            let warm = engine.delta_sweep(p, &[4, 2, 1]);
+            iris::prop_assert!(warm == serial, "warm-cache sweep differs");
+            iris::prop_assert!(
+                engine.cache().stats().hits > 0,
+                "second sweep must hit the cache"
+            );
             Ok(())
         },
     );

@@ -1,0 +1,172 @@
+//! Minimal vendored stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate, covering exactly the surface this workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`] macros, and the [`Context`]
+//! extension trait. The build environment has no crates.io access, so the
+//! real crate cannot be fetched; this shim is API-compatible for the
+//! subset in use and can be swapped for the real dependency by editing
+//! the root `Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically-typed error with a context chain.
+///
+/// Internally the chain is stored innermost (root cause) first; `Display`
+/// shows the outermost message, `{:?}` shows the full chain in the same
+/// "Caused by" style as the real `anyhow`.
+pub struct Error {
+    /// Messages from innermost (root cause) to outermost (latest context).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The outermost message (what `Display` shows).
+    fn outermost(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.outermost())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.outermost())?;
+        let mut causes = self.chain.iter().rev().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std source chain so no cause is lost.
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&(dyn StdError + 'static)> = e.source();
+        while let Some(s) = cur {
+            msgs.push(s.to_string());
+            cur = s.source();
+        }
+        msgs.reverse(); // innermost first
+        Error { chain: msgs }
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Mirrors anyhow's ext-trait trick: `Error` is a local type that does not
+// implement `std::error::Error`, so this impl cannot overlap the blanket
+// impl above.
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading config".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("file missing"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn fails() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert!(parse("12").is_ok());
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        let e = Err::<(), Error>(anyhow!("inner"))
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert!(format!("{e:?}").contains("inner"));
+    }
+}
