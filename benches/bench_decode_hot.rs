@@ -1,41 +1,86 @@
 //! Bench: the accelerator-side decode hot path (Listing-2 equivalent) —
-//! GB/s of payload extracted from bus lines, plus the cycle-accurate
-//! stream-decoder simulation cost.
+//! GB/s of payload extracted from bus lines across the compiled word
+//! program (serial / parallel / incremental stream), the interpreted
+//! plan, the bit-by-bit scalar baseline, and the cycle-accurate II=1
+//! stream-decoder simulation.
+//!
+//! Doubles as the CI perf-smoke gate: `--quick` shrinks calibration and
+//! the workload set, `--check` enforces `benchkit/thresholds.json` (see
+//! `iris::benchkit::finish_gate`).
 
 use iris::baselines;
-use iris::benchkit::{black_box, section, Bencher};
+use iris::benchkit::{black_box, finish_gate, parse_bench_args, section, Bencher, Stats};
 use iris::coordinator::pipeline::synthetic_data;
-use iris::decode::{DecodePlan, StreamDecoder};
+use iris::decode::{decode_bitwise, DecodePlan, DecodeProgram, StreamDecoder};
 use iris::layout::LayoutKind;
 use iris::model::{helmholtz_problem, matmul_problem, Problem};
 use iris::pack::PackPlan;
 
-fn bench_workload(name: &str, p: &Problem, kind: LayoutKind) {
+fn bench_workload(
+    name: &str,
+    p: &Problem,
+    kind: LayoutKind,
+    main: &Bencher,
+    quick: bool,
+    out: &mut Vec<Stats>,
+) {
     let layout = baselines::generate(kind, p);
     let plan = PackPlan::compile(&layout, p);
     let data = synthetic_data(p, 7);
     let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
     let buf = plan.pack(&refs).unwrap();
     let dp = DecodePlan::compile(&layout, p);
+    let prog = DecodeProgram::compile(&dp);
     let bytes = p.total_bits() / 8;
-    Bencher::default()
-        .with_bytes(bytes)
-        .run(&format!("decode {name}/{} (plan)", kind.name()), || {
-            black_box(dp.decode(&buf).unwrap());
-        });
-    Bencher::quick()
-        .with_bytes(bytes)
-        .run(&format!("decode {name}/{} (II=1 stream sim)", kind.name()), || {
+    let payload = plan.payload_words();
+    let label = |engine: &str| format!("decode {name}/{} ({engine})", kind.name());
+
+    let b = main.clone().with_bytes(bytes);
+    out.push(b.run(&label("compiled"), || {
+        black_box(prog.decode(&buf).unwrap());
+    }));
+    out.push(b.run(&label("plan"), || {
+        black_box(dp.decode(&buf).unwrap());
+    }));
+    out.push(b.run(&label("compiled-stream"), || {
+        let mut ds = prog.stream();
+        for chunk in buf.words()[..payload].chunks(256) {
+            ds.push(chunk);
+        }
+        black_box(ds.finish().unwrap());
+    }));
+    if !quick {
+        out.push(b.run(&label("compiled-parallel"), || {
+            black_box(prog.decode_parallel(&buf, iris::dse::default_threads()).unwrap());
+        }));
+    }
+    let slow_cfg = if quick { Bencher::smoke() } else { Bencher::quick() };
+    let slow = slow_cfg.with_bytes(bytes);
+    out.push(slow.run(&label("bitwise"), || {
+        black_box(decode_bitwise(&dp, &buf).unwrap());
+    }));
+    if !quick {
+        out.push(slow.run(&label("II=1 stream sim"), || {
             let sd = StreamDecoder::new(&layout, p);
             black_box(sd.run(&buf).unwrap());
-        });
+        }));
+    }
 }
 
 fn main() {
+    let args = parse_bench_args();
+    let quick = args.quick;
+    let b = if quick { Bencher::smoke() } else { Bencher::default() };
+    let mut stats: Vec<Stats> = Vec::new();
+
     section("decode hot path");
     let hp = helmholtz_problem();
-    bench_workload("helmholtz", &hp, LayoutKind::Iris);
+    bench_workload("helmholtz", &hp, LayoutKind::Iris, &b, quick, &mut stats);
     let mp = matmul_problem(33, 31);
-    bench_workload("matmul(33,31)", &mp, LayoutKind::Iris);
-    bench_workload("matmul(33,31)", &mp, LayoutKind::DueAlignedNaive);
+    bench_workload("matmul(33,31)", &mp, LayoutKind::Iris, &b, quick, &mut stats);
+    if !quick {
+        bench_workload("matmul(33,31)", &mp, LayoutKind::DueAlignedNaive, &b, false, &mut stats);
+    }
+
+    finish_gate("bench_decode_hot", "decode ", &args, &stats);
 }

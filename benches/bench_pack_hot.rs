@@ -1,49 +1,96 @@
 //! Bench: the host-side pack hot path (Listing-1 equivalent) — GB/s of
-//! payload packed into bus lines, against a memcpy roofline, for both
-//! paper workloads and both the optimized and reference packers.
+//! payload packed into bus lines against a memcpy roofline, across all
+//! four engines: the compiled word program (serial / parallel /
+//! streaming), the optimized interpreted plan, the field-level scalar
+//! reference, and the bit-by-bit scalar baseline.
+//!
+//! Doubles as the CI perf-smoke gate: `--quick` shrinks calibration and
+//! the workload set, `--check` enforces `benchkit/thresholds.json` (see
+//! `iris::benchkit::finish_gate`).
 
 use iris::baselines;
-use iris::benchkit::{black_box, section, Bencher};
+use iris::benchkit::{black_box, finish_gate, parse_bench_args, section, Bencher, Stats};
 use iris::coordinator::pipeline::synthetic_data;
 use iris::layout::LayoutKind;
 use iris::model::{helmholtz_problem, matmul_problem, Problem};
-use iris::pack::{pack_reference, PackPlan};
+use iris::pack::{pack_bitwise, pack_reference, PackPlan, PackProgram};
 
-fn bench_workload(name: &str, p: &Problem, kind: LayoutKind) {
+fn bench_workload(
+    name: &str,
+    p: &Problem,
+    kind: LayoutKind,
+    main: &Bencher,
+    quick: bool,
+    out: &mut Vec<Stats>,
+) {
     let layout = baselines::generate(kind, p);
     let plan = PackPlan::compile(&layout, p);
+    let prog = PackProgram::compile(&plan);
     let data = synthetic_data(p, 7);
     let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
     let bytes = p.total_bits() / 8;
     let mut buf = plan.alloc_buffer();
-    let b = Bencher::default().with_bytes(bytes);
-    b.run(&format!("pack {name}/{} (optimized)", kind.name()), || {
+    let label = |engine: &str| format!("pack {name}/{} ({engine})", kind.name());
+
+    let b = main.clone().with_bytes(bytes);
+    out.push(b.run(&label("compiled"), || {
+        buf.words_mut().fill(0);
+        prog.pack_into(&refs, &mut buf).unwrap();
+        black_box(&buf);
+    }));
+    out.push(b.run(&label("optimized"), || {
         buf.words_mut().fill(0);
         plan.pack_into(&refs, &mut buf).unwrap();
         black_box(&buf);
-    });
-    let b = Bencher::quick().with_bytes(bytes);
-    b.run(&format!("pack {name}/{} (reference)", kind.name()), || {
+    }));
+    out.push(b.run(&label("compiled-stream"), || {
+        for tile in prog.stream(&refs, 64).unwrap() {
+            black_box(tile);
+        }
+    }));
+    if !quick {
+        out.push(b.run(&label("compiled-parallel"), || {
+            black_box(prog.pack_parallel(&refs, iris::dse::default_threads()).unwrap());
+        }));
+    }
+    // Scalar oracles on a lighter calibration so full runs stay in
+    // minutes (the bitwise baseline is orders of magnitude slower).
+    let slow_cfg = if quick { Bencher::smoke() } else { Bencher::quick() };
+    let slow = slow_cfg.with_bytes(bytes);
+    out.push(slow.run(&label("reference"), || {
         black_box(pack_reference(&plan, &refs).unwrap());
-    });
+    }));
+    out.push(slow.run(&label("bitwise"), || {
+        black_box(pack_bitwise(&plan, &refs).unwrap());
+    }));
 }
 
 fn main() {
+    let args = parse_bench_args();
+    let quick = args.quick;
+    let b = if quick { Bencher::smoke() } else { Bencher::default() };
+    let mut stats: Vec<Stats> = Vec::new();
+
     section("pack hot path");
     let hp = helmholtz_problem();
-    bench_workload("helmholtz", &hp, LayoutKind::Iris);
-    bench_workload("helmholtz", &hp, LayoutKind::DueAlignedNaive);
+    bench_workload("helmholtz", &hp, LayoutKind::Iris, &b, quick, &mut stats);
     let mp = matmul_problem(33, 31);
-    bench_workload("matmul(33,31)", &mp, LayoutKind::Iris);
-    let mp64 = matmul_problem(64, 64);
-    bench_workload("matmul(64,64)", &mp64, LayoutKind::Iris);
+    bench_workload("matmul(33,31)", &mp, LayoutKind::Iris, &b, quick, &mut stats);
+    if !quick {
+        bench_workload("helmholtz", &hp, LayoutKind::DueAlignedNaive, &b, false, &mut stats);
+        let mp64 = matmul_problem(64, 64);
+        bench_workload("matmul(64,64)", &mp64, LayoutKind::Iris, &b, false, &mut stats);
 
-    section("memcpy roofline (same payload)");
-    let bytes = hp.total_bits() as usize / 8;
-    let src = vec![0xA5u8; bytes];
-    let mut dst = vec![0u8; bytes];
-    Bencher::default().with_bytes(bytes as u64).run("memcpy helmholtz payload", || {
-        dst.copy_from_slice(black_box(&src));
-        black_box(&dst);
-    });
+        section("memcpy roofline (same payload)");
+        let bytes = hp.total_bits() as usize / 8;
+        let src = vec![0xA5u8; bytes];
+        let mut dst = vec![0u8; bytes];
+        let roof = Bencher::default().with_bytes(bytes as u64);
+        roof.run("memcpy helmholtz payload", || {
+            dst.copy_from_slice(black_box(&src));
+            black_box(&dst);
+        });
+    }
+
+    finish_gate("bench_pack_hot", "pack ", &args, &stats);
 }

@@ -7,10 +7,10 @@
 //! Run: `cargo run --release --example quickstart`
 
 use iris::baselines;
-use iris::decode::DecodePlan;
+use iris::decode::{DecodePlan, DecodeProgram};
 use iris::layout::metrics::LayoutMetrics;
 use iris::model::{ArraySpec, BusConfig, Problem};
-use iris::pack::PackPlan;
+use iris::pack::{PackPlan, PackProgram};
 use iris::schedule::iris_layout;
 
 fn main() -> anyhow::Result<()> {
@@ -51,11 +51,30 @@ fn main() -> anyhow::Result<()> {
     println!(
         "packed {} elements into {} bytes ({} bus cycles)",
         layout.total_elements(),
-        (plan.buffer_bits() + 7) / 8,
+        iris::util::ceil_div(plan.buffer_bits(), 8),
         plan.cycles
     );
     let decoded = DecodePlan::compile(&layout, &problem).decode(&buf)?;
     assert_eq!(decoded, data, "decode must be bit-exact");
     println!("decode round-trip: bit-exact ✓");
+
+    // The same transfer through the compiled word-program engine, as a
+    // stream: pack emits burst-sized cycle-tiles of u64 bus words, and
+    // the incremental decoder consumes them as they arrive — neither
+    // side ever holds the whole buffer.
+    let prog = PackProgram::compile(&plan);
+    let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &problem));
+    let mut ds = dprog.stream();
+    let mut tiles = 0usize;
+    for tile in prog.stream(&refs, 4)? {
+        ds.push(&tile);
+        tiles += 1;
+    }
+    let streamed = ds.finish()?;
+    assert_eq!(streamed, data, "streamed decode must be bit-exact");
+    println!(
+        "streamed the same payload in {tiles} tiles ({} word-program ops): bit-exact ✓",
+        prog.num_ops()
+    );
     Ok(())
 }

@@ -4,8 +4,18 @@
 //! reporting, and a `black_box` to defeat const-folding.
 //!
 //! Used by every `benches/bench_*.rs` target (`harness = false`).
+//!
+//! It also hosts the **perf-smoke gate** used by CI: the hot-path
+//! benches parse [`BenchArgs`] (`--quick` for a fast calibration,
+//! `--check[=path]` to enforce `benchkit/thresholds.json`), collect
+//! their [`Stats`], and call [`finish_gate`], which fails the process
+//! when compiled-path throughput regresses below the recorded floors
+//! (with slack) or below the required speedup over the scalar bit-wise
+//! baselines.
 
 use crate::util::human_ns;
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Prevent the optimizer from discarding a computed value.
@@ -96,6 +106,18 @@ impl Bencher {
         }
     }
 
+    /// CI perf-smoke calibration: fast enough to keep a whole bench
+    /// under a few seconds while the median stays stable enough for the
+    /// conservative thresholds in `benchkit/thresholds.json`.
+    pub fn smoke() -> Bencher {
+        Bencher {
+            sample_target_ns: 2e6,
+            samples: 6,
+            warmup_ns: 20e6,
+            bytes: None,
+        }
+    }
+
     pub fn with_bytes(mut self, bytes: u64) -> Bencher {
         self.bytes = Some(bytes);
         self
@@ -177,6 +199,198 @@ pub fn compare(label: &str, contender: &Stats, baseline: &Stats) {
     );
 }
 
+/// Standard CLI flags of the hot-path benches (`harness = false`
+/// binaries receive everything after `cargo bench ... --`):
+///
+/// * `--quick` (or env `IRIS_BENCH_QUICK=1`) — smoke-mode calibration
+///   and the reduced workload set;
+/// * `--check` / `--check=<path>` (or env `IRIS_BENCH_CHECK=<path>`) —
+///   after running, enforce the thresholds file (default
+///   `benchkit/thresholds.json` under `CARGO_MANIFEST_DIR`).
+///
+/// Unknown flags (e.g. the `--bench` cargo appends) are ignored.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    pub quick: bool,
+    pub check: Option<String>,
+}
+
+/// Default location of the checked-in thresholds file.
+pub fn default_thresholds_path() -> String {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => format!("{dir}/benchkit/thresholds.json"),
+        Err(_) => "benchkit/thresholds.json".to_string(),
+    }
+}
+
+/// Parse [`BenchArgs`] from the environment and process arguments.
+pub fn parse_bench_args() -> BenchArgs {
+    // Env opt-in is by value, so IRIS_BENCH_QUICK=0 stays a full run.
+    let quick_env = std::env::var("IRIS_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    let mut args = BenchArgs {
+        quick: quick_env,
+        check: std::env::var("IRIS_BENCH_CHECK").ok(),
+    };
+    for arg in std::env::args().skip(1) {
+        if arg == "--quick" {
+            args.quick = true;
+        } else if arg == "--check" {
+            args.check = Some(default_thresholds_path());
+        } else if let Some(path) = arg.strip_prefix("--check=") {
+            args.check = Some(path.to_string());
+        }
+    }
+    args
+}
+
+/// Parsed `benchkit/thresholds.json`: conservative absolute throughput
+/// floors plus relative-speedup rules. The floors are deliberately far
+/// below typical hardware (they catch order-of-magnitude regressions on
+/// noisy shared CI runners, scaled by `slack`); the speedup rules are
+/// the real gate, because a ratio between two measurements on the same
+/// machine is robust to the machine itself.
+#[derive(Debug, Clone)]
+pub struct Thresholds {
+    /// Multiplier applied to every `min_gbs` floor (e.g. 0.70 = fail
+    /// only when throughput drops more than 30% below the recorded
+    /// floor).
+    pub slack: f64,
+    /// Benchmark name → minimum median throughput in GB/s.
+    pub min_gbs: BTreeMap<String, f64>,
+    /// `(contender, baseline, min_ratio)`: contender must be at least
+    /// `min_ratio`× faster than baseline (by median time).
+    pub min_speedup: Vec<(String, String, f64)>,
+}
+
+impl Thresholds {
+    /// Load and parse the thresholds file.
+    pub fn load(path: &str) -> anyhow::Result<Thresholds> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => anyhow::bail!("read {path}: {e}"),
+        };
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
+        let slack = doc
+            .get("slack")
+            .and_then(Json::as_f64)
+            .unwrap_or(1.0)
+            .clamp(0.0, 1.0);
+        let mut min_gbs = BTreeMap::new();
+        if let Some(Json::Obj(map)) = doc.get("min_gbs") {
+            for (k, v) in map {
+                if let Some(f) = v.as_f64() {
+                    min_gbs.insert(k.clone(), f);
+                }
+            }
+        }
+        let mut min_speedup = Vec::new();
+        if let Some(rules) = doc.get("min_speedup").and_then(Json::as_arr) {
+            for r in rules {
+                let c = r.get("contender").and_then(Json::as_str);
+                let b = r.get("baseline").and_then(Json::as_str);
+                let ratio = r.get("ratio").and_then(Json::as_f64);
+                match (c, b, ratio) {
+                    (Some(c), Some(b), Some(ratio)) => {
+                        min_speedup.push((c.to_string(), b.to_string(), ratio));
+                    }
+                    _ => anyhow::bail!("{path}: malformed min_speedup rule {r:?}"),
+                }
+            }
+        }
+        Ok(Thresholds {
+            slack,
+            min_gbs,
+            min_speedup,
+        })
+    }
+
+    /// Number of rules whose names start with `prefix`.
+    pub fn num_rules(&self, prefix: &str) -> usize {
+        let floors = self.min_gbs.keys().filter(|k| k.starts_with(prefix)).count();
+        let speedups = self.min_speedup.iter().filter(|(c, _, _)| c.starts_with(prefix)).count();
+        floors + speedups
+    }
+
+    /// Check all rules scoped to `prefix` (so one thresholds file can
+    /// gate several bench binaries) against the collected stats.
+    /// Returns human-readable violations; empty means the gate passes.
+    pub fn check(&self, prefix: &str, stats: &[Stats]) -> Vec<String> {
+        let find = |name: &str| stats.iter().find(|s| s.name == name);
+        let mut out = Vec::new();
+        for (name, &floor_gbs) in &self.min_gbs {
+            if !name.starts_with(prefix) {
+                continue;
+            }
+            match find(name) {
+                None => out.push(format!("threshold '{name}' has no measurement")),
+                Some(s) => {
+                    let gbs = s.throughput_gbs().unwrap_or(0.0);
+                    let floor = floor_gbs * self.slack;
+                    if gbs < floor {
+                        out.push(format!(
+                            "'{name}': {gbs:.3} GB/s below floor {floor:.3} \
+                             (recorded {floor_gbs:.3} × slack {:.2})",
+                            self.slack
+                        ));
+                    }
+                }
+            }
+        }
+        for (c, b, min_ratio) in &self.min_speedup {
+            if !c.starts_with(prefix) {
+                continue;
+            }
+            match (find(c), find(b)) {
+                (Some(cs), Some(bs)) => {
+                    let ratio = cs.speedup_vs(bs);
+                    if ratio < *min_ratio {
+                        out.push(format!(
+                            "'{c}' is only {ratio:.2}× faster than '{b}' \
+                             (gate requires ≥ {min_ratio:.1}×)"
+                        ));
+                    }
+                }
+                _ => out.push(format!("speedup rule '{c}' vs '{b}': missing measurement")),
+            }
+        }
+        out
+    }
+}
+
+/// Apply the perf-smoke gate at the end of a bench binary: a no-op
+/// unless `--check` was requested, otherwise load the thresholds, check
+/// every rule scoped to `prefix`, and exit non-zero on any violation
+/// (exit 2 when the thresholds file itself is unreadable).
+pub fn finish_gate(bench: &str, prefix: &str, args: &BenchArgs, stats: &[Stats]) {
+    let Some(path) = &args.check else {
+        return;
+    };
+    match Thresholds::load(path) {
+        Ok(th) => {
+            let violations = th.check(prefix, stats);
+            if violations.is_empty() {
+                println!(
+                    "{bench}: perf-smoke gate passed ({} rules, slack {:.2})",
+                    th.num_rules(prefix),
+                    th.slack
+                );
+            } else {
+                eprintln!("{bench}: perf-smoke gate FAILED:");
+                for v in &violations {
+                    eprintln!("  - {v}");
+                }
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("{bench}: cannot load thresholds from {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +432,99 @@ mod tests {
         assert!((fast.speedup_vs(&slow) - 4.0).abs() < 1e-12);
         assert!((slow.speedup_vs(&fast) - 0.25).abs() < 1e-12);
         compare("selftest", &fast, &slow);
+    }
+
+    fn stat(name: &str, median: f64, bytes: Option<u64>) -> Stats {
+        Stats {
+            name: name.to_string(),
+            samples: 1,
+            iters_per_sample: 1,
+            mean_ns: median,
+            median_ns: median,
+            stddev_ns: 0.0,
+            mad_ns: 0.0,
+            min_ns: median,
+            max_ns: median,
+            bytes_per_iter: bytes,
+        }
+    }
+
+    #[test]
+    fn thresholds_check_scoped_rules() {
+        let th = Thresholds {
+            slack: 0.5,
+            min_gbs: [("pack a (compiled)".to_string(), 2.0)].into_iter().collect(),
+            min_speedup: vec![(
+                "pack a (compiled)".to_string(),
+                "pack a (bitwise)".to_string(),
+                10.0,
+            )],
+        };
+        // 1000 bytes in 500 ns = 2 GB/s; bitwise at 20× slower.
+        let good = vec![
+            stat("pack a (compiled)", 500.0, Some(1000)),
+            stat("pack a (bitwise)", 10_000.0, Some(1000)),
+        ];
+        assert!(th.check("pack ", &good).is_empty());
+        assert_eq!(th.num_rules("pack "), 2);
+        assert_eq!(th.num_rules("decode "), 0);
+        // Throughput within slack (1.5 GB/s > 2.0 × 0.5) still passes.
+        let slow_ok = vec![
+            stat("pack a (compiled)", 666.0, Some(1000)),
+            stat("pack a (bitwise)", 10_000.0, Some(1000)),
+        ];
+        assert!(th.check("pack ", &slow_ok).is_empty());
+        // Below the slacked floor fails.
+        let too_slow = vec![
+            stat("pack a (compiled)", 2000.0, Some(1000)),
+            stat("pack a (bitwise)", 30_000.0, Some(1000)),
+        ];
+        let v = th.check("pack ", &too_slow);
+        assert_eq!(v.len(), 1, "{v:?}");
+        // Speedup regression fails.
+        let no_speedup = vec![
+            stat("pack a (compiled)", 500.0, Some(1000)),
+            stat("pack a (bitwise)", 2500.0, Some(1000)),
+        ];
+        let v = th.check("pack ", &no_speedup);
+        assert_eq!(v.len(), 1, "{v:?}");
+        // Missing measurements are violations, and out-of-scope rules
+        // are not checked.
+        assert_eq!(th.check("pack ", &[]).len(), 2);
+        assert!(th.check("decode ", &[]).is_empty());
+    }
+
+    #[test]
+    fn thresholds_load_roundtrip() {
+        let text = r#"{
+            "slack": 0.7,
+            "min_gbs": {"pack x (compiled)": 1.5},
+            "min_speedup": [
+                {"contender": "pack x (compiled)", "baseline": "pack x (bitwise)", "ratio": 10}
+            ]
+        }"#;
+        let path = std::env::temp_dir().join("iris_thresholds_test.json");
+        std::fs::write(&path, text).unwrap();
+        let th = Thresholds::load(path.to_str().unwrap()).unwrap();
+        assert!((th.slack - 0.7).abs() < 1e-12);
+        assert_eq!(th.min_gbs.get("pack x (compiled)"), Some(&1.5));
+        assert_eq!(th.min_speedup.len(), 1);
+        assert!((th.min_speedup[0].2 - 10.0).abs() < 1e-12);
+        assert!(Thresholds::load("/nonexistent/thresholds.json").is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checked_in_thresholds_file_is_well_formed() {
+        // The benches and the CI perf-smoke job rely on this file; make
+        // sure it always parses and references both gated benches.
+        let th = Thresholds::load(&default_thresholds_path()).unwrap();
+        assert!(th.slack > 0.0 && th.slack <= 1.0);
+        assert!(th.num_rules("pack ") >= 2, "pack rules missing");
+        assert!(th.num_rules("decode ") >= 2, "decode rules missing");
+        for (c, b, ratio) in &th.min_speedup {
+            assert!(*ratio >= 1.0, "{c} vs {b}: ratio {ratio}");
+        }
     }
 
     #[test]

@@ -59,6 +59,40 @@ impl<'a> Iterator for BusStream<'a> {
     }
 }
 
+/// Reference tiling of a fully-packed buffer: group the payload words by
+/// the same word-aligned cycle-tile boundaries
+/// [`crate::pack::PackStream`] uses (tiles of `tile_cycles` bus cycles;
+/// a tile whose boundary falls mid-word is merged forward until it
+/// covers at least one whole word). This is the streaming oracle: the
+/// incremental packer must emit exactly these chunks, and a bus feeding
+/// an accelerator in `tile_cycles`-sized bursts would observe them in
+/// this order.
+pub fn tile_words(buf: &BitVec, m: u32, cycles: u64, tile_cycles: u64) -> Vec<Vec<u64>> {
+    assert!(tile_cycles > 0, "tile_cycles must be positive");
+    let payload_bits = cycles * m as u64;
+    let total_words = crate::util::ceil_div(payload_bits, 64) as usize;
+    assert!(buf.words().len() >= total_words, "buffer smaller than payload");
+    let tile_bits = tile_cycles.saturating_mul(m as u64);
+    let mut out = Vec::new();
+    let mut w0 = 0usize;
+    let mut tile = 0u64;
+    while w0 < total_words {
+        let mut w1 = w0;
+        while w1 <= w0 {
+            tile += 1;
+            let end_bit = tile.saturating_mul(tile_bits).min(payload_bits);
+            w1 = if end_bit == payload_bits {
+                total_words
+            } else {
+                (end_bit / 64) as usize
+            };
+        }
+        out.push(buf.words()[w0..w1].to_vec());
+        w0 = w1;
+    }
+    out
+}
+
 /// One HBM pseudo-channel's timing model.
 #[derive(Debug, Clone, Copy)]
 pub struct HbmChannel {
@@ -195,6 +229,28 @@ mod tests {
         let s = BusStream::new(&buf, 256, 2);
         assert_eq!(s.words_per_line(), 4);
         assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn tile_words_covers_payload_exactly() {
+        let p = paper_example();
+        let l = iris_layout(&p);
+        let plan = PackPlan::compile(&l, &p);
+        let mut rng = Rng::new(2);
+        let arrays: Vec<Vec<u64>> = p
+            .arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect();
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = plan.pack(&refs).unwrap();
+        for tile_cycles in [1u64, 2, 4, 9, 50] {
+            let tiles = tile_words(&buf, plan.m, plan.cycles, tile_cycles);
+            let flat: Vec<u64> = tiles.iter().flatten().copied().collect();
+            assert_eq!(flat.len(), plan.payload_words(), "tc={tile_cycles}");
+            assert_eq!(&flat[..], &buf.words()[..plan.payload_words()]);
+            assert!(tiles.iter().all(|t| !t.is_empty()));
+        }
     }
 
     #[test]

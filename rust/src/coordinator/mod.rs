@@ -28,6 +28,10 @@ pub struct Metrics {
     pub dse_requests: AtomicU64,
     pub dse_points: AtomicU64,
     pub dse_point_latency_ns: AtomicU64,
+    /// Transfers large enough that the compiled word-program executor
+    /// sharded bus-cycles across worker threads
+    /// (`pack::program::PARALLEL_MIN_OPS`).
+    pub parallel_packs: AtomicU64,
 }
 
 impl Metrics {
@@ -87,7 +91,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} completed={} errors={} batches={} mean_latency={} \
-             max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={}",
+             max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={} \
+             parallel_packs={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -97,6 +102,7 @@ impl Metrics {
             100.0 * self.cache_hit_rate(),
             self.dse_points.load(Ordering::Relaxed),
             crate::util::human_ns(self.mean_dse_point_latency_ns()),
+            self.parallel_packs.load(Ordering::Relaxed),
         )
     }
 }

@@ -61,6 +61,12 @@ pub struct PipelineConfig {
     /// through the memo table (identical results; scheduling skipped on
     /// repeats). `None` keeps the standalone direct path.
     pub cache: Option<Arc<LayoutCache>>,
+    /// Use the compiled word-program pack/decode engine
+    /// ([`crate::pack::PackProgram`] / [`crate::decode::DecodeProgram`];
+    /// the default). `false` keeps the interpreted
+    /// `PackPlan`/`DecodePlan` hot paths, which remain as oracles —
+    /// both engines are bit-identical (property-tested).
+    pub compiled: bool,
 }
 
 impl PipelineConfig {
@@ -71,6 +77,7 @@ impl PipelineConfig {
             seed: 0x1215,
             xla_unpack_check: true,
             cache: None,
+            compiled: true,
         }
     }
 
@@ -86,6 +93,9 @@ impl PipelineConfig {
 pub struct PipelineReport {
     pub workload: String,
     pub layout: &'static str,
+    /// Which pack/decode engine ran: "compiled" (word program) or
+    /// "direct" (interpreted plans).
+    pub engine: &'static str,
     pub metrics: LayoutMetrics,
     pub pack_ns: u64,
     pub decode_ns: u64,
@@ -112,11 +122,12 @@ impl PipelineReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} [{}]: C_max={} L_max={} eff={} | pack {} decode {} compute {} | \
+            "{} [{}/{}]: C_max={} L_max={} eff={} | pack {} decode {} compute {} | \
              decode_exact={} xla_unpack={:?} max_err={:.2e} (tol {:.1e}) | \
              HBM: {:.1} µs @ {:.2} GB/s",
             self.workload,
             self.layout,
+            self.engine,
             self.metrics.c_max,
             self.metrics.l_max,
             crate::util::table::pct(self.metrics.b_eff),
@@ -192,8 +203,14 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     let metrics = LayoutMetrics::compute(&layout, &problem);
     let plan = PackPlan::compile(&layout, &problem);
     let refs: Vec<&[u64]> = raw_arrays.iter().map(|v| v.as_slice()).collect();
+    // Program compilation is part of the (reusable) plan stage, so it
+    // stays outside the timed hot path, like PackPlan::compile above.
+    let prog = cfg.compiled.then(|| crate::pack::PackProgram::compile(&plan));
     let t0 = Instant::now();
-    let buf = plan.pack(&refs)?;
+    let buf = match &prog {
+        Some(prog) => prog.pack(&refs)?,
+        None => plan.pack(&refs)?,
+    };
     let pack_ns = t0.elapsed().as_nanos() as u64;
 
     // ------------------------------------------------ bus model
@@ -203,9 +220,13 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     let hbm_gbs = channel.achieved_gbs(problem.total_bits(), beats);
 
     // ------------------------------------------------ decode (II=1 sim)
-    let t1 = Instant::now();
     let dp = DecodePlan::compile(&layout, &problem);
-    let decoded = dp.decode(&buf)?;
+    let dprog = cfg.compiled.then(|| crate::decode::DecodeProgram::compile(&dp));
+    let t1 = Instant::now();
+    let decoded = match &dprog {
+        Some(dprog) => dprog.decode(&buf)?,
+        None => dp.decode(&buf)?,
+    };
     let decode_ns = t1.elapsed().as_nanos() as u64;
     let decode_exact = decoded == raw_arrays;
     // Cycle-accurate stream decoder must agree with the static analysis.
@@ -302,6 +323,7 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     Ok(PipelineReport {
         workload: cfg.workload.name(),
         layout: cfg.kind.name(),
+        engine: if cfg.compiled { "compiled" } else { "direct" },
         metrics,
         pack_ns,
         decode_ns,
@@ -397,6 +419,30 @@ mod tests {
         .unwrap();
         assert!(iris.hbm_seconds < naive.hbm_seconds);
         assert!(iris.hbm_gbs > naive.hbm_gbs);
+    }
+
+    #[test]
+    fn compiled_pipeline_matches_direct_engines() {
+        for wl in [Workload::Helmholtz, Workload::MatMul { w_a: 33, w_b: 31 }] {
+            let base = PipelineConfig {
+                xla_unpack_check: false,
+                ..PipelineConfig::new(wl, LayoutKind::Iris)
+            };
+            let compiled = run(&base, None).unwrap();
+            let direct = run(
+                &PipelineConfig {
+                    compiled: false,
+                    ..base
+                },
+                None,
+            )
+            .unwrap();
+            assert_eq!(compiled.engine, "compiled");
+            assert_eq!(direct.engine, "direct");
+            assert!(compiled.decode_exact && direct.decode_exact);
+            assert_eq!(compiled.metrics, direct.metrics);
+            assert_eq!(compiled.hbm_seconds, direct.hbm_seconds);
+        }
     }
 
     #[test]

@@ -13,13 +13,13 @@
 
 use super::Metrics;
 use crate::bus::HbmChannel;
-use crate::decode::DecodePlan;
+use crate::decode::{DecodePlan, DecodeProgram};
 use crate::dse::{DesignPoint, DseEngine};
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
-use crate::pack::PackPlan;
+use crate::pack::{program::PARALLEL_MIN_OPS, PackPlan, PackProgram};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -257,8 +257,23 @@ fn process(
     let layout_metrics = LayoutMetrics::compute(&layout, &req.problem);
     let plan = PackPlan::compile(&layout, &req.problem);
     let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
-    let buf = plan.pack(&refs)?;
-    let decoded = DecodePlan::compile(&layout, &req.problem).decode(&buf)?;
+    // Compiled word-program engine (bit-identical to the interpreted
+    // plans; property-tested). Large transfers shard bus-cycles across
+    // the same worker fan-out the DSE engine uses.
+    let prog = PackProgram::compile(&plan);
+    let threads = crate::dse::default_threads();
+    let buf = if prog.num_ops() >= PARALLEL_MIN_OPS && threads > 1 {
+        // Counted only when the sharded executor actually runs (the
+        // same condition pack_parallel short-circuits on).
+        metrics
+            .parallel_packs
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        prog.pack_parallel(&refs, threads)?
+    } else {
+        prog.pack(&refs)?
+    };
+    let decoded =
+        DecodeProgram::compile(&DecodePlan::compile(&layout, &req.problem)).decode(&buf)?;
     let channel = HbmChannel::alveo_u280();
     Ok(TransferResponse {
         c_max: layout_metrics.c_max,
@@ -389,6 +404,36 @@ mod tests {
             server.metrics.dse_points.load(Ordering::Relaxed),
             direct.len() as u64
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn large_transfers_take_the_parallel_pack_path() {
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        // One deep 32-bit array on a 256-bit bus: ~20k aligned ops, past
+        // the PARALLEL_MIN_OPS sharding threshold.
+        let p = Problem::new(
+            BusConfig::alveo_u280(),
+            vec![ArraySpec::new("big", 32, 20_000, 100)],
+        )
+        .unwrap();
+        let data = synthetic_data(&p, 1);
+        let server = LayoutServer::start(2, 2);
+        let resp = server
+            .submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+            })
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(resp.decode_exact, "parallel pack must stay bit-exact");
+        // The counter only advances when the sharded executor can run.
+        if crate::dse::default_threads() > 1 {
+            assert!(server.metrics.parallel_packs.load(Ordering::Relaxed) >= 1);
+        }
+        assert!(server.metrics.summary().contains("parallel_packs="));
         server.shutdown();
     }
 

@@ -15,6 +15,16 @@
 //!   array to the kernel stream, and parks the surplus in per-array
 //!   FIFOs, tracking occupancy so the required depth is *measured*, not
 //!   just predicted.
+//!
+//! The fastest decoder is the compiled word program in [`program`]
+//! ([`DecodeProgram`]), which precomputes every gather at plan-compile
+//! time and adds the incremental ([`DecodeStream`]) and parallel
+//! executors; [`DecodePlan::decode`] and [`decode_bitwise`] are kept as
+//! its oracles.
+
+pub mod program;
+
+pub use program::{DecodeOp, DecodeProgram, DecodeStream};
 
 use crate::layout::fifo::FifoAnalysis;
 use crate::layout::Layout;
@@ -92,6 +102,30 @@ impl DecodePlan {
         Ok(out)
     }
 
+    /// Decode one array one **bit** at a time (the naive Listing-2
+    /// transcription). Slowest oracle; the CI perf-smoke gate measures
+    /// the compiled word program against it
+    /// (`benchkit/thresholds.json`).
+    pub fn decode_array_bitwise(&self, buf: &BitVec, a: usize) -> Result<Vec<u64>> {
+        let offs = &self.offsets[a];
+        let w = self.widths[a] as u64;
+        let need = offs.last().map(|&o| o + w).unwrap_or(0);
+        if (buf.len_bits() as u64) < need {
+            bail!("decode: buffer too small ({} < {need} bits)", buf.len_bits());
+        }
+        let mut out = Vec::with_capacity(offs.len());
+        for &off in offs {
+            let mut v = 0u64;
+            for i in 0..w {
+                if buf.get((off + i) as usize) {
+                    v |= 1u64 << i;
+                }
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
     /// `(word_idx, bit_off)` tables for array `a` — the inputs of the L1
     /// `unpack` Pallas kernel / `unpack_*` HLO artifacts.
     pub fn word_tables(&self, a: usize) -> (Vec<i32>, Vec<i32>) {
@@ -99,6 +133,14 @@ impl DecodePlan {
         let off = self.offsets[a].iter().map(|&o| (o & 63) as i32).collect();
         (idx, off)
     }
+}
+
+/// Bit-by-bit scalar decoder over all arrays; see
+/// [`DecodePlan::decode_array_bitwise`].
+pub fn decode_bitwise(plan: &DecodePlan, buf: &BitVec) -> Result<Vec<Vec<u64>>> {
+    (0..plan.offsets.len())
+        .map(|a| plan.decode_array_bitwise(buf, a))
+        .collect()
 }
 
 /// Result of the cycle-accurate stream simulation.
@@ -297,6 +339,19 @@ mod tests {
         let iu = p.array_index("u").unwrap();
         assert_eq!(trace.peak_fifo[iu], 998);
         assert_eq!(trace.peak_ports[iu], 4);
+    }
+
+    #[test]
+    fn bitwise_oracle_matches_plan_decode() {
+        for p in [paper_example(), matmul_problem(33, 31)] {
+            let l = crate::schedule::iris_layout(&p);
+            let arrays = arrays_for(&p, 6);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            let buf = PackPlan::compile(&l, &p).pack(&refs).unwrap();
+            let dp = DecodePlan::compile(&l, &p);
+            assert_eq!(decode_bitwise(&dp, &buf).unwrap(), dp.decode(&buf).unwrap());
+            assert_eq!(decode_bitwise(&dp, &buf).unwrap(), arrays);
+        }
     }
 
     #[test]

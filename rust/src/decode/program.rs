@@ -1,0 +1,427 @@
+//! Compiled word-program decoding: the mirror of [`crate::pack::program`].
+//! A [`DecodePlan`] lowers into per-array sequences of precomputed
+//! `{src_word, shift, mask}` operations; each element is then recovered
+//! with one branch-free two-word gather,
+//! `((words[src] >> shift) | (words[src+1] << 1) << (63 - shift)) & mask`
+//! — the two-step shift vanishes for non-straddling fields, exactly like
+//! the pack guard-word trick, so there is no per-element straddle branch.
+//!
+//! The unconditional `src + 1` read is why compiled decoding requires
+//! buffers with the pack guard word (every buffer produced by
+//! [`crate::pack::PackPlan::alloc_buffer`] or [`crate::pack::PackProgram`]
+//! has it); [`DecodeProgram::decode`] checks this up front.
+//!
+//! Within one array the ops are in element order, which makes
+//! `src_word` non-decreasing per array. That ordering buys the two extra
+//! executors:
+//!
+//! * [`DecodeStream`] — consume bus words incrementally (e.g. the tiles
+//!   emitted by [`crate::pack::PackStream`]) holding only a single carry
+//!   word of state: an element decodes as soon as the word after its
+//!   last source word has arrived, so the bus buffer never needs to fit
+//!   whole arrays.
+//! * [`DecodeProgram::decode_parallel`] — output elements are disjoint
+//!   per (array, element range) chunk, so chunks shard across scoped
+//!   worker threads (the [`crate::dse::DseEngine`] fan-out shape) while
+//!   reading the shared buffer, with bit-identical output.
+
+use super::DecodePlan;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+
+/// Below this total element count [`DecodeProgram::decode_parallel`]
+/// falls back to the serial executor.
+pub const PARALLEL_MIN_ELEMS: usize = 8192;
+
+/// One compiled decode operation: gather one element from the packed
+/// words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeOp {
+    /// Width mask of the decoded element.
+    pub mask: u64,
+    /// Low source word (`src_word + 1` is also read, branch-free).
+    pub src_word: u32,
+    /// In-word bit offset of the field (0..=63).
+    pub shift: u8,
+}
+
+/// A [`DecodePlan`] lowered to straight-line word operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DecodeProgram {
+    /// Bus width m (bits per cycle), copied from the plan.
+    pub m: u32,
+    /// Per-array ops in element order (`src_word` non-decreasing).
+    ops: Vec<Vec<DecodeOp>>,
+    /// Minimum `words.len()` a buffer must have (covers every
+    /// unconditional `src_word + 1` read).
+    min_words: usize,
+}
+
+#[inline]
+fn gather(words: &[u64], op: &DecodeOp) -> u64 {
+    let lo = words[op.src_word as usize] >> op.shift;
+    let hi = (words[op.src_word as usize + 1] << 1) << (63 - op.shift);
+    (lo | hi) & op.mask
+}
+
+impl DecodeProgram {
+    /// Lower a decode plan into the word program.
+    pub fn compile(plan: &DecodePlan) -> DecodeProgram {
+        let mut min_words = 0usize;
+        let ops = plan
+            .offsets
+            .iter()
+            .enumerate()
+            .map(|(a, offs)| {
+                let w = plan.widths[a];
+                let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+                offs.iter()
+                    .map(|&off| {
+                        let wi = (off >> 6) as u32;
+                        min_words = min_words.max(wi as usize + 2);
+                        DecodeOp {
+                            mask,
+                            src_word: wi,
+                            shift: (off & 63) as u8,
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        DecodeProgram {
+            m: plan.m,
+            ops,
+            min_words,
+        }
+    }
+
+    /// Per-array compiled ops.
+    pub fn ops(&self) -> &[Vec<DecodeOp>] {
+        &self.ops
+    }
+
+    /// Total elements across all arrays.
+    pub fn num_elements(&self) -> usize {
+        self.ops.iter().map(|v| v.len()).sum()
+    }
+
+    /// Minimum buffer length in words (including the guard word the
+    /// branch-free gather relies on).
+    pub fn min_words(&self) -> usize {
+        self.min_words
+    }
+
+    fn check_buffer(&self, buf: &BitVec) -> Result<()> {
+        if buf.words().len() < self.min_words {
+            bail!(
+                "decode program: buffer has {} words, needs {} (incl. pack guard word)",
+                buf.words().len(),
+                self.min_words
+            );
+        }
+        Ok(())
+    }
+
+    /// Decode all arrays from a packed buffer (with guard word).
+    pub fn decode(&self, buf: &BitVec) -> Result<Vec<Vec<u64>>> {
+        self.check_buffer(buf)?;
+        let words = buf.words();
+        Ok(self
+            .ops
+            .iter()
+            .map(|aops| aops.iter().map(|op| gather(words, op)).collect())
+            .collect())
+    }
+
+    /// Decode with (array, element-range) chunks sharded over `threads`
+    /// scoped workers. Bit-identical to [`DecodeProgram::decode`]; small
+    /// programs (fewer than [`PARALLEL_MIN_ELEMS`] elements) run
+    /// serially.
+    pub fn decode_parallel(&self, buf: &BitVec, threads: usize) -> Result<Vec<Vec<u64>>> {
+        self.check_buffer(buf)?;
+        let total = self.num_elements();
+        if threads <= 1 || total < PARALLEL_MIN_ELEMS {
+            return self.decode(buf);
+        }
+        let words = buf.words();
+        // Bound the fan-out: more shards than cores only adds spawn cost.
+        let threads = threads.min(64);
+        let target = crate::util::ceil_div(total as u64, threads as u64) as usize;
+        let mut out: Vec<Vec<u64>> = self.ops.iter().map(|v| vec![0u64; v.len()]).collect();
+        std::thread::scope(|scope| {
+            // Pack (array, element-range) units into at most `threads`
+            // groups of ~`target` elements each, then spawn one worker
+            // per group — the worker count is bounded by `threads`, not
+            // by the array count (many tiny arrays share one worker).
+            let mut groups: Vec<Vec<(&[DecodeOp], &mut [u64])>> = Vec::new();
+            let mut cur: Vec<(&[DecodeOp], &mut [u64])> = Vec::new();
+            let mut cur_elems = 0usize;
+            for (aops, out_a) in self.ops.iter().zip(out.iter_mut()) {
+                let mut rest_ops: &[DecodeOp] = aops;
+                let mut rest_out: &mut [u64] = out_a;
+                while !rest_ops.is_empty() {
+                    let take = (target - cur_elems).min(rest_ops.len());
+                    let (ops_chunk, ops_rest) = rest_ops.split_at(take);
+                    let (out_chunk, out_rest) = std::mem::take(&mut rest_out).split_at_mut(take);
+                    rest_ops = ops_rest;
+                    rest_out = out_rest;
+                    cur.push((ops_chunk, out_chunk));
+                    cur_elems += take;
+                    if cur_elems >= target {
+                        groups.push(std::mem::take(&mut cur));
+                        cur_elems = 0;
+                    }
+                }
+            }
+            if !cur.is_empty() {
+                groups.push(cur);
+            }
+            for group in groups {
+                scope.spawn(move || {
+                    for (ops_chunk, out_chunk) in group {
+                        for (dst, op) in out_chunk.iter_mut().zip(ops_chunk) {
+                            *dst = gather(words, op);
+                        }
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    /// Start an incremental decoder; feed it bus words with
+    /// [`DecodeStream::push`] (any chunking, e.g. the tiles emitted by
+    /// [`crate::pack::PackStream`]) and collect the streams with
+    /// [`DecodeStream::finish`].
+    pub fn stream(&self) -> DecodeStream<'_> {
+        DecodeStream {
+            prog: self,
+            cursors: vec![0; self.ops.len()],
+            outs: self.ops.iter().map(|v| Vec::with_capacity(v.len())).collect(),
+            carry: 0,
+            received: 0,
+        }
+    }
+}
+
+/// Incremental word-fed decoder; see [`DecodeProgram::stream`]. State
+/// beyond the decoded outputs is one carry word: an element is emitted
+/// as soon as the word *after* its last source word arrives, and earlier
+/// words are forgotten.
+pub struct DecodeStream<'p> {
+    prog: &'p DecodeProgram,
+    cursors: Vec<usize>,
+    outs: Vec<Vec<u64>>,
+    carry: u64,
+    received: usize,
+}
+
+impl DecodeStream<'_> {
+    /// Total bus words consumed so far.
+    pub fn words_received(&self) -> usize {
+        self.received
+    }
+
+    /// Elements decoded so far, per array.
+    pub fn decoded_counts(&self) -> Vec<usize> {
+        self.outs.iter().map(|v| v.len()).collect()
+    }
+
+    /// Feed the next chunk of bus words (payload word order; the guard
+    /// word may or may not be included — trailing zeros are harmless).
+    pub fn push(&mut self, chunk: &[u64]) {
+        if chunk.is_empty() {
+            return;
+        }
+        let prog = self.prog;
+        let base = self.received;
+        let carry = self.carry;
+        let frontier = base + chunk.len();
+        // Executable ops reference at most one word before `base` (the
+        // carry): an op stalls only while `src_word + 1 >= frontier`,
+        // i.e. with `src_word >= base - 1` at the previous push.
+        let word = |i: usize| -> u64 {
+            if i >= base {
+                chunk[i - base]
+            } else {
+                debug_assert_eq!(i + 1, base, "stream fell behind the carry window");
+                carry
+            }
+        };
+        for (a, aops) in prog.ops.iter().enumerate() {
+            let mut c = self.cursors[a];
+            while c < aops.len() {
+                let op = aops[c];
+                if op.src_word as usize + 1 >= frontier {
+                    break;
+                }
+                let lo = word(op.src_word as usize) >> op.shift;
+                let hi = (word(op.src_word as usize + 1) << 1) << (63 - op.shift);
+                self.outs[a].push((lo | hi) & op.mask);
+                c += 1;
+            }
+            self.cursors[a] = c;
+        }
+        self.carry = *chunk.last().expect("chunk non-empty");
+        self.received = frontier;
+    }
+
+    /// Drain the boundary elements (fields ending exactly at the last
+    /// received word, whose straddle read resolves against an implicit
+    /// zero guard) and return the decoded streams. Errors if the words
+    /// pushed so far do not cover every element.
+    pub fn finish(mut self) -> Result<Vec<Vec<u64>>> {
+        let frontier = self.received;
+        let carry = self.carry;
+        for (a, aops) in self.prog.ops.iter().enumerate() {
+            for op in &aops[self.cursors[a]..] {
+                let s = op.src_word as usize;
+                // A field still pending at finish() may only be one that
+                // ends exactly at the frontier word: its low word is the
+                // carry and its straddle read resolves against an
+                // implicit zero guard. A field that truly straddles
+                // (bits in word s + 1) means the feed was truncated.
+                let straddles = op.shift as u32 + op.mask.count_ones() > 64;
+                if s + 1 > frontier || straddles {
+                    bail!(
+                        "decode stream: ended after {frontier} words but array #{a} \
+                         still needs word {}",
+                        s + usize::from(straddles)
+                    );
+                }
+                self.outs[a].push((carry >> op.shift) & op.mask);
+            }
+        }
+        Ok(self.outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{matmul_problem, paper_example, Problem};
+    use crate::pack::{PackPlan, PackProgram};
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn arrays_for(p: &Problem, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        p.arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    fn packed(p: &Problem, kind: LayoutKind, seed: u64) -> (DecodeProgram, BitVec, Vec<Vec<u64>>) {
+        let l = baselines::generate(kind, p);
+        let plan = PackPlan::compile(&l, p);
+        let arrays = arrays_for(p, seed);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = plan.pack(&refs).unwrap();
+        let prog = DecodeProgram::compile(&DecodePlan::compile(&l, p));
+        (prog, buf, arrays)
+    }
+
+    #[test]
+    fn compiled_decode_roundtrips_all_layouts() {
+        for p in [paper_example(), matmul_problem(33, 31), matmul_problem(64, 64)] {
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+            ] {
+                let (prog, buf, arrays) = packed(&p, kind, 0xDEC0);
+                assert_eq!(prog.decode(&buf).unwrap(), arrays, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_decode_bit_identical() {
+        let (prog, buf, arrays) = packed(&matmul_problem(30, 19), LayoutKind::Iris, 4);
+        for threads in [1, 2, 3, 8] {
+            assert_eq!(
+                prog.decode_parallel(&buf, threads).unwrap(),
+                arrays,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_decode_bounds_workers_by_threads_not_arrays() {
+        // Hundreds of tiny arrays crossing PARALLEL_MIN_ELEMS in total:
+        // the grouped sharding must stay correct (and must not spawn a
+        // worker per array).
+        let arrays: Vec<crate::model::ArraySpec> = (0..320)
+            .map(|i| crate::model::ArraySpec::new(&format!("t{i}"), 9, 30, (i % 60) as u64))
+            .collect();
+        let p = Problem::new(crate::model::BusConfig::alveo_u280(), arrays).unwrap();
+        let (prog, buf, data) = packed(&p, LayoutKind::Iris, 31);
+        assert!(prog.num_elements() >= PARALLEL_MIN_ELEMS);
+        for threads in [2, 5, 64, 10_000] {
+            assert_eq!(
+                prog.decode_parallel(&buf, threads).unwrap(),
+                data,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_decode_matches_for_any_chunking() {
+        let p = paper_example();
+        let (prog, buf, arrays) = packed(&p, LayoutKind::Iris, 7);
+        let payload = PackPlan::compile(&baselines::generate(LayoutKind::Iris, &p), &p)
+            .payload_words();
+        for chunk_words in [1usize, 2, 3, 64] {
+            let mut ds = prog.stream();
+            for chunk in buf.words()[..payload].chunks(chunk_words) {
+                ds.push(chunk);
+            }
+            assert_eq!(ds.words_received(), payload);
+            let got = ds.finish().unwrap();
+            assert_eq!(got, arrays, "chunk_words={chunk_words}");
+        }
+        // Including the guard word in the feed is also fine.
+        let mut ds = prog.stream();
+        ds.push(buf.words());
+        assert_eq!(ds.finish().unwrap(), arrays);
+    }
+
+    #[test]
+    fn stream_decode_interlocks_with_pack_stream() {
+        let p = matmul_problem(33, 31);
+        let l = baselines::generate(LayoutKind::Iris, &p);
+        let plan = PackPlan::compile(&l, &p);
+        let pprog = PackProgram::compile(&plan);
+        let arrays = arrays_for(&p, 12);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let dprog = DecodeProgram::compile(&DecodePlan::compile(&l, &p));
+        let mut ds = dprog.stream();
+        for tile in pprog.stream(&refs, 16).unwrap() {
+            ds.push(&tile);
+        }
+        assert_eq!(ds.finish().unwrap(), arrays);
+    }
+
+    #[test]
+    fn stream_errors_on_truncated_feed() {
+        let (prog, buf, _) = packed(&paper_example(), LayoutKind::Iris, 2);
+        let mut ds = prog.stream();
+        ds.push(&buf.words()[..1]);
+        assert!(ds.finish().is_err(), "missing words must be reported");
+    }
+
+    #[test]
+    fn decode_rejects_guardless_buffer() {
+        let (prog, buf, _) = packed(&paper_example(), LayoutKind::Iris, 3);
+        let min = prog.min_words();
+        let short = BitVec::from_words(buf.words()[..min - 1].to_vec(), (min - 1) * 64);
+        assert!(prog.decode(&short).is_err());
+        assert!(prog.decode_parallel(&short, 4).is_err());
+    }
+}

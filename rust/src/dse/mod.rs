@@ -234,7 +234,14 @@ impl DseEngine {
     }
 }
 
-fn default_threads() -> usize {
+/// Default worker count for the crate's scoped-thread fan-outs: one per
+/// available core, clamped to 8. Shared by [`DseEngine`], the compiled
+/// pack/decode parallel executors
+/// ([`crate::pack::PackProgram::pack_parallel`],
+/// [`crate::decode::DecodeProgram::decode_parallel`]), and the
+/// coordinator server's large-transfer path, so the whole stack sizes
+/// its parallelism the same way.
+pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)

@@ -52,6 +52,14 @@
 //! assert_eq!(m.l_max, 3);
 //! ```
 
+// CI runs `cargo clippy --all-targets -- -D warnings` (see
+// .github/workflows/ci.yml). Two style lints are opted out crate-wide:
+// `manual_div_ceil` because `u64::div_ceil` needs Rust 1.73 and the
+// crate's MSRV is 1.66 (`util::ceil_div` is the named helper instead),
+// and `needless_range_loop` because the hot paths and the cycle-accurate
+// simulators intentionally index several parallel arrays by one cursor.
+#![allow(clippy::manual_div_ceil, clippy::needless_range_loop)]
+
 pub mod util;
 pub mod testing;
 pub mod benchkit;

@@ -10,7 +10,16 @@
 //! shifts in the remaining bits to the top of the next word").
 //!
 //! This is an L3 hot path: `pack_into` is allocation-free and uses
-//! aligned-word fast paths; see EXPERIMENTS.md §Perf.
+//! aligned-word fast paths; see EXPERIMENTS.md §Perf. The fastest path
+//! is the compiled word program in [`program`] ([`PackProgram`]), which
+//! resolves all straddle decisions at plan-compile time and also
+//! provides the streaming ([`PackStream`]) and parallel executors; the
+//! scalar packers in this module ([`pack_reference`], [`pack_bitwise`])
+//! are kept as oracles for it.
+
+pub mod program;
+
+pub use program::{PackProgram, PackStream, WordOp};
 
 use crate::layout::Layout;
 use crate::model::Problem;
@@ -63,12 +72,25 @@ impl PackPlan {
         self.cycles * self.m as u64
     }
 
-    /// Buffer size in u64 words, **including one trailing guard word**.
-    /// The guard lets the hot loop write the straddle word
-    /// unconditionally (branch-free) even for fields ending exactly at
-    /// the payload boundary; it always reads back as zero.
+    /// Payload size in u64 words: `⌈cycles·m / 64⌉`. When the bus width
+    /// is not a multiple of 64 the final payload word is *ragged* — only
+    /// its low `buffer_bits % 64` bits carry payload; the rest stay
+    /// zero. This is the word count [`PackStream`] emits.
+    pub fn payload_words(&self) -> usize {
+        crate::util::ceil_div(self.buffer_bits(), 64) as usize
+    }
+
+    /// Buffer size in u64 words, **including one trailing guard word**
+    /// (`payload_words() + 1`). The guard lets the hot loop write the
+    /// straddle word unconditionally (branch-free) even for fields
+    /// ending exactly at the payload boundary; it always reads back as
+    /// zero. Invariant (ragged-final-word audit): every field lies in
+    /// `[0, buffer_bits)`, so its low word index is at most
+    /// `payload_words() - 1` and the unconditional `wi + 1` spill write
+    /// lands at most on the guard word — never out of bounds, for any
+    /// bus width, 64-divisible or not.
     pub fn buffer_words(&self) -> usize {
-        ((self.buffer_bits() + 63) / 64) as usize + 1
+        self.payload_words() + 1
     }
 
     /// Allocate a zeroed buffer of the right size (payload + guard).
@@ -78,29 +100,13 @@ impl PackPlan {
 
     /// Validate that `arrays` matches the plan's geometry.
     fn check_inputs(&self, arrays: &[&[u64]]) -> Result<()> {
-        if arrays.len() != self.offsets.len() {
-            bail!(
-                "pack: expected {} arrays, got {}",
-                self.offsets.len(),
-                arrays.len()
-            );
-        }
-        for (a, (vals, offs)) in arrays.iter().zip(self.offsets.iter()).enumerate() {
-            if vals.len() != offs.len() {
-                bail!(
-                    "pack: array #{a} has {} elements, plan expects {}",
-                    vals.len(),
-                    offs.len()
-                );
-            }
-            let w = self.widths[a];
-            if w < 64 {
-                if let Some(v) = vals.iter().find(|&&v| v >> w != 0) {
-                    bail!("pack: array #{a} value {v:#x} wider than {w} bits");
-                }
-            }
-        }
-        Ok(())
+        check_pack_inputs(
+            "pack",
+            &self.widths,
+            self.offsets.len(),
+            |a| self.offsets[a].len(),
+            arrays,
+        )
     }
 
     /// Pack source arrays into a fresh buffer.
@@ -162,6 +168,41 @@ impl PackPlan {
     }
 }
 
+/// Shared input validation for every packer — the interpreted plan, the
+/// scalar oracles, and the compiled word program all enforce the same
+/// contract (array count, per-array element counts, values fitting
+/// their field width) through this one function.
+pub(crate) fn check_pack_inputs<L>(
+    what: &str,
+    widths: &[u32],
+    n_arrays: usize,
+    len_of: L,
+    arrays: &[&[u64]],
+) -> Result<()>
+where
+    L: Fn(usize) -> usize,
+{
+    if arrays.len() != n_arrays {
+        bail!("{what}: expected {n_arrays} arrays, got {}", arrays.len());
+    }
+    for (a, vals) in arrays.iter().enumerate() {
+        let expect = len_of(a);
+        if vals.len() != expect {
+            bail!(
+                "{what}: array #{a} has {} elements, expected {expect}",
+                vals.len()
+            );
+        }
+        let w = widths[a];
+        if w < 64 {
+            if let Some(v) = vals.iter().find(|&&v| v >> w != 0) {
+                bail!("{what}: array #{a} value {v:#x} wider than {w} bits");
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Reference scalar packer: builds the buffer with `BitVec::set_bits`
 /// field by field (used to cross-check the optimized path).
 pub fn pack_reference(plan: &PackPlan, arrays: &[&[u64]]) -> Result<BitVec> {
@@ -171,6 +212,27 @@ pub fn pack_reference(plan: &PackPlan, arrays: &[&[u64]]) -> Result<BitVec> {
         let w = plan.widths[a];
         for (&off, &v) in plan.offsets[a].iter().zip(vals.iter()) {
             buf.set_bits(off as usize, w, v);
+        }
+    }
+    Ok(buf)
+}
+
+/// Bit-by-bit scalar packer: moves one bit per step, the way a naive
+/// host-side transcription of Listing 1 would. Slowest oracle; the CI
+/// perf-smoke gate measures the compiled word program against it
+/// (`benchkit/thresholds.json`), since it represents the per-bit
+/// software baseline the paper's streamed layouts must beat.
+pub fn pack_bitwise(plan: &PackPlan, arrays: &[&[u64]]) -> Result<BitVec> {
+    plan.check_inputs(arrays)?;
+    let mut buf = plan.alloc_buffer();
+    for (a, vals) in arrays.iter().enumerate() {
+        let w = plan.widths[a] as u64;
+        for (&off, &v) in plan.offsets[a].iter().zip(vals.iter()) {
+            for i in 0..w {
+                if (v >> i) & 1 == 1 {
+                    buf.set((off + i) as usize);
+                }
+            }
         }
     }
     Ok(buf)
@@ -248,6 +310,61 @@ mod tests {
         let mut refs2: Vec<&[u64]> = arrays2.iter().map(|v| v.as_slice()).collect();
         refs2[0] = &wide; // array A is 2-bit
         assert!(plan.pack(&refs2).is_err());
+    }
+
+    #[test]
+    fn bitwise_oracle_matches_reference() {
+        for p in [paper_example(), matmul_problem(33, 31)] {
+            let arrays = example_arrays(&p, 11);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            let plan = PackPlan::compile(&iris_layout(&p), &p);
+            assert_eq!(
+                pack_bitwise(&plan, &refs).unwrap(),
+                pack_reference(&plan, &refs).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn ragged_final_word_geometry() {
+        // Bus widths that are not multiples of 64: the last payload word
+        // is only partially used, and the guard word must still exist
+        // and stay zero after packing through every path.
+        for m in [8u32, 24, 33, 72, 100] {
+            let p = crate::model::Problem::new(
+                crate::model::BusConfig::new(m),
+                vec![
+                    crate::model::ArraySpec::new("A", 7, 31, 5),
+                    crate::model::ArraySpec::new("B", 33u32.min(m), 13, 9),
+                ],
+            )
+            .unwrap();
+            let l = iris_layout(&p);
+            let plan = PackPlan::compile(&l, &p);
+            let bits = plan.buffer_bits();
+            assert_eq!(bits, plan.cycles * m as u64);
+            assert_eq!(
+                plan.payload_words() as u64,
+                crate::util::ceil_div(bits, 64),
+                "m={m}"
+            );
+            assert_eq!(plan.buffer_words(), plan.payload_words() + 1, "m={m}");
+            let arrays = example_arrays(&p, 21 + m as u64);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            let fast = plan.pack(&refs).unwrap();
+            let slow = pack_reference(&plan, &refs).unwrap();
+            let bitw = pack_bitwise(&plan, &refs).unwrap();
+            assert_eq!(fast, slow, "m={m}");
+            assert_eq!(fast, bitw, "m={m}");
+            // Everything past the payload bits is zero (ragged tail of
+            // the last payload word, plus the whole guard word).
+            let words = fast.words();
+            let tail = (bits % 64) as u32;
+            if tail != 0 {
+                assert_eq!(words[plan.payload_words() - 1] >> tail, 0, "m={m}");
+            }
+            assert_eq!(words[plan.payload_words()], 0, "guard, m={m}");
+        }
     }
 
     #[test]

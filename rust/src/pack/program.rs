@@ -1,0 +1,492 @@
+//! Compiled word-program packing: lower a [`PackPlan`] into a flat
+//! sequence of precomputed `{src, dst_word, rot, mask}` operations over
+//! `u64` words, then execute it with zero per-element branching.
+//!
+//! The plan already knows every element's absolute bit offset; what the
+//! interpreter-style packers (`pack_reference`, even the optimized
+//! `PackPlan::pack_into`) still decide *at run time* is whether a field
+//! straddles a word boundary and how to split it. The word program makes
+//! that decision once, at compile time: a field at bit offset `off`
+//! (word `wi = off/64`, in-word offset `b = off%64`) becomes
+//!
+//! * one op `{dst: wi,   rot: b, mask: Wmask << b}`, and
+//! * iff it straddles (`b + W > 64`) a second op
+//!   `{dst: wi+1, rot: b, mask: Wmask >> (64-b)}`.
+//!
+//! Both halves execute as the *same* instruction,
+//! `words[dst] |= value.rotate_left(rot) & mask`, because a left-rotation
+//! by `b` places the low part at bits `[b, 64)` and wraps the spill to
+//! bits `[0, b+W-64)` — each mask selects exactly its half. One op kind,
+//! no branches, no guard-word writes (the spill either exists as its own
+//! op or doesn't exist at all). See DESIGN.md §Word-Program-Engine for
+//! the invariants.
+//!
+//! Ops are sorted by `dst_word`, which buys two executors for free:
+//!
+//! * [`PackStream`] — emit the buffer as word-aligned cycle-tiles: a word
+//!   is complete as soon as the op cursor moves past it, so tiles stream
+//!   out without ever materializing the whole buffer.
+//! * [`PackProgram::pack_parallel`] — cut the op list at `dst_word`
+//!   boundaries into contiguous chunks; chunks write disjoint word ranges
+//!   of the output, so bus-cycles shard across scoped worker threads
+//!   (the same fan-out shape as [`crate::dse::DseEngine`]) with no
+//!   atomics and bit-identical output.
+
+use super::PackPlan;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+
+/// Below this op count the scoped-thread fan-out costs more than it
+/// saves; [`PackProgram::pack_parallel`] falls back to the serial
+/// executor. Exposed so callers (e.g. the coordinator server) can report
+/// which path a request took.
+pub const PARALLEL_MIN_OPS: usize = 8192;
+
+/// One compiled pack operation: OR a rotated, masked source element into
+/// one destination word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WordOp {
+    /// Bits of the rotated value that belong to `dst_word`.
+    pub mask: u64,
+    /// Destination u64 word in the packed buffer.
+    pub dst_word: u32,
+    /// Source array (index into the `arrays` argument).
+    pub src_arr: u32,
+    /// Source element within that array.
+    pub src_elem: u32,
+    /// Left-rotation applied to the source value (the in-word bit offset
+    /// `b`; 0..=63).
+    pub rot: u8,
+}
+
+/// A [`PackPlan`] lowered to straight-line word operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackProgram {
+    /// Bus width m (bits per cycle), copied from the plan.
+    pub m: u32,
+    /// Total bus cycles, copied from the plan.
+    pub cycles: u64,
+    widths: Vec<u32>,
+    lens: Vec<usize>,
+    /// All ops, sorted by `dst_word` (stable, so same-word ops keep the
+    /// deterministic compile order).
+    ops: Vec<WordOp>,
+    payload_words: usize,
+    buffer_words: usize,
+}
+
+impl PackProgram {
+    /// Lower a plan into the word program. Pure precomputation: no data
+    /// is touched, and the result can be reused across any number of
+    /// executions, streams, and threads.
+    pub fn compile(plan: &PackPlan) -> PackProgram {
+        assert!(
+            plan.buffer_words() <= u32::MAX as usize,
+            "pack program: buffer exceeds u32 word indices"
+        );
+        let n_elems: usize = plan.offsets.iter().map(|o| o.len()).sum();
+        let mut ops = Vec::with_capacity(n_elems + n_elems / 4);
+        for (a, offs) in plan.offsets.iter().enumerate() {
+            assert!(offs.len() <= u32::MAX as usize, "array too deep for u32");
+            let w = plan.widths[a];
+            let mask_w = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+            for (e, &off) in offs.iter().enumerate() {
+                let wi = (off >> 6) as u32;
+                let b = (off & 63) as u32;
+                ops.push(WordOp {
+                    // Straddling high bits shift out of the low mask by
+                    // construction; they are covered by the spill op.
+                    mask: mask_w << b,
+                    dst_word: wi,
+                    src_arr: a as u32,
+                    src_elem: e as u32,
+                    rot: b as u8,
+                });
+                if b + w > 64 {
+                    ops.push(WordOp {
+                        mask: mask_w >> (64 - b),
+                        dst_word: wi + 1,
+                        src_arr: a as u32,
+                        src_elem: e as u32,
+                        rot: b as u8,
+                    });
+                }
+            }
+        }
+        ops.sort_by_key(|op| op.dst_word);
+        PackProgram {
+            m: plan.m,
+            cycles: plan.cycles,
+            widths: plan.widths.clone(),
+            lens: plan.offsets.iter().map(|o| o.len()).collect(),
+            ops,
+            payload_words: plan.payload_words(),
+            buffer_words: plan.buffer_words(),
+        }
+    }
+
+    /// The compiled ops, sorted by destination word.
+    pub fn ops(&self) -> &[WordOp] {
+        &self.ops
+    }
+
+    /// Number of compiled word operations.
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Payload size in bits (`cycles · m`).
+    pub fn buffer_bits(&self) -> u64 {
+        self.cycles * self.m as u64
+    }
+
+    /// Payload u64 words (excludes the guard word).
+    pub fn payload_words(&self) -> usize {
+        self.payload_words
+    }
+
+    /// Buffer u64 words including the guard word; same geometry as
+    /// [`PackPlan::buffer_words`]. The compiled program never writes the
+    /// guard — spills are resolved at compile time — so it stays zero.
+    pub fn buffer_words(&self) -> usize {
+        self.buffer_words
+    }
+
+    fn check_inputs(&self, arrays: &[&[u64]]) -> Result<()> {
+        super::check_pack_inputs(
+            "pack program",
+            &self.widths,
+            self.lens.len(),
+            |a| self.lens[a],
+            arrays,
+        )
+    }
+
+    /// The straight-line executor: one OR per op, no branches.
+    fn execute(&self, arrays: &[&[u64]], words: &mut [u64]) {
+        for op in &self.ops {
+            let v = arrays[op.src_arr as usize][op.src_elem as usize];
+            words[op.dst_word as usize] |= v.rotate_left(op.rot as u32) & op.mask;
+        }
+    }
+
+    /// Pack source arrays into a fresh buffer (payload + zero guard word).
+    pub fn pack(&self, arrays: &[&[u64]]) -> Result<BitVec> {
+        let mut buf = BitVec::zeros(self.buffer_words * 64);
+        self.pack_into(arrays, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Pack into an existing **zeroed** buffer (hot path; no allocation).
+    /// Same contract as [`PackPlan::pack_into`]: the buffer must span
+    /// [`PackProgram::buffer_words`] words and start all-zero.
+    pub fn pack_into(&self, arrays: &[&[u64]], buf: &mut BitVec) -> Result<()> {
+        self.check_inputs(arrays)?;
+        if buf.len_bits() < self.buffer_words * 64 {
+            bail!(
+                "pack program: buffer too small ({} < {} bits incl. guard word)",
+                buf.len_bits(),
+                self.buffer_words * 64
+            );
+        }
+        self.execute(arrays, buf.words_mut());
+        Ok(())
+    }
+
+    /// Cut the sorted op list into at most `parts` contiguous chunks that
+    /// never split a destination word, so each chunk owns a disjoint word
+    /// range `[chunk start's dst, next chunk start's dst)`.
+    fn shard(&self, parts: usize) -> Vec<(usize, usize)> {
+        let n = self.ops.len();
+        let parts = parts.clamp(1, n.max(1));
+        let mut cuts = vec![0usize];
+        for t in 1..parts {
+            let mut i = (n * t / parts).max(1);
+            while i < n && self.ops[i].dst_word == self.ops[i - 1].dst_word {
+                i += 1;
+            }
+            let last = *cuts.last().expect("cuts non-empty");
+            if i > last && i < n {
+                cuts.push(i);
+            }
+        }
+        cuts.push(n);
+        cuts.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// Pack with independent bus-cycles sharded over `threads` scoped
+    /// workers (the same fan-out shape as [`crate::dse::DseEngine`]).
+    /// Bit-identical to [`PackProgram::pack`]; small programs (fewer than
+    /// [`PARALLEL_MIN_OPS`] ops) run serially.
+    pub fn pack_parallel(&self, arrays: &[&[u64]], threads: usize) -> Result<BitVec> {
+        let mut buf = BitVec::zeros(self.buffer_words * 64);
+        self.pack_parallel_into(arrays, &mut buf, threads)?;
+        Ok(buf)
+    }
+
+    /// In-place variant of [`PackProgram::pack_parallel`]; the buffer
+    /// must be zeroed, as in [`PackProgram::pack_into`].
+    pub fn pack_parallel_into(
+        &self,
+        arrays: &[&[u64]],
+        buf: &mut BitVec,
+        threads: usize,
+    ) -> Result<()> {
+        self.check_inputs(arrays)?;
+        if buf.len_bits() < self.buffer_words * 64 {
+            bail!(
+                "pack program: buffer too small ({} < {} bits incl. guard word)",
+                buf.len_bits(),
+                self.buffer_words * 64
+            );
+        }
+        if threads <= 1 || self.ops.len() < PARALLEL_MIN_OPS {
+            self.execute(arrays, buf.words_mut());
+            return Ok(());
+        }
+        // Bound the fan-out: more shards than cores only adds spawn cost.
+        let chunks = self.shard(threads.min(64));
+        let ops = &self.ops;
+        let mut rest: &mut [u64] = buf.words_mut();
+        let mut word_base = 0usize;
+        std::thread::scope(|scope| {
+            for (lo, hi) in chunks {
+                let end_word = if hi == ops.len() {
+                    self.buffer_words
+                } else {
+                    ops[hi].dst_word as usize
+                };
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(end_word - word_base);
+                rest = tail;
+                let base = word_base;
+                let chunk = &ops[lo..hi];
+                scope.spawn(move || {
+                    for op in chunk {
+                        let v = arrays[op.src_arr as usize][op.src_elem as usize];
+                        head[op.dst_word as usize - base] |=
+                            v.rotate_left(op.rot as u32) & op.mask;
+                    }
+                });
+                word_base = end_word;
+            }
+        });
+        Ok(())
+    }
+
+    /// Stream the packed buffer as cycle-tiles of `tile_cycles` bus
+    /// cycles each, without ever materializing it whole. Tiles are
+    /// emitted at u64-word granularity: a tile whose boundary falls
+    /// mid-word is merged forward until at least one complete word is
+    /// available (sorted ops make a word complete exactly when the cursor
+    /// passes it). Concatenating all tiles reproduces the payload words
+    /// of [`PackProgram::pack`] bit-for-bit (the guard word is not
+    /// streamed; it is always zero).
+    pub fn stream<'p, 'a>(
+        &'p self,
+        arrays: &[&'a [u64]],
+        tile_cycles: u64,
+    ) -> Result<PackStream<'p, 'a>> {
+        self.check_inputs(arrays)?;
+        if tile_cycles == 0 {
+            bail!("pack stream: tile_cycles must be positive");
+        }
+        Ok(PackStream {
+            prog: self,
+            arrays: arrays.to_vec(),
+            cursor: 0,
+            next_word: 0,
+            tile: 0,
+            tile_bits: tile_cycles.saturating_mul(self.m as u64),
+        })
+    }
+}
+
+/// Incremental packer over a compiled program; see
+/// [`PackProgram::stream`]. Each [`Iterator::next`] yields the u64 words
+/// of one cycle-tile.
+pub struct PackStream<'p, 'a> {
+    prog: &'p PackProgram,
+    arrays: Vec<&'a [u64]>,
+    cursor: usize,
+    next_word: usize,
+    tile: u64,
+    tile_bits: u64,
+}
+
+impl PackStream<'_, '_> {
+    /// Payload words emitted so far.
+    pub fn words_emitted(&self) -> usize {
+        self.next_word
+    }
+}
+
+impl Iterator for PackStream<'_, '_> {
+    type Item = Vec<u64>;
+
+    fn next(&mut self) -> Option<Vec<u64>> {
+        let prog = self.prog;
+        let total = prog.payload_words;
+        if self.next_word >= total {
+            return None;
+        }
+        let payload_bits = prog.buffer_bits();
+        // Advance tile boundaries until at least one whole word is
+        // covered (tiny tiles merge forward; see `bus::tile_words` for
+        // the reference tiling this matches).
+        let mut w1 = self.next_word;
+        while w1 <= self.next_word {
+            self.tile += 1;
+            let end_bit = self.tile.saturating_mul(self.tile_bits).min(payload_bits);
+            w1 = if end_bit == payload_bits {
+                total
+            } else {
+                (end_bit / 64) as usize
+            };
+        }
+        let w0 = self.next_word;
+        let mut out = vec![0u64; w1 - w0];
+        while self.cursor < prog.ops.len() && (prog.ops[self.cursor].dst_word as usize) < w1 {
+            let op = prog.ops[self.cursor];
+            let v = self.arrays[op.src_arr as usize][op.src_elem as usize];
+            out[op.dst_word as usize - w0] |= v.rotate_left(op.rot as u32) & op.mask;
+            self.cursor += 1;
+        }
+        self.next_word = w1;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{matmul_problem, paper_example, Problem};
+    use crate::pack::pack_reference;
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn arrays_for(p: &Problem, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        p.arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    #[test]
+    fn compiled_matches_reference_all_layouts() {
+        for p in [paper_example(), matmul_problem(33, 31), matmul_problem(64, 64)] {
+            let arrays = arrays_for(&p, 0xC0DE);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+            ] {
+                let plan = PackPlan::compile(&baselines::generate(kind, &p), &p);
+                let prog = PackProgram::compile(&plan);
+                let fast = prog.pack(&refs).unwrap();
+                let slow = pack_reference(&plan, &refs).unwrap();
+                assert_eq!(fast, slow, "{} on m={}", kind.name(), p.m());
+            }
+        }
+    }
+
+    #[test]
+    fn ops_sorted_and_guard_untouched() {
+        let p = matmul_problem(33, 31);
+        let plan = PackPlan::compile(&baselines::generate(LayoutKind::Iris, &p), &p);
+        let prog = PackProgram::compile(&plan);
+        assert!(prog.num_ops() >= plan.offsets.iter().map(|o| o.len()).sum::<usize>());
+        for w in prog.ops().windows(2) {
+            assert!(w[0].dst_word <= w[1].dst_word, "ops not sorted by dst");
+        }
+        let payload = prog.payload_words();
+        for op in prog.ops() {
+            assert!((op.dst_word as usize) < payload, "op writes past payload");
+        }
+        let arrays = arrays_for(&p, 5);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = prog.pack(&refs).unwrap();
+        for &w in &buf.words()[payload..] {
+            assert_eq!(w, 0, "guard word written");
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical() {
+        let p = matmul_problem(30, 19);
+        let plan = PackPlan::compile(&baselines::generate(LayoutKind::Iris, &p), &p);
+        let prog = PackProgram::compile(&plan);
+        let arrays = arrays_for(&p, 9);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let serial = prog.pack(&refs).unwrap();
+        for threads in [1, 2, 3, 8] {
+            let par = prog.pack_parallel(&refs, threads).unwrap();
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn shard_covers_all_ops_without_splitting_words() {
+        let p = matmul_problem(33, 31);
+        let plan = PackPlan::compile(&baselines::generate(LayoutKind::Iris, &p), &p);
+        let prog = PackProgram::compile(&plan);
+        for parts in [1, 2, 5, 16] {
+            let chunks = prog.shard(parts);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, prog.num_ops());
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "chunks not contiguous");
+                let left_last = prog.ops()[w[0].1 - 1].dst_word;
+                let right_first = prog.ops()[w[1].0].dst_word;
+                assert!(left_last < right_first, "chunk boundary splits a word");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_concatenation_matches_full_pack() {
+        let p = paper_example();
+        let plan = PackPlan::compile(&baselines::generate(LayoutKind::Iris, &p), &p);
+        let prog = PackProgram::compile(&plan);
+        let arrays = arrays_for(&p, 3);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let full = prog.pack(&refs).unwrap();
+        for tile_cycles in [1, 2, 3, 5, 9, 100] {
+            let mut words = Vec::new();
+            for tile in prog.stream(&refs, tile_cycles).unwrap() {
+                assert!(!tile.is_empty(), "empty tile");
+                words.extend_from_slice(&tile);
+            }
+            assert_eq!(words.len(), prog.payload_words(), "tile_cycles={tile_cycles}");
+            assert_eq!(
+                &words[..],
+                &full.words()[..prog.payload_words()],
+                "tile_cycles={tile_cycles}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let p = paper_example();
+        let plan = PackPlan::compile(&baselines::generate(LayoutKind::Iris, &p), &p);
+        let prog = PackProgram::compile(&plan);
+        let arrays = arrays_for(&p, 1);
+        let mut refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        assert!(prog.pack(&refs[..4]).is_err(), "wrong array count");
+        let short = vec![0u64; 2];
+        refs[0] = &short;
+        assert!(prog.pack(&refs).is_err(), "wrong element count");
+        let wide = vec![0xFFu64; 5];
+        let arrays2 = arrays_for(&p, 1);
+        let mut refs2: Vec<&[u64]> = arrays2.iter().map(|v| v.as_slice()).collect();
+        refs2[0] = &wide; // array A is 2-bit
+        assert!(prog.pack(&refs2).is_err(), "over-wide value");
+        assert!(prog.stream(&refs2, 4).is_err(), "stream validates too");
+    }
+}

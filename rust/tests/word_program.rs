@@ -1,0 +1,234 @@
+//! Property tests for the compiled word-program engine: on random
+//! problems — including bus widths that are not powers of two, not
+//! multiples of 64, and not divisible by the element widths, plus
+//! non-power-of-two array lengths — every pack path
+//! (`pack_reference`, bit-by-bit, optimized `PackPlan::pack`, compiled,
+//! compiled-parallel, compiled-streaming) produces bit-identical
+//! buffers, and every decode path (`DecodePlan::decode`, bit-by-bit,
+//! compiled, compiled-parallel, word-fed streaming) recovers the source
+//! arrays exactly.
+
+use iris::baselines;
+use iris::bus::tile_words;
+use iris::decode::{decode_bitwise, DecodePlan, DecodeProgram};
+use iris::layout::LayoutKind;
+use iris::model::Problem;
+use iris::pack::{pack_bitwise, pack_reference, PackPlan, PackProgram};
+use iris::testing::gen::{random_elements, shrink_problem, ProblemGen};
+use iris::testing::{forall_shrink, Config};
+use iris::util::rng::Rng;
+
+const KINDS: [LayoutKind; 3] = [
+    LayoutKind::Iris,
+    LayoutKind::DueAlignedNaive,
+    LayoutKind::PaddedPow2,
+];
+
+fn cfg(cases: usize) -> Config {
+    Config {
+        cases,
+        ..Config::default()
+    }
+}
+
+/// Generator biased toward ragged geometry: bus widths with no 64-bit
+/// alignment (24, 33, 72, 100) next to the aligned ones, so straddles,
+/// ragged final words, and widths not dividing the bus are all common.
+fn ragged_gen() -> ProblemGen {
+    ProblemGen {
+        bus_widths: vec![8, 24, 33, 64, 72, 100, 256],
+        max_depth: 96,
+        ..ProblemGen::default()
+    }
+}
+
+fn data_for(p: &Problem, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(seed);
+    p.arrays
+        .iter()
+        .map(|a| random_elements(&mut rng, a.width, a.depth))
+        .collect()
+}
+
+#[test]
+fn prop_all_pack_paths_bit_identical() {
+    forall_shrink(
+        &cfg(60),
+        |rng| {
+            let p = ragged_gen().generate(rng);
+            let seed = rng.next_u64();
+            (p, seed)
+        },
+        |(p, seed)| shrink_problem(p).into_iter().map(|q| (q, *seed)).collect(),
+        |(p, seed): &(Problem, u64)| {
+            let data = data_for(p, *seed);
+            let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+            for kind in KINDS {
+                let layout = baselines::generate(kind, p);
+                let plan = PackPlan::compile(&layout, p);
+                let prog = PackProgram::compile(&plan);
+                let reference = pack_reference(&plan, &refs).map_err(|e| format!("{e}"))?;
+                let bitwise = pack_bitwise(&plan, &refs).map_err(|e| format!("{e}"))?;
+                let optimized = plan.pack(&refs).map_err(|e| format!("{e}"))?;
+                let compiled = prog.pack(&refs).map_err(|e| format!("{e}"))?;
+                let parallel = prog.pack_parallel(&refs, 4).map_err(|e| format!("{e}"))?;
+                iris::prop_assert!(bitwise == reference, "{}: bitwise", kind.name());
+                iris::prop_assert!(optimized == reference, "{}: optimized", kind.name());
+                iris::prop_assert!(compiled == reference, "{}: compiled", kind.name());
+                iris::prop_assert!(parallel == reference, "{}: parallel", kind.name());
+                // Guard word and ragged tail bits must be zero.
+                let payload = plan.payload_words();
+                let tail = (plan.buffer_bits() % 64) as u32;
+                if tail != 0 {
+                    iris::prop_assert!(
+                        compiled.words()[payload - 1] >> tail == 0,
+                        "{}: ragged tail dirty",
+                        kind.name()
+                    );
+                }
+                for &w in &compiled.words()[payload..] {
+                    iris::prop_assert!(w == 0, "{}: guard word written", kind.name());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stream_tiles_match_reference_tiling() {
+    forall_shrink(
+        &cfg(50),
+        |rng| {
+            let p = ragged_gen().generate(rng);
+            let seed = rng.next_u64();
+            let tile_cycles = rng.range_u64(1, 40);
+            (p, seed, tile_cycles)
+        },
+        |(p, seed, tc)| {
+            shrink_problem(p)
+                .into_iter()
+                .map(|q| (q, *seed, *tc))
+                .collect()
+        },
+        |(p, seed, tile_cycles): &(Problem, u64, u64)| {
+            let data = data_for(p, *seed);
+            let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+            let layout = baselines::generate(LayoutKind::Iris, p);
+            let plan = PackPlan::compile(&layout, p);
+            let prog = PackProgram::compile(&plan);
+            let full = pack_reference(&plan, &refs).map_err(|e| format!("{e}"))?;
+            let want = tile_words(&full, plan.m, plan.cycles, *tile_cycles);
+            let got: Vec<Vec<u64>> = prog
+                .stream(&refs, *tile_cycles)
+                .map_err(|e| format!("{e}"))?
+                .collect();
+            iris::prop_assert!(
+                got == want,
+                "stream tiles diverge from reference tiling (tc={tile_cycles})"
+            );
+            let flat: Vec<u64> = got.into_iter().flatten().collect();
+            iris::prop_assert!(flat.len() == plan.payload_words(), "payload word count");
+            iris::prop_assert!(
+                flat[..] == full.words()[..plan.payload_words()],
+                "concatenated tiles != packed payload"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_decode_paths_recover_data() {
+    forall_shrink(
+        &cfg(50),
+        |rng| {
+            let p = ragged_gen().generate(rng);
+            let seed = rng.next_u64();
+            (p, seed)
+        },
+        |(p, seed)| shrink_problem(p).into_iter().map(|q| (q, *seed)).collect(),
+        |(p, seed): &(Problem, u64)| {
+            let data = data_for(p, *seed);
+            let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+            for kind in KINDS {
+                let layout = baselines::generate(kind, p);
+                let plan = PackPlan::compile(&layout, p);
+                let pprog = PackProgram::compile(&plan);
+                let buf = pprog.pack(&refs).map_err(|e| format!("{e}"))?;
+                let dp = DecodePlan::compile(&layout, p);
+                let dprog = DecodeProgram::compile(&dp);
+                let via_plan = dp.decode(&buf).map_err(|e| format!("{e}"))?;
+                let via_bits = decode_bitwise(&dp, &buf).map_err(|e| format!("{e}"))?;
+                let compiled = dprog.decode(&buf).map_err(|e| format!("{e}"))?;
+                let parallel = dprog.decode_parallel(&buf, 4).map_err(|e| format!("{e}"))?;
+                iris::prop_assert!(via_plan == data, "{}: plan decode", kind.name());
+                iris::prop_assert!(via_bits == data, "{}: bitwise decode", kind.name());
+                iris::prop_assert!(compiled == data, "{}: compiled decode", kind.name());
+                iris::prop_assert!(parallel == data, "{}: parallel decode", kind.name());
+                // Word-fed streaming decode, chunked by the pack stream.
+                let mut ds = dprog.stream();
+                for tile in pprog.stream(&refs, 7).map_err(|e| format!("{e}"))? {
+                    ds.push(&tile);
+                }
+                let streamed = ds.finish().map_err(|e| format!("{e}"))?;
+                iris::prop_assert!(streamed == data, "{}: streamed decode", kind.name());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn large_program_exercises_the_threaded_executors() {
+    // Deep enough to cross PARALLEL_MIN_OPS / PARALLEL_MIN_ELEMS, so the
+    // scoped-thread sharding actually runs (small inputs fall back to
+    // the serial executor by design).
+    use iris::model::{ArraySpec, BusConfig};
+    let p = Problem::new(
+        BusConfig::alveo_u280(),
+        vec![
+            ArraySpec::new("big", 33, 9_000, 400),
+            ArraySpec::new("small", 7, 3_000, 100),
+        ],
+    )
+    .unwrap();
+    let layout = baselines::generate(LayoutKind::Iris, &p);
+    let plan = PackPlan::compile(&layout, &p);
+    let prog = PackProgram::compile(&plan);
+    assert!(prog.num_ops() >= iris::pack::program::PARALLEL_MIN_OPS);
+    let data = data_for(&p, 0xB16);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let serial = prog.pack(&refs).unwrap();
+    for threads in [2, 3, 8] {
+        assert_eq!(prog.pack_parallel(&refs, threads).unwrap(), serial, "t={threads}");
+    }
+    let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &p));
+    assert!(dprog.num_elements() >= iris::decode::program::PARALLEL_MIN_ELEMS);
+    for threads in [2, 3, 8] {
+        assert_eq!(dprog.decode_parallel(&serial, threads).unwrap(), data, "t={threads}");
+    }
+}
+
+#[test]
+fn paper_example_word_program_exact() {
+    // Deterministic spot-check on the worked example (m = 8): 9 cycles
+    // × 8 bits = 72 payload bits → 2 ragged payload words + guard.
+    let p = iris::model::paper_example();
+    let layout = iris::schedule::iris_layout(&p);
+    let plan = PackPlan::compile(&layout, &p);
+    let prog = PackProgram::compile(&plan);
+    assert_eq!(plan.payload_words(), 2);
+    assert_eq!(plan.buffer_words(), 3);
+    assert_eq!(prog.payload_words(), 2);
+    assert_eq!(prog.buffer_words(), 3);
+    // Every element contributes one op; fields crossing bit 64 add one.
+    let elems: usize = p.arrays.iter().map(|a| a.depth as usize).sum();
+    assert!(prog.num_ops() >= elems);
+    let data = data_for(&p, 0x7E57);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = prog.pack(&refs).unwrap();
+    assert_eq!(buf, pack_reference(&plan, &refs).unwrap());
+    let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &p));
+    assert_eq!(dprog.decode(&buf).unwrap(), data);
+}
