@@ -26,13 +26,22 @@ fn main() {
         }
     }
 
-    section("multi-channel partitioning (helmholtz, LPT + per-channel iris)");
+    section("multi-channel partitioning (helmholtz, per-channel iris)");
     let hp = iris::model::helmholtz_problem();
-    for (k, c_max, l_max, eff) in iris::bus::partition::channel_sweep(&hp, 3) {
-        println!(
-            "k={k}: C_max={c_max} L_max={l_max} aggregate_eff={:.1}%",
-            eff * 100.0
-        );
+    for strategy in iris::bus::partition::PartitionStrategy::ALL {
+        for pt in iris::bus::partition::channel_sweep(&hp, 3, strategy) {
+            match &pt.outcome {
+                Ok(s) => println!(
+                    "{}/k={}: C_max={} L_max={} aggregate_eff={:.1}%",
+                    strategy.name(),
+                    pt.k,
+                    s.c_max,
+                    s.l_max,
+                    s.b_eff * 100.0
+                ),
+                Err(e) => println!("{}/k={}: skipped ({e})", strategy.name(), pt.k),
+            }
+        }
     }
     b.run("partition helmholtz over 3 channels", || {
         black_box(iris::bus::partition::partition_lpt(&hp, 3).unwrap());
@@ -55,6 +64,7 @@ fn main() {
                     problem: p,
                     data,
                     kind: LayoutKind::Iris,
+                    channels: None,
                 })
             })
             .collect();

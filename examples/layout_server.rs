@@ -28,6 +28,7 @@ fn drive(kind: LayoutKind, requests: u64) -> anyhow::Result<(f64, f64, f64)> {
                 problem: p,
                 data,
                 kind,
+                channels: None,
             }
         })
         .collect();
@@ -66,10 +67,41 @@ fn drive(kind: LayoutKind, requests: u64) -> anyhow::Result<(f64, f64, f64)> {
     ))
 }
 
+/// The multi-channel route: one transfer fanned out over `k` HBM
+/// pseudo-channels (LPT partition + channel-parallel pack/decode).
+fn drive_multichannel(k: usize) -> anyhow::Result<()> {
+    let server = LayoutServer::start(2, 4);
+    let p = synthetic_problem(10, 7);
+    let data = synthetic_data(&p, 7 ^ 0xABCD);
+    let resp = server
+        .submit(TransferRequest {
+            problem: p,
+            data,
+            kind: LayoutKind::Iris,
+            channels: Some(k),
+        })
+        .recv()??;
+    assert!(resp.decode_exact, "multi-channel decode mismatch");
+    assert_eq!(resp.channels, k);
+    println!(
+        "multi-channel transfer over {} channels: aggregate eff {:.1}%, per-channel {:?}",
+        resp.channels,
+        resp.b_eff * 100.0,
+        resp.channel_eff
+            .iter()
+            .map(|e| format!("{:.0}%", e * 100.0))
+            .collect::<Vec<_>>()
+    );
+    println!("[multi-channel    ] {}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     const REQUESTS: u64 = 128;
     let (_, hbm_iris, eff_iris) = drive(LayoutKind::Iris, REQUESTS)?;
     let (_, hbm_naive, eff_naive) = drive(LayoutKind::DueAlignedNaive, REQUESTS)?;
+    drive_multichannel(4)?;
     println!(
         "\naggregate modeled HBM busy time over {REQUESTS} transfers: \
          iris {:.1} µs vs naive {:.1} µs ({:.1}% saved)",

@@ -9,7 +9,15 @@
 //! * [`MultiChannel`] — stripe independent layouts over several channels
 //!   and aggregate achieved bandwidth, as HBM designs split arrays across
 //!   pseudo-channels.
+//!
+//! The executable multi-channel subsystem builds on these models:
+//! [`partition`](crate::bus::partition) assigns arrays to channels
+//! (LPT or lateness-aware refinement) and lays each channel out with
+//! Iris; [`multichannel`](crate::bus::multichannel) compiles one
+//! pack/decode word program per channel and runs all channels
+//! concurrently.
 
+pub mod multichannel;
 pub mod partition;
 
 use crate::util::bitvec::BitVec;

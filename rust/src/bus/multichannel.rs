@@ -1,0 +1,276 @@
+//! Multi-channel execution: compile one pack/decode word program per HBM
+//! pseudo-channel of a [`PartitionedLayout`] and run every channel
+//! concurrently.
+//!
+//! The partitioner ([`crate::bus::partition`]) decides *where* each array
+//! lives; this module makes that decision executable. Compilation lowers
+//! each channel's layout into the crate's compiled word programs
+//! ([`crate::pack::PackProgram`] / [`crate::decode::DecodeProgram`]), and
+//! the executor fans the channels out over the crate's shared
+//! scoped-thread pool ([`crate::dse::fan_out`], sized by
+//! [`crate::dse::default_threads`]). Channels own disjoint buffers and
+//! disjoint output streams, so the parallel paths are bit-identical to
+//! the serial per-channel references ([`MultiChannelExecutor::pack_serial`],
+//! [`MultiChannelExecutor::decode_serial`]) by construction; the
+//! `rust/tests/multichannel.rs` property suite checks it anyway.
+//!
+//! Data routing: callers keep working in the *original* problem's array
+//! order. [`MultiChannelExecutor::pack`] splits the per-array slices
+//! across channels internally, and [`MultiChannelExecutor::decode`]
+//! merges the per-channel streams back, so a multi-channel roundtrip is a
+//! drop-in replacement for the single-channel one.
+//!
+//! The **channel is the unit of parallelism**, mirroring the hardware
+//! (one independent stream per pseudo-channel): with `k` channels the
+//! executor uses at most `min(k, default_threads())` workers and each
+//! channel packs/decodes serially inside its worker. Pick `k` at or
+//! above the host's thread count to saturate it; for small `k` on a
+//! many-core host the single-channel route (which shards *within* the
+//! transfer via [`crate::pack::PackProgram::pack_parallel`] /
+//! [`crate::decode::DecodeProgram::decode_parallel`]) can finish the
+//! host-side work faster — the channel-scaling section of
+//! `benches/bench_scaling.rs` quantifies the channel-level scaling.
+
+use super::partition::PartitionedLayout;
+use crate::decode::{DecodePlan, DecodeProgram};
+use crate::pack::{PackPlan, PackProgram};
+use crate::util::bitvec::BitVec;
+use crate::util::{default_threads, fan_out};
+use anyhow::{bail, Result};
+
+/// One channel's decoded per-array element streams.
+type ChannelStreams = Vec<Vec<u64>>;
+
+/// Per-channel compiled programs plus the array routing needed to split
+/// host data across channels and merge decoded streams back.
+#[derive(Debug, Clone)]
+pub struct MultiChannelExecutor {
+    /// Arrays in the original (unpartitioned) problem.
+    num_arrays: usize,
+    /// `members[c]` = original array indices on channel `c` — the exact
+    /// order the channel's sub-problem (and therefore its compiled
+    /// programs) lists them in.
+    members: Vec<Vec<usize>>,
+    /// Compiled per-channel pack programs.
+    packs: Vec<PackProgram>,
+    /// Compiled per-channel decode programs.
+    decodes: Vec<DecodeProgram>,
+}
+
+impl MultiChannelExecutor {
+    /// Lower every channel of a partition into its word programs. Pure
+    /// precomputation, reusable across any number of transfers.
+    pub fn compile(pl: &PartitionedLayout) -> MultiChannelExecutor {
+        let k = pl.problems.len();
+        let mut packs = Vec::with_capacity(k);
+        let mut decodes = Vec::with_capacity(k);
+        for (q, l) in pl.problems.iter().zip(pl.layouts.iter()) {
+            let plan = PackPlan::compile(l, q);
+            decodes.push(DecodeProgram::compile(&DecodePlan::compile(l, q)));
+            packs.push(PackProgram::compile(&plan));
+        }
+        // The partition's member lists are authoritative: they are the
+        // exact order each sub-problem lists its arrays in, so split and
+        // merge routing stays structurally consistent with the programs
+        // compiled above.
+        MultiChannelExecutor {
+            num_arrays: pl.channel_of.len(),
+            members: pl.members.clone(),
+            packs,
+            decodes,
+        }
+    }
+
+    pub fn num_channels(&self) -> usize {
+        self.packs.len()
+    }
+
+    /// Total arrays of the original problem.
+    pub fn num_arrays(&self) -> usize {
+        self.num_arrays
+    }
+
+    /// Total buffer bits across all channels (`Σ_c cycles_c · m`) — the
+    /// bus-facing footprint, *including* per-channel padding/idle cycles.
+    /// For data-payload accounting use the partition's
+    /// `problems[c].total_bits()` instead.
+    pub fn buffer_bits(&self) -> u64 {
+        self.packs.iter().map(|p| p.buffer_bits()).sum()
+    }
+
+    /// Split per-array host data (original problem order) into per-channel
+    /// argument lists matching each channel's sub-problem array order.
+    pub fn split_data<'a>(&self, data: &[&'a [u64]]) -> Result<Vec<Vec<&'a [u64]>>> {
+        if data.len() != self.num_arrays {
+            bail!(
+                "multichannel: expected {} arrays, got {}",
+                self.num_arrays,
+                data.len()
+            );
+        }
+        Ok(self
+            .members
+            .iter()
+            .map(|ms| ms.iter().map(|&j| data[j]).collect())
+            .collect())
+    }
+
+    /// Serial per-channel reference: pack channel 0, then 1, … — the
+    /// oracle [`MultiChannelExecutor::pack`] must match bit-for-bit.
+    pub fn pack_serial(&self, data: &[&[u64]]) -> Result<Vec<BitVec>> {
+        let split = self.split_data(data)?;
+        self.packs
+            .iter()
+            .zip(split.iter())
+            .map(|(prog, refs)| prog.pack(refs))
+            .collect()
+    }
+
+    /// Pack every channel concurrently over at most
+    /// [`crate::dse::default_threads`] scoped workers
+    /// ([`crate::dse::fan_out`]). Channels write disjoint buffers, so the
+    /// result is bit-identical to [`MultiChannelExecutor::pack_serial`].
+    pub fn pack(&self, data: &[&[u64]]) -> Result<Vec<BitVec>> {
+        let split = self.split_data(data)?;
+        fan_out(self.packs.len(), default_threads(), |c| {
+            self.packs[c].pack(&split[c])
+        })
+        .into_iter()
+        .collect()
+    }
+
+    /// Serial per-channel reference decode; output is merged back into
+    /// the original problem's array order.
+    pub fn decode_serial(&self, bufs: &[BitVec]) -> Result<Vec<Vec<u64>>> {
+        self.check_bufs(bufs)?;
+        let mut per_channel = Vec::with_capacity(bufs.len());
+        for (prog, buf) in self.decodes.iter().zip(bufs.iter()) {
+            per_channel.push(prog.decode(buf)?);
+        }
+        self.merge(per_channel)
+    }
+
+    /// Decode every channel concurrently (same fan-out as
+    /// [`MultiChannelExecutor::pack`]); bit-identical to
+    /// [`MultiChannelExecutor::decode_serial`].
+    pub fn decode(&self, bufs: &[BitVec]) -> Result<Vec<Vec<u64>>> {
+        self.check_bufs(bufs)?;
+        let per_channel: Vec<ChannelStreams> =
+            fan_out(self.decodes.len(), default_threads(), |c| {
+                self.decodes[c].decode(&bufs[c])
+            })
+            .into_iter()
+            .collect::<Result<_>>()?;
+        self.merge(per_channel)
+    }
+
+    /// Pack then decode all channels (both channel-parallel); returns the
+    /// recovered streams in original array order.
+    pub fn roundtrip(&self, data: &[&[u64]]) -> Result<Vec<Vec<u64>>> {
+        let bufs = self.pack(data)?;
+        self.decode(&bufs)
+    }
+
+    fn check_bufs(&self, bufs: &[BitVec]) -> Result<()> {
+        if bufs.len() != self.decodes.len() {
+            bail!(
+                "multichannel: expected {} channel buffers, got {}",
+                self.decodes.len(),
+                bufs.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Merge per-channel decoded streams back into original array order.
+    fn merge(&self, mut per_channel: Vec<Vec<Vec<u64>>>) -> Result<Vec<Vec<u64>>> {
+        let mut out: Vec<Vec<u64>> = vec![Vec::new(); self.num_arrays];
+        for (c, ms) in self.members.iter().enumerate() {
+            if per_channel[c].len() != ms.len() {
+                bail!(
+                    "multichannel: channel {c} decoded {} arrays, expected {}",
+                    per_channel[c].len(),
+                    ms.len()
+                );
+            }
+            for (i, &j) in ms.iter().enumerate() {
+                out[j] = std::mem::take(&mut per_channel[c][i]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bus::partition::{partition, PartitionStrategy};
+    use crate::coordinator::pipeline::{synthetic_data, synthetic_problem};
+    use crate::model::helmholtz_problem;
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn helmholtz_two_channel_roundtrip() {
+        let p = helmholtz_problem();
+        let pl = partition(&p, 2, PartitionStrategy::Lpt).unwrap();
+        let exec = MultiChannelExecutor::compile(&pl);
+        assert_eq!(exec.num_channels(), 2);
+        assert_eq!(exec.num_arrays(), 3);
+        let mut rng = Rng::new(77);
+        let data: Vec<Vec<u64>> = p
+            .arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect();
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        assert_eq!(exec.roundtrip(&refs).unwrap(), data);
+    }
+
+    #[test]
+    fn parallel_paths_match_serial_references() {
+        let p = synthetic_problem(9, 21);
+        for strategy in PartitionStrategy::ALL {
+            let pl = partition(&p, 3, strategy).unwrap();
+            let exec = MultiChannelExecutor::compile(&pl);
+            let data = synthetic_data(&p, 22);
+            let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+            let serial = exec.pack_serial(&refs).unwrap();
+            let parallel = exec.pack(&refs).unwrap();
+            assert_eq!(serial, parallel, "{}", strategy.name());
+            let d_serial = exec.decode_serial(&serial).unwrap();
+            let d_parallel = exec.decode(&parallel).unwrap();
+            assert_eq!(d_serial, d_parallel);
+            assert_eq!(d_parallel, data);
+        }
+    }
+
+    #[test]
+    fn merge_restores_original_array_order() {
+        // Enough arrays that LPT interleaves them across channels; the
+        // decoded streams must come back under their original indices.
+        let p = synthetic_problem(12, 5);
+        let pl = partition(&p, 4, PartitionStrategy::Lpt).unwrap();
+        // Sanity: the assignment is not channel-contiguous in j.
+        assert!(pl.channel_of.windows(2).any(|w| w[0] != w[1]));
+        let exec = MultiChannelExecutor::compile(&pl);
+        let data = synthetic_data(&p, 6);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let out = exec.roundtrip(&refs).unwrap();
+        for (j, (got, want)) in out.iter().zip(data.iter()).enumerate() {
+            assert_eq!(got, want, "array {j}");
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_inputs() {
+        let p = helmholtz_problem();
+        let pl = partition(&p, 2, PartitionStrategy::Lpt).unwrap();
+        let exec = MultiChannelExecutor::compile(&pl);
+        let data = synthetic_data(&p, 1);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        assert!(exec.pack(&refs[..2]).is_err(), "wrong array count");
+        let bufs = exec.pack(&refs).unwrap();
+        assert!(exec.decode(&bufs[..1]).is_err(), "wrong buffer count");
+    }
+}

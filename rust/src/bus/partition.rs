@@ -2,30 +2,77 @@
 //!
 //! The Alveo u280 exposes 32 HBM pseudo-channels (§2); real designs split
 //! their arrays across several of them. This module partitions a problem
-//! over `k` channels — longest-processing-time-first (LPT) on array bits,
-//! which is the classic 4/3-approximation for makespan balancing — runs
-//! Iris independently per channel, and aggregates the metrics.
+//! over `k` channels under a selectable [`PartitionStrategy`] — the
+//! classic longest-processing-time-first (LPT) 4/3-approximation for
+//! makespan balancing, or LPT followed by a due-date/lateness-aware local
+//! refinement — runs Iris independently per channel, and aggregates the
+//! metrics. The compiled execution side (per-channel pack/decode word
+//! programs, channel-parallel fan-out) lives in
+//! [`crate::bus::multichannel`]; the channel-count DSE integration lives
+//! in [`crate::dse::DseEngine::channel_sweep`].
 //!
 //! Due dates are preserved per array: each channel solves its own
 //! lateness problem, and the aggregate `L_max`/`C_max` are the maxima
-//! across channels (channels stream concurrently).
+//! across channels (channels stream concurrently). Sub-problems inherit
+//! the parent's [`crate::model::BusConfig`] verbatim — width *and* host
+//! word size — so generated host packers stay consistent across channels.
 
 use super::HbmChannel;
+use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
-use crate::layout::Layout;
-use crate::model::{BusConfig, Problem};
+use crate::layout::{Layout, LayoutKind};
+use crate::model::Problem;
 use crate::schedule::iris_layout;
 use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// How arrays are assigned to channels before the per-channel layout run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionStrategy {
+    /// Longest-processing-time-first on array bits: biggest arrays first
+    /// onto the least-loaded channel (4/3-approximation for makespan).
+    Lpt,
+    /// LPT seed followed by due-date/lateness-aware refinement: greedy
+    /// single-array moves that lower the lexicographic objective
+    /// (max per-channel lateness bound, max per-channel makespan bound,
+    /// load imbalance). The lateness bound per channel is the
+    /// scheduling-free [`lateness_lower_bound`], so the refined
+    /// assignment never has a worse bound than plain LPT. Above
+    /// [`REFINE_MAX_ARRAYS`] arrays the search is skipped and the LPT
+    /// seed is returned unchanged.
+    LptRefine,
+}
+
+impl PartitionStrategy {
+    /// Every strategy, for sweeps and property tests.
+    pub const ALL: [PartitionStrategy; 2] =
+        [PartitionStrategy::Lpt, PartitionStrategy::LptRefine];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Lpt => "lpt",
+            PartitionStrategy::LptRefine => "lpt-refine",
+        }
+    }
+}
 
 /// Assignment of arrays to channels plus per-channel layouts and metrics.
 #[derive(Debug, Clone)]
 pub struct PartitionedLayout {
+    /// Strategy that produced the assignment.
+    pub strategy: PartitionStrategy,
     /// `channel_of[j]` = channel index for array `j` of the original problem.
     pub channel_of: Vec<usize>,
+    /// `members[c]` = original array indices on channel `c`, in exactly
+    /// the order `problems[c].arrays` lists them — the one authoritative
+    /// mapping the executor uses to split host data and merge decoded
+    /// streams back.
+    pub members: Vec<Vec<usize>>,
     /// Per-channel sub-problems (original array order preserved within).
     pub problems: Vec<Problem>,
-    /// Per-channel Iris layouts.
-    pub layouts: Vec<Layout>,
+    /// Per-channel Iris layouts (shared with the [`LayoutCache`] when the
+    /// partition was built through one).
+    pub layouts: Vec<Arc<Layout>>,
     /// Per-channel metrics.
     pub metrics: Vec<LayoutMetrics>,
 }
@@ -54,6 +101,21 @@ impl PartitionedLayout {
         }
     }
 
+    /// Per-channel utilization of the aggregate streaming window: channel
+    /// `c`'s payload bits over `C_max · m`. A channel that finishes early
+    /// idles for the rest of the window, so its utilization drops below
+    /// its standalone `b_eff`; the values sum to `k · b_eff`.
+    pub fn channel_utilization(&self, m_bits: u32) -> Vec<f64> {
+        let cap = self.c_max() as f64 * m_bits as f64;
+        if cap == 0.0 {
+            return vec![0.0; self.problems.len()];
+        }
+        self.problems
+            .iter()
+            .map(|p| p.total_bits() as f64 / cap)
+            .collect()
+    }
+
     /// Modeled wall-clock on `channel` hardware (slowest channel).
     pub fn seconds(&self, channel: &HbmChannel) -> f64 {
         self.metrics
@@ -66,21 +128,84 @@ impl PartitionedLayout {
     pub fn fifo_bits(&self) -> u64 {
         self.metrics.iter().map(|m| m.fifo.total_bits).sum()
     }
+
+    /// Aggregate metrics as one sweep point.
+    pub fn summary(&self, m_bits: u32) -> PartitionSummary {
+        PartitionSummary {
+            c_max: self.c_max(),
+            l_max: self.l_max(),
+            b_eff: self.b_eff(m_bits),
+            fifo_bits: self.fifo_bits(),
+        }
+    }
 }
 
-/// Partition `problem` across `k` channels (LPT on bits) and lay out each
-/// channel with Iris.
-pub fn partition_lpt(problem: &Problem, k: usize) -> Result<PartitionedLayout> {
-    if k == 0 {
-        bail!("need at least one channel");
+/// Aggregate metrics of one partitioned layout (one sweep point).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionSummary {
+    pub c_max: u64,
+    pub l_max: i64,
+    pub b_eff: f64,
+    pub fifo_bits: u64,
+}
+
+/// Core of the lateness bound: `max_j ⌈(Σ_{d_i ≤ d_j} p_i)/m⌉ − d_j`
+/// over `(due, bits)` items, computed in one sorted prefix-sum pass
+/// (O(n log n), not the naive O(n²) double loop). Ties on the due date
+/// share one prefix, matching the `d_i ≤ d_j` definition exactly.
+fn lateness_bound_of(mut items: Vec<(u64, u64)>, m: u64) -> i64 {
+    items.sort_unstable_by_key(|&(due, _)| due);
+    let mut acc = 0u64;
+    let mut lat = i64::MIN;
+    let mut i = 0;
+    while i < items.len() {
+        let due = items[i].0;
+        while i < items.len() && items[i].0 == due {
+            acc += items[i].1;
+            i += 1;
+        }
+        lat = lat.max(crate::util::ceil_div(acc, m) as i64 - due as i64);
     }
-    if k > problem.arrays.len() {
-        bail!(
-            "more channels ({k}) than arrays ({}) — reduce k",
-            problem.arrays.len()
-        );
+    if items.is_empty() {
+        0
+    } else {
+        lat
     }
-    // LPT: biggest arrays first onto the least-loaded channel.
+}
+
+/// Scheduling-free lower bound on `L_max` for a (sub-)problem: all bits
+/// due at or before `d_j` must cross the `m`-bit bus within `d_j`
+/// cycles, so `⌈(Σ_{d_i ≤ d_j} p_i)/m⌉ − d_j` bounds the lateness of
+/// array `j` from below. [`PartitionStrategy::LptRefine`] minimizes the
+/// maximum of this bound across channels.
+pub fn lateness_lower_bound(problem: &Problem) -> i64 {
+    lateness_bound_of(
+        problem.arrays.iter().map(|a| (a.due, a.bits())).collect(),
+        problem.m() as u64,
+    )
+}
+
+/// `(lateness bound, makespan bound, load bits)` of one channel's member
+/// set — the per-channel ingredients of the refinement objective (same
+/// bound as [`lateness_lower_bound`], over a member subset).
+fn channel_bounds(problem: &Problem, members: &[usize]) -> (i64, u64, u64) {
+    let m = problem.m() as u64;
+    let load: u64 = members.iter().map(|&j| problem.arrays[j].bits()).sum();
+    let lat = lateness_bound_of(
+        members
+            .iter()
+            .map(|&j| {
+                let a = &problem.arrays[j];
+                (a.due, a.bits())
+            })
+            .collect(),
+        m,
+    );
+    (lat, crate::util::ceil_div(load, m), load)
+}
+
+/// LPT assignment: biggest arrays first onto the least-loaded channel.
+fn assign_lpt(problem: &Problem, k: usize) -> Vec<usize> {
     let mut order: Vec<usize> = (0..problem.arrays.len()).collect();
     order.sort_by_key(|&j| std::cmp::Reverse(problem.arrays[j].bits()));
     let mut load = vec![0u64; k];
@@ -90,44 +215,228 @@ pub fn partition_lpt(problem: &Problem, k: usize) -> Result<PartitionedLayout> {
         channel_of[j] = c;
         load[c] += problem.arrays[j].bits();
     }
-    // Build per-channel problems (original order preserved for stable
-    // stream naming) and lay out.
+    channel_of
+}
+
+/// Above this array count [`PartitionStrategy::LptRefine`] falls back to
+/// the plain LPT assignment: the local search costs
+/// O(passes · n² · log n) and with thousands of arrays the load is
+/// already averaged out, so the bound improvement it could buy is
+/// negligible next to a multi-second stall.
+pub const REFINE_MAX_ARRAYS: usize = 512;
+
+/// LPT seed + greedy best-improvement single-array moves under the
+/// lexicographic (max lateness bound, max makespan bound, imbalance)
+/// objective. Deterministic; never empties a channel; terminates because
+/// every accepted move strictly lowers the objective.
+fn assign_refine(problem: &Problem, k: usize) -> Vec<usize> {
+    let mut channel_of = assign_lpt(problem, k);
+    let n = problem.arrays.len();
+    if n > REFINE_MAX_ARRAYS {
+        return channel_of;
+    }
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (j, &c) in channel_of.iter().enumerate() {
+        members[c].push(j);
+    }
+    let mut bounds: Vec<(i64, u64, u64)> =
+        members.iter().map(|ms| channel_bounds(problem, ms)).collect();
+    let objective = |bounds: &[(i64, u64, u64)]| -> (i64, u64, u64) {
+        let lat = bounds.iter().map(|b| b.0).max().unwrap();
+        let mk = bounds.iter().map(|b| b.1).max().unwrap();
+        let max_load = bounds.iter().map(|b| b.2).max().unwrap();
+        let min_load = bounds.iter().map(|b| b.2).min().unwrap();
+        (lat, mk, max_load - min_load)
+    };
+    let mut best = objective(&bounds);
+    // Each pass applies the single best strictly-improving move; the
+    // objective is bounded below, so the pass cap only guards runtime.
+    for _pass in 0..(2 * k + 8) {
+        let mut best_move: Option<(usize, usize, (i64, u64, u64), (i64, u64, u64))> = None;
+        let mut best_obj = best;
+        for j in 0..n {
+            let src = channel_of[j];
+            if members[src].len() <= 1 {
+                continue;
+            }
+            let src_members: Vec<usize> = members[src]
+                .iter()
+                .copied()
+                .filter(|&i| i != j)
+                .collect();
+            let src_b = channel_bounds(problem, &src_members);
+            for dst in 0..k {
+                if dst == src {
+                    continue;
+                }
+                let mut dst_members = members[dst].clone();
+                dst_members.push(j);
+                let dst_b = channel_bounds(problem, &dst_members);
+                // Candidate objective with only the two touched channels
+                // replaced.
+                let mut lat = i64::MIN;
+                let mut mk = 0u64;
+                let mut max_load = 0u64;
+                let mut min_load = u64::MAX;
+                for c in 0..k {
+                    let b = if c == src {
+                        src_b
+                    } else if c == dst {
+                        dst_b
+                    } else {
+                        bounds[c]
+                    };
+                    lat = lat.max(b.0);
+                    mk = mk.max(b.1);
+                    max_load = max_load.max(b.2);
+                    min_load = min_load.min(b.2);
+                }
+                let cand = (lat, mk, max_load - min_load);
+                if cand < best_obj {
+                    best_obj = cand;
+                    best_move = Some((j, dst, src_b, dst_b));
+                }
+            }
+        }
+        match best_move {
+            Some((j, dst, src_b, dst_b)) => {
+                let src = channel_of[j];
+                members[src].retain(|&i| i != j);
+                members[dst].push(j);
+                bounds[src] = src_b;
+                bounds[dst] = dst_b;
+                channel_of[j] = dst;
+                best = best_obj;
+            }
+            None => break,
+        }
+    }
+    channel_of
+}
+
+/// Validated channel assignment under `strategy`.
+fn assign(problem: &Problem, k: usize, strategy: PartitionStrategy) -> Result<Vec<usize>> {
+    if k == 0 {
+        bail!("need at least one channel");
+    }
+    if k > problem.arrays.len() {
+        bail!(
+            "more channels ({k}) than arrays ({}) — reduce k",
+            problem.arrays.len()
+        );
+    }
+    Ok(match strategy {
+        PartitionStrategy::Lpt => assign_lpt(problem, k),
+        PartitionStrategy::LptRefine => assign_refine(problem, k),
+    })
+}
+
+/// Partition `problem` across `k` channels with a caller-supplied layout
+/// step (the building block behind [`partition`] and
+/// [`partition_with_cache`]; the coordinator server threads its
+/// cache-metrics recording through here). `layout_for` is called once per
+/// channel, in channel order, with the channel's sub-problem.
+pub fn partition_opts<F>(
+    problem: &Problem,
+    k: usize,
+    strategy: PartitionStrategy,
+    mut layout_for: F,
+) -> Result<PartitionedLayout>
+where
+    F: FnMut(&Problem) -> Arc<Layout>,
+{
+    let channel_of = assign(problem, k, strategy)?;
+    // One authoritative member list per channel (ascending original
+    // index); the sub-problems below are built from it, so the
+    // executor's split/merge routing is structurally consistent with
+    // the sub-problem array order.
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (j, &c) in channel_of.iter().enumerate() {
+        members[c].push(j);
+    }
     let mut problems = Vec::with_capacity(k);
     let mut layouts = Vec::with_capacity(k);
     let mut metrics = Vec::with_capacity(k);
-    for c in 0..k {
-        let arrays: Vec<_> = problem
-            .arrays
-            .iter()
-            .enumerate()
-            .filter(|&(j, _)| channel_of[j] == c)
-            .map(|(_, a)| a.clone())
-            .collect();
+    for (c, ms) in members.iter().enumerate() {
+        let arrays: Vec<_> = ms.iter().map(|&j| problem.arrays[j].clone()).collect();
         if arrays.is_empty() {
             bail!("channel {c} received no arrays (k too large for this workload)");
         }
-        let p = Problem::new(BusConfig::new(problem.m()), arrays)?;
-        let l = iris_layout(&p);
+        // Propagate the parent bus verbatim: rebuilding it from `m` alone
+        // would drop `host_word_bits` (and any future bus fields).
+        let p = Problem::new(problem.bus, arrays)?;
+        let l = layout_for(&p);
         crate::layout::validate::validate(&l, &p)?;
         metrics.push(LayoutMetrics::compute(&l, &p));
         layouts.push(l);
         problems.push(p);
     }
     Ok(PartitionedLayout {
+        strategy,
         channel_of,
+        members,
         problems,
         layouts,
         metrics,
     })
 }
 
-/// Sweep channel counts and report (k, C_max, L_max, aggregate eff).
-pub fn channel_sweep(problem: &Problem, max_k: usize) -> Vec<(usize, u64, i64, f64)> {
-    (1..=max_k.min(problem.arrays.len()))
-        .filter_map(|k| {
-            partition_lpt(problem, k).ok().map(|pl| {
-                (k, pl.c_max(), pl.l_max(), pl.b_eff(problem.m()))
-            })
+/// Partition `problem` across `k` channels under `strategy` and lay out
+/// each channel with Iris directly (no cache).
+pub fn partition(
+    problem: &Problem,
+    k: usize,
+    strategy: PartitionStrategy,
+) -> Result<PartitionedLayout> {
+    partition_opts(problem, k, strategy, |p| Arc::new(iris_layout(p)))
+}
+
+/// Like [`partition`], but per-channel layouts come from (and populate)
+/// the shared `cache`, so identical sub-problems across `k` values,
+/// repeated sweeps, and the serving path are scheduled once. A cold cache
+/// is bit-identical to [`partition`].
+pub fn partition_with_cache(
+    problem: &Problem,
+    k: usize,
+    strategy: PartitionStrategy,
+    cache: &LayoutCache,
+) -> Result<PartitionedLayout> {
+    partition_opts(problem, k, strategy, |p| {
+        cache.layout_for(LayoutKind::Iris, p)
+    })
+}
+
+/// Back-compat shorthand: [`partition`] with [`PartitionStrategy::Lpt`].
+pub fn partition_lpt(problem: &Problem, k: usize) -> Result<PartitionedLayout> {
+    partition(problem, k, PartitionStrategy::Lpt)
+}
+
+/// One `k` of a channel-count sweep: the aggregate summary, or the reason
+/// this point could not be evaluated. Failed points stay in the output —
+/// a caller (or bench) can no longer mistake a dropped `k` for a covered
+/// one.
+#[derive(Debug)]
+pub struct SweepPoint {
+    pub k: usize,
+    pub strategy: PartitionStrategy,
+    /// Aggregate metrics, or why this `k` was skipped.
+    pub outcome: Result<PartitionSummary>,
+}
+
+/// Sweep channel counts `1..=max_k`, recording every point — including
+/// infeasible ones (e.g. `k` exceeding the array count) as errors.
+/// Serial reference path; see [`crate::dse::DseEngine::channel_sweep`]
+/// for the parallel, memoized one (identical outcomes).
+pub fn channel_sweep(
+    problem: &Problem,
+    max_k: usize,
+    strategy: PartitionStrategy,
+) -> Vec<SweepPoint> {
+    (1..=max_k)
+        .map(|k| SweepPoint {
+            k,
+            strategy,
+            outcome: partition(problem, k, strategy).map(|pl| pl.summary(problem.m())),
         })
         .collect()
 }
@@ -160,14 +469,25 @@ mod tests {
         // streams whose makespan is the longest solo stream.
         let p = synthetic_problem(12, 3);
         let single = LayoutMetrics::compute(&iris_layout(&p), &p).c_max;
-        let sweep = channel_sweep(&p, 6);
-        assert_eq!(sweep.len(), 6);
-        for &(k, c_max, _, eff) in &sweep {
-            assert!(c_max <= single, "k={k} C_max {c_max} > single {single}");
-            assert!(eff > 0.0 && eff <= 1.0);
+        for strategy in PartitionStrategy::ALL {
+            let sweep = channel_sweep(&p, 6, strategy);
+            assert_eq!(sweep.len(), 6);
+            for pt in &sweep {
+                let s = pt.outcome.as_ref().unwrap();
+                assert!(
+                    s.c_max <= single,
+                    "{} k={} C_max {} > single {single}",
+                    strategy.name(),
+                    pt.k,
+                    s.c_max
+                );
+                assert!(s.b_eff > 0.0 && s.b_eff <= 1.0);
+            }
+            // And at least one multi-channel point strictly improves.
+            assert!(sweep
+                .iter()
+                .any(|pt| pt.k > 1 && pt.outcome.as_ref().unwrap().c_max < single));
         }
-        // And at least one multi-channel point strictly improves.
-        assert!(sweep.iter().any(|&(k, c, _, _)| k > 1 && c < single));
     }
 
     #[test]
@@ -179,13 +499,94 @@ mod tests {
         assert!(eff > 0.0 && eff <= 1.0);
         // S's channel (121 elems) idles while u/D stream 333 cycles.
         assert!(eff < 0.8, "eff {eff}");
+        // Per-channel utilization exposes the idling channel and sums to
+        // k · b_eff.
+        let util = pl.channel_utilization(p.m());
+        assert_eq!(util.len(), 3);
+        assert!(util.iter().any(|&u| u < 0.2), "S's channel idles: {util:?}");
+        let sum: f64 = util.iter().sum();
+        assert!((sum - 3.0 * eff).abs() < 1e-12, "sum {sum} vs 3·{eff}");
     }
 
     #[test]
     fn rejects_degenerate_channel_counts() {
         let p = helmholtz_problem();
-        assert!(partition_lpt(&p, 0).is_err());
-        assert!(partition_lpt(&p, 4).is_err());
+        for strategy in PartitionStrategy::ALL {
+            assert!(partition(&p, 0, strategy).is_err());
+            assert!(partition(&p, 4, strategy).is_err());
+        }
+    }
+
+    #[test]
+    fn sweep_records_infeasible_points_instead_of_dropping_them() {
+        // helmholtz has 3 arrays: k = 4, 5 are infeasible but must still
+        // appear in the sweep, as errors (the old API silently dropped
+        // them via `.ok()`).
+        let p = helmholtz_problem();
+        let sweep = channel_sweep(&p, 5, PartitionStrategy::Lpt);
+        assert_eq!(sweep.len(), 5);
+        for pt in &sweep {
+            if pt.k <= 3 {
+                assert!(pt.outcome.is_ok(), "k={} must be feasible", pt.k);
+            } else {
+                let err = pt.outcome.as_ref().err().expect("k>n must be an error");
+                assert!(err.to_string().contains("more channels"), "{err}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_problems_inherit_the_parent_bus() {
+        // Regression: partition_lpt used to rebuild the bus as
+        // `BusConfig::new(m)`, silently resetting host_word_bits to 64.
+        let mut p = helmholtz_problem();
+        p.bus.host_word_bits = 32;
+        for strategy in PartitionStrategy::ALL {
+            let pl = partition(&p, 2, strategy).unwrap();
+            for q in &pl.problems {
+                assert_eq!(q.bus, p.bus, "{}: bus must survive", strategy.name());
+                assert_eq!(q.bus.host_word_bits, 32);
+            }
+        }
+    }
+
+    #[test]
+    fn refine_never_worsens_the_lateness_bound() {
+        for seed in 0..20u64 {
+            let p = synthetic_problem(10, seed);
+            for k in [2usize, 3, 4] {
+                let lpt = partition(&p, k, PartitionStrategy::Lpt).unwrap();
+                let refined = partition(&p, k, PartitionStrategy::LptRefine).unwrap();
+                let bound = |pl: &PartitionedLayout| {
+                    pl.problems
+                        .iter()
+                        .map(lateness_lower_bound)
+                        .max()
+                        .unwrap()
+                };
+                assert!(
+                    bound(&refined) <= bound(&lpt),
+                    "seed {seed} k={k}: refine {} > lpt {}",
+                    bound(&refined),
+                    bound(&lpt)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_partition_matches_direct() {
+        let p = synthetic_problem(9, 4);
+        let cache = LayoutCache::new();
+        for strategy in PartitionStrategy::ALL {
+            for k in [2usize, 3] {
+                let direct = partition(&p, k, strategy).unwrap();
+                let cached = partition_with_cache(&p, k, strategy, &cache).unwrap();
+                assert_eq!(direct.channel_of, cached.channel_of);
+                assert_eq!(direct.summary(p.m()), cached.summary(p.m()));
+            }
+        }
+        assert!(cache.stats().hits > 0, "repeat ks must share sub-layouts");
     }
 
     #[test]

@@ -32,6 +32,16 @@ pub struct Metrics {
     /// sharded bus-cycles across worker threads
     /// (`pack::program::PARALLEL_MIN_OPS`).
     pub parallel_packs: AtomicU64,
+    /// Transfers large enough that decoding sharded element ranges across
+    /// worker threads (`decode::program::PARALLEL_MIN_ELEMS`) — the
+    /// decode-side twin of `parallel_packs`.
+    pub parallel_decodes: AtomicU64,
+    /// Transfers routed over the multi-channel executor
+    /// (`bus::multichannel`) because the request asked for `channels > 1`.
+    pub multichannel_transfers: AtomicU64,
+    /// Total channels served across all multi-channel transfers (so
+    /// `channels_served / multichannel_transfers` is the mean fan-out).
+    pub channels_served: AtomicU64,
 }
 
 impl Metrics {
@@ -88,11 +98,17 @@ impl Metrics {
         self.dse_point_latency_ns.load(Ordering::Relaxed) as f64 / n as f64
     }
 
+    /// Count one multi-channel transfer fanned out over `channels`.
+    pub fn record_multichannel(&self, channels: u64) {
+        self.multichannel_transfers.fetch_add(1, Ordering::Relaxed);
+        self.channels_served.fetch_add(channels, Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "requests={} completed={} errors={} batches={} mean_latency={} \
              max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={} \
-             parallel_packs={}",
+             parallel_packs={} parallel_decodes={} multichannel={} channels_served={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -103,6 +119,9 @@ impl Metrics {
             self.dse_points.load(Ordering::Relaxed),
             crate::util::human_ns(self.mean_dse_point_latency_ns()),
             self.parallel_packs.load(Ordering::Relaxed),
+            self.parallel_decodes.load(Ordering::Relaxed),
+            self.multichannel_transfers.load(Ordering::Relaxed),
+            self.channels_served.load(Ordering::Relaxed),
         )
     }
 }
@@ -138,5 +157,16 @@ mod tests {
         assert_eq!(m.dse_points.load(Ordering::Relaxed), 10);
         assert!((m.mean_dse_point_latency_ns() - 400.0).abs() < 1e-9);
         assert!(m.summary().contains("dse_points=10"));
+    }
+
+    #[test]
+    fn multichannel_counters() {
+        let m = Metrics::default();
+        m.record_multichannel(4);
+        m.record_multichannel(2);
+        assert_eq!(m.multichannel_transfers.load(Ordering::Relaxed), 2);
+        assert_eq!(m.channels_served.load(Ordering::Relaxed), 6);
+        assert!(m.summary().contains("multichannel=2"));
+        assert!(m.summary().contains("channels_served=6"));
     }
 }

@@ -8,7 +8,9 @@
 
 use crate::accel;
 use crate::baselines;
-use crate::bus::HbmChannel;
+use crate::bus::multichannel::MultiChannelExecutor;
+use crate::bus::partition::{partition_opts, PartitionStrategy, PartitionSummary};
+use crate::bus::{HbmChannel, MultiChannel};
 use crate::decode::{DecodePlan, StreamDecoder};
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
@@ -65,8 +67,15 @@ pub struct PipelineConfig {
     /// ([`crate::pack::PackProgram`] / [`crate::decode::DecodeProgram`];
     /// the default). `false` keeps the interpreted
     /// `PackPlan`/`DecodePlan` hot paths, which remain as oracles —
-    /// both engines are bit-identical (property-tested).
+    /// both engines are bit-identical (property-tested). Only consulted
+    /// by the single-channel [`run`]: the multi-channel transport is
+    /// always compiled, and its oracles are the executor's serial
+    /// per-channel references instead.
     pub compiled: bool,
+    /// Serve the transfer over this many HBM pseudo-channels through the
+    /// multi-channel executor ([`run_multichannel`]). `None`/`Some(1)`
+    /// keeps the single-channel [`run`] transport.
+    pub channels: Option<usize>,
 }
 
 impl PipelineConfig {
@@ -78,6 +87,7 @@ impl PipelineConfig {
             xla_unpack_check: true,
             cache: None,
             compiled: true,
+            channels: None,
         }
     }
 
@@ -144,6 +154,55 @@ impl PipelineReport {
     }
 }
 
+/// Source data for a workload: raw W-bit streams, the real values they
+/// encode, and per-array quantization scales. Shared by [`run`] and
+/// [`run_multichannel`] so both transports move identical bits for a
+/// given seed.
+fn source_data(
+    workload: Workload,
+    rng: &mut Rng,
+) -> (Vec<Vec<u64>>, Vec<Vec<f64>>, Vec<f64>) {
+    match workload {
+        Workload::Helmholtz => {
+            let n3 = accel::HELMHOLTZ_N.pow(3);
+            let n2 = accel::HELMHOLTZ_N.pow(2);
+            let f: Vec<f64> = (0..n3).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+            let s: Vec<f64> = (0..n2).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+            let d: Vec<f64> = (0..n3).map(|_| rng.f64_range(0.5, 2.0)).collect();
+            let raw = vec![
+                quant::f64_to_bits(&f),
+                quant::f64_to_bits(&s),
+                quant::f64_to_bits(&d),
+            ];
+            (raw, vec![f, s, d], vec![1.0, 1.0, 1.0])
+        }
+        Workload::MatMul { w_a, w_b } => {
+            let vals =
+                |rng: &mut Rng| -> Vec<f64> { (0..625).map(|_| rng.f64_range(-1.0, 1.0)).collect() };
+            let (af, bf) = (vals(rng), vals(rng));
+            if w_a == 64 && w_b == 64 {
+                (
+                    vec![quant::f64_to_bits(&af), quant::f64_to_bits(&bf)],
+                    vec![af, bf],
+                    vec![1.0, 1.0],
+                )
+            } else {
+                let qa = quant::quantize(&af, w_a);
+                let qb = quant::quantize(&bf, w_b);
+                // Golden reference uses the dequantized values so the
+                // only residual error is f32-vs-f64 compute.
+                let adq = quant::dequantize(&qa);
+                let bdq = quant::dequantize(&qb);
+                (
+                    vec![qa.raw.clone(), qb.raw.clone()],
+                    vec![adq, bdq],
+                    vec![qa.scale, qb.scale],
+                )
+            }
+        }
+    }
+}
+
 /// Run the full pipeline. `rt = None` skips the PJRT compute+unpack
 /// stages (pure transport validation).
 pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<PipelineReport> {
@@ -152,47 +211,7 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
 
     // ------------------------------------------------ source data
     // Real values for each array; the bus carries their raw bit streams.
-    let (raw_arrays, real_arrays, scales): (Vec<Vec<u64>>, Vec<Vec<f64>>, Vec<f64>) =
-        match cfg.workload {
-            Workload::Helmholtz => {
-                let n3 = accel::HELMHOLTZ_N.pow(3);
-                let n2 = accel::HELMHOLTZ_N.pow(2);
-                let f: Vec<f64> = (0..n3).map(|_| rng.f64_range(-1.0, 1.0)).collect();
-                let s: Vec<f64> = (0..n2).map(|_| rng.f64_range(-1.0, 1.0)).collect();
-                let d: Vec<f64> = (0..n3).map(|_| rng.f64_range(0.5, 2.0)).collect();
-                let raw = vec![
-                    quant::f64_to_bits(&f),
-                    quant::f64_to_bits(&s),
-                    quant::f64_to_bits(&d),
-                ];
-                (raw, vec![f, s, d], vec![1.0, 1.0, 1.0])
-            }
-            Workload::MatMul { w_a, w_b } => {
-                let vals = |rng: &mut Rng| -> Vec<f64> {
-                    (0..625).map(|_| rng.f64_range(-1.0, 1.0)).collect()
-                };
-                let (af, bf) = (vals(&mut rng), vals(&mut rng));
-                if w_a == 64 && w_b == 64 {
-                    (
-                        vec![quant::f64_to_bits(&af), quant::f64_to_bits(&bf)],
-                        vec![af, bf],
-                        vec![1.0, 1.0],
-                    )
-                } else {
-                    let qa = quant::quantize(&af, w_a);
-                    let qb = quant::quantize(&bf, w_b);
-                    // Golden reference uses the dequantized values so the
-                    // only residual error is f32-vs-f64 compute.
-                    let adq = quant::dequantize(&qa);
-                    let bdq = quant::dequantize(&qb);
-                    (
-                        vec![qa.raw.clone(), qb.raw.clone()],
-                        vec![adq, bdq],
-                        vec![qa.scale, qb.scale],
-                    )
-                }
-            }
-        };
+    let (raw_arrays, real_arrays, scales) = source_data(cfg.workload, &mut rng);
 
     // ------------------------------------------------ layout + pack
     let layout: Arc<Layout> = match &cfg.cache {
@@ -344,6 +363,111 @@ fn max_err(got: &[f64], want: &[f64]) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// Multi-channel transport results (the [`run_multichannel`] analogue of
+/// [`PipelineReport`]).
+#[derive(Debug, Clone)]
+pub struct MultiChannelReport {
+    pub workload: String,
+    /// Layout algorithm used on every channel (from `cfg.kind`).
+    pub layout: &'static str,
+    pub strategy: &'static str,
+    pub channels: usize,
+    /// Aggregate (C_max, L_max, b_eff, FIFO bits) across channels.
+    pub summary: PartitionSummary,
+    /// Per-channel utilization of the aggregate streaming window.
+    pub channel_eff: Vec<f64>,
+    pub pack_ns: u64,
+    pub decode_ns: u64,
+    /// Decoded streams bit-exact vs the source arrays.
+    pub decode_exact: bool,
+    /// Modeled wall-clock with every channel streaming concurrently
+    /// (slowest channel).
+    pub hbm_seconds: f64,
+    /// Aggregate achieved GB/s across channels over that wall-clock.
+    pub aggregate_gbs: f64,
+}
+
+impl MultiChannelReport {
+    pub fn ok(&self) -> bool {
+        self.decode_exact
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} [{}/k={}/{}]: C_max={} L_max={} eff={} | pack {} decode {} | \
+             decode_exact={} | HBM: {:.1} µs @ {:.2} GB/s aggregate | per-channel {:?}",
+            self.workload,
+            self.layout,
+            self.channels,
+            self.strategy,
+            self.summary.c_max,
+            self.summary.l_max,
+            crate::util::table::pct(self.summary.b_eff),
+            crate::util::human_ns(self.pack_ns as f64),
+            crate::util::human_ns(self.decode_ns as f64),
+            self.decode_exact,
+            self.hbm_seconds * 1e6,
+            self.aggregate_gbs,
+            self.channel_eff
+                .iter()
+                .map(|e| format!("{:.0}%", e * 100.0))
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Run the multi-channel transport pipeline: partition the workload over
+/// `cfg.channels` pseudo-channels under `strategy`, lay every channel
+/// out with `cfg.kind` (through `cfg.cache` when set), pack and decode
+/// every channel concurrently via the compiled [`MultiChannelExecutor`],
+/// verify bit-exactness, and model aggregate HBM timing with all
+/// channels streaming in parallel. The multi-channel transport is
+/// compiled-only (`cfg.compiled` is not consulted); the executor's
+/// serial per-channel references are its oracles.
+pub fn run_multichannel(
+    cfg: &PipelineConfig,
+    strategy: PartitionStrategy,
+) -> Result<MultiChannelReport> {
+    let problem = cfg.workload.problem();
+    let k = cfg.channels.unwrap_or(1).max(1);
+    let mut rng = Rng::new(cfg.seed);
+    let (raw_arrays, _real, _scales) = source_data(cfg.workload, &mut rng);
+    // Honor cfg.kind on every channel, exactly like the single-channel
+    // run() does for the whole problem.
+    let pl = match &cfg.cache {
+        Some(cache) => partition_opts(&problem, k, strategy, |p| cache.layout_for(cfg.kind, p))?,
+        None => partition_opts(&problem, k, strategy, |p| {
+            Arc::new(baselines::generate(cfg.kind, p))
+        })?,
+    };
+    let exec = MultiChannelExecutor::compile(&pl);
+    let refs: Vec<&[u64]> = raw_arrays.iter().map(|v| v.as_slice()).collect();
+    let t0 = Instant::now();
+    let bufs = exec.pack(&refs)?;
+    let pack_ns = t0.elapsed().as_nanos() as u64;
+    let t1 = Instant::now();
+    let decoded = exec.decode(&bufs)?;
+    let decode_ns = t1.elapsed().as_nanos() as u64;
+    let channel = HbmChannel::alveo_u280();
+    let mut mc = MultiChannel::new(channel);
+    for (q, m) in pl.problems.iter().zip(pl.metrics.iter()) {
+        mc.add_layout(q.total_bits(), m.c_max);
+    }
+    Ok(MultiChannelReport {
+        workload: cfg.workload.name(),
+        layout: cfg.kind.name(),
+        strategy: strategy.name(),
+        channels: k,
+        summary: pl.summary(problem.m()),
+        channel_eff: pl.channel_utilization(problem.m()),
+        pack_ns,
+        decode_ns,
+        decode_exact: decoded == raw_arrays,
+        hbm_seconds: pl.seconds(&channel),
+        aggregate_gbs: mc.aggregate_gbs(),
+    })
+}
+
 /// Synthetic stress workload: many arrays with random widths/dues on a
 /// 256-bit bus — used by the server example and the scaling bench.
 pub fn synthetic_problem(n_arrays: usize, seed: u64) -> Problem {
@@ -463,6 +587,105 @@ mod tests {
         let stats = cache.stats();
         assert_eq!(stats.misses, 1);
         assert_eq!(stats.hits, 1);
+    }
+
+    #[test]
+    fn multichannel_pipeline_is_bit_exact_for_all_strategies() {
+        for (wl, k) in [
+            (Workload::Helmholtz, 2),
+            (Workload::Helmholtz, 3),
+            (Workload::MatMul { w_a: 33, w_b: 31 }, 2),
+        ] {
+            for strategy in PartitionStrategy::ALL {
+                let cfg = PipelineConfig {
+                    xla_unpack_check: false,
+                    channels: Some(k),
+                    ..PipelineConfig::new(wl, LayoutKind::Iris)
+                };
+                let r = run_multichannel(&cfg, strategy).unwrap();
+                assert!(r.ok(), "{}", r.summary_line());
+                assert_eq!(r.channels, k);
+                assert_eq!(r.channel_eff.len(), k);
+                assert!(r.summary.b_eff > 0.0 && r.summary.b_eff <= 1.0);
+                assert!(r.aggregate_gbs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn multichannel_pipeline_honors_layout_kind() {
+        // Regression: the multi-channel transport must lay channels out
+        // with cfg.kind, not silently substitute Iris.
+        let cfg = PipelineConfig {
+            xla_unpack_check: false,
+            channels: Some(2),
+            ..PipelineConfig::new(Workload::Helmholtz, LayoutKind::DueAlignedNaive)
+        };
+        let naive = run_multichannel(&cfg, PartitionStrategy::Lpt).unwrap();
+        assert!(naive.decode_exact);
+        assert_eq!(naive.layout, "due-aligned-naive");
+        let iris = run_multichannel(
+            &PipelineConfig {
+                kind: LayoutKind::Iris,
+                ..cfg
+            },
+            PartitionStrategy::Lpt,
+        )
+        .unwrap();
+        assert_eq!(iris.layout, "iris");
+        assert!(iris.decode_exact);
+        // Same partition, different layouts: iris channels are never
+        // worse than the due-aligned baseline on makespan or FIFO cost.
+        assert!(iris.summary.c_max <= naive.summary.c_max);
+        assert!(iris.summary.fifo_bits <= naive.summary.fifo_bits);
+    }
+
+    #[test]
+    fn multichannel_pipeline_never_worsens_makespan() {
+        let single = run(
+            &PipelineConfig {
+                xla_unpack_check: false,
+                ..PipelineConfig::new(Workload::Helmholtz, LayoutKind::Iris)
+            },
+            None,
+        )
+        .unwrap();
+        let multi = run_multichannel(
+            &PipelineConfig {
+                xla_unpack_check: false,
+                channels: Some(3),
+                ..PipelineConfig::new(Workload::Helmholtz, LayoutKind::Iris)
+            },
+            PartitionStrategy::Lpt,
+        )
+        .unwrap();
+        assert!(multi.summary.c_max < single.metrics.c_max);
+        assert!(multi.hbm_seconds < single.hbm_seconds);
+    }
+
+    #[test]
+    fn cached_multichannel_pipeline_matches_uncached() {
+        let mk = || PipelineConfig {
+            xla_unpack_check: false,
+            channels: Some(2),
+            ..PipelineConfig::new(Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::Iris)
+        };
+        let plain = run_multichannel(&mk(), PartitionStrategy::LptRefine).unwrap();
+        let cache = Arc::new(LayoutCache::new());
+        let warm1 =
+            run_multichannel(&mk().with_cache(Arc::clone(&cache)), PartitionStrategy::LptRefine)
+                .unwrap();
+        let warm2 =
+            run_multichannel(&mk().with_cache(Arc::clone(&cache)), PartitionStrategy::LptRefine)
+                .unwrap();
+        for r in [&warm1, &warm2] {
+            assert!(r.decode_exact);
+            assert_eq!(r.summary, plain.summary);
+            assert_eq!(r.channel_eff, plain.channel_eff);
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 2, "one per channel, scheduled once");
+        assert!(stats.hits >= 2, "second run fully cached");
     }
 
     #[test]

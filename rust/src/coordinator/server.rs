@@ -12,14 +12,16 @@
 //! environment; see DESIGN.md §Threading).
 
 use super::Metrics;
+use crate::bus::multichannel::MultiChannelExecutor;
+use crate::bus::partition::{partition_opts, PartitionStrategy};
 use crate::bus::HbmChannel;
-use crate::decode::{DecodePlan, DecodeProgram};
+use crate::decode::{DecodePlan, DecodeProgram, PARALLEL_MIN_ELEMS};
 use crate::dse::{DesignPoint, DseEngine};
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
-use crate::pack::{program::PARALLEL_MIN_OPS, PackPlan, PackProgram};
+use crate::pack::{PackPlan, PackProgram, PARALLEL_MIN_OPS};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -31,6 +33,15 @@ pub struct TransferRequest {
     pub problem: Problem,
     pub data: Vec<Vec<u64>>,
     pub kind: LayoutKind,
+    /// Serve the transfer over this many HBM pseudo-channels: the
+    /// problem is partitioned (LPT), each channel gets its own layout
+    /// from the shared cache, and packing/decoding run channel-parallel
+    /// through [`MultiChannelExecutor`]. `None` or `Some(1)` keeps the
+    /// single-channel path. The channel is the unit of host-side
+    /// parallelism — for small `k` on a many-core host the
+    /// single-channel path's intra-transfer sharding can be faster (see
+    /// `bus::multichannel` docs).
+    pub channels: Option<usize>,
 }
 
 /// Result returned to the submitter.
@@ -38,12 +49,21 @@ pub struct TransferRequest {
 pub struct TransferResponse {
     pub c_max: u64,
     pub l_max: i64,
+    /// Aggregate bandwidth efficiency: on the multi-channel path this is
+    /// payload over the capacity of all channels for the aggregate
+    /// makespan.
     pub b_eff: f64,
     pub decode_exact: bool,
     pub hbm_seconds: f64,
     pub latency_ns: u64,
-    /// Whether the layout was served from the shared [`LayoutCache`].
+    /// Whether the layout was served from the shared [`LayoutCache`]
+    /// (multi-channel: whether *every* channel's layout was).
     pub cache_hit: bool,
+    /// Channels the transfer was served over (1 = single-channel path).
+    pub channels: usize,
+    /// Per-channel utilization of the aggregate streaming window
+    /// (payload bits over `C_max · m`); empty on the single-channel path.
+    pub channel_eff: Vec<f64>,
 }
 
 /// One δ/W design-space sweep job for the DSE endpoint.
@@ -251,6 +271,11 @@ fn process(
     cache: &LayoutCache,
     metrics: &Metrics,
 ) -> Result<TransferResponse> {
+    if let Some(k) = req.channels {
+        if k > 1 {
+            return process_multichannel(req, k, cache, metrics);
+        }
+    }
     let (layout, cache_hit) = cache.layout_for_tracked(req.kind, &req.problem);
     metrics.record_cache(cache_hit);
     crate::layout::validate::validate(&layout, &req.problem)?;
@@ -272,8 +297,17 @@ fn process(
     } else {
         prog.pack(&refs)?
     };
-    let decoded =
-        DecodeProgram::compile(&DecodePlan::compile(&layout, &req.problem)).decode(&buf)?;
+    let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &req.problem));
+    // Large decodes shard element ranges the same way large packs shard
+    // bus-cycles (same fan-out, same kind of threshold).
+    let decoded = if dprog.num_elements() >= PARALLEL_MIN_ELEMS && threads > 1 {
+        metrics
+            .parallel_decodes
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        dprog.decode_parallel(&buf, threads)?
+    } else {
+        dprog.decode(&buf)?
+    };
     let channel = HbmChannel::alveo_u280();
     Ok(TransferResponse {
         c_max: layout_metrics.c_max,
@@ -283,6 +317,49 @@ fn process(
         hbm_seconds: channel.seconds(layout_metrics.c_max),
         latency_ns: 0,
         cache_hit,
+        channels: 1,
+        channel_eff: Vec::new(),
+    })
+}
+
+/// The multi-channel route: LPT-partition the problem over `k`
+/// pseudo-channels (per-channel layouts via the shared cache), pack and
+/// decode all channels concurrently through the compiled
+/// [`MultiChannelExecutor`], and report aggregate + per-channel metrics.
+fn process_multichannel(
+    req: &TransferRequest,
+    k: usize,
+    cache: &LayoutCache,
+    metrics: &Metrics,
+) -> Result<TransferResponse> {
+    let mut all_hit = true;
+    let pl = partition_opts(&req.problem, k, PartitionStrategy::Lpt, |p| {
+        let (l, hit) = cache.layout_for_tracked(req.kind, p);
+        metrics.record_cache(hit);
+        all_hit &= hit;
+        l
+    })?;
+    let exec = MultiChannelExecutor::compile(&pl);
+    let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
+    let bufs = exec.pack(&refs)?;
+    let decoded = exec.decode(&bufs)?;
+    // Counted only once the transfer actually went through the
+    // multi-channel executor (failed requests land in `errors`, not
+    // here).
+    metrics.record_multichannel(k as u64);
+    let m = req.problem.m();
+    let summary = pl.summary(m);
+    let channel = HbmChannel::alveo_u280();
+    Ok(TransferResponse {
+        c_max: summary.c_max,
+        l_max: summary.l_max,
+        b_eff: summary.b_eff,
+        decode_exact: decoded == req.data,
+        hbm_seconds: pl.seconds(&channel),
+        latency_ns: 0,
+        cache_hit: all_hit,
+        channels: k,
+        channel_eff: pl.channel_utilization(m),
     })
 }
 
@@ -299,6 +376,7 @@ mod tests {
             problem: p,
             data,
             kind: LayoutKind::Iris,
+            channels: None,
         }
     }
 
@@ -424,16 +502,119 @@ mod tests {
                 problem: p,
                 data,
                 kind: LayoutKind::Iris,
+                channels: None,
             })
             .recv()
             .unwrap()
             .unwrap();
         assert!(resp.decode_exact, "parallel pack must stay bit-exact");
-        // The counter only advances when the sharded executor can run.
+        // The counters only advance when the sharded executors can run;
+        // 20k elements clear both the pack-op and decode-element
+        // thresholds.
         if crate::dse::default_threads() > 1 {
             assert!(server.metrics.parallel_packs.load(Ordering::Relaxed) >= 1);
+            assert!(
+                server.metrics.parallel_decodes.load(Ordering::Relaxed) >= 1,
+                "large decodes must shard like large packs"
+            );
         }
         assert!(server.metrics.summary().contains("parallel_packs="));
+        assert!(server.metrics.summary().contains("parallel_decodes="));
+        server.shutdown();
+    }
+
+    #[test]
+    fn multichannel_transfer_roundtrips_with_per_channel_metrics() {
+        let p = synthetic_problem(8, 3);
+        let data = synthetic_data(&p, 3);
+        let server = LayoutServer::start(2, 4);
+        let resp = server
+            .submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+                channels: Some(3),
+            })
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(resp.decode_exact, "multi-channel roundtrip must be exact");
+        assert_eq!(resp.channels, 3);
+        assert_eq!(resp.channel_eff.len(), 3);
+        assert!(resp.b_eff > 0.0 && resp.b_eff <= 1.0);
+        for &u in &resp.channel_eff {
+            assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+        }
+        // Per-channel utilizations sum to k · b_eff by construction.
+        let sum: f64 = resp.channel_eff.iter().sum();
+        assert!((sum - 3.0 * resp.b_eff).abs() < 1e-12);
+        assert_eq!(
+            server.metrics.multichannel_transfers.load(Ordering::Relaxed),
+            1
+        );
+        assert_eq!(server.metrics.channels_served.load(Ordering::Relaxed), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn multichannel_layouts_come_from_the_shared_cache() {
+        let server = LayoutServer::start(1, 2);
+        let mk = || {
+            let p = synthetic_problem(6, 17);
+            let data = synthetic_data(&p, 17);
+            TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+                channels: Some(2),
+            }
+        };
+        let r1 = server.submit(mk()).recv().unwrap().unwrap();
+        let r2 = server.submit(mk()).recv().unwrap().unwrap();
+        assert!(!r1.cache_hit, "first transfer schedules at least one channel");
+        assert!(r2.cache_hit, "repeat transfer hits for every channel");
+        assert_eq!(r1.c_max, r2.c_max);
+        // One miss per distinct channel sub-problem, then all hits.
+        assert!(server.cache.stats().misses <= 2);
+        assert!(server.cache.stats().hits >= 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn infeasible_channel_count_is_an_error_response() {
+        let server = LayoutServer::start(1, 1);
+        let p = synthetic_problem(3, 9);
+        let data = synthetic_data(&p, 9);
+        let result = server
+            .submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+                channels: Some(99),
+            })
+            .recv()
+            .unwrap();
+        assert!(result.is_err(), "k > arrays must be reported, not dropped");
+        assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn channels_one_matches_single_channel_path() {
+        let server = LayoutServer::start(1, 1);
+        let single = server.submit(request(5, 23)).recv().unwrap().unwrap();
+        let mut req = request(5, 23);
+        req.channels = Some(1);
+        let one = server.submit(req).recv().unwrap().unwrap();
+        assert_eq!(one.channels, 1);
+        assert!(one.channel_eff.is_empty());
+        assert_eq!(one.c_max, single.c_max);
+        assert_eq!(one.l_max, single.l_max);
+        assert!((one.b_eff - single.b_eff).abs() < 1e-15);
+        assert_eq!(
+            server.metrics.multichannel_transfers.load(Ordering::Relaxed),
+            0
+        );
         server.shutdown();
     }
 

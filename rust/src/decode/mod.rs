@@ -24,7 +24,7 @@
 
 pub mod program;
 
-pub use program::{DecodeOp, DecodeProgram, DecodeStream};
+pub use program::{DecodeOp, DecodeProgram, DecodeStream, PARALLEL_MIN_ELEMS};
 
 use crate::layout::fifo::FifoAnalysis;
 use crate::layout::Layout;

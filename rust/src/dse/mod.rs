@@ -15,13 +15,13 @@
 //!   (see `rust/tests/properties.rs`).
 
 use crate::baselines;
+use crate::bus::partition::{self, PartitionStrategy, SweepPoint};
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
 use crate::schedule::iris_layout;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// One evaluated design point.
 #[derive(Debug, Clone, PartialEq)]
@@ -120,44 +120,11 @@ impl DseEngine {
     /// Evaluate every spec, fanning out over the worker pool. The result
     /// order matches `specs` exactly regardless of completion order.
     pub fn evaluate_many(&self, specs: &[PointSpec]) -> Vec<DesignPoint> {
-        let n = specs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let threads = self.threads.min(n);
-        if threads <= 1 {
-            return specs
-                .iter()
-                .map(|s| DesignPoint::evaluate_cached(&s.label, s.kind, &s.problem, &self.cache))
-                .collect();
-        }
-        // Work-stealing by atomic cursor; each worker writes only its own
-        // slots, so ordering is deterministic by construction.
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<DesignPoint>>> =
-            specs.iter().map(|_| Mutex::new(None)).collect();
         let cache = &self.cache;
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let s = &specs[i];
-                    let dp = DesignPoint::evaluate_cached(&s.label, s.kind, &s.problem, cache);
-                    *slots[i].lock().expect("slot lock") = Some(dp);
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .expect("slot lock")
-                    .expect("every slot filled before scope exit")
-            })
-            .collect()
+        fan_out(specs.len(), self.threads, |i| {
+            let s = &specs[i];
+            DesignPoint::evaluate_cached(&s.label, s.kind, &s.problem, cache)
+        })
     }
 
     /// Parallel, memoized version of [`delta_sweep`]; identical output.
@@ -204,6 +171,31 @@ impl DseEngine {
         self.evaluate_many(&specs)
     }
 
+    /// Channel-count DSE: evaluate the `k = 1..=max_k` multi-channel
+    /// partitions of `problem` under `strategy`, fanning the `k` values
+    /// out over the worker pool. Per-channel sub-problems are laid out
+    /// through the shared [`LayoutCache`], so channels that reappear
+    /// across `k` values (and across repeated sweeps, or that the serving
+    /// path already solved) are scheduled once. Outcomes are identical to
+    /// the serial [`crate::bus::partition::channel_sweep`], including the
+    /// per-`k` error records for infeasible points.
+    pub fn channel_sweep(
+        &self,
+        problem: &Problem,
+        max_k: usize,
+        strategy: PartitionStrategy,
+    ) -> Vec<SweepPoint> {
+        fan_out(max_k, self.threads, |i| {
+            let k = i + 1;
+            SweepPoint {
+                k,
+                strategy,
+                outcome: partition::partition_with_cache(problem, k, strategy, &self.cache)
+                    .map(|pl| pl.summary(problem.m())),
+            }
+        })
+    }
+
     /// Parallel, memoized version of [`best_width_pair`]: same winner,
     /// same tie-breaking (row-major first-strictly-better), evaluated
     /// across the worker pool.
@@ -234,19 +226,11 @@ impl DseEngine {
     }
 }
 
-/// Default worker count for the crate's scoped-thread fan-outs: one per
-/// available core, clamped to 8. Shared by [`DseEngine`], the compiled
-/// pack/decode parallel executors
-/// ([`crate::pack::PackProgram::pack_parallel`],
-/// [`crate::decode::DecodeProgram::decode_parallel`]), and the
-/// coordinator server's large-transfer path, so the whole stack sizes
-/// its parallelism the same way.
-pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .clamp(1, 8)
-}
+// The scoped-thread substrate lives in `util` (it has no DSE-specific
+// dependencies); re-exported here because the DSE engine is its
+// historical home and the serving/bench call sites address it as
+// `dse::default_threads` / `dse::fan_out`.
+pub use crate::util::{default_threads, fan_out};
 
 /// Table-6 style δ/W sweep: Iris layouts with every array capped to
 /// `ratio` elements per cycle, plus the naive reference. Serial reference
@@ -452,6 +436,43 @@ mod tests {
         assert_eq!(serial.0, parallel.0);
         assert_eq!(serial.1, parallel.1);
         assert!((serial.2 - parallel.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn engine_channel_sweep_matches_serial_and_memoizes() {
+        let p = helmholtz_problem();
+        for strategy in PartitionStrategy::ALL {
+            // max_k = 5 > 3 arrays: the tail points are error records and
+            // must match the serial path too.
+            let serial = partition::channel_sweep(&p, 5, strategy);
+            let engine = DseEngine::new().threads(4);
+            let par = engine.channel_sweep(&p, 5, strategy);
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(par.iter()) {
+                assert_eq!(a.k, b.k);
+                assert_eq!(a.strategy, b.strategy);
+                match (&a.outcome, &b.outcome) {
+                    (Ok(x), Ok(y)) => assert_eq!(x, y),
+                    (Err(x), Err(y)) => assert_eq!(x.to_string(), y.to_string()),
+                    _ => panic!("outcome mismatch at k={}", a.k),
+                }
+            }
+            // A repeat sweep is served entirely from the cache.
+            let misses = engine.cache().stats().misses;
+            let again = engine.channel_sweep(&p, 5, strategy);
+            assert_eq!(engine.cache().stats().misses, misses, "no rescheduling");
+            assert!(engine.cache().stats().hits > 0);
+            assert_eq!(again.len(), par.len());
+        }
+    }
+
+    #[test]
+    fn fan_out_preserves_index_order() {
+        assert!(fan_out(0, 4, |i| i).is_empty());
+        let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+        assert_eq!(fan_out(17, 1, |i| i * i), want);
+        assert_eq!(fan_out(17, 4, |i| i * i), want);
+        assert_eq!(fan_out(17, 64, |i| i * i), want, "more workers than items");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
 //!                        [--wa W] [--wb W] [--algo ...] [--no-xla]
 //!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
+//!                        [--channels K]
 //!   dse                  width search demo [--lo W] [--hi W]
 //!   perf                 quick hot-path perf summary (see EXPERIMENTS.md §Perf)
 
@@ -70,9 +71,9 @@ usage: iris <subcommand> [options]
   layout FILE.json [--algo KIND] [--ascii] [--paper-strict]
   codegen FILE.json [--host] [--hls] [--rust] [--algo KIND]
   e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla]
-  serve [--workers N] [--requests N] [--batch B]
+  serve [--workers N] [--requests N] [--batch B] [--channels K]
   dse [--lo W] [--hi W]
-  channels [FILE.json] [--max-k K]   multi-channel partition sweep
+  channels [FILE.json] [--max-k K]   multi-channel partition sweep (all strategies)
 ";
 
 fn cmd_example() -> Result<()> {
@@ -224,6 +225,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.opt_u64("workers", 4)? as usize;
     let requests = args.opt_u64("requests", 64)?;
     let batch = args.opt_u64("batch", 8)? as usize;
+    // The demo problems have 8 arrays, so clamp a u280-scale request
+    // (e.g. --channels 32) instead of erroring on every transfer.
+    let requested = args.opt_u64("channels", 1)? as usize;
+    let channels = requested.clamp(1, 8);
+    if channels != requested {
+        println!("note: demo problems have 8 arrays; --channels clamped to {channels}");
+    }
+    let channels = (channels > 1).then_some(channels);
     let server = LayoutServer::start(workers, batch);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
@@ -234,6 +243,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 problem: p,
                 data,
                 kind: LayoutKind::Iris,
+                channels,
             })
         })
         .collect();
@@ -265,7 +275,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
 }
 
 fn cmd_channels(args: &Args) -> Result<()> {
-    use iris::bus::partition::channel_sweep;
+    use iris::bus::partition::{channel_sweep, PartitionStrategy};
     let problem = if args.positionals.is_empty() {
         iris::model::helmholtz_problem()
     } else {
@@ -273,20 +283,39 @@ fn cmd_channels(args: &Args) -> Result<()> {
     };
     let max_k = args.opt_u64("max-k", 4)? as usize;
     println!(
-        "multi-channel LPT partition sweep ({} arrays, m={}):",
+        "multi-channel partition sweep ({} arrays, m={}):",
         problem.arrays.len(),
         problem.m()
     );
-    let mut t = iris::util::table::Table::new(vec!["k", "C_max", "L_max", "aggregate eff"]);
-    for (k, c_max, l_max, eff) in channel_sweep(&problem, max_k) {
-        t.row(vec![
-            k.to_string(),
-            c_max.to_string(),
-            l_max.to_string(),
-            iris::util::table::pct(eff),
+    for strategy in PartitionStrategy::ALL {
+        println!("strategy: {}", strategy.name());
+        let mut t = iris::util::table::Table::new(vec![
+            "k",
+            "C_max",
+            "L_max",
+            "aggregate eff",
+            "FIFO bits",
         ]);
+        for pt in channel_sweep(&problem, max_k, strategy) {
+            match &pt.outcome {
+                Ok(s) => t.row(vec![
+                    pt.k.to_string(),
+                    s.c_max.to_string(),
+                    s.l_max.to_string(),
+                    iris::util::table::pct(s.b_eff),
+                    s.fifo_bits.to_string(),
+                ]),
+                Err(e) => t.row(vec![
+                    pt.k.to_string(),
+                    "—".to_string(),
+                    "—".to_string(),
+                    format!("skipped: {e}"),
+                    "—".to_string(),
+                ]),
+            };
+        }
+        print!("{}", t.render());
     }
-    print!("{}", t.render());
     Ok(())
 }
 

@@ -19,7 +19,7 @@
 
 pub mod program;
 
-pub use program::{PackProgram, PackStream, WordOp};
+pub use program::{PackProgram, PackStream, WordOp, PARALLEL_MIN_OPS};
 
 use crate::layout::Layout;
 use crate::model::Problem;

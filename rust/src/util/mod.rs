@@ -33,6 +33,61 @@ pub fn human_bytes(bytes: f64) -> String {
     format!("{v:.2} {}", UNITS[u])
 }
 
+/// Default worker count for the crate's scoped-thread fan-outs: one per
+/// available core, clamped to 8. Shared (via the [`crate::dse`]
+/// re-export) by [`crate::dse::DseEngine`], the compiled pack/decode
+/// parallel executors ([`crate::pack::PackProgram::pack_parallel`],
+/// [`crate::decode::DecodeProgram::decode_parallel`]), the multi-channel
+/// executor, and the coordinator server's large-transfer path, so the
+/// whole stack sizes its parallelism the same way.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 8)
+}
+
+/// The crate's one scoped-thread fan-out: run `f(i)` for `i in 0..n`
+/// across at most `threads` workers (work-stealing by atomic cursor;
+/// each worker writes only its own slots, so result order matches the
+/// index order deterministically regardless of completion order). Runs
+/// serially when `threads <= 1` or `n <= 1`. Shared by
+/// [`crate::dse::DseEngine`] and the channel-parallel executors in
+/// [`crate::bus::multichannel::MultiChannelExecutor`].
+pub fn fan_out<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let threads = threads.min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().expect("slot lock") = Some(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("slot lock")
+                .expect("every slot filled before scope exit")
+        })
+        .collect()
+}
+
 /// Human-readable duration from nanoseconds (ns/µs/ms/s).
 pub fn human_ns(ns: f64) -> String {
     if ns < 1e3 {

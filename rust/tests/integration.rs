@@ -130,7 +130,23 @@ fn server_under_mixed_load() {
         } else {
             LayoutKind::DueAlignedNaive
         };
-        rxs.push((seed, server.submit(TransferRequest { problem: p, data, kind })));
+        // Every third request exercises the multi-channel route with
+        // k cycling over 2..=4 (clamped to the array count so it stays
+        // feasible).
+        let channels = if seed % 3 == 0 {
+            Some(p.arrays.len().min(2 + (seed / 3) as usize % 3))
+        } else {
+            None
+        };
+        rxs.push((
+            seed,
+            server.submit(TransferRequest {
+                problem: p,
+                data,
+                kind,
+                channels,
+            }),
+        ));
     }
     for (seed, rx) in rxs {
         let resp = rx.recv().unwrap().unwrap_or_else(|e| panic!("seed {seed}: {e}"));

@@ -1,0 +1,207 @@
+//! Property suite for the multi-channel subsystem: random problems
+//! (including bus widths not divisible by 64 and element widths that do
+//! not divide `m`) are partitioned under every [`PartitionStrategy`],
+//! executed through the channel-parallel [`MultiChannelExecutor`], and
+//! checked bit-for-bit against the serial per-channel references and the
+//! single-channel path.
+
+use iris::bus::multichannel::MultiChannelExecutor;
+use iris::bus::partition::{
+    channel_sweep, lateness_lower_bound, partition, partition_with_cache, PartitionStrategy,
+    PartitionedLayout,
+};
+use iris::decode::DecodePlan;
+use iris::layout::cache::LayoutCache;
+use iris::model::Problem;
+use iris::pack::PackPlan;
+use iris::schedule::iris_layout;
+use iris::testing::gen::{random_elements, ProblemGen};
+use iris::util::rng::Rng;
+
+/// Generator biased toward awkward geometries: bus widths that are not
+/// multiples of 64, element widths that rarely divide `m`.
+fn awkward_gen() -> ProblemGen {
+    ProblemGen {
+        max_arrays: 9,
+        max_width: 64,
+        max_depth: 96,
+        max_due: 150,
+        bus_widths: vec![24, 56, 96, 100, 120, 250, 256],
+        cap_prob: 0.2,
+    }
+}
+
+fn data_for(p: &Problem, rng: &mut Rng) -> Vec<Vec<u64>> {
+    p.arrays
+        .iter()
+        .map(|a| random_elements(rng, a.width, a.depth))
+        .collect()
+}
+
+#[test]
+fn multichannel_roundtrip_matches_single_channel_and_serial_reference() {
+    let gen = awkward_gen();
+    let mut rng = Rng::new(0x4C11);
+    let mut cases = 0usize;
+    while cases < 40 {
+        let p = gen.generate(&mut rng);
+        if p.arrays.len() < 2 {
+            continue;
+        }
+        cases += 1;
+        let data = data_for(&p, &mut rng);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        // Single-channel reference: pack + decode the unpartitioned
+        // problem.
+        let l = iris_layout(&p);
+        let buf = PackPlan::compile(&l, &p).pack(&refs).unwrap();
+        let single = DecodePlan::compile(&l, &p).decode(&buf).unwrap();
+        assert_eq!(single, data);
+        let max_k = p.arrays.len().min(4);
+        let k = 2 + cases % (max_k - 1).max(1);
+        let k = k.min(max_k);
+        for strategy in PartitionStrategy::ALL {
+            let pl = partition(&p, k, strategy).unwrap();
+            let exec = MultiChannelExecutor::compile(&pl);
+            let serial = exec.pack_serial(&refs).unwrap();
+            let parallel = exec.pack(&refs).unwrap();
+            assert_eq!(
+                serial,
+                parallel,
+                "case {cases} m={} {} k={k}: parallel pack diverged",
+                p.m(),
+                strategy.name()
+            );
+            let d_serial = exec.decode_serial(&serial).unwrap();
+            let d_parallel = exec.decode(&parallel).unwrap();
+            assert_eq!(d_serial, d_parallel, "parallel decode diverged");
+            assert_eq!(
+                d_parallel,
+                single,
+                "case {cases} m={} {} k={k}: multi-channel streams != single-channel",
+                p.m(),
+                strategy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_strategy_preserves_bits_dues_and_bus() {
+    let gen = awkward_gen();
+    let mut rng = Rng::new(0xB175);
+    let mut cases = 0usize;
+    while cases < 40 {
+        let mut p = gen.generate(&mut rng);
+        if p.arrays.len() < 2 {
+            continue;
+        }
+        cases += 1;
+        // Non-default host word size must survive partitioning.
+        p.bus.host_word_bits = 32;
+        let k = 2 + cases % (p.arrays.len() - 1);
+        for strategy in PartitionStrategy::ALL {
+            let pl = partition(&p, k, strategy).unwrap();
+            assert_eq!(pl.strategy, strategy);
+            assert_eq!(pl.channel_of.len(), p.arrays.len());
+            assert_eq!(pl.problems.len(), k);
+            // Total bits preserved.
+            let total: u64 = pl.problems.iter().map(|q| q.total_bits()).sum();
+            assert_eq!(total, p.total_bits(), "{} k={k}", strategy.name());
+            // Every channel non-empty; every sub-array identical to its
+            // original spec (width, depth, due date, cap) in original
+            // relative order; bus config inherited verbatim; the members
+            // lists are the authoritative channel_of ↔ sub-problem map.
+            for (c, q) in pl.problems.iter().enumerate() {
+                assert!(!q.arrays.is_empty(), "channel {c} empty");
+                assert_eq!(q.bus, p.bus, "bus must be inherited");
+                let expect: Vec<_> = p
+                    .arrays
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| pl.channel_of[j] == c)
+                    .map(|(_, a)| a.clone())
+                    .collect();
+                assert_eq!(q.arrays, expect, "{} k={k} channel {c}", strategy.name());
+                let via_members: Vec<_> =
+                    pl.members[c].iter().map(|&j| p.arrays[j].clone()).collect();
+                assert_eq!(q.arrays, via_members, "members must match sub-problem order");
+                for &j in &pl.members[c] {
+                    assert_eq!(pl.channel_of[j], c);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn channel_sweep_records_every_point() {
+    let gen = awkward_gen();
+    let mut rng = Rng::new(0x5EE9);
+    for _ in 0..10 {
+        let p = gen.generate(&mut rng);
+        let n = p.arrays.len();
+        let max_k = n + 3;
+        for strategy in PartitionStrategy::ALL {
+            let sweep = channel_sweep(&p, max_k, strategy);
+            assert_eq!(sweep.len(), max_k, "no silently dropped points");
+            for pt in &sweep {
+                assert_eq!(pt.strategy, strategy);
+                if pt.k <= n {
+                    let s = pt.outcome.as_ref().unwrap_or_else(|e| {
+                        panic!("k={} of n={n} must be feasible: {e}", pt.k)
+                    });
+                    assert!(s.b_eff > 0.0 && s.b_eff <= 1.0);
+                    assert!(s.c_max > 0);
+                } else {
+                    assert!(pt.outcome.is_err(), "k={} > n={n} must error", pt.k);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn refinement_is_lateness_sound_and_cache_transparent() {
+    let gen = awkward_gen();
+    let mut rng = Rng::new(0xF00D);
+    let cache = LayoutCache::new();
+    let bound = |pl: &PartitionedLayout| {
+        pl.problems
+            .iter()
+            .map(lateness_lower_bound)
+            .max()
+            .unwrap()
+    };
+    let mut cases = 0usize;
+    while cases < 25 {
+        let p = gen.generate(&mut rng);
+        if p.arrays.len() < 3 {
+            continue;
+        }
+        cases += 1;
+        let k = 2 + cases % 2;
+        let lpt = partition(&p, k, PartitionStrategy::Lpt).unwrap();
+        let refined = partition(&p, k, PartitionStrategy::LptRefine).unwrap();
+        // The refinement objective's leading term is exactly this bound,
+        // and only strictly-improving moves are accepted.
+        assert!(
+            bound(&refined) <= bound(&lpt),
+            "case {cases}: refine bound {} > lpt bound {}",
+            bound(&refined),
+            bound(&lpt)
+        );
+        // Cache-backed partitioning is transparent: same assignment, same
+        // aggregates.
+        for strategy in PartitionStrategy::ALL {
+            let direct = partition(&p, k, strategy).unwrap();
+            let cached = partition_with_cache(&p, k, strategy, &cache).unwrap();
+            assert_eq!(direct.channel_of, cached.channel_of);
+            assert_eq!(direct.summary(p.m()), cached.summary(p.m()));
+        }
+    }
+    assert!(
+        cache.stats().misses > 0,
+        "cache-backed partitions actually scheduled"
+    );
+}
