@@ -1,0 +1,59 @@
+//! Bench: the cycle-accurate co-simulation subsystem — cost of
+//! executing the generated modules' semantics in software, against the
+//! legacy `StreamDecoder` (the pre-cosim cycle model) and the compiled
+//! word-program decode it validates. Informational (no CI thresholds):
+//! cosim is a validation pass, not a transport.
+
+use iris::baselines;
+use iris::benchkit::{black_box, parse_bench_args, section, Bencher};
+use iris::coordinator::pipeline::synthetic_data;
+use iris::cosim::{Capacity, ReadCosim, WriteCosim};
+use iris::decode::{DecodePlan, DecodeProgram, StreamDecoder};
+use iris::layout::LayoutKind;
+use iris::model::{helmholtz_problem, matmul_problem, Problem};
+use iris::pack::{PackPlan, PackProgram};
+
+fn bench_workload(name: &str, p: &Problem, b: &Bencher) {
+    let l = baselines::generate(LayoutKind::Iris, p);
+    let data = synthetic_data(p, 7);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let prog = PackProgram::compile(&PackPlan::compile(&l, p));
+    let buf = prog.pack(&refs).unwrap();
+    let bytes = p.total_bits() / 8;
+    let b = b.clone().with_bytes(bytes);
+
+    b.run(&format!("cosim read {name} (valued)"), || {
+        black_box(
+            ReadCosim::new(&l, p)
+                .with_capacity(Capacity::Analyzed)
+                .run(&buf)
+                .unwrap(),
+        );
+    });
+    b.run(&format!("cosim read {name} (structural)"), || {
+        black_box(ReadCosim::new(&l, p).run_structural().unwrap());
+    });
+    b.run(&format!("cosim write {name}"), || {
+        black_box(WriteCosim::new(&l, p).run(&refs).unwrap());
+    });
+    let dprog = DecodeProgram::compile(&DecodePlan::compile(&l, p));
+    b.run(&format!("decode {name} (compiled, reference)"), || {
+        black_box(dprog.decode(&buf).unwrap());
+    });
+    b.run(&format!("stream-decoder {name} (legacy cycle model)"), || {
+        let sd = StreamDecoder::new(&l, p);
+        black_box(sd.run(&buf).unwrap());
+    });
+}
+
+fn main() {
+    let args = parse_bench_args();
+    let b = if args.quick {
+        Bencher::smoke()
+    } else {
+        Bencher::quick()
+    };
+    section("cycle-accurate co-simulation");
+    bench_workload("helmholtz", &helmholtz_problem(), &b);
+    bench_workload("matmul(33,31)", &matmul_problem(33, 31), &b);
+}

@@ -65,6 +65,7 @@ fn main() {
                     data,
                     kind: LayoutKind::Iris,
                     channels: None,
+                    cosim: false,
                 })
             })
             .collect();

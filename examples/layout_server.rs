@@ -29,6 +29,7 @@ fn drive(kind: LayoutKind, requests: u64) -> anyhow::Result<(f64, f64, f64)> {
                 data,
                 kind,
                 channels: None,
+                cosim: false,
             }
         })
         .collect();
@@ -79,6 +80,7 @@ fn drive_multichannel(k: usize) -> anyhow::Result<()> {
             data,
             kind: LayoutKind::Iris,
             channels: Some(k),
+            cosim: false,
         })
         .recv()??;
     assert!(resp.decode_exact, "multi-channel decode mismatch");

@@ -12,6 +12,7 @@
 
 pub mod c_host;
 pub mod hls_read;
+pub mod hls_write;
 pub mod rust_pack;
 
 use crate::layout::{Layout, Placement};
@@ -80,20 +81,66 @@ pub struct CodegenInput<'a> {
     pub runs: Vec<Run>,
     /// Function/module base name.
     pub name: String,
+    /// Collision-free identifier per array (same order as
+    /// `problem.arrays`). Sanitization can merge distinct names (`a-1`
+    /// and `a_1` both become `a_1`), which would silently generate
+    /// conflicting C/HLS symbols; duplicates are deduplicated here with
+    /// a numeric suffix, case-insensitively so the derived uppercase
+    /// macro names (`A_1_WIDTH`) stay unique too.
+    idents: Vec<String>,
+}
+
+/// Sanitize every array name and deduplicate collisions
+/// (case-insensitive) with a `_2`, `_3`, … suffix.
+fn dedup_idents(problem: &Problem) -> Vec<String> {
+    let mut used: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    problem
+        .arrays
+        .iter()
+        .map(|a| {
+            let base = ident(&a.name);
+            let mut candidate = base.clone();
+            let mut k = 2u32;
+            while !used.insert(candidate.to_uppercase()) {
+                candidate = format!("{base}_{k}");
+                k += 1;
+            }
+            candidate
+        })
+        .collect()
 }
 
 impl<'a> CodegenInput<'a> {
     pub fn new(problem: &'a Problem, layout: &'a Layout, name: &str) -> CodegenInput<'a> {
+        let idents = dedup_idents(problem);
+        // The suffix loop guarantees uniqueness; keep the invariant
+        // checked so generator changes can't silently regress it.
+        debug_assert_eq!(
+            idents
+                .iter()
+                .map(|s| s.to_uppercase())
+                .collect::<std::collections::BTreeSet<_>>()
+                .len(),
+            idents.len(),
+            "deduplicated identifiers must be unique"
+        );
         CodegenInput {
             problem,
             layout,
             runs: detect_runs(layout),
             name: name.to_string(),
+            idents,
         }
     }
 
+    /// Collision-free identifier of array `a`.
     pub fn array_ident(&self, a: u32) -> String {
-        ident(&self.problem.arrays[a as usize].name)
+        self.idents[a as usize].clone()
+    }
+
+    /// Uppercase macro prefix of array `a` (`{IDENT}_WIDTH`, …).
+    pub fn array_macro(&self, a: u32) -> String {
+        self.idents[a as usize].to_uppercase()
     }
 }
 
@@ -137,5 +184,82 @@ mod tests {
         assert_eq!(ident("my-array"), "my_array");
         assert_eq!(ident("1bad"), "a1bad");
         assert_eq!(ident(""), "a");
+    }
+
+    #[test]
+    fn colliding_names_deduplicate_with_suffix() {
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        // "a-1" and "a_1" both sanitize to "a_1"; "A+1" collides at the
+        // macro (uppercase) level with both.
+        let p = Problem::new(
+            BusConfig::new(64),
+            vec![
+                ArraySpec::new("a-1", 8, 4, 2),
+                ArraySpec::new("a_1", 8, 4, 2),
+                ArraySpec::new("A+1", 8, 4, 2),
+            ],
+        )
+        .unwrap();
+        let l = baselines::generate(crate::layout::LayoutKind::Iris, &p);
+        let input = CodegenInput::new(&p, &l, "pack");
+        let ids: Vec<String> = (0..3).map(|a| input.array_ident(a)).collect();
+        assert_eq!(ids[0], "a_1");
+        assert_eq!(ids[1], "a_1_2");
+        assert_eq!(ids[2], "A_1_3");
+        let macros: std::collections::BTreeSet<String> =
+            (0..3).map(|a| input.array_macro(a)).collect();
+        assert_eq!(macros.len(), 3, "macro prefixes must be unique");
+        // Every generator must emit distinct symbols for the three.
+        let c = c_host::generate(&input);
+        assert!(c.contains("const uint64_t* a_1,") || c.contains("const uint64_t* a_1"));
+        assert!(c.contains("a_1_2"));
+        assert!(c.contains("A_1_3"));
+        let hls = hls_read::generate(&input);
+        assert!(hls.contains("#define A_1_WIDTH"));
+        assert!(hls.contains("#define A_1_2_WIDTH"));
+        assert!(hls.contains("#define A_1_3_WIDTH"));
+    }
+
+    #[test]
+    fn detect_runs_property_maximal_contiguous_exact_cover() {
+        use crate::testing::gen::ProblemGen;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5EED_0A11);
+        let g = ProblemGen::default();
+        for case in 0..60 {
+            let p = g.generate(&mut rng);
+            let kind = match case % 4 {
+                0 => crate::layout::LayoutKind::Iris,
+                1 => crate::layout::LayoutKind::ElementNaive,
+                2 => crate::layout::LayoutKind::PackedNaive,
+                _ => crate::layout::LayoutKind::DueAlignedNaive,
+            };
+            let l = baselines::generate(kind, &p);
+            let runs = detect_runs(&l);
+            // Exact cover: contiguous, starting at 0, ending at n_cycles.
+            let mut next = 0u64;
+            for r in &runs {
+                assert_eq!(r.start, next, "runs must be contiguous ({})", kind.name());
+                assert!(r.len >= 1);
+                // Every covered cycle carries exactly the run's pattern.
+                for t in r.start..r.start + r.len {
+                    assert_eq!(
+                        CyclePattern::of(&l.cycles[t as usize]),
+                        r.pattern,
+                        "cycle {t} disagrees with its run ({})",
+                        kind.name()
+                    );
+                }
+                next = r.start + r.len;
+            }
+            assert_eq!(next, l.n_cycles(), "runs must cover every cycle");
+            // Maximality: adjacent runs never share a pattern.
+            for w in runs.windows(2) {
+                assert_ne!(
+                    w[0].pattern, w[1].pattern,
+                    "adjacent runs with equal patterns must merge"
+                );
+            }
+        }
     }
 }

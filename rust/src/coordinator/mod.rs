@@ -36,6 +36,10 @@ pub struct Metrics {
     /// worker threads (`decode::program::PARALLEL_MIN_ELEMS`) — the
     /// decode-side twin of `parallel_packs`.
     pub parallel_decodes: AtomicU64,
+    /// Transfers that additionally ran the cycle-accurate read-module
+    /// co-simulation (`cosim::ReadCosim`) because the request asked for
+    /// `validate: cosim`.
+    pub cosim_validations: AtomicU64,
     /// Transfers routed over the multi-channel executor
     /// (`bus::multichannel`) because the request asked for `channels > 1`.
     pub multichannel_transfers: AtomicU64,
@@ -108,7 +112,8 @@ impl Metrics {
         format!(
             "requests={} completed={} errors={} batches={} mean_latency={} \
              max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={} \
-             parallel_packs={} parallel_decodes={} multichannel={} channels_served={}",
+             parallel_packs={} parallel_decodes={} multichannel={} channels_served={} \
+             cosim_validations={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -122,6 +127,7 @@ impl Metrics {
             self.parallel_decodes.load(Ordering::Relaxed),
             self.multichannel_transfers.load(Ordering::Relaxed),
             self.channels_served.load(Ordering::Relaxed),
+            self.cosim_validations.load(Ordering::Relaxed),
         )
     }
 }

@@ -76,6 +76,14 @@ pub struct PipelineConfig {
     /// multi-channel executor ([`run_multichannel`]). `None`/`Some(1)`
     /// keeps the single-channel [`run`] transport.
     pub channels: Option<usize>,
+    /// `validate: cosim` mode — additionally execute the generated
+    /// read *and* write modules cycle-by-cycle
+    /// ([`crate::cosim::ReadCosim`] / [`crate::cosim::WriteCosim`],
+    /// FIFOs sized by the static analyses), proving bit-identity with
+    /// the compiled word programs and reporting simulated cycles
+    /// alongside the modeled HBM timing. Off by default: it is a
+    /// validation pass, not a transport.
+    pub cosim: bool,
 }
 
 impl PipelineConfig {
@@ -88,6 +96,7 @@ impl PipelineConfig {
             cache: None,
             compiled: true,
             channels: None,
+            cosim: false,
         }
     }
 
@@ -96,6 +105,25 @@ impl PipelineConfig {
         self.cache = Some(cache);
         self
     }
+}
+
+/// Cycle-accurate co-simulation results of one pipeline run (the
+/// `validate: cosim` mode of [`PipelineConfig`]).
+#[derive(Debug, Clone)]
+pub struct CosimStats {
+    /// Read-module cycles: bus lines + stalls + FIFO drain tail.
+    pub read_cycles: u64,
+    /// Write-module cycles: bus lines + output stalls.
+    pub write_cycles: u64,
+    /// Read-side achieved initiation interval (1.0 = no stalls with the
+    /// analysis-sized FIFOs).
+    pub read_ii: f64,
+    /// Read-side stall cycles (must be 0 with analysis-sized FIFOs).
+    pub read_stalls: u64,
+    /// Read cosim streams bit-identical to the source arrays.
+    pub read_exact: bool,
+    /// Write cosim emitted lines bit-identical to the host packer.
+    pub write_exact: bool,
 }
 
 /// End-to-end results.
@@ -121,6 +149,9 @@ pub struct PipelineReport {
     /// Modeled wall-clock on one u280 HBM channel and achieved GB/s.
     pub hbm_seconds: f64,
     pub hbm_gbs: f64,
+    /// Cycle-accurate co-simulation measurements (None unless
+    /// `cfg.cosim`).
+    pub cosim: Option<CosimStats>,
 }
 
 impl PipelineReport {
@@ -128,10 +159,15 @@ impl PipelineReport {
         self.decode_exact
             && self.xla_unpack_exact.unwrap_or(true)
             && self.max_abs_err <= self.tolerance
+            && self
+                .cosim
+                .as_ref()
+                .map(|c| c.read_exact && c.write_exact && c.read_stalls == 0)
+                .unwrap_or(true)
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} [{}/{}]: C_max={} L_max={} eff={} | pack {} decode {} compute {} | \
              decode_exact={} xla_unpack={:?} max_err={:.2e} (tol {:.1e}) | \
              HBM: {:.1} µs @ {:.2} GB/s",
@@ -150,7 +186,17 @@ impl PipelineReport {
             self.tolerance,
             self.hbm_seconds * 1e6,
             self.hbm_gbs,
-        )
+        );
+        if let Some(c) = &self.cosim {
+            line.push_str(&format!(
+                " | cosim: read {} cyc (II={:.2}) write {} cyc exact={}",
+                c.read_cycles,
+                c.read_ii,
+                c.write_cycles,
+                c.read_exact && c.write_exact,
+            ));
+        }
+        line
     }
 }
 
@@ -256,6 +302,32 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
         bail!("stream decoder produced wrong element order");
     }
 
+    // ------------------------------------------------ cosim validation
+    // Execute both generated modules cycle-by-cycle with FIFOs sized by
+    // the static analyses: the read module must sustain II=1 with zero
+    // stalls and reproduce the source streams; the write module must
+    // emit the host packer's lines bit for bit.
+    let cosim = if cfg.cosim {
+        let read = crate::cosim::ReadCosim::new(&layout, &problem)
+            .with_capacity(crate::cosim::Capacity::Analyzed)
+            .run(&buf)?;
+        let write = crate::cosim::WriteCosim::new(&layout, &problem)
+            .with_capacity(crate::cosim::Capacity::Analyzed)
+            .run(&refs)?;
+        let payload_words = plan.payload_words();
+        Some(CosimStats {
+            read_cycles: read.total_cycles,
+            write_cycles: write.total_cycles,
+            read_ii: read.ii(),
+            read_stalls: read.stall_cycles,
+            read_exact: read.streams == raw_arrays,
+            write_exact: write.emitted.words()[..payload_words]
+                == buf.words()[..payload_words],
+        })
+    } else {
+        None
+    };
+
     // ------------------------------------------------ XLA unpack check
     let mut xla_unpack_exact = None;
     if cfg.xla_unpack_check {
@@ -353,6 +425,7 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
         tolerance,
         hbm_seconds,
         hbm_gbs,
+        cosim,
     })
 }
 
@@ -518,6 +591,42 @@ mod tests {
                 assert!(r.decode_exact, "{}", r.summary());
             }
         }
+    }
+
+    #[test]
+    fn cosim_validation_mode_reports_and_passes() {
+        for wl in [Workload::Helmholtz, Workload::MatMul { w_a: 33, w_b: 31 }] {
+            for kind in [LayoutKind::Iris, LayoutKind::DueAlignedNaive] {
+                let cfg = PipelineConfig {
+                    xla_unpack_check: false,
+                    cosim: true,
+                    ..PipelineConfig::new(wl, kind)
+                };
+                let r = run(&cfg, None).unwrap();
+                let c = r.cosim.as_ref().expect("cosim stats requested");
+                assert!(r.ok(), "{}", r.summary());
+                assert!(c.read_exact && c.write_exact, "{}", r.summary());
+                // Analysis-sized FIFOs sustain II=1 on the read side.
+                assert_eq!(c.read_stalls, 0);
+                assert!((c.read_ii - 1.0).abs() < 1e-12);
+                // Simulated cycles sit alongside (and bound) the modeled
+                // HBM makespan.
+                assert!(c.read_cycles >= r.metrics.c_max);
+                assert!(c.write_cycles >= r.metrics.c_max);
+                assert!(r.summary().contains("cosim: read"));
+            }
+        }
+    }
+
+    #[test]
+    fn cosim_off_by_default() {
+        let cfg = PipelineConfig {
+            xla_unpack_check: false,
+            ..PipelineConfig::new(Workload::MatMul { w_a: 30, w_b: 19 }, LayoutKind::Iris)
+        };
+        let r = run(&cfg, None).unwrap();
+        assert!(r.cosim.is_none());
+        assert!(!r.summary().contains("cosim:"));
     }
 
     #[test]

@@ -42,6 +42,14 @@ pub struct TransferRequest {
     /// single-channel path's intra-transfer sharding can be faster (see
     /// `bus::multichannel` docs).
     pub channels: Option<usize>,
+    /// `validate: cosim` — additionally execute the generated read
+    /// module cycle-by-cycle with analysis-sized FIFOs
+    /// ([`crate::cosim::ReadCosim`]); the response reports simulated
+    /// cycles and achieved II alongside the modeled HBM timing, and a
+    /// cosim/decode mismatch fails the request. On the multi-channel
+    /// path every channel is co-simulated and the slowest one is
+    /// reported (channels stream concurrently).
+    pub cosim: bool,
 }
 
 /// Result returned to the submitter.
@@ -64,6 +72,12 @@ pub struct TransferResponse {
     /// Per-channel utilization of the aggregate streaming window
     /// (payload bits over `C_max · m`); empty on the single-channel path.
     pub channel_eff: Vec<f64>,
+    /// Cosim-measured read-module cycles (bus + stalls + drain tail;
+    /// slowest channel on the multi-channel path). None unless the
+    /// request asked for cosim validation.
+    pub cosim_cycles: Option<u64>,
+    /// Cosim-measured read initiation interval (worst channel).
+    pub cosim_ii: Option<f64>,
 }
 
 /// One δ/W design-space sweep job for the DSE endpoint.
@@ -308,6 +322,20 @@ fn process(
     } else {
         dprog.decode(&buf)?
     };
+    let (cosim_cycles, cosim_ii) = if req.cosim {
+        let trace = crate::cosim::ReadCosim::new(&layout, &req.problem)
+            .with_capacity(crate::cosim::Capacity::Analyzed)
+            .run(&buf)?;
+        if trace.streams != req.data {
+            anyhow::bail!("cosim validation: simulated streams differ from source data");
+        }
+        metrics
+            .cosim_validations
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        (Some(trace.total_cycles), Some(trace.ii()))
+    } else {
+        (None, None)
+    };
     let channel = HbmChannel::alveo_u280();
     Ok(TransferResponse {
         c_max: layout_metrics.c_max,
@@ -319,6 +347,8 @@ fn process(
         cache_hit,
         channels: 1,
         channel_eff: Vec::new(),
+        cosim_cycles,
+        cosim_ii,
     })
 }
 
@@ -343,6 +373,38 @@ fn process_multichannel(
     let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
     let bufs = exec.pack(&refs)?;
     let decoded = exec.decode(&bufs)?;
+    // Per-channel cosim: channels stream concurrently, so the slowest
+    // simulated channel is the figure that sits alongside the modeled
+    // aggregate HBM time.
+    let (cosim_cycles, cosim_ii) = if req.cosim {
+        let mut worst_cycles = 0u64;
+        let mut worst_ii = 1.0f64;
+        for (c, buf) in bufs.iter().enumerate() {
+            let trace = crate::cosim::ReadCosim::new(&pl.layouts[c], &pl.problems[c])
+                .with_capacity(crate::cosim::Capacity::Analyzed)
+                .run(buf)?;
+            let expect: Vec<&[u64]> = pl.members[c].iter().map(|&j| refs[j]).collect();
+            let exact = trace.streams.len() == expect.len()
+                && trace
+                    .streams
+                    .iter()
+                    .zip(expect.iter())
+                    .all(|(s, e)| s.as_slice() == *e);
+            if !exact {
+                anyhow::bail!(
+                    "cosim validation: channel {c} streams differ from source data"
+                );
+            }
+            worst_cycles = worst_cycles.max(trace.total_cycles);
+            worst_ii = worst_ii.max(trace.ii());
+        }
+        metrics
+            .cosim_validations
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        (Some(worst_cycles), Some(worst_ii))
+    } else {
+        (None, None)
+    };
     // Counted only once the transfer actually went through the
     // multi-channel executor (failed requests land in `errors`, not
     // here).
@@ -360,6 +422,8 @@ fn process_multichannel(
         cache_hit: all_hit,
         channels: k,
         channel_eff: pl.channel_utilization(m),
+        cosim_cycles,
+        cosim_ii,
     })
 }
 
@@ -377,6 +441,7 @@ mod tests {
             data,
             kind: LayoutKind::Iris,
             channels: None,
+            cosim: false,
         }
     }
 
@@ -503,6 +568,7 @@ mod tests {
                 data,
                 kind: LayoutKind::Iris,
                 channels: None,
+                cosim: false,
             })
             .recv()
             .unwrap()
@@ -534,6 +600,7 @@ mod tests {
                 data,
                 kind: LayoutKind::Iris,
                 channels: Some(3),
+                cosim: false,
             })
             .recv()
             .unwrap()
@@ -567,6 +634,7 @@ mod tests {
                 data,
                 kind: LayoutKind::Iris,
                 channels: Some(2),
+                cosim: false,
             }
         };
         let r1 = server.submit(mk()).recv().unwrap().unwrap();
@@ -591,6 +659,7 @@ mod tests {
                 data,
                 kind: LayoutKind::Iris,
                 channels: Some(99),
+                cosim: false,
             })
             .recv()
             .unwrap();
@@ -626,6 +695,55 @@ mod tests {
         assert!(!r1.cache_hit);
         assert!(r2.cache_hit);
         assert_eq!(r1.c_max, r2.c_max);
+        server.shutdown();
+    }
+
+    #[test]
+    fn cosim_validated_transfer_reports_simulated_cycles() {
+        let server = LayoutServer::start(2, 2);
+        let plain = server.submit(request(5, 41)).recv().unwrap().unwrap();
+        assert!(plain.cosim_cycles.is_none() && plain.cosim_ii.is_none());
+        let mut req = request(5, 41);
+        req.cosim = true;
+        let resp = server.submit(req).recv().unwrap().unwrap();
+        assert!(resp.decode_exact);
+        // Same transport result, plus the simulated-cycle report.
+        assert_eq!(resp.c_max, plain.c_max);
+        let cycles = resp.cosim_cycles.expect("cosim requested");
+        let ii = resp.cosim_ii.expect("cosim requested");
+        // The kernel sees at least the bus makespan, and analysis-sized
+        // FIFOs sustain II=1.
+        assert!(cycles >= resp.c_max);
+        assert!((ii - 1.0).abs() < 1e-12);
+        assert_eq!(server.metrics.cosim_validations.load(Ordering::Relaxed), 1);
+        assert!(server.metrics.summary().contains("cosim_validations=1"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn cosim_validated_multichannel_transfer_reports_worst_channel() {
+        let p = synthetic_problem(8, 13);
+        let data = synthetic_data(&p, 13);
+        let server = LayoutServer::start(2, 2);
+        let resp = server
+            .submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+                channels: Some(3),
+                cosim: true,
+            })
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(resp.decode_exact);
+        assert_eq!(resp.channels, 3);
+        let cycles = resp.cosim_cycles.expect("cosim requested");
+        // Channels stream concurrently: the worst simulated channel is
+        // at least the aggregate makespan.
+        assert!(cycles >= resp.c_max);
+        assert!((resp.cosim_ii.unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(server.metrics.cosim_validations.load(Ordering::Relaxed), 1);
         server.shutdown();
     }
 }

@@ -1,0 +1,90 @@
+//! Cycle-accurate accelerator co-simulation (the software analogue of
+//! RTL/C co-simulation in an HLS flow).
+//!
+//! The repo *emits* the paper's interface hardware (`codegen::hls_read`,
+//! `codegen::hls_write`) and *estimates* its cost (`hls::estimate`), but
+//! until this subsystem nothing ever executed those modules' semantics —
+//! FIFO depths, II claims, and stall behavior were unverified
+//! assertions. The co-simulator closes that loop the way HLS authors
+//! validate transformed kernels before synthesis (de Fine Licht et al.,
+//! *Transformations of HLS Codes for HPC*): it steps the generated
+//! modules' state machines one clock cycle at a time and measures what
+//! the static analyses only predict.
+//!
+//! Two directions, mirroring the two generated modules:
+//!
+//! * [`ReadCosim`] — the HBM→accelerator data-read module (Listing 2):
+//!   each cycle it ingests one m-bit bus line of a packed buffer, routes
+//!   every element on it into that array's FIFO/shift register, and
+//!   drains at most one element per array per cycle into the modeled
+//!   kernel. With bounded FIFOs ([`Capacity::Fixed`] /
+//!   [`Capacity::Analyzed`]) an over-full cycle *stalls* the bus
+//!   (backpressure: the line is retried, the achieved initiation
+//!   interval rises above 1) and an arrival burst that can never fit is
+//!   reported as a FIFO overflow error.
+//! * [`WriteCosim`] — the missing accelerator→HBM direction (Listing-3
+//!   style `hls_write`): the modeled kernel *produces* one element per
+//!   array per cycle into per-array FIFOs; the write module assembles
+//!   and emits bus line `t` once every element that line carries has
+//!   been produced, stalling the output bus otherwise.
+//!
+//! Both traces cross-check against the static sizing analyses
+//! ([`crate::layout::fifo::FifoAnalysis`] for the read direction,
+//! [`crate::layout::fifo::WriteFifoAnalysis`] for the write direction):
+//! on a stall-free run the *measured* peak backlog must equal the
+//! analyzed depth per array — proving the analyzed depths are both
+//! sufficient (no overflow at that capacity) and tight (the peak is
+//! reached). Bit-identity with the compiled word programs
+//! ([`crate::decode::DecodeProgram`], [`crate::pack::PackProgram`]) is
+//! verified by the property suite in `rust/tests/cosim.rs`.
+//!
+//! What this models vs. real Vitis co-simulation is documented in
+//! DESIGN.md §Co-Simulation.
+
+pub mod read;
+pub mod write;
+
+pub use read::{ReadCosim, ReadTrace};
+pub use write::{WriteCosim, WriteTrace};
+
+use crate::layout::fifo::{FifoAnalysis, WriteFifoAnalysis};
+use crate::layout::Layout;
+use crate::model::Problem;
+
+/// FIFO capacity model for a co-simulation run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Capacity {
+    /// FIFOs grow without bound; the run measures the depth a real
+    /// module would need (never stalls, never overflows).
+    Unbounded,
+    /// Per-array capacities taken from the direction's static analysis
+    /// ([`FifoAnalysis`] for reads, [`WriteFifoAnalysis`] for writes).
+    /// A correct analysis makes this run identical to [`Capacity::Unbounded`].
+    Analyzed,
+    /// Explicit per-array capacities (elements). Shorter than the
+    /// analyzed depth ⇒ the module stalls (or overflows when a single
+    /// burst can never fit).
+    Fixed(Vec<u64>),
+}
+
+impl Capacity {
+    /// Resolve to per-array element capacities for the read direction
+    /// (`None` = unbounded).
+    pub(crate) fn resolve_read(&self, layout: &Layout, problem: &Problem) -> Option<Vec<u64>> {
+        match self {
+            Capacity::Unbounded => None,
+            Capacity::Analyzed => Some(FifoAnalysis::compute(layout, problem).depth),
+            Capacity::Fixed(caps) => Some(caps.clone()),
+        }
+    }
+
+    /// Resolve to per-array element capacities for the write direction
+    /// (`None` = unbounded).
+    pub(crate) fn resolve_write(&self, layout: &Layout, problem: &Problem) -> Option<Vec<u64>> {
+        match self {
+            Capacity::Unbounded => None,
+            Capacity::Analyzed => Some(WriteFifoAnalysis::compute(layout, problem).depth),
+            Capacity::Fixed(caps) => Some(caps.clone()),
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Cycle-accurate model of the generated data-read module
+//! (`codegen::hls_read`, paper §5 Listing 2).
+//!
+//! State machine, one step per clock cycle:
+//!
+//! 1. **Ingest** — if bus lines remain, the module attempts to accept
+//!    line `t`: every element on the line is pushed into its array's
+//!    FIFO. Under a bounded [`Capacity`] the line is accepted only if
+//!    every receiving FIFO can hold its arrivals after this cycle's
+//!    drain; otherwise the module *stalls* (backpressure on the bus —
+//!    the line is retried next cycle and the achieved II rises above 1).
+//!    A burst that can never fit (`arrivals − 1 > capacity` with an
+//!    empty FIFO) is a hard **overflow** and errors out.
+//! 2. **Drain** — every array whose stream has started forwards at most
+//!    one element per cycle to the kernel (the 1-element/cycle
+//!    consumption model of [`FifoAnalysis`]); a started-but-empty FIFO
+//!    wastes its drain slot and counts an **underflow** (kernel
+//!    starvation) cycle.
+//! 3. Peak backlog is recorded *after* the drain, matching the
+//!    [`FifoAnalysis`] recurrence bit for bit — so on a stall-free run
+//!    the measured peaks must equal the analyzed depths exactly
+//!    ([`ReadTrace::verify_against_analysis`]).
+//!
+//! After the last line, FIFOs drain one element per cycle until empty
+//! (the tail the kernel still has to consume).
+
+use super::Capacity;
+use crate::layout::fifo::FifoAnalysis;
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Cycle-accurate read-module co-simulator.
+pub struct ReadCosim<'a> {
+    layout: &'a Layout,
+    problem: &'a Problem,
+    capacity: Capacity,
+}
+
+/// Everything one read co-simulation run measured.
+#[derive(Debug, Clone)]
+pub struct ReadTrace {
+    /// Decoded per-array element streams, in kernel consumption order.
+    /// Empty in structural mode ([`ReadCosim::run_structural`]).
+    pub streams: Vec<Vec<u64>>,
+    /// Whether `streams` carries real data (false for structural runs).
+    pub values_tracked: bool,
+    /// Measured peak FIFO backlog per array (post-drain, elements).
+    pub peak_backlog: Vec<u64>,
+    /// Measured peak same-cycle arrivals per array (= write ports the
+    /// FIFO needs).
+    pub peak_ports: Vec<u32>,
+    /// Bus lines ingested (= layout cycles).
+    pub bus_cycles: u64,
+    /// Total simulated cycles: ingest cycles + stalls + drain tail.
+    pub total_cycles: u64,
+    /// Cycles the bus was stalled by a full FIFO.
+    pub stall_cycles: u64,
+    /// Per-array kernel-starvation cycles (started, incomplete, FIFO
+    /// empty at drain time).
+    pub underflow_cycles: Vec<u64>,
+    /// Cycle (1-based) at which each array's stream completed.
+    pub stream_completion: Vec<u64>,
+}
+
+impl ReadTrace {
+    /// Achieved initiation interval over the bus lines: 1.0 when no
+    /// cycle stalled.
+    pub fn ii(&self) -> f64 {
+        if self.bus_cycles == 0 {
+            return 1.0;
+        }
+        (self.bus_cycles + self.stall_cycles) as f64 / self.bus_cycles as f64
+    }
+
+    /// Σ measured-peak-backlog · W — the storage a module sized by this
+    /// run would instantiate.
+    pub fn fifo_bits(&self, problem: &Problem) -> u64 {
+        self.peak_backlog
+            .iter()
+            .zip(problem.arrays.iter())
+            .map(|(d, a)| d * a.width as u64)
+            .sum()
+    }
+
+    /// Prove the static analysis sufficient *and* tight: on a stall-free
+    /// run the measured peak backlog and ports must equal
+    /// [`FifoAnalysis`] exactly, per array.
+    pub fn verify_against_analysis(&self, layout: &Layout, problem: &Problem) -> Result<()> {
+        if self.stall_cycles > 0 {
+            bail!(
+                "cosim: analysis comparison needs a stall-free run \
+                 ({} stall cycles observed)",
+                self.stall_cycles
+            );
+        }
+        let fa = FifoAnalysis::compute(layout, problem);
+        for (a, spec) in problem.arrays.iter().enumerate() {
+            if self.peak_backlog[a] != fa.depth[a] {
+                bail!(
+                    "array '{}': measured backlog {} != analyzed depth {}",
+                    spec.name,
+                    self.peak_backlog[a],
+                    fa.depth[a]
+                );
+            }
+            if self.peak_ports[a] != fa.write_ports[a] {
+                bail!(
+                    "array '{}': measured ports {} != analyzed ports {}",
+                    spec.name,
+                    self.peak_ports[a],
+                    fa.write_ports[a]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<'a> ReadCosim<'a> {
+    /// Co-simulator with unbounded FIFOs (measurement mode).
+    pub fn new(layout: &'a Layout, problem: &'a Problem) -> ReadCosim<'a> {
+        ReadCosim {
+            layout,
+            problem,
+            capacity: Capacity::Unbounded,
+        }
+    }
+
+    /// Builder-style capacity model.
+    pub fn with_capacity(mut self, capacity: Capacity) -> ReadCosim<'a> {
+        self.capacity = capacity;
+        self
+    }
+
+    /// Run over a packed buffer (e.g. produced by
+    /// [`crate::pack::PackProgram::pack`]), tracking element values so
+    /// the decoded streams can be compared bit-for-bit against
+    /// [`crate::decode::DecodeProgram::decode`].
+    pub fn run(&self, buf: &BitVec) -> Result<ReadTrace> {
+        let need = self.layout.n_cycles() * self.layout.m as u64;
+        if (buf.len_bits() as u64) < need {
+            bail!(
+                "read cosim: buffer has {} bits, layout spans {need}",
+                buf.len_bits()
+            );
+        }
+        self.run_impl(Some(buf))
+    }
+
+    /// Run over the word-tiles of a streaming packer (e.g.
+    /// [`crate::pack::PackStream`]): tiles are concatenated into the bus
+    /// buffer the module would observe, then simulated line by line —
+    /// bit-identical to [`ReadCosim::run`] on the fully packed buffer.
+    pub fn run_tiles<I>(&self, tiles: I) -> Result<ReadTrace>
+    where
+        I: IntoIterator<Item = Vec<u64>>,
+    {
+        let mut words: Vec<u64> = Vec::new();
+        for tile in tiles {
+            words.extend_from_slice(&tile);
+        }
+        let bits = words.len() * 64;
+        self.run(&BitVec::from_words(words, bits))
+    }
+
+    /// Structural run: no data values, only occupancy/stall/latency
+    /// measurements. This is what the resource-aware DSE mode uses — the
+    /// cycle behavior of a layout is independent of the bits it carries.
+    pub fn run_structural(&self) -> Result<ReadTrace> {
+        self.run_impl(None)
+    }
+
+    fn run_impl(&self, buf: Option<&BitVec>) -> Result<ReadTrace> {
+        let n = self.problem.arrays.len();
+        let m = self.layout.m as u64;
+        let caps = self.capacity.resolve_read(self.layout, self.problem);
+        if let Some(caps) = &caps {
+            if caps.len() != n {
+                bail!(
+                    "read cosim: {} capacities for {} arrays",
+                    caps.len(),
+                    n
+                );
+            }
+        }
+        let c = self.layout.cycles.len();
+        let mut fifos: Vec<VecDeque<u64>> = vec![VecDeque::new(); n];
+        let mut streams: Vec<Vec<u64>> = if buf.is_some() {
+            self.problem
+                .arrays
+                .iter()
+                .map(|a| Vec::with_capacity(a.depth as usize))
+                .collect()
+        } else {
+            vec![Vec::new(); n]
+        };
+        let mut received = vec![0u64; n];
+        let mut popped = vec![0u64; n];
+        let mut peak_backlog = vec![0u64; n];
+        let mut peak_ports = vec![0u32; n];
+        let mut underflow = vec![0u64; n];
+        let mut completion = vec![0u64; n];
+        let mut arrivals = vec![0u32; n];
+        let mut stalls = 0u64;
+        let mut t = 0u64;
+        let mut li = 0usize;
+        // Progress argument: every stall cycle drains at least one
+        // element from a blocking FIFO (an empty blocking FIFO errors
+        // out instead), so the run is bounded by lines + total elements.
+        let budget = c as u64
+            + self.layout.total_elements()
+            + self
+                .problem
+                .arrays
+                .iter()
+                .map(|a| a.depth)
+                .max()
+                .unwrap_or(0)
+            + 2;
+        loop {
+            let ingesting = li < c;
+            if !ingesting && fifos.iter().all(|f| f.is_empty()) {
+                break;
+            }
+            if t > budget {
+                bail!("read cosim: no progress after {t} cycles (internal error)");
+            }
+            if ingesting {
+                let ps = &self.layout.cycles[li];
+                arrivals.iter_mut().for_each(|x| *x = 0);
+                for p in ps {
+                    arrivals[p.array as usize] += 1;
+                }
+                // Admission: after this cycle's drain, every receiving
+                // FIFO must fit within its capacity.
+                let mut admit = true;
+                if let Some(caps) = &caps {
+                    for a in 0..n {
+                        if arrivals[a] == 0 {
+                            continue;
+                        }
+                        let post = fifos[a].len() as u64 + arrivals[a] as u64 - 1;
+                        if post > caps[a] {
+                            if fifos[a].is_empty() {
+                                bail!(
+                                    "read cosim: FIFO overflow on array '{}' — cycle {li} \
+                                     delivers {} elements but capacity {} can never hold \
+                                     them (needs depth ≥ {})",
+                                    self.problem.arrays[a].name,
+                                    arrivals[a],
+                                    caps[a],
+                                    arrivals[a] - 1
+                                );
+                            }
+                            admit = false;
+                        }
+                    }
+                }
+                if admit {
+                    let base = li as u64 * m;
+                    for p in ps {
+                        let a = p.array as usize;
+                        let v = match buf {
+                            Some(buf) => buf.get_bits((base + p.bit_lo as u64) as usize, p.width),
+                            None => 0,
+                        };
+                        fifos[a].push_back(v);
+                        received[a] += 1;
+                    }
+                    for a in 0..n {
+                        peak_ports[a] = peak_ports[a].max(arrivals[a]);
+                    }
+                    li += 1;
+                } else {
+                    stalls += 1;
+                }
+            }
+            // Drain phase: one element per started array per cycle.
+            for a in 0..n {
+                if let Some(v) = fifos[a].pop_front() {
+                    if buf.is_some() {
+                        streams[a].push(v);
+                    }
+                    popped[a] += 1;
+                    if popped[a] == self.problem.arrays[a].depth {
+                        completion[a] = t + 1;
+                    }
+                } else if received[a] > 0 && popped[a] < self.problem.arrays[a].depth {
+                    underflow[a] += 1;
+                }
+                peak_backlog[a] = peak_backlog[a].max(fifos[a].len() as u64);
+            }
+            t += 1;
+        }
+        Ok(ReadTrace {
+            streams,
+            values_tracked: buf.is_some(),
+            peak_backlog,
+            peak_ports,
+            bus_cycles: c as u64,
+            total_cycles: t,
+            stall_cycles: stalls,
+            underflow_cycles: underflow,
+            stream_completion: completion,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{helmholtz_problem, paper_example, Problem};
+    use crate::pack::PackPlan;
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn packed(p: &Problem, kind: LayoutKind, seed: u64) -> (Layout, BitVec, Vec<Vec<u64>>) {
+        let l = baselines::generate(kind, p);
+        let mut rng = Rng::new(seed);
+        let arrays: Vec<Vec<u64>> = p
+            .arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect();
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = PackPlan::compile(&l, p).pack(&refs).unwrap();
+        (l, buf, arrays)
+    }
+
+    #[test]
+    fn unbounded_run_is_bit_exact_and_tight() {
+        let p = paper_example();
+        let (l, buf, arrays) = packed(&p, LayoutKind::Iris, 0xC0);
+        let trace = ReadCosim::new(&l, &p).run(&buf).unwrap();
+        assert_eq!(trace.streams, arrays);
+        assert_eq!(trace.stall_cycles, 0);
+        assert!((trace.ii() - 1.0).abs() < 1e-12);
+        trace.verify_against_analysis(&l, &p).unwrap();
+    }
+
+    #[test]
+    fn analyzed_capacity_never_stalls() {
+        for kind in [
+            LayoutKind::Iris,
+            LayoutKind::ElementNaive,
+            LayoutKind::PackedNaive,
+            LayoutKind::DueAlignedNaive,
+        ] {
+            let p = paper_example();
+            let (l, buf, arrays) = packed(&p, kind, 7);
+            let trace = ReadCosim::new(&l, &p)
+                .with_capacity(Capacity::Analyzed)
+                .run(&buf)
+                .unwrap();
+            assert_eq!(trace.streams, arrays, "{}", kind.name());
+            assert_eq!(trace.stall_cycles, 0, "{}", kind.name());
+            trace.verify_against_analysis(&l, &p).unwrap();
+        }
+    }
+
+    #[test]
+    fn undersized_fifo_stalls_the_bus() {
+        // Helmholtz naive: u needs depth 998; a 997-deep FIFO must stall
+        // (the arrivals per cycle are 4, so it stalls rather than
+        // overflows), and every stall pushes II above 1.
+        let p = helmholtz_problem();
+        let (l, buf, arrays) = packed(&p, LayoutKind::DueAlignedNaive, 3);
+        let fa = FifoAnalysis::compute(&l, &p);
+        let mut caps = fa.depth.clone();
+        let iu = p.array_index("u").unwrap();
+        assert_eq!(caps[iu], 998);
+        caps[iu] = 997;
+        let trace = ReadCosim::new(&l, &p)
+            .with_capacity(Capacity::Fixed(caps))
+            .run(&buf)
+            .unwrap();
+        assert!(trace.stall_cycles > 0);
+        assert!(trace.ii() > 1.0);
+        // Stalls delay but never corrupt: the streams stay bit-exact.
+        assert_eq!(trace.streams, arrays);
+        assert!(trace.total_cycles > l.n_cycles());
+    }
+
+    #[test]
+    fn impossible_burst_is_an_overflow_error() {
+        // 4 A-elements land in one cycle of the packed-naive paper
+        // layout; a 2-deep FIFO can never admit that line.
+        let p = paper_example();
+        let (l, buf, _) = packed(&p, LayoutKind::PackedNaive, 9);
+        let caps = vec![2u64; p.arrays.len()];
+        let err = ReadCosim::new(&l, &p)
+            .with_capacity(Capacity::Fixed(caps))
+            .run(&buf)
+            .unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn structural_run_matches_valued_run() {
+        let p = helmholtz_problem();
+        let (l, buf, _) = packed(&p, LayoutKind::Iris, 5);
+        let valued = ReadCosim::new(&l, &p).run(&buf).unwrap();
+        let structural = ReadCosim::new(&l, &p).run_structural().unwrap();
+        assert!(!structural.values_tracked);
+        assert!(structural.streams.iter().all(|s| s.is_empty()));
+        assert_eq!(structural.peak_backlog, valued.peak_backlog);
+        assert_eq!(structural.peak_ports, valued.peak_ports);
+        assert_eq!(structural.total_cycles, valued.total_cycles);
+        assert_eq!(structural.stall_cycles, valued.stall_cycles);
+        assert_eq!(structural.stream_completion, valued.stream_completion);
+    }
+
+    #[test]
+    fn rejects_short_buffer() {
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::Iris, &p);
+        let buf = BitVec::zeros(8);
+        assert!(ReadCosim::new(&l, &p).run(&buf).is_err());
+    }
+}

@@ -1,0 +1,380 @@
+//! Cycle-accurate model of the generated data-write module
+//! (`codegen::hls_write`, the accelerator→HBM mirror of Listing 2).
+//!
+//! State machine, one step per clock cycle:
+//!
+//! 1. **Produce** — the modeled kernel pushes the next element of every
+//!    unfinished array into that array's write FIFO (one element per
+//!    array per cycle, mirroring the read side's drain rate). Under a
+//!    bounded [`Capacity`] a full FIFO back-pressures the kernel: that
+//!    array's production pauses for the cycle.
+//! 2. **Emit** — the write module assembles bus line `t` as soon as
+//!    every element the line carries is in flight, popping the FIFOs in
+//!    element order and placing each value at its layout bit lane;
+//!    otherwise the output bus *stalls* for the cycle. A line whose
+//!    burst can never be buffered (capacity below the line's element
+//!    count, or the kernel already exhausted) is a hard error.
+//!
+//! Peak in-flight occupancy is recorded between the two phases, matching
+//! the [`WriteFifoAnalysis`] recurrence bit for bit, so an unbounded (or
+//! analyzed-capacity) run must reproduce the analyzed depths, ports, and
+//! stall counts exactly ([`WriteTrace::verify_against_analysis`]) and
+//! the emitted buffer must be bit-identical to
+//! [`crate::pack::PackProgram::pack`]'s payload.
+
+use super::Capacity;
+use crate::layout::fifo::WriteFifoAnalysis;
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Cycle-accurate write-module co-simulator.
+pub struct WriteCosim<'a> {
+    layout: &'a Layout,
+    problem: &'a Problem,
+    capacity: Capacity,
+}
+
+/// Everything one write co-simulation run measured.
+#[derive(Debug, Clone)]
+pub struct WriteTrace {
+    /// The emitted bus buffer: `layout cycles × m` payload bits, built
+    /// line by line. Bit-identical to the host packer's payload.
+    pub emitted: BitVec,
+    /// Measured peak in-flight elements per array (post-production,
+    /// pre-emission — the instant the hardware holds the most state).
+    pub peak_inflight: Vec<u64>,
+    /// Measured peak same-line element count per array (= FIFO read
+    /// ports).
+    pub peak_ports: Vec<u32>,
+    /// Bus lines emitted (= layout cycles).
+    pub bus_cycles: u64,
+    /// Total simulated cycles (`bus_cycles + stall_cycles`).
+    pub total_cycles: u64,
+    /// Cycles the output bus stalled waiting for the kernel.
+    pub stall_cycles: u64,
+    /// Per-array cycles the kernel was back-pressured by a full FIFO.
+    pub producer_stall_cycles: Vec<u64>,
+}
+
+impl WriteTrace {
+    /// Achieved initiation interval over the emitted lines.
+    pub fn ii(&self) -> f64 {
+        if self.bus_cycles == 0 {
+            return 1.0;
+        }
+        (self.bus_cycles + self.stall_cycles) as f64 / self.bus_cycles as f64
+    }
+
+    /// Σ measured-peak-inflight · W.
+    pub fn fifo_bits(&self, problem: &Problem) -> u64 {
+        self.peak_inflight
+            .iter()
+            .zip(problem.arrays.iter())
+            .map(|(d, a)| d * a.width as u64)
+            .sum()
+    }
+
+    /// Prove [`WriteFifoAnalysis`] sufficient and tight: an unbounded or
+    /// analyzed-capacity run must measure exactly the analyzed depths,
+    /// ports, and stall count.
+    pub fn verify_against_analysis(&self, layout: &Layout, problem: &Problem) -> Result<()> {
+        let wa = WriteFifoAnalysis::compute(layout, problem);
+        if self.stall_cycles != wa.stall_cycles || self.total_cycles != wa.total_cycles {
+            bail!(
+                "write cosim: measured {} stalls / {} cycles != analyzed {} / {}",
+                self.stall_cycles,
+                self.total_cycles,
+                wa.stall_cycles,
+                wa.total_cycles
+            );
+        }
+        for (a, spec) in problem.arrays.iter().enumerate() {
+            if self.peak_inflight[a] != wa.depth[a] {
+                bail!(
+                    "array '{}': measured in-flight {} != analyzed depth {}",
+                    spec.name,
+                    self.peak_inflight[a],
+                    wa.depth[a]
+                );
+            }
+            if self.peak_ports[a] != wa.read_ports[a] {
+                bail!(
+                    "array '{}': measured read ports {} != analyzed {}",
+                    spec.name,
+                    self.peak_ports[a],
+                    wa.read_ports[a]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<'a> WriteCosim<'a> {
+    /// Co-simulator with unbounded write FIFOs (measurement mode).
+    pub fn new(layout: &'a Layout, problem: &'a Problem) -> WriteCosim<'a> {
+        WriteCosim {
+            layout,
+            problem,
+            capacity: Capacity::Unbounded,
+        }
+    }
+
+    /// Builder-style capacity model.
+    pub fn with_capacity(mut self, capacity: Capacity) -> WriteCosim<'a> {
+        self.capacity = capacity;
+        self
+    }
+
+    /// Run the write module over the kernel's output streams (`arrays`,
+    /// one slice per array in problem order, low `W` bits significant).
+    pub fn run(&self, arrays: &[&[u64]]) -> Result<WriteTrace> {
+        let n = self.problem.arrays.len();
+        if arrays.len() != n {
+            bail!("write cosim: {} arrays for {}-array problem", arrays.len(), n);
+        }
+        for (a, spec) in self.problem.arrays.iter().enumerate() {
+            if arrays[a].len() as u64 != spec.depth {
+                bail!(
+                    "write cosim: array '{}' has {} elements, expected {}",
+                    spec.name,
+                    arrays[a].len(),
+                    spec.depth
+                );
+            }
+            if spec.width < 64 && arrays[a].iter().any(|&v| v >> spec.width != 0) {
+                bail!(
+                    "write cosim: array '{}' carries a value wider than {} bits",
+                    spec.name,
+                    spec.width
+                );
+            }
+        }
+        let m = self.layout.m as u64;
+        let c = self.layout.cycles.len();
+        let caps = self.capacity.resolve_write(self.layout, self.problem);
+        if let Some(caps) = &caps {
+            if caps.len() != n {
+                bail!("write cosim: {} capacities for {} arrays", caps.len(), n);
+            }
+        }
+        let payload_words = crate::util::ceil_div(c as u64 * m, 64) as usize;
+        let mut emitted = BitVec::zeros(payload_words * 64);
+        let mut fifos: Vec<VecDeque<u64>> = vec![VecDeque::new(); n];
+        let mut produced = vec![0u64; n];
+        let mut peak_inflight = vec![0u64; n];
+        let mut peak_ports = vec![0u32; n];
+        let mut producer_stalls = vec![0u64; n];
+        let mut need = vec![0u32; n];
+        let mut stalls = 0u64;
+        let mut t = 0u64;
+        let mut li = 0usize;
+        // Lines sorted by (array, element) so FIFO pops land on the
+        // right lanes; per-array element order is a layout invariant
+        // (`layout::validate`).
+        let mut line: Vec<crate::layout::Placement> = Vec::new();
+        let budget = c as u64
+            + self.problem.arrays.iter().map(|a| a.depth).sum::<u64>()
+            + 2;
+        while li < c {
+            if t > budget {
+                bail!("write cosim: no progress after {t} cycles (internal error)");
+            }
+            // Produce: one element per unfinished array, unless the
+            // FIFO is at capacity (kernel back-pressure).
+            for a in 0..n {
+                if produced[a] < self.problem.arrays[a].depth {
+                    let full = caps
+                        .as_ref()
+                        .map(|caps| fifos[a].len() as u64 >= caps[a])
+                        .unwrap_or(false);
+                    if full {
+                        producer_stalls[a] += 1;
+                    } else {
+                        fifos[a].push_back(arrays[a][produced[a] as usize]);
+                        produced[a] += 1;
+                    }
+                }
+            }
+            for a in 0..n {
+                peak_inflight[a] = peak_inflight[a].max(fifos[a].len() as u64);
+            }
+            // Emit: line `li` leaves iff every element it carries is in
+            // flight.
+            need.iter_mut().for_each(|x| *x = 0);
+            for p in &self.layout.cycles[li] {
+                need[p.array as usize] += 1;
+            }
+            let mut ready = true;
+            for a in 0..n {
+                if (fifos[a].len() as u64) < need[a] as u64 {
+                    ready = false;
+                    // Progress check: the missing elements must still be
+                    // producible, and the FIFO must be able to hold the
+                    // whole burst at once.
+                    if produced[a] == self.problem.arrays[a].depth {
+                        bail!(
+                            "write cosim: line {li} needs {} elements of '{}' but the \
+                             kernel is exhausted (invalid layout)",
+                            need[a],
+                            self.problem.arrays[a].name
+                        );
+                    }
+                    if let Some(caps) = &caps {
+                        if (need[a] as u64) > caps[a] {
+                            bail!(
+                                "write cosim: FIFO overflow on array '{}' — line {li} \
+                                 emits {} elements but capacity {} can never buffer them",
+                                self.problem.arrays[a].name,
+                                need[a],
+                                caps[a]
+                            );
+                        }
+                    }
+                }
+            }
+            if ready {
+                line.clear();
+                line.extend_from_slice(&self.layout.cycles[li]);
+                line.sort_by_key(|p| (p.array, p.elem));
+                let base = li as u64 * m;
+                for p in &line {
+                    let v = fifos[p.array as usize]
+                        .pop_front()
+                        .expect("readiness checked");
+                    emitted.set_bits((base + p.bit_lo as u64) as usize, p.width, v);
+                }
+                for a in 0..n {
+                    peak_ports[a] = peak_ports[a].max(need[a]);
+                }
+                li += 1;
+            } else {
+                stalls += 1;
+            }
+            t += 1;
+        }
+        Ok(WriteTrace {
+            emitted,
+            peak_inflight,
+            peak_ports,
+            bus_cycles: c as u64,
+            total_cycles: t,
+            stall_cycles: stalls,
+            producer_stall_cycles: producer_stalls,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{matmul_problem, paper_example, Problem};
+    use crate::pack::{PackPlan, PackProgram};
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn data_for(p: &Problem, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        p.arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    fn payload_eq(trace: &WriteTrace, packed: &BitVec, payload_words: usize) {
+        assert_eq!(
+            &trace.emitted.words()[..payload_words],
+            &packed.words()[..payload_words],
+            "emitted lines differ from the host packer"
+        );
+    }
+
+    #[test]
+    fn emitted_lines_match_pack_program() {
+        for p in [paper_example(), matmul_problem(33, 31)] {
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::DueAlignedNaive,
+            ] {
+                let l = baselines::generate(kind, &p);
+                let data = data_for(&p, 0x11);
+                let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+                let plan = PackPlan::compile(&l, &p);
+                let prog = PackProgram::compile(&plan);
+                let packed = prog.pack(&refs).unwrap();
+                let trace = WriteCosim::new(&l, &p).run(&refs).unwrap();
+                payload_eq(&trace, &packed, prog.payload_words());
+                trace.verify_against_analysis(&l, &p).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn analyzed_capacity_reproduces_unbounded_run() {
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 4);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let free = WriteCosim::new(&l, &p).run(&refs).unwrap();
+        let tight = WriteCosim::new(&l, &p)
+            .with_capacity(Capacity::Analyzed)
+            .run(&refs)
+            .unwrap();
+        assert_eq!(tight.total_cycles, free.total_cycles);
+        assert_eq!(tight.stall_cycles, free.stall_cycles);
+        assert_eq!(tight.peak_inflight, free.peak_inflight);
+        assert_eq!(tight.emitted, free.emitted);
+    }
+
+    #[test]
+    fn element_naive_write_never_stalls() {
+        // 1 element/line is exactly the kernel's production rate.
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::ElementNaive, &p);
+        let data = data_for(&p, 8);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let trace = WriteCosim::new(&l, &p).run(&refs).unwrap();
+        assert_eq!(trace.stall_cycles, 0);
+        assert!((trace.ii() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn undersized_write_fifo_is_an_error() {
+        // The packed-naive paper layout emits 4 A-elements in one line;
+        // a 2-deep write FIFO can never buffer that burst.
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::PackedNaive, &p);
+        let data = data_for(&p, 2);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let err = WriteCosim::new(&l, &p)
+            .with_capacity(Capacity::Fixed(vec![2; p.arrays.len()]))
+            .run(&refs)
+            .unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 3);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        assert!(WriteCosim::new(&l, &p).run(&refs[..4]).is_err());
+        let short = vec![0u64; 1];
+        let mut bad = refs.clone();
+        bad[0] = &short;
+        assert!(WriteCosim::new(&l, &p).run(&bad).is_err());
+        // Array A is 2 bits wide: an over-wide value must be rejected,
+        // not silently smeared across neighboring lanes.
+        let wide = vec![0xFFu64; p.arrays[0].depth as usize];
+        let mut bad2 = refs.clone();
+        bad2[0] = &wide;
+        assert!(WriteCosim::new(&l, &p).run(&bad2).is_err());
+    }
+}

@@ -16,6 +16,8 @@
 
 use crate::baselines;
 use crate::bus::partition::{self, PartitionStrategy, SweepPoint};
+use crate::cosim::ReadCosim;
+use crate::hls::ResourceEstimate;
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
@@ -71,6 +73,50 @@ pub struct PointSpec {
     pub label: String,
     pub kind: LayoutKind,
     pub problem: Problem,
+}
+
+/// One resource-aware design point: the layout metrics of a
+/// [`DesignPoint`] plus the HLS cost model and the cycle-accurate
+/// measurements of a structural read co-simulation
+/// ([`crate::cosim::ReadCosim`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourcePoint {
+    pub point: DesignPoint,
+    /// Structural cost model of the generated read module.
+    pub estimate: ResourceEstimate,
+    /// Cosim-measured end-to-end cycles (bus lines + FIFO drain tail):
+    /// the latency the modeled kernel observes.
+    pub sim_cycles: u64,
+    /// Cosim-measured initiation interval (1.0 — an unbounded run never
+    /// stalls; bounded capacities report their stalls through
+    /// [`crate::cosim::ReadTrace`] directly).
+    pub sim_ii: f64,
+    /// Cosim-measured FIFO storage (Σ peak-backlog · W) — the BRAM axis
+    /// of the trade-off.
+    pub sim_fifo_bits: u64,
+}
+
+/// Non-dominated filter over the resource-aware triple (maximize
+/// bandwidth efficiency, minimize cosim-measured latency, minimize
+/// cosim-measured FIFO bits) — the multi-objective front the
+/// resource-aware DSE mode serves.
+pub fn resource_pareto(points: &[ResourcePoint]) -> Vec<usize> {
+    let mut front = Vec::new();
+    for (i, a) in points.iter().enumerate() {
+        let dominated = points.iter().enumerate().any(|(j, b)| {
+            j != i
+                && b.point.metrics.b_eff >= a.point.metrics.b_eff
+                && b.sim_cycles <= a.sim_cycles
+                && b.sim_fifo_bits <= a.sim_fifo_bits
+                && (b.point.metrics.b_eff > a.point.metrics.b_eff
+                    || b.sim_cycles < a.sim_cycles
+                    || b.sim_fifo_bits < a.sim_fifo_bits)
+        });
+        if !dominated {
+            front.push(i);
+        }
+    }
+    front
 }
 
 /// Parallel, memoized design-point evaluator.
@@ -194,6 +240,72 @@ impl DseEngine {
                     .map(|pl| pl.summary(problem.m())),
             }
         })
+    }
+
+    /// Resource-aware evaluation of one spec: layout through the shared
+    /// cache, then the HLS cost model *and* a structural co-simulation
+    /// of the read module ([`ReadCosim::run_structural`], unbounded
+    /// FIFOs), so every point carries measured cycles/FIFO storage, not
+    /// just modeled ones.
+    fn evaluate_resource(&self, spec: &PointSpec) -> ResourcePoint {
+        let layout = self.cache.layout_for(spec.kind, &spec.problem);
+        let point = DesignPoint {
+            label: spec.label.clone(),
+            kind: spec.kind,
+            metrics: LayoutMetrics::compute(&layout, &spec.problem),
+            problem: spec.problem.clone(),
+        };
+        let estimate = crate::hls::estimate(&layout, &spec.problem);
+        let trace = ReadCosim::new(&layout, &spec.problem)
+            .run_structural()
+            .expect("unbounded structural cosim cannot fail on a valid layout");
+        let sim_fifo_bits = trace.fifo_bits(&spec.problem);
+        ResourcePoint {
+            point,
+            estimate,
+            sim_cycles: trace.total_cycles,
+            sim_ii: trace.ii(),
+            sim_fifo_bits,
+        }
+    }
+
+    /// Resource-aware multi-objective mode: evaluate every spec with
+    /// layout metrics, the HLS cost model, and cosim-measured latency /
+    /// FIFO storage, fanning out over the worker pool through the shared
+    /// [`LayoutCache`]. Feed the result to [`resource_pareto`] for the
+    /// bandwidth-vs-latency-vs-BRAM trade-off front.
+    pub fn resource_sweep(&self, specs: &[PointSpec]) -> Vec<ResourcePoint> {
+        fan_out(specs.len(), self.threads, |i| {
+            self.evaluate_resource(&specs[i])
+        })
+    }
+
+    /// Resource-aware version of the Table-7 precision sweep: naive and
+    /// Iris points for every `(W_A, W_B)` pair, each carrying cosim
+    /// measurements.
+    pub fn precision_resource_sweep<F>(
+        &self,
+        make_problem: F,
+        width_pairs: &[(u32, u32)],
+    ) -> Vec<ResourcePoint>
+    where
+        F: Fn(u32, u32) -> Problem,
+    {
+        let mut specs = Vec::with_capacity(width_pairs.len() * 2);
+        for &(wa, wb) in width_pairs {
+            let p = make_problem(wa, wb);
+            specs.push(PointSpec {
+                label: format!("naive ({wa},{wb})"),
+                kind: LayoutKind::DueAlignedNaive,
+                problem: p.clone(),
+            });
+            specs.push(PointSpec {
+                label: format!("iris ({wa},{wb})"),
+                kind: LayoutKind::Iris,
+                problem: p,
+            });
+        }
+        self.resource_sweep(&specs)
     }
 
     /// Parallel, memoized version of [`best_width_pair`]: same winner,
@@ -464,6 +576,74 @@ mod tests {
             assert!(engine.cache().stats().hits > 0);
             assert_eq!(again.len(), par.len());
         }
+    }
+
+    #[test]
+    fn resource_sweep_measures_what_analysis_predicts() {
+        let engine = DseEngine::new().threads(2);
+        let pts = engine.precision_resource_sweep(matmul_problem, &[(64, 64), (33, 31)]);
+        assert_eq!(pts.len(), 4);
+        for rp in &pts {
+            // Unbounded structural runs never stall…
+            assert!((rp.sim_ii - 1.0).abs() < 1e-12, "{}", rp.point.label);
+            // …measure exactly the analyzed FIFO storage…
+            assert_eq!(
+                rp.sim_fifo_bits, rp.point.metrics.fifo.total_bits,
+                "{}",
+                rp.point.label
+            );
+            // …and the kernel-observed latency is never shorter than the
+            // bus makespan.
+            assert!(rp.sim_cycles >= rp.point.metrics.c_max, "{}", rp.point.label);
+        }
+        // Iris transfers fewer cycles than naive on every pair.
+        for pair in pts.chunks(2) {
+            assert!(pair[1].sim_cycles <= pair[0].sim_cycles);
+            assert!(pair[1].sim_fifo_bits <= pair[0].sim_fifo_bits);
+        }
+    }
+
+    #[test]
+    fn resource_pareto_on_matmul_precision_sweep_is_nontrivial() {
+        let engine = DseEngine::new().threads(4);
+        let pts =
+            engine.precision_resource_sweep(matmul_problem, &[(64, 64), (33, 31), (30, 19)]);
+        let front = resource_pareto(&pts);
+        assert!(!front.is_empty());
+        assert!(
+            front.len() >= 2,
+            "expected a trade-off, not a single winner: {front:?}"
+        );
+        assert!(
+            front.len() < pts.len(),
+            "at least one point must be dominated"
+        );
+        // Nothing on the front is dominated by anything anywhere.
+        for &i in &front {
+            for (j, b) in pts.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let a = &pts[i];
+                let dominates = b.point.metrics.b_eff >= a.point.metrics.b_eff
+                    && b.sim_cycles <= a.sim_cycles
+                    && b.sim_fifo_bits <= a.sim_fifo_bits
+                    && (b.point.metrics.b_eff > a.point.metrics.b_eff
+                        || b.sim_cycles < a.sim_cycles
+                        || b.sim_fifo_bits < a.sim_fifo_bits);
+                assert!(!dominates, "front point {i} dominated by {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn resource_sweep_reuses_the_shared_cache() {
+        let engine = DseEngine::new().threads(2);
+        let first = engine.precision_resource_sweep(matmul_problem, &[(33, 31)]);
+        let misses = engine.cache().stats().misses;
+        let second = engine.precision_resource_sweep(matmul_problem, &[(33, 31)]);
+        assert_eq!(engine.cache().stats().misses, misses, "no rescheduling");
+        assert_eq!(first, second);
     }
 
     #[test]

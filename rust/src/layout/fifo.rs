@@ -75,6 +75,111 @@ impl FifoAnalysis {
     }
 }
 
+/// Per-array FIFO sizing for the **write direction**
+/// (accelerator→HBM, the `codegen::hls_write` module) — the mirror of
+/// [`FifoAnalysis`].
+///
+/// The kernel *produces* one element per array per cycle (the same
+/// 1-element/cycle rate the read model drains at); the write module
+/// consumes bursts — bus line `t` leaves only once every element it
+/// carries has been produced, stalling the output bus otherwise. The
+/// required depth is the peak number of in-flight elements (produced but
+/// not yet emitted), recorded after the cycle's production and before
+/// its emission — the instant the hardware holds the most state.
+///
+/// Depths are never zero for a placed array: even a 1-element/cycle
+/// layout buffers the element it forwards that same cycle (depth 1, the
+/// stream register), where the read direction's pure-wire case is
+/// depth 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WriteFifoAnalysis {
+    /// Required write-FIFO depth per array (peak in-flight elements).
+    pub depth: Vec<u64>,
+    /// Maximum elements of one array emitted in a single bus line
+    /// (= read ports the write module needs on that FIFO).
+    pub read_ports: Vec<u32>,
+    /// Cycles the write module stalls waiting for the kernel (a layout
+    /// that bursts an array early forces the output bus to wait).
+    pub stall_cycles: u64,
+    /// Total cycles to emit every line (`layout cycles + stall_cycles`).
+    pub total_cycles: u64,
+    /// Total write-FIFO bits (Σ depth·W).
+    pub total_bits: u64,
+}
+
+impl WriteFifoAnalysis {
+    /// Analyze a layout under the 1-element/cycle production model.
+    pub fn compute(layout: &Layout, problem: &Problem) -> WriteFifoAnalysis {
+        let n = problem.arrays.len();
+        let c = layout.cycles.len();
+        let mut produced = vec![0u64; n];
+        let mut consumed = vec![0u64; n];
+        let mut depth = vec![0u64; n];
+        let mut ports = vec![0u32; n];
+        let mut need = vec![0u32; n];
+        let mut stalls = 0u64;
+        let mut t = 0u64;
+        let mut li = 0usize;
+        while li < c {
+            // Production phase: one element per unfinished array.
+            for a in 0..n {
+                if produced[a] < problem.arrays[a].depth {
+                    produced[a] += 1;
+                }
+            }
+            // Peak in-flight is reached here, pre-emission.
+            for a in 0..n {
+                depth[a] = depth[a].max(produced[a] - consumed[a]);
+            }
+            // Emission phase: line `li` leaves iff fully available.
+            need.iter_mut().for_each(|x| *x = 0);
+            for p in &layout.cycles[li] {
+                need[p.array as usize] += 1;
+            }
+            let mut ready = true;
+            for a in 0..n {
+                if produced[a] - consumed[a] < need[a] as u64 {
+                    ready = false;
+                    // Production catches up for any valid layout;
+                    // a line that references more elements than the
+                    // array holds never becomes ready — fail loudly in
+                    // every build rather than return truncated stats
+                    // (mirrors `cosim::WriteCosim`'s error).
+                    assert!(
+                        produced[a] < problem.arrays[a].depth,
+                        "write-fifo analysis: line {li} needs {} elements of '{}' \
+                         beyond its depth — run layout::validate first",
+                        need[a],
+                        problem.arrays[a].name
+                    );
+                }
+            }
+            if ready {
+                for a in 0..n {
+                    consumed[a] += need[a] as u64;
+                    ports[a] = ports[a].max(need[a]);
+                }
+                li += 1;
+            } else {
+                stalls += 1;
+            }
+            t += 1;
+        }
+        let total_bits = depth
+            .iter()
+            .zip(problem.arrays.iter())
+            .map(|(d, a)| d * a.width as u64)
+            .sum();
+        WriteFifoAnalysis {
+            depth,
+            read_ports: ports,
+            stall_cycles: stalls,
+            total_cycles: t,
+            total_bits,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +246,59 @@ mod tests {
         let p = problem_one(64, 121);
         let l = uniform_layout(&p, 4);
         assert_eq!(FifoAnalysis::compute(&l, &p).depth[0], 90);
+    }
+
+    #[test]
+    fn write_one_per_cycle_needs_single_register() {
+        // 1 element/line: the kernel produces and the module emits in
+        // the same cycle — depth 1 (the stream register), zero stalls.
+        let p = problem_one(64, 100);
+        let l = uniform_layout(&p, 1);
+        let w = WriteFifoAnalysis::compute(&l, &p);
+        assert_eq!(w.depth[0], 1);
+        assert_eq!(w.read_ports[0], 1);
+        assert_eq!(w.stall_cycles, 0);
+        assert_eq!(w.total_cycles, l.n_cycles());
+        assert_eq!(w.total_bits, 64);
+    }
+
+    #[test]
+    fn write_burst_layout_stalls_on_production() {
+        // 8 elements at 4/line over 2 lines, produced 1/cycle: line 0
+        // waits 3 cycles for its 4th element, line 1 another 3.
+        let p = problem_one(8, 8);
+        let l = uniform_layout(&p, 4);
+        let w = WriteFifoAnalysis::compute(&l, &p);
+        assert_eq!(l.n_cycles(), 2);
+        assert_eq!(w.stall_cycles, 6);
+        assert_eq!(w.total_cycles, 8);
+        assert_eq!(w.depth[0], 4);
+        assert_eq!(w.read_ports[0], 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "write-fifo analysis")]
+    fn write_analysis_panics_on_overconsuming_layout() {
+        // Two lines referencing a 2-element array twice: the second line
+        // can never be produced — invalid layouts must fail loudly, not
+        // return truncated stats.
+        let p = problem_one(8, 2);
+        let mut l = uniform_layout(&p, 2);
+        let line = l.cycles[0].clone();
+        l.cycles.push(line);
+        WriteFifoAnalysis::compute(&l, &p);
+    }
+
+    #[test]
+    fn write_total_cycles_is_lines_plus_stalls() {
+        let p = problem_one(16, 13);
+        for per_cycle in [1u32, 2, 3, 5] {
+            let l = uniform_layout(&p, per_cycle);
+            let w = WriteFifoAnalysis::compute(&l, &p);
+            assert_eq!(w.total_cycles, l.n_cycles() + w.stall_cycles);
+            assert!(w.depth[0] >= 1);
+            assert!(w.depth[0] >= w.read_ports[0] as u64);
+        }
     }
 
     #[test]

@@ -18,8 +18,10 @@
 //! * L3 (this crate): scheduling, layout materialization, host-side
 //!   packing, cycle-accurate bus/HBM model, accelerator-side decode with
 //!   shift-register FIFO tracking, code generation (Listing-1 C host
-//!   packer, Listing-2 ap_uint HLS read module), HLS resource estimation,
-//!   design-space exploration, and an end-to-end streaming pipeline.
+//!   packer, Listing-2 ap_uint HLS read module plus its write-direction
+//!   mirror), cycle-accurate co-simulation of the generated modules
+//!   ([`cosim`]), HLS resource estimation, design-space exploration, and
+//!   an end-to-end streaming pipeline.
 //! * L2 (JAX, build time): accelerator compute graphs (matrix multiply,
 //!   inverse Helmholtz) lowered once to HLO text (`make artifacts`).
 //! * L1 (Pallas, build time): the compute hot spots (tiled matmul, 3-axis
@@ -72,6 +74,7 @@ pub mod pack;
 pub mod decode;
 pub mod quant;
 pub mod codegen;
+pub mod cosim;
 pub mod hls;
 pub mod dse;
 pub mod runtime;

@@ -8,14 +8,22 @@
 //!   layout FILE.json     compute a layout for a JSON problem
 //!       [--algo iris|iris-continuous|element-naive|packed-naive|
 //!        due-aligned-naive|padded-pow2] [--ascii] [--paper-strict]
-//!   codegen FILE.json    emit generated code [--host] [--hls] [--rust] [--algo ...]
+//!   codegen FILE.json    emit generated code [--host] [--hls] [--write] [--rust]
+//!                        [--algo ...] [--out DIR] (no target flags = all targets)
+//!   cosim FILE.json      cycle-accurate co-simulation of the generated read and
+//!                        write modules [--algo ...] [--capacity analyzed|unbounded|N]
+//!                        [--seed S]
 //!   dfg                  derive Table-5 due dates from the accelerator DFGs
 //!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
-//!                        [--wa W] [--wb W] [--algo ...] [--no-xla]
+//!                        [--wa W] [--wb W] [--algo ...] [--no-xla] [--cosim]
 //!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
-//!                        [--channels K]
+//!                        [--channels K] [--cosim]
 //!   dse                  width search demo [--lo W] [--hi W]
 //!   perf                 quick hot-path perf summary (see EXPERIMENTS.md §Perf)
+//!
+//! Problem-file positionals also accept the builtin names `paper`,
+//! `helmholtz`, and `matmul` (the paper's worked example and Table-5
+//! workloads).
 
 use anyhow::{anyhow, bail, Result};
 use iris::baselines;
@@ -50,6 +58,7 @@ fn main() -> Result<()> {
         Some("table7") => cmd_table7(),
         Some("layout") => cmd_layout(&args),
         Some("codegen") => cmd_codegen(&args),
+        Some("cosim") => cmd_cosim(&args),
         Some("dfg") => cmd_dfg(),
         Some("e2e") => cmd_e2e(&args),
         Some("serve") => cmd_serve(&args),
@@ -69,11 +78,14 @@ iris — automatic generation of efficient data layouts (paper reproduction)
 usage: iris <subcommand> [options]
   example | figures | table6 | table7 | dfg | perf
   layout FILE.json [--algo KIND] [--ascii] [--paper-strict]
-  codegen FILE.json [--host] [--hls] [--rust] [--algo KIND]
-  e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla]
-  serve [--workers N] [--requests N] [--batch B] [--channels K]
+  codegen FILE.json [--host] [--hls] [--write] [--rust] [--algo KIND] [--out DIR]
+  cosim FILE.json [--algo KIND] [--capacity analyzed|unbounded|N] [--seed S]
+  e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla] [--cosim]
+  serve [--workers N] [--requests N] [--batch B] [--channels K] [--cosim]
   dse [--lo W] [--hi W]
   channels [FILE.json] [--max-k K]   multi-channel partition sweep (all strategies)
+
+FILE.json also accepts builtin problems: paper | helmholtz | matmul
 ";
 
 fn cmd_example() -> Result<()> {
@@ -116,11 +128,16 @@ fn cmd_table7() -> Result<()> {
 }
 
 fn load_problem_arg(args: &Args) -> Result<iris::model::Problem> {
-    let path = args
-        .positionals
-        .first()
-        .ok_or_else(|| anyhow!("expected a problem JSON file (see `iris dfg` for schema)"))?;
-    io::load_problem(path)
+    let path = args.positionals.first().ok_or_else(|| {
+        anyhow!("expected a problem JSON file or builtin name (see `iris dfg` for schema)")
+    })?;
+    // Builtin problems let CI and quickstarts skip the JSON file.
+    match path.as_str() {
+        "paper" => Ok(iris::model::paper_example()),
+        "helmholtz" => Ok(iris::model::helmholtz_problem()),
+        "matmul" => Ok(iris::model::matmul_problem(64, 64)),
+        _ => io::load_problem(path),
+    }
 }
 
 fn cmd_layout(args: &Args) -> Result<()> {
@@ -162,26 +179,158 @@ fn cmd_codegen(args: &Args) -> Result<()> {
     let problem = load_problem_arg(args)?;
     let kind = parse_kind(args.opt_str("algo", "iris"))?;
     let layout = baselines::generate(kind, &problem);
-    let input = iris::codegen::CodegenInput::new(&problem, &layout, "pack_data");
-    let all = !(args.flag("host") || args.flag("hls") || args.flag("rust"));
+    iris::layout::validate::validate(&layout, &problem)?;
+    // With no target flags, emit every target (the flags *select*, they
+    // never have to be spelled out to get output).
+    let all =
+        !(args.flag("host") || args.flag("hls") || args.flag("write") || args.flag("rust"));
+    let mut targets: Vec<(&str, &str, String)> = Vec::new();
     if args.flag("host") || all {
-        println!("// ===== host-side C pack function (Listing 1) =====");
-        println!("{}", iris::codegen::c_host::generate(&input));
+        let input = iris::codegen::CodegenInput::new(&problem, &layout, "pack_data");
+        targets.push((
+            "host-side C pack function (Listing 1)",
+            "pack_data.c",
+            iris::codegen::c_host::generate(&input),
+        ));
     }
     if args.flag("hls") || all {
         let input = iris::codegen::CodegenInput::new(&problem, &layout, "read_data");
-        println!("// ===== accelerator-side HLS read module (Listing 2) =====");
-        println!("{}", iris::codegen::hls_read::generate(&input));
+        targets.push((
+            "accelerator-side HLS read module (Listing 2)",
+            "read_data.cpp",
+            iris::codegen::hls_read::generate(&input),
+        ));
+    }
+    if args.flag("write") || all {
+        let input = iris::codegen::CodegenInput::new(&problem, &layout, "write_data");
+        targets.push((
+            "accelerator-side HLS write module (Listing-2 mirror)",
+            "write_data.cpp",
+            iris::codegen::hls_write::generate(&input),
+        ));
     }
     if args.flag("rust") || all {
-        println!("// ===== Rust pack function =====");
-        println!("{}", iris::codegen::rust_pack::generate(&input));
+        let input = iris::codegen::CodegenInput::new(&problem, &layout, "pack_data");
+        targets.push((
+            "Rust pack function",
+            "pack_data.rs",
+            iris::codegen::rust_pack::generate(&input),
+        ));
     }
     let est = iris::hls::estimate(&layout, &problem);
-    println!(
+    let est_line = format!(
         "// HLS estimate: latency={} II={} FF={} LUT={} fifo_bits={}",
         est.latency, est.ii, est.ff, est.lut, est.fifo_bits
     );
+    if let Some(dir) = args.opt("out") {
+        std::fs::create_dir_all(dir)?;
+        for (title, file, src) in &targets {
+            let path = format!("{dir}/{file}");
+            std::fs::write(&path, format!("// {title}\n{src}"))?;
+            println!("wrote {path}");
+        }
+        let est_path = format!("{dir}/ESTIMATE.txt");
+        std::fs::write(&est_path, format!("{est_line}\n"))?;
+        println!("wrote {est_path}");
+    } else {
+        for (title, _file, src) in &targets {
+            println!("// ===== {title} =====");
+            println!("{src}");
+        }
+        println!("{est_line}");
+    }
+    Ok(())
+}
+
+fn cmd_cosim(args: &Args) -> Result<()> {
+    use iris::cosim::{Capacity, ReadCosim, WriteCosim};
+    use iris::layout::fifo::{FifoAnalysis, WriteFifoAnalysis};
+    let problem = load_problem_arg(args)?;
+    let kind = parse_kind(args.opt_str("algo", "iris"))?;
+    let layout = baselines::generate(kind, &problem);
+    iris::layout::validate::validate(&layout, &problem)?;
+    let capacity = match args.opt_str("capacity", "analyzed") {
+        "analyzed" => Capacity::Analyzed,
+        "unbounded" => Capacity::Unbounded,
+        n => {
+            let d: u64 = n
+                .parse()
+                .map_err(|_| anyhow!("--capacity takes analyzed|unbounded|N, got '{n}'"))?;
+            Capacity::Fixed(vec![d; problem.arrays.len()])
+        }
+    };
+    let seed = args.opt_u64("seed", 0x0C51)?;
+    let data = {
+        use iris::testing::gen::random_elements;
+        use iris::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        problem
+            .arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect::<Vec<_>>()
+    };
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let plan = iris::pack::PackPlan::compile(&layout, &problem);
+    let prog = iris::pack::PackProgram::compile(&plan);
+    let buf = prog.pack(&refs)?;
+
+    println!(
+        "co-simulating '{}' layout ({} arrays, m={})",
+        kind.name(),
+        problem.arrays.len(),
+        problem.m()
+    );
+    let read = ReadCosim::new(&layout, &problem)
+        .with_capacity(capacity.clone())
+        .run(&buf)?;
+    let dprog =
+        iris::decode::DecodeProgram::compile(&iris::decode::DecodePlan::compile(&layout, &problem));
+    let read_exact = read.streams == dprog.decode(&buf)?;
+    let write = WriteCosim::new(&layout, &problem)
+        .with_capacity(capacity)
+        .run(&refs)?;
+    let payload = prog.payload_words();
+    let write_exact = write.emitted.words()[..payload] == buf.words()[..payload];
+
+    let fa = FifoAnalysis::compute(&layout, &problem);
+    let wa = WriteFifoAnalysis::compute(&layout, &problem);
+    let mut t = iris::util::table::Table::new(vec![
+        "array",
+        "read depth (sim/analysis)",
+        "ports",
+        "write depth (sim/analysis)",
+        "read ports",
+    ]);
+    for (a, spec) in problem.arrays.iter().enumerate() {
+        t.row(vec![
+            spec.name.clone(),
+            format!("{}/{}", read.peak_backlog[a], fa.depth[a]),
+            read.peak_ports[a].to_string(),
+            format!("{}/{}", write.peak_inflight[a], wa.depth[a]),
+            write.peak_ports[a].to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "read : {} bus lines in {} cycles, {} stalls, II={:.3}, bit-exact={}",
+        read.bus_cycles, read.total_cycles, read.stall_cycles, read.ii(), read_exact
+    );
+    println!(
+        "write: {} bus lines in {} cycles, {} stalls, II={:.3}, bit-exact={}",
+        write.bus_cycles, write.total_cycles, write.stall_cycles, write.ii(), write_exact
+    );
+    let est = iris::hls::estimate(&layout, &problem);
+    println!(
+        "HLS estimate cross-check: est II={} (cosim {:.3}), est fifo_bits={} (cosim {})",
+        est.ii,
+        read.ii(),
+        est.fifo_bits,
+        read.fifo_bits(&problem)
+    );
+    if !(read_exact && write_exact) {
+        bail!("co-simulation produced non-identical bits");
+    }
     Ok(())
 }
 
@@ -206,6 +355,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     };
     let kind = parse_kind(args.opt_str("algo", "iris"))?;
     let mut cfg = PipelineConfig::new(workload, kind);
+    cfg.cosim = args.flag("cosim");
     let mut rt = if args.flag("no-xla") {
         cfg.xla_unpack_check = false;
         None
@@ -233,6 +383,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("note: demo problems have 8 arrays; --channels clamped to {channels}");
     }
     let channels = (channels > 1).then_some(channels);
+    let cosim = args.flag("cosim");
     let server = LayoutServer::start(workers, batch);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
@@ -244,6 +395,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 data,
                 kind: LayoutKind::Iris,
                 channels,
+                cosim,
             })
         })
         .collect();

@@ -1,0 +1,92 @@
+//! Golden-file check: the generated code for the paper's Fig. 5 problem
+//! (the worked example whose Iris layout is Listing 1/2's input) must
+//! stay byte-stable across refactors of the schedulers and generators.
+//!
+//! The golden file lives at `rust/tests/golden/paper_fig5_codegen.txt`.
+//! If it is missing (first run on a fresh machine) the test *bootstraps*
+//! it — writes the current output and passes with a loud note — so the
+//! drift check becomes binding only once the bootstrapped file is
+//! committed (see rust/tests/golden/README.md). To intentionally update
+//! it after a deliberate codegen change, delete the file and re-run the
+//! test. Until the file is committed, the binding guarantees are the
+//! determinism test below and CI's double-run diff of `iris codegen
+//! --out` (.github/workflows/ci.yml, perf-smoke job); the structural
+//! invariants test pins the load-bearing facts of the Fig. 5 module
+//! either way.
+
+use iris::codegen::{c_host, hls_read, hls_write, rust_pack, CodegenInput};
+use iris::model::paper_example;
+use iris::schedule::iris_layout;
+
+fn golden_path() -> std::path::PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&root)
+        .join("rust/tests/golden")
+        .join("paper_fig5_codegen.txt")
+}
+
+/// All four targets for the Fig. 5 problem, concatenated with stable
+/// separators — byte-for-byte what `iris codegen paper` emits per
+/// target.
+fn generate_all() -> String {
+    let p = paper_example();
+    let l = iris_layout(&p);
+    let host = CodegenInput::new(&p, &l, "pack_data");
+    let read = CodegenInput::new(&p, &l, "read_data");
+    let write = CodegenInput::new(&p, &l, "write_data");
+    format!(
+        "===== c_host =====\n{}\n===== hls_read =====\n{}\n===== hls_write =====\n{}\n\
+         ===== rust_pack =====\n{}",
+        c_host::generate(&host),
+        hls_read::generate(&read),
+        hls_write::generate(&write),
+        rust_pack::generate(&host),
+    )
+}
+
+#[test]
+fn paper_fig5_codegen_is_deterministic() {
+    assert_eq!(generate_all(), generate_all());
+}
+
+#[test]
+fn paper_fig5_codegen_matches_golden_file() {
+    let current = generate_all();
+    let path = golden_path();
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => {
+            assert_eq!(
+                current, golden,
+                "generated code for the Fig. 5 problem drifted from \
+                 {path:?}; if the change is intentional, delete the golden \
+                 file and re-run to regenerate it"
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &current).unwrap();
+            eprintln!(
+                "NOTE: bootstrapped golden file at {path:?} — commit it to \
+                 make this check binding"
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_fig5_codegen_structural_invariants() {
+    // Byte-stability aside, pin the structural facts of the Fig. 5
+    // module that the paper states: a 9-cycle II=1 read loop over an
+    // 8-bit bus, and write/read symmetry on the macro set.
+    let src = generate_all();
+    assert!(src.contains("#define BUSWIDTH 8"));
+    assert!(src.contains("for (unsigned int t = 0; t < 9; t++)"));
+    assert!(src.contains("#pragma HLS pipeline II=1"));
+    assert!(src.contains("out_buf[t] = elem;"), "write module present");
+    for name in ["A", "B", "C", "D", "E"] {
+        assert!(
+            src.contains(&format!("#define {name}_WIDTH")),
+            "missing macro for array {name}"
+        );
+    }
+}

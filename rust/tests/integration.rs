@@ -145,6 +145,7 @@ fn server_under_mixed_load() {
                 data,
                 kind,
                 channels,
+                cosim: seed % 4 == 0,
             }),
         ));
     }
