@@ -1,0 +1,79 @@
+//! CI fuzz smoke: 500 seeded iterations of the N-way differential
+//! harness (`iris::engine::differential`) in release mode, fixed seed,
+//! bounded budget (well under a minute).
+//!
+//! Every registered engine — reference, bitwise oracle, optimized plan,
+//! compiled, parallel, streamed, cycle decoder, both cosim directions,
+//! multi-channel serial and parallel — must emit bit-identical payloads
+//! and decode the source arrays exactly on problems biased toward the
+//! hard corners (m ∉ 64ℤ, ragged widths, colliding sanitized names,
+//! degenerate arrays, k > 1 partitions). The run logs its engine pair
+//! matrix and fails if coverage regresses below what the replaced
+//! pairwise property tests used to check.
+//!
+//! Run with: `cargo run --release --example fuzz_smoke`
+
+use iris::engine::differential::{check_legacy_pair_coverage, fuzz_nway, FuzzConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FuzzConfig {
+        iterations: 500,
+        ..FuzzConfig::default()
+    };
+    println!(
+        "fuzz-smoke: seed {:#x}, {} iterations, kinds {:?}",
+        cfg.seed,
+        cfg.iterations,
+        cfg.kinds.iter().map(|k| k.name()).collect::<Vec<_>>()
+    );
+    let t0 = std::time::Instant::now();
+    let summary = fuzz_nway(&cfg);
+    println!(
+        "fuzz-smoke: {} iterations passed in {:.2?}",
+        summary.iterations,
+        t0.elapsed()
+    );
+    println!(
+        "  engines per trial:        {}..={}",
+        summary.min_engines, summary.max_engines
+    );
+    println!(
+        "  ragged-bus trials:        {} (m % 64 != 0)",
+        summary.ragged_bus_trials
+    );
+    println!("  multi-channel trials:     {}", summary.multichannel_trials);
+    println!(
+        "  generator:                {} attempts, {} rejected ({:.0}%)",
+        summary.gen_stats.attempts,
+        summary.gen_stats.rejected,
+        summary.gen_stats.rejection_rate() * 100.0
+    );
+    println!(
+        "engine pair matrix ({} pack-identity pairs, {} decode paths):",
+        summary.payload_pairs.len(),
+        summary.decode_engines.len()
+    );
+    print!("{}", summary.pair_matrix());
+
+    // Coverage gates: the pair matrix must still span everything the
+    // deleted pairwise scaffolding covered, and the hard-corner quotas
+    // must actually be drawn.
+    check_legacy_pair_coverage(&summary)?;
+    if summary.ragged_bus_trials < 100 {
+        anyhow::bail!(
+            "only {} ragged-bus trials out of {}",
+            summary.ragged_bus_trials,
+            summary.iterations
+        );
+    }
+    if summary.multichannel_trials < 100 {
+        anyhow::bail!(
+            "only {} multi-channel trials out of {}",
+            summary.multichannel_trials,
+            summary.iterations
+        );
+    }
+    summary.gen_stats.assert_healthy("fuzz_smoke");
+    println!("fuzz-smoke: OK");
+    Ok(())
+}

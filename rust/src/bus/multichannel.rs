@@ -12,7 +12,10 @@
 //! disjoint output streams, so the parallel paths are bit-identical to
 //! the serial per-channel references ([`MultiChannelExecutor::pack_serial`],
 //! [`MultiChannelExecutor::decode_serial`]) by construction; the
-//! `rust/tests/multichannel.rs` property suite checks it anyway.
+//! `rust/tests/multichannel.rs` property suite checks it anyway, through
+//! the N-way differential runner ([`crate::engine::differential`]) in
+//! which every `(k, strategy)` pair is a registered
+//! [`crate::engine::Engine`].
 //!
 //! Data routing: callers keep working in the *original* problem's array
 //! order. [`MultiChannelExecutor::pack`] splits the per-array slices

@@ -804,4 +804,30 @@ mod tests {
         let data = synthetic_data(&p, 9);
         assert_eq!(data.len(), 20);
     }
+
+    #[test]
+    fn pipeline_problems_pass_the_nway_harness() {
+        // The transfers this pipeline serves are engine-agnostic: the
+        // exact (problem, layout kind) combinations it runs agree bit
+        // for bit across every registered engine in the differential
+        // harness, multi-channel and cosim paths included.
+        use crate::engine::differential::{run_nway, seeded_data};
+        for (wl, kind) in [
+            (Workload::Helmholtz, LayoutKind::Iris),
+            (Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::Iris),
+            (Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::DueAlignedNaive),
+            (Workload::MatMul { w_a: 30, w_b: 19 }, LayoutKind::PaddedPow2),
+        ] {
+            let p = wl.problem();
+            let data = seeded_data(&p, 0x919E);
+            let report = run_nway(&p, kind, &data)
+                .unwrap_or_else(|e| panic!("{} {}: {e:#}", wl.name(), kind.name()));
+            assert!(report.engines.len() >= 6, "{}", wl.name());
+        }
+        // The synthetic serving mix too (alveo-width bus, many arrays).
+        let p = synthetic_problem(8, 42);
+        let data = synthetic_data(&p, 42);
+        let report = run_nway(&p, LayoutKind::Iris, &data).unwrap();
+        assert!(report.engines.len() >= 6);
+    }
 }

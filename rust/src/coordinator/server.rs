@@ -746,4 +746,32 @@ mod tests {
         assert_eq!(server.metrics.cosim_validations.load(Ordering::Relaxed), 1);
         server.shutdown();
     }
+
+    #[test]
+    fn served_problems_agree_with_the_nway_harness() {
+        // What the server transports is exactly what every engine in the
+        // differential registry packs and decodes: run the same problem
+        // through the N-way harness, then through the server, and demand
+        // both report exact decode.
+        use crate::engine::differential::run_nway;
+        let p = synthetic_problem(6, 7);
+        let data = synthetic_data(&p, 7);
+        let report = run_nway(&p, LayoutKind::Iris, &data).unwrap();
+        assert!(report.engines.len() >= 6, "{:?}", report.engines);
+
+        let server = LayoutServer::start(2, 4);
+        let resp = server
+            .submit(TransferRequest {
+                problem: p,
+                data,
+                kind: LayoutKind::Iris,
+                channels: None,
+                cosim: false,
+            })
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(resp.decode_exact);
+        server.shutdown();
+    }
 }

@@ -34,9 +34,11 @@
 //! on a stall-free run the *measured* peak backlog must equal the
 //! analyzed depth per array — proving the analyzed depths are both
 //! sufficient (no overflow at that capacity) and tight (the peak is
-//! reached). Bit-identity with the compiled word programs
-//! ([`crate::decode::DecodeProgram`], [`crate::pack::PackProgram`]) is
-//! verified by the property suite in `rust/tests/cosim.rs`.
+//! reached). Bit-identity with *every* other execution path — not just
+//! the compiled word programs — is verified through the N-way
+//! differential runner ([`crate::engine::differential`]), where both
+//! directions are registered as [`crate::engine::Engine`]s
+//! (`cosim-read`, `cosim-write`); `rust/tests/cosim.rs` drives it.
 //!
 //! What this models vs. real Vitis co-simulation is documented in
 //! DESIGN.md §Co-Simulation.

@@ -21,6 +21,10 @@
 //! time and adds the incremental ([`DecodeStream`]) and parallel
 //! executors; [`DecodePlan::decode`] and [`decode_bitwise`] are kept as
 //! its oracles.
+//!
+//! Every decoder here is registered behind [`crate::engine::Engine`] and
+//! checked against all other execution paths by the N-way differential
+//! runner in [`crate::engine::differential`].
 
 pub mod program;
 

@@ -668,4 +668,20 @@ mod tests {
         assert_eq!(one.len(), 1);
         assert_eq!(one[0], DesignPoint::evaluate("solo", LayoutKind::Iris, &p));
     }
+
+    #[test]
+    fn sweep_points_pass_the_nway_harness() {
+        // Every design point the sweep scores corresponds to a real
+        // transfer: each (problem, kind) in the delta sweep must agree
+        // bit for bit across all registered engines.
+        use crate::engine::differential::{run_nway, seeded_data};
+        let pts = delta_sweep(&matmul_problem(33, 31), &[4, 2, 1]);
+        assert_eq!(pts.len(), 4);
+        for (i, pt) in pts.iter().enumerate() {
+            let data = seeded_data(&pt.problem, 0xD5E + i as u64);
+            let report = run_nway(&pt.problem, pt.kind, &data)
+                .unwrap_or_else(|e| panic!("point '{}': {e:#}", pt.label));
+            assert!(report.engines.len() >= 6, "point '{}'", pt.label);
+        }
+    }
 }

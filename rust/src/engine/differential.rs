@@ -1,0 +1,525 @@
+//! N-way differential runner and seeded structure-aware fuzz harness.
+//!
+//! [`run_nway`] executes every engine registered for a problem (see
+//! [`engines_for`]) and asserts two properties at once:
+//!
+//! 1. **Payload identity** — within each pack group, every engine's
+//!    [`BusLines`] are bit-identical to the group head's. On divergence
+//!    the error names the engine pair, the bus word index, the global
+//!    bit offset, and the bus cycle it falls in.
+//! 2. **Decode identity** — every engine decodes the group head's lines
+//!    back to the source arrays exactly. On divergence the error names
+//!    the engine, the array (index and name), and the first bad element.
+//!
+//! [`fuzz_nway`] drives the runner from a deterministic [`ProblemGen`]
+//! biased toward the known hard corners (m ∉ 64ℤ, widths off the
+//! power-of-two grid, colliding sanitized names, width-1 and
+//! single-element arrays, dues forcing straddles, k > 1 partitions).
+//! A failing case is shrunk with [`shrink_problem`] before panicking, so
+//! the reported reproducer is the smallest problem that still fails
+//! under the same data seed.
+
+use super::{engines_for, multichannel_name, ArrayData, BusLines, Engine};
+use crate::baselines;
+use crate::bus::partition::PartitionStrategy;
+use crate::layout::LayoutKind;
+use crate::model::Problem;
+use crate::testing::gen::{random_elements, shrink_problem, GenStats, ProblemGen};
+use crate::util::rng::Rng;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::BTreeSet;
+
+/// Single-bit payload corruption to inject before the compare/decode
+/// phase (negative-path testing).
+#[derive(Debug, Clone, Copy)]
+pub struct FlipBit {
+    pub channel: usize,
+    pub word: usize,
+    pub bit: u32,
+}
+
+/// What one [`run_nway`] call covered: the registered engine names, the
+/// payload-identity pairs that were compared bit for bit, and the
+/// engines whose decode was checked against the source arrays.
+#[derive(Debug, Clone)]
+pub struct NwayReport {
+    pub engines: Vec<String>,
+    pub payload_pairs: Vec<(String, String)>,
+    pub decode_checks: Vec<String>,
+}
+
+impl NwayReport {
+    /// Number of payload-identity pairs compared.
+    pub fn pair_count(&self) -> usize {
+        self.payload_pairs.len()
+    }
+
+    /// Human-readable pair matrix (one comparison per line) — CI logs
+    /// this so coverage regressions are visible in the job output.
+    pub fn pair_matrix(&self) -> String {
+        let mut s = String::new();
+        for (a, b) in &self.payload_pairs {
+            s.push_str("pack   ");
+            s.push_str(a);
+            s.push_str(" <-> ");
+            s.push_str(b);
+            s.push('\n');
+        }
+        for e in &self.decode_checks {
+            s.push_str("decode ");
+            s.push_str(e);
+            s.push_str(" vs source\n");
+        }
+        s
+    }
+}
+
+/// Run every registered engine for `problem` under the `kind` layout and
+/// assert N-way payload + decode identity.
+pub fn run_nway(problem: &Problem, kind: LayoutKind, data: &[ArrayData]) -> Result<NwayReport> {
+    let engines = engines_for(problem, kind);
+    run_nway_engines(problem, kind, data, &engines, None)
+}
+
+/// [`run_nway`] with a single payload bit flipped in the first pack
+/// group's reference lines — must fail with a pointed diagnostic.
+pub fn run_nway_with_flip(
+    problem: &Problem,
+    kind: LayoutKind,
+    data: &[ArrayData],
+    flip: FlipBit,
+) -> Result<NwayReport> {
+    let engines = engines_for(problem, kind);
+    run_nway_engines(problem, kind, data, &engines, Some(flip))
+}
+
+/// The explicit-engine-list core of [`run_nway`]. Engines are grouped
+/// by [`Engine::pack_group`]; within each group the first member packs
+/// the reference lines, every other member's pack is diffed against
+/// them, and every member (head included) must decode the reference
+/// lines back to `data`.
+pub fn run_nway_engines(
+    problem: &Problem,
+    kind: LayoutKind,
+    data: &[ArrayData],
+    engines: &[Box<dyn Engine>],
+    flip: Option<FlipBit>,
+) -> Result<NwayReport> {
+    if engines.is_empty() {
+        bail!("run_nway: no engines registered");
+    }
+    if data.len() != problem.arrays.len() {
+        bail!(
+            "run_nway: {} data arrays for {} problem arrays",
+            data.len(),
+            problem.arrays.len()
+        );
+    }
+    let layout = baselines::generate(kind, problem);
+    crate::layout::validate::validate(&layout, problem)
+        .with_context(|| format!("{} layout invalid", kind.name()))?;
+
+    let mut report = NwayReport {
+        engines: engines.iter().map(|e| e.name()).collect(),
+        payload_pairs: Vec::new(),
+        decode_checks: Vec::new(),
+    };
+    // Group engines by pack group, preserving registration order.
+    let mut groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, e) in engines.iter().enumerate() {
+        let g = e.pack_group();
+        match groups.iter_mut().find(|(name, _)| *name == g) {
+            Some((_, members)) => members.push(i),
+            None => groups.push((g, vec![i])),
+        }
+    }
+    for (gi, (group, members)) in groups.iter().enumerate() {
+        let head = &engines[members[0]];
+        let head_name = head.name();
+        let mut head_lines = head
+            .pack(problem, &layout, data)
+            .with_context(|| format!("engine '{head_name}' failed to pack (group '{group}')"))?;
+        if gi == 0 {
+            if let Some(f) = flip {
+                head_lines.flip_bit(f.channel, f.word, f.bit);
+            }
+        }
+        for &i in &members[1..] {
+            let name = engines[i].name();
+            let lines = engines[i]
+                .pack(problem, &layout, data)
+                .with_context(|| format!("engine '{name}' failed to pack (group '{group}')"))?;
+            diff_lines(problem.m(), &head_name, &head_lines, &name, &lines)?;
+            report.payload_pairs.push((head_name.clone(), name));
+        }
+        for &i in members {
+            let name = engines[i].name();
+            let decoded = engines[i]
+                .decode(problem, &layout, &head_lines)
+                .with_context(|| format!("engine '{name}' failed to decode (group '{group}')"))?;
+            diff_decoded(problem, &name, &decoded, data)?;
+            report.decode_checks.push(name);
+        }
+    }
+    Ok(report)
+}
+
+/// First-divergence payload diff: names the engine pair, channel, bus
+/// word index, global bit offset, and bus cycle.
+fn diff_lines(m: u32, a_name: &str, a: &BusLines, b_name: &str, b: &BusLines) -> Result<()> {
+    if a.channels.len() != b.channels.len() {
+        bail!(
+            "payload divergence between '{a_name}' and '{b_name}': {} vs {} channels",
+            a.channels.len(),
+            b.channels.len()
+        );
+    }
+    for (c, (ca, cb)) in a.channels.iter().zip(&b.channels).enumerate() {
+        if ca.bits != cb.bits {
+            bail!(
+                "payload divergence between '{a_name}' and '{b_name}': channel {c} carries \
+                 {} vs {} payload bits",
+                ca.bits,
+                cb.bits
+            );
+        }
+        if ca.words.len() != cb.words.len() {
+            bail!(
+                "payload divergence between '{a_name}' and '{b_name}': channel {c} has \
+                 {} vs {} payload words",
+                ca.words.len(),
+                cb.words.len()
+            );
+        }
+        for (w, (&wa, &wb)) in ca.words.iter().zip(&cb.words).enumerate() {
+            if wa != wb {
+                let bit = (wa ^ wb).trailing_zeros();
+                let off = w as u64 * 64 + bit as u64;
+                bail!(
+                    "payload divergence between '{a_name}' and '{b_name}': channel {c}, \
+                     bus word {w}, bit offset {off} (bus cycle {}): {wa:#018x} vs {wb:#018x}",
+                    off / m as u64
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// First-divergence decode diff: names the engine, the array (index and
+/// name), and the first mismatching element.
+fn diff_decoded(
+    problem: &Problem,
+    engine: &str,
+    got: &[ArrayData],
+    want: &[ArrayData],
+) -> Result<()> {
+    if got.len() != want.len() {
+        bail!(
+            "engine '{engine}' decoded {} arrays, expected {}",
+            got.len(),
+            want.len()
+        );
+    }
+    for (a, (g, w)) in got.iter().zip(want).enumerate() {
+        let name = &problem.arrays[a].name;
+        if g.len() != w.len() {
+            bail!(
+                "engine '{engine}': array #{a} '{name}' decoded {} elements, expected {}",
+                g.len(),
+                w.len()
+            );
+        }
+        for (e, (&ge, &we)) in g.iter().zip(w).enumerate() {
+            if ge != we {
+                bail!(
+                    "engine '{engine}': array #{a} '{name}' element {e} decoded {ge:#x}, \
+                     expected {we:#x}"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deterministic per-array random data for `p` (the fuzz harness and
+/// the suites share this so a `(problem, data seed)` pair is a complete
+/// reproducer).
+pub fn seeded_data(p: &Problem, seed: u64) -> Vec<ArrayData> {
+    let mut rng = Rng::new(seed);
+    p.arrays
+        .iter()
+        .map(|a| random_elements(&mut rng, a.width, a.depth))
+        .collect()
+}
+
+/// Fuzz generator biased toward the hard corners: buses off the 64-bit
+/// grid (24, 40, 72, 100, 200), ragged widths, degenerate arrays, and
+/// colliding sanitized names.
+pub fn fuzz_gen() -> ProblemGen {
+    ProblemGen {
+        bus_widths: vec![24, 40, 72, 100, 200, 256],
+        max_arrays: 6,
+        max_depth: 64,
+        max_due: 150,
+        degenerate_prob: 0.2,
+        collide_names_prob: 0.15,
+        ..ProblemGen::default()
+    }
+}
+
+/// Fuzz harness configuration. Fully deterministic: same config, same
+/// trials, same verdict.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    pub seed: u64,
+    pub iterations: usize,
+    pub generator: ProblemGen,
+    /// Layout algorithms rotated across cases.
+    pub kinds: Vec<LayoutKind>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            seed: 0x1815_D1FF,
+            iterations: 128,
+            generator: fuzz_gen(),
+            kinds: vec![
+                LayoutKind::Iris,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+                LayoutKind::PackedNaive,
+            ],
+        }
+    }
+}
+
+/// Aggregate coverage of a fuzz run, for the CI coverage guard.
+#[derive(Debug, Clone)]
+pub struct FuzzSummary {
+    pub iterations: usize,
+    pub gen_stats: GenStats,
+    /// Fewest / most engines registered on any single trial.
+    pub min_engines: usize,
+    pub max_engines: usize,
+    /// Trials whose bus width is not a multiple of 64.
+    pub ragged_bus_trials: usize,
+    /// Trials that registered k > 1 multi-channel engines.
+    pub multichannel_trials: usize,
+    pub payload_pairs: BTreeSet<(String, String)>,
+    pub decode_engines: BTreeSet<String>,
+}
+
+impl FuzzSummary {
+    /// The union pair matrix across all trials (logged by CI).
+    pub fn pair_matrix(&self) -> String {
+        let mut s = String::new();
+        for (a, b) in &self.payload_pairs {
+            s.push_str("pack   ");
+            s.push_str(a);
+            s.push_str(" <-> ");
+            s.push_str(b);
+            s.push('\n');
+        }
+        for e in &self.decode_engines {
+            s.push_str("decode ");
+            s.push_str(e);
+            s.push_str(" vs source\n");
+        }
+        s
+    }
+}
+
+/// Run the seeded fuzz loop; panics with a shrunken reproducer on the
+/// first failing case.
+pub fn fuzz_nway(cfg: &FuzzConfig) -> FuzzSummary {
+    assert!(!cfg.kinds.is_empty(), "fuzz_nway: no layout kinds");
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = GenStats::default();
+    let mut summary = FuzzSummary {
+        iterations: cfg.iterations,
+        gen_stats: stats,
+        min_engines: usize::MAX,
+        max_engines: 0,
+        ragged_bus_trials: 0,
+        multichannel_trials: 0,
+        payload_pairs: BTreeSet::new(),
+        decode_engines: BTreeSet::new(),
+    };
+    for case in 0..cfg.iterations {
+        let p = cfg.generator.generate_counted(&mut rng, &mut stats);
+        let data_seed = rng.next_u64();
+        let data = seeded_data(&p, data_seed);
+        let kind = cfg.kinds[case % cfg.kinds.len()];
+        match run_nway(&p, kind, &data) {
+            Ok(report) => {
+                summary.min_engines = summary.min_engines.min(report.engines.len());
+                summary.max_engines = summary.max_engines.max(report.engines.len());
+                if p.m() % 64 != 0 {
+                    summary.ragged_bus_trials += 1;
+                }
+                if report.engines.iter().any(|e| e.starts_with("multichannel")) {
+                    summary.multichannel_trials += 1;
+                }
+                summary.payload_pairs.extend(report.payload_pairs);
+                summary.decode_engines.extend(report.decode_checks);
+            }
+            Err(e) => {
+                let (small, reason) = shrink_failure(&p, kind, data_seed, &e);
+                panic!(
+                    "n-way differential failed (case {case}, fuzz seed {:#x}, data seed \
+                     {data_seed:#x}, kind {}):\n  reason: {reason}\n  reproducer: {small:?}",
+                    cfg.seed,
+                    kind.name()
+                );
+            }
+        }
+    }
+    summary.gen_stats = stats;
+    summary
+}
+
+/// Greedy shrink: walk [`shrink_problem`] candidates (bounded budget),
+/// keeping any candidate that still fails under the same data seed.
+fn shrink_failure(
+    p: &Problem,
+    kind: LayoutKind,
+    data_seed: u64,
+    first: &anyhow::Error,
+) -> (Problem, String) {
+    let mut cur = p.clone();
+    let mut reason = format!("{first:#}");
+    let mut budget = 300usize;
+    loop {
+        let mut advanced = false;
+        for q in shrink_problem(&cur) {
+            if budget == 0 {
+                return (cur, reason);
+            }
+            budget -= 1;
+            let data = seeded_data(&q, data_seed);
+            if let Err(e) = run_nway(&q, kind, &data) {
+                cur = q;
+                reason = format!("{e:#}");
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return (cur, reason);
+        }
+    }
+}
+
+/// CI coverage guard: the pairwise scaffolding this harness replaced
+/// covered exactly these engine pairs — a fuzz run must still reach all
+/// of them (plus every decode path), or coverage has regressed.
+pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
+    if s.min_engines == usize::MAX || s.min_engines < 6 {
+        bail!(
+            "fuzz run exercised {} engines on its smallest trial, need >= 6",
+            if s.min_engines == usize::MAX {
+                0
+            } else {
+                s.min_engines
+            }
+        );
+    }
+    for partner in [
+        "bitwise",
+        "plan",
+        "compiled",
+        "parallel",
+        "streamed",
+        "cycle-decoder",
+        "cosim-write",
+        "cosim-read",
+    ] {
+        let pair = ("reference".to_string(), partner.to_string());
+        if !s.payload_pairs.contains(&pair) {
+            bail!("coverage regression: lost pack-identity pair reference <-> {partner}");
+        }
+    }
+    let mc_pair = (
+        multichannel_name(2, PartitionStrategy::Lpt, false),
+        multichannel_name(2, PartitionStrategy::Lpt, true),
+    );
+    if !s.payload_pairs.contains(&mc_pair) {
+        bail!(
+            "coverage regression: lost multi-channel pack pair {} <-> {}",
+            mc_pair.0,
+            mc_pair.1
+        );
+    }
+    for engine in [
+        "reference",
+        "bitwise",
+        "plan",
+        "compiled",
+        "parallel",
+        "streamed",
+        "cycle-decoder",
+        "cosim-read",
+        "cosim-write",
+    ] {
+        if !s.decode_engines.contains(engine) {
+            bail!("coverage regression: lost decode coverage for '{engine}'");
+        }
+    }
+    let mc = multichannel_name(2, PartitionStrategy::Lpt, false);
+    if !s.decode_engines.contains(&mc) {
+        bail!("coverage regression: lost decode coverage for '{mc}'");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::paper_example;
+
+    #[test]
+    fn nway_passes_on_the_paper_example() {
+        let p = paper_example();
+        let data = seeded_data(&p, 0xD1FF);
+        let report = run_nway(&p, LayoutKind::Iris, &data).unwrap();
+        assert!(report.engines.len() >= 6);
+        // The 9 single-channel engines alone yield 8 head-vs-member
+        // pairs; every engine must decode.
+        assert!(report.pair_count() >= 8);
+        assert_eq!(report.decode_checks.len(), report.engines.len());
+        assert!(report.pair_matrix().contains("reference <-> compiled"));
+    }
+
+    #[test]
+    fn flipped_bit_produces_a_pointed_diagnostic() {
+        let p = paper_example();
+        let data = seeded_data(&p, 0xD1FF);
+        let flip = FlipBit {
+            channel: 0,
+            word: 0,
+            bit: 5,
+        };
+        let err = run_nway_with_flip(&p, LayoutKind::Iris, &data, flip)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("bus word 0"), "{err}");
+        assert!(err.contains("bit offset 5"), "{err}");
+        assert!(err.contains("reference"), "{err}");
+    }
+
+    #[test]
+    fn mini_fuzz_covers_the_legacy_pairs() {
+        let cfg = FuzzConfig {
+            iterations: 24,
+            ..FuzzConfig::default()
+        };
+        let s = fuzz_nway(&cfg);
+        check_legacy_pair_coverage(&s).unwrap();
+        assert!(s.ragged_bus_trials > 0);
+        assert!(s.multichannel_trials > 0);
+        s.gen_stats.assert_healthy("engine::differential mini fuzz");
+    }
+}

@@ -1,0 +1,681 @@
+//! Unified execution-engine abstraction over every pack/decode path.
+//!
+//! The repo grew ~7 ways to execute the same transfer: the interpreted
+//! reference plans, the bit-by-bit oracles, the compiled word programs,
+//! the tile-streaming packer/decoder, the scoped-thread parallel
+//! executors, the channel-parallel multi-channel executor, and both
+//! cycle-accurate co-simulation directions. Each used to be cross-checked
+//! only by pairwise ad-hoc property tests scattered across the suites.
+//! [`Engine`] gives them one interface — `pack` a problem's arrays into
+//! [`BusLines`], `decode` bus lines back into arrays — so the N-way
+//! differential runner ([`differential::run_nway`]) can assert bit
+//! identity across *all* registered paths at once, with first-divergence
+//! diagnostics instead of a bare `assert_eq!`.
+//!
+//! Registering a new engine (e.g. a future SIMD pack path) means
+//! implementing [`Engine`] and adding it to [`engines_for`]; every fuzz
+//! iteration and every suite that calls the shared harness then checks
+//! it against all existing paths automatically.
+
+pub mod differential;
+
+use crate::baselines;
+use crate::bus::multichannel::MultiChannelExecutor;
+use crate::bus::partition::{partition_opts, PartitionStrategy};
+use crate::cosim::{ReadCosim, WriteCosim};
+use crate::decode::{decode_bitwise, DecodePlan, DecodeProgram, StreamDecoder};
+use crate::layout::{Layout, LayoutKind};
+use crate::model::Problem;
+use crate::pack::{pack_bitwise, pack_reference, PackPlan, PackProgram};
+use crate::util::bitvec::BitVec;
+use crate::util::ceil_div;
+use crate::Result;
+use anyhow::bail;
+use std::sync::Arc;
+
+/// One array's raw element stream (low `W` bits of each `u64`
+/// significant).
+pub type ArrayData = Vec<u64>;
+
+/// Capability flags an engine declares to the harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineCaps {
+    /// The engine moves data tile-by-tile rather than in one shot.
+    pub streaming: bool,
+    /// HBM pseudo-channels the engine packs into (1 = single buffer).
+    pub channels: usize,
+    /// The engine is a cycle-accurate co-simulation of a generated
+    /// module rather than a host-side transform.
+    pub cosim: bool,
+}
+
+impl Default for EngineCaps {
+    fn default() -> EngineCaps {
+        EngineCaps {
+            streaming: false,
+            channels: 1,
+            cosim: false,
+        }
+    }
+}
+
+/// Payload words of one channel's bus buffer. `words` carries exactly
+/// `ceil(bits / 64)` words — the packers' guard word is stripped, and
+/// the ragged tail bits beyond `bits` in the last word are zero (a
+/// property the harness inherits from the pack paths).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelLines {
+    pub words: Vec<u64>,
+    /// Payload length in bits (`layout cycles × m`).
+    pub bits: u64,
+}
+
+impl ChannelLines {
+    /// Rebuild a decodable buffer: payload words plus one zero guard
+    /// word (the compiled gather reads `word + 1` unconditionally).
+    pub fn to_buffer(&self) -> BitVec {
+        let mut words = self.words.clone();
+        words.push(0);
+        let bits = words.len() * 64;
+        BitVec::from_words(words, bits)
+    }
+}
+
+/// What an [`Engine::pack`] emits: one [`ChannelLines`] per HBM channel
+/// (single-channel engines emit exactly one).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BusLines {
+    pub channels: Vec<ChannelLines>,
+}
+
+impl BusLines {
+    /// Single-channel payload from a packed buffer (guard stripped).
+    pub fn single(buf: &BitVec, payload_words: usize, bits: u64) -> BusLines {
+        BusLines {
+            channels: vec![ChannelLines {
+                words: buf.words()[..payload_words].to_vec(),
+                bits,
+            }],
+        }
+    }
+
+    /// Total payload words across channels.
+    pub fn total_words(&self) -> usize {
+        self.channels.iter().map(|c| c.words.len()).sum()
+    }
+
+    /// Flip one payload bit (corruption injection for negative tests).
+    pub fn flip_bit(&mut self, channel: usize, word: usize, bit: u32) {
+        self.channels[channel].words[word] ^= 1u64 << bit;
+    }
+}
+
+/// One execution path for a transfer. Engines sharing a
+/// [`Engine::pack_group`] must produce bit-identical [`BusLines`]; every
+/// engine's `decode` must recover the source arrays from its group's
+/// lines.
+pub trait Engine {
+    /// Stable display name (used in diagnostics and the pair matrix).
+    fn name(&self) -> String;
+
+    /// Capability flags (see [`EngineCaps`]).
+    fn caps(&self) -> EngineCaps {
+        EngineCaps::default()
+    }
+
+    /// Payload-identity group. All single-channel engines share
+    /// `"single"`; multi-channel engines group by `(k, strategy)` since
+    /// their per-channel buffers have different geometry.
+    fn pack_group(&self) -> String {
+        "single".into()
+    }
+
+    /// Pack the arrays into bus lines under `layout` (multi-channel
+    /// engines partition `problem` themselves and ignore `layout`).
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines>;
+
+    /// Decode bus lines (of this engine's pack group) back into arrays
+    /// in original problem order.
+    fn decode(&self, problem: &Problem, layout: &Layout, lines: &BusLines)
+        -> Result<Vec<ArrayData>>;
+}
+
+fn refs(data: &[ArrayData]) -> Vec<&[u64]> {
+    data.iter().map(|v| v.as_slice()).collect()
+}
+
+fn single_channel<'a>(lines: &'a BusLines, engine: &str) -> Result<&'a ChannelLines> {
+    if lines.channels.len() != 1 {
+        bail!(
+            "engine '{engine}': expected single-channel lines, got {} channels",
+            lines.channels.len()
+        );
+    }
+    Ok(&lines.channels[0])
+}
+
+/// Interpreted reference: per-element `set_bits` pack
+/// ([`pack_reference`]) and the interpreted [`DecodePlan`] decode. This
+/// is the semantic baseline every other engine is measured against.
+pub struct Reference;
+
+impl Engine for Reference {
+    fn name(&self) -> String {
+        "reference".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let plan = PackPlan::compile(layout, problem);
+        let buf = pack_reference(&plan, &refs(data))?;
+        Ok(BusLines::single(&buf, plan.payload_words(), plan.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "reference")?;
+        DecodePlan::compile(layout, problem).decode(&ch.to_buffer())
+    }
+}
+
+/// Bit-by-bit oracle: one bus bit at a time in both directions
+/// ([`pack_bitwise`] / [`decode_bitwise`]) — slow, but the simplest
+/// possible statement of the layout semantics.
+pub struct BitwiseOracle;
+
+impl Engine for BitwiseOracle {
+    fn name(&self) -> String {
+        "bitwise".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let plan = PackPlan::compile(layout, problem);
+        let buf = pack_bitwise(&plan, &refs(data))?;
+        Ok(BusLines::single(&buf, plan.payload_words(), plan.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "bitwise")?;
+        decode_bitwise(&DecodePlan::compile(layout, problem), &ch.to_buffer())
+    }
+}
+
+/// Optimized interpreted plan: the word-level [`PackPlan::pack`] hot
+/// path with the interpreted decode.
+pub struct Optimized;
+
+impl Engine for Optimized {
+    fn name(&self) -> String {
+        "plan".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let plan = PackPlan::compile(layout, problem);
+        let buf = plan.pack(&refs(data))?;
+        Ok(BusLines::single(&buf, plan.payload_words(), plan.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "plan")?;
+        DecodePlan::compile(layout, problem).decode(&ch.to_buffer())
+    }
+}
+
+/// Compiled word programs: [`PackProgram`] / [`DecodeProgram`] (the
+/// serving-path default).
+pub struct Compiled;
+
+impl Engine for Compiled {
+    fn name(&self) -> String {
+        "compiled".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let plan = PackPlan::compile(layout, problem);
+        let prog = PackProgram::compile(&plan);
+        let buf = prog.pack(&refs(data))?;
+        Ok(BusLines::single(&buf, plan.payload_words(), plan.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "compiled")?;
+        DecodeProgram::compile(&DecodePlan::compile(layout, problem)).decode(&ch.to_buffer())
+    }
+}
+
+/// Scoped-thread parallel executors over the compiled word programs
+/// (`pack_parallel` / `decode_parallel`).
+pub struct Parallel {
+    pub threads: usize,
+}
+
+impl Engine for Parallel {
+    fn name(&self) -> String {
+        "parallel".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let plan = PackPlan::compile(layout, problem);
+        let prog = PackProgram::compile(&plan);
+        let buf = prog.pack_parallel(&refs(data), self.threads)?;
+        Ok(BusLines::single(&buf, plan.payload_words(), plan.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "parallel")?;
+        DecodeProgram::compile(&DecodePlan::compile(layout, problem))
+            .decode_parallel(&ch.to_buffer(), self.threads)
+    }
+}
+
+/// Tile streaming: [`crate::pack::PackStream`] emits word-aligned cycle
+/// tiles that are concatenated into the payload; decode feeds word
+/// chunks through [`crate::decode::DecodeStream`].
+pub struct Streamed {
+    pub tile_cycles: u64,
+}
+
+impl Engine for Streamed {
+    fn name(&self) -> String {
+        "streamed".into()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            streaming: true,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let plan = PackPlan::compile(layout, problem);
+        let prog = PackProgram::compile(&plan);
+        let data_refs = refs(data);
+        let mut words: Vec<u64> = Vec::with_capacity(plan.payload_words());
+        for tile in prog.stream(&data_refs, self.tile_cycles)? {
+            words.extend_from_slice(&tile);
+        }
+        if words.len() != plan.payload_words() {
+            bail!(
+                "streamed pack emitted {} words, payload is {}",
+                words.len(),
+                plan.payload_words()
+            );
+        }
+        Ok(BusLines {
+            channels: vec![ChannelLines {
+                words,
+                bits: plan.buffer_bits(),
+            }],
+        })
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "streamed")?;
+        let prog = DecodeProgram::compile(&DecodePlan::compile(layout, problem));
+        let mut ds = prog.stream();
+        let chunk = (self.tile_cycles.max(1) as usize).max(1);
+        for tile in ch.words.chunks(chunk) {
+            ds.push(tile);
+        }
+        ds.finish()
+    }
+}
+
+/// Cycle-accurate II=1 read-module model ([`StreamDecoder`]): packs via
+/// the interpreted plan, decodes by simulating the FIFO drain cycle by
+/// cycle.
+pub struct CycleDecoder;
+
+impl Engine for CycleDecoder {
+    fn name(&self) -> String {
+        "cycle-decoder".into()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            streaming: true,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        Optimized.pack(problem, layout, data)
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "cycle-decoder")?;
+        let trace = StreamDecoder::new(layout, problem).run(&ch.to_buffer())?;
+        Ok(trace.streams)
+    }
+}
+
+/// Write-module co-simulation ([`WriteCosim`]): the generated write
+/// module emits the bus lines cycle by cycle; decode is the interpreted
+/// plan (the pack side is what this adapter puts under test).
+pub struct CosimWrite;
+
+impl Engine for CosimWrite {
+    fn name(&self) -> String {
+        "cosim-write".into()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            cosim: true,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let trace = WriteCosim::new(layout, problem).run(&refs(data))?;
+        let bits = layout.n_cycles() * layout.m as u64;
+        let payload_words = ceil_div(bits, 64) as usize;
+        Ok(BusLines::single(&trace.emitted, payload_words, bits))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "cosim-write")?;
+        DecodePlan::compile(layout, problem).decode(&ch.to_buffer())
+    }
+}
+
+/// Read-module co-simulation ([`ReadCosim`]): packs via the compiled
+/// word program; decode executes the generated read module cycle by
+/// cycle and returns its kernel streams.
+pub struct CosimRead;
+
+impl Engine for CosimRead {
+    fn name(&self) -> String {
+        "cosim-read".into()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            cosim: true,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        Compiled.pack(problem, layout, data)
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "cosim-read")?;
+        let trace = ReadCosim::new(layout, problem).run(&ch.to_buffer())?;
+        Ok(trace.streams)
+    }
+}
+
+/// Stable display name for a multi-channel engine configuration (shared
+/// with the legacy-coverage guard so the strings cannot drift).
+pub fn multichannel_name(k: usize, strategy: PartitionStrategy, serial: bool) -> String {
+    if serial {
+        format!("multichannel-serial(k={k},{})", strategy.name())
+    } else {
+        format!("multichannel(k={k},{})", strategy.name())
+    }
+}
+
+/// Multi-channel executor over `k` HBM pseudo-channels: partitions the
+/// problem under `strategy`, lays every channel out with `kind`, and
+/// packs/decodes through [`MultiChannelExecutor`] (channel-parallel, or
+/// the serial per-channel reference when `serial` is set — both share a
+/// pack group, so the harness asserts they are bit-identical).
+pub struct MultiChannel {
+    pub k: usize,
+    pub strategy: PartitionStrategy,
+    pub kind: LayoutKind,
+    pub serial: bool,
+}
+
+impl MultiChannel {
+    fn partition(&self, problem: &Problem) -> Result<crate::bus::partition::PartitionedLayout> {
+        let kind = self.kind;
+        partition_opts(problem, self.k, self.strategy, |p| {
+            Arc::new(baselines::generate(kind, p))
+        })
+    }
+}
+
+impl Engine for MultiChannel {
+    fn name(&self) -> String {
+        multichannel_name(self.k, self.strategy, self.serial)
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            channels: self.k,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack_group(&self) -> String {
+        format!("mc:k={}:{}", self.k, self.strategy.name())
+    }
+
+    fn pack(&self, problem: &Problem, _layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let pl = self.partition(problem)?;
+        let exec = MultiChannelExecutor::compile(&pl);
+        let data_refs = refs(data);
+        let bufs = if self.serial {
+            exec.pack_serial(&data_refs)?
+        } else {
+            exec.pack(&data_refs)?
+        };
+        let m = problem.m() as u64;
+        let channels = bufs
+            .iter()
+            .zip(pl.layouts.iter())
+            .map(|(buf, l)| {
+                let bits = l.n_cycles() * m;
+                ChannelLines {
+                    words: buf.words()[..ceil_div(bits, 64) as usize].to_vec(),
+                    bits,
+                }
+            })
+            .collect();
+        Ok(BusLines { channels })
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        _layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let pl = self.partition(problem)?;
+        let exec = MultiChannelExecutor::compile(&pl);
+        if lines.channels.len() != self.k {
+            bail!(
+                "engine '{}': {} channels of lines for k={}",
+                self.name(),
+                lines.channels.len(),
+                self.k
+            );
+        }
+        let bufs: Vec<BitVec> = lines.channels.iter().map(|c| c.to_buffer()).collect();
+        if self.serial {
+            exec.decode_serial(&bufs)
+        } else {
+            exec.decode(&bufs)
+        }
+    }
+}
+
+/// The default engine registry for a problem: every execution path that
+/// is feasible for it. Single-channel paths always register; the
+/// multi-channel configurations need at least `k` arrays. A new engine
+/// (e.g. a SIMD pack path) registers by pushing itself here.
+pub fn engines_for(problem: &Problem, kind: LayoutKind) -> Vec<Box<dyn Engine>> {
+    let mut engines: Vec<Box<dyn Engine>> = vec![
+        Box::new(Reference),
+        Box::new(BitwiseOracle),
+        Box::new(Optimized),
+        Box::new(Compiled),
+        Box::new(Parallel { threads: 4 }),
+        Box::new(Streamed { tile_cycles: 7 }),
+        Box::new(CycleDecoder),
+        Box::new(CosimWrite),
+        Box::new(CosimRead),
+    ];
+    let n = problem.arrays.len();
+    if n >= 2 {
+        for strategy in PartitionStrategy::ALL {
+            engines.push(Box::new(MultiChannel {
+                k: 2,
+                strategy,
+                kind,
+                serial: false,
+            }));
+        }
+        engines.push(Box::new(MultiChannel {
+            k: 2,
+            strategy: PartitionStrategy::Lpt,
+            kind,
+            serial: true,
+        }));
+        if n >= 3 {
+            engines.push(Box::new(MultiChannel {
+                k: 3,
+                strategy: PartitionStrategy::Lpt,
+                kind,
+                serial: false,
+            }));
+        }
+    }
+    engines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{matmul_problem, paper_example};
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn data_for(p: &Problem, seed: u64) -> Vec<ArrayData> {
+        let mut rng = Rng::new(seed);
+        p.arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    #[test]
+    fn registry_has_every_path_for_multi_array_problems() {
+        let p = matmul_problem(33, 31);
+        let engines = engines_for(&p, LayoutKind::Iris);
+        assert!(engines.len() >= 6, "{} engines", engines.len());
+        let names: Vec<String> = engines.iter().map(|e| e.name()).collect();
+        for want in [
+            "reference",
+            "bitwise",
+            "plan",
+            "compiled",
+            "parallel",
+            "streamed",
+            "cycle-decoder",
+            "cosim-write",
+            "cosim-read",
+        ] {
+            assert!(names.iter().any(|n| n == want), "missing {want}: {names:?}");
+        }
+        assert!(
+            names.iter().any(|n| n.starts_with("multichannel(")),
+            "missing multi-channel engines: {names:?}"
+        );
+        // Capability flags reflect the path shapes.
+        for e in &engines {
+            let caps = e.caps();
+            match e.name().as_str() {
+                "streamed" | "cycle-decoder" => assert!(caps.streaming),
+                "cosim-read" | "cosim-write" => assert!(caps.cosim),
+                n if n.starts_with("multichannel") => assert!(caps.channels > 1),
+                _ => assert_eq!(caps, EngineCaps::default()),
+            }
+        }
+    }
+
+    #[test]
+    fn single_array_problems_skip_multichannel() {
+        let p = Problem::new(
+            crate::model::BusConfig::new(64),
+            vec![crate::model::ArraySpec::new("only", 13, 10, 5)],
+        )
+        .unwrap();
+        let engines = engines_for(&p, LayoutKind::Iris);
+        assert!(engines.iter().all(|e| e.caps().channels == 1));
+        assert!(engines.len() >= 6);
+    }
+
+    #[test]
+    fn every_engine_roundtrips_the_paper_example() {
+        let p = paper_example();
+        let layout = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 0xE291);
+        for e in engines_for(&p, LayoutKind::Iris) {
+            let lines = e.pack(&p, &layout, &data).unwrap();
+            assert_eq!(lines.channels.len(), e.caps().channels, "{}", e.name());
+            let decoded = e.decode(&p, &layout, &lines).unwrap();
+            assert_eq!(decoded, data, "{}", e.name());
+        }
+    }
+
+    #[test]
+    fn flip_bit_corrupts_exactly_one_bit() {
+        let p = paper_example();
+        let layout = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 1);
+        let mut lines = Reference.pack(&p, &layout, &data).unwrap();
+        let clean = lines.clone();
+        lines.flip_bit(0, 0, 3);
+        assert_eq!(lines.channels[0].words[0] ^ clean.channels[0].words[0], 8);
+        lines.flip_bit(0, 0, 3);
+        assert_eq!(lines, clean);
+    }
+}

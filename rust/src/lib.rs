@@ -72,6 +72,7 @@ pub mod baselines;
 pub mod bus;
 pub mod pack;
 pub mod decode;
+pub mod engine;
 pub mod quant;
 pub mod codegen;
 pub mod cosim;

@@ -16,6 +16,10 @@
 //! provides the streaming ([`PackStream`]) and parallel executors; the
 //! scalar packers in this module ([`pack_reference`], [`pack_bitwise`])
 //! are kept as oracles for it.
+//!
+//! Every packer here is registered behind [`crate::engine::Engine`] and
+//! checked for bit-identity against all other execution paths by the
+//! N-way differential runner in [`crate::engine::differential`].
 
 pub mod program;
 

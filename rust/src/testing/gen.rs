@@ -1,4 +1,14 @@
 //! Random problem generators + shrinkers for property-based tests.
+//!
+//! The generator is structure-aware: besides uniform random geometry it
+//! can steer toward the corners that historically break pack/decode
+//! paths — width-1 elements, single-element arrays, dues equal to the
+//! depth, zero-length arrays (always rejected by [`Problem::new`], which
+//! exercises the rejection accounting), and raw names that collide
+//! after identifier sanitization ("a_1" vs "a-1"). Rejected attempts
+//! are never silently dropped: [`ProblemGen::generate_counted`] tallies
+//! them in a [`GenStats`] so suites can assert the rejection rate stays
+//! below 50%.
 
 use crate::model::{ArraySpec, BusConfig, Problem};
 use crate::util::rng::Rng;
@@ -6,6 +16,9 @@ use crate::util::rng::Rng;
 /// Tunable random-problem generator.
 #[derive(Debug, Clone)]
 pub struct ProblemGen {
+    /// Minimum arrays per problem (raise to 2+ for multi-channel tests
+    /// instead of skip-looping on small instances).
+    pub min_arrays: usize,
     pub max_arrays: usize,
     pub max_width: u32,
     pub max_depth: u64,
@@ -13,50 +26,148 @@ pub struct ProblemGen {
     pub bus_widths: Vec<u32>,
     /// Probability of attaching a δ/W cap to an array.
     pub cap_prob: f64,
+    /// Per-array probability of forcing a degenerate corner (width 1,
+    /// depth 1, due == depth, due 0, depth 0, full-bus width).
+    pub degenerate_prob: f64,
+    /// Per-problem probability of using raw names that collide after
+    /// sanitization ("a_0" vs "a-0") instead of the canonical `a{i}`.
+    pub collide_names_prob: f64,
 }
 
 impl Default for ProblemGen {
     fn default() -> Self {
         ProblemGen {
+            min_arrays: 1,
             max_arrays: 8,
             max_width: 64,
             max_depth: 64,
             max_due: 200,
             bus_widths: vec![8, 16, 32, 64, 128, 256],
             cap_prob: 0.25,
+            degenerate_prob: 0.15,
+            collide_names_prob: 0.1,
         }
+    }
+}
+
+/// Attempt/rejection accounting for a generator loop. Suites assert
+/// [`GenStats::assert_healthy`] so infeasible-instance rejection is
+/// reported instead of silently looping (mirrors the `channel_sweep`
+/// filter_map fix).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GenStats {
+    /// Candidate problems drawn (accepted + rejected).
+    pub attempts: u64,
+    /// Candidates rejected by [`Problem::new`] validation.
+    pub rejected: u64,
+}
+
+impl GenStats {
+    /// Fraction of attempts rejected, in `[0, 1]`.
+    pub fn rejection_rate(&self) -> f64 {
+        if self.attempts == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.attempts as f64
+        }
+    }
+
+    /// Panic unless the generator actually ran and rejected fewer than
+    /// half its attempts.
+    pub fn assert_healthy(&self, suite: &str) {
+        assert!(self.attempts > 0, "{suite}: generator never ran");
+        assert!(
+            self.rejection_rate() < 0.5,
+            "{suite}: generator rejected {}/{} attempts ({:.0}%) — \
+             silent-skip budget exceeded",
+            self.rejected,
+            self.attempts,
+            self.rejection_rate() * 100.0
+        );
     }
 }
 
 impl ProblemGen {
-    /// Generate a random valid problem.
-    pub fn generate(&self, rng: &mut Rng) -> Problem {
-        loop {
-            let m = *rng.choose(&self.bus_widths);
-            let n = rng.range_usize(1, self.max_arrays);
-            let arrays: Vec<ArraySpec> = (0..n)
-                .map(|i| {
-                    let width = rng.range_u32(1, self.max_width.min(m));
-                    let depth = rng.range_u64(1, self.max_depth);
-                    let due = rng.range_u64(0, self.max_due);
-                    let mut a = ArraySpec::new(&format!("a{i}"), width, depth, due);
-                    if rng.f64() < self.cap_prob {
-                        a.max_elems_per_cycle = Some(rng.range_u32(1, (m / width).max(1)));
+    /// One candidate draw; `Err` means [`Problem::new`] rejected it
+    /// (e.g. a zero-length array from the degenerate menu).
+    fn attempt(&self, rng: &mut Rng) -> crate::Result<Problem> {
+        let m = *rng.choose(&self.bus_widths);
+        let lo = self.min_arrays.max(1);
+        let n = rng.range_usize(lo, self.max_arrays.max(lo));
+        let collide = n >= 2 && rng.f64() < self.collide_names_prob;
+        let arrays: Vec<ArraySpec> = (0..n)
+            .map(|i| {
+                // Raw names stay unique; the collision is post-sanitize
+                // ("a_0" and "a-0" both sanitize to "a_0").
+                let name = if collide {
+                    if i % 2 == 0 {
+                        format!("a_{}", i / 2)
+                    } else {
+                        format!("a-{}", i / 2)
                     }
-                    a
-                })
-                .collect();
-            if let Ok(p) = Problem::new(BusConfig::new(m), arrays) {
-                return p;
+                } else {
+                    format!("a{i}")
+                };
+                let mut width = rng.range_u32(1, self.max_width.min(m));
+                let mut depth = rng.range_u64(1, self.max_depth);
+                let mut due = rng.range_u64(0, self.max_due);
+                if rng.f64() < self.degenerate_prob {
+                    match rng.below(6) {
+                        0 => width = 1,
+                        1 => depth = 1,
+                        2 => due = depth,
+                        3 => due = 0,
+                        // Zero-length array: always rejected downstream;
+                        // kept in the menu so rejection accounting is
+                        // exercised, not just theoretical.
+                        4 => depth = 0,
+                        _ => width = self.max_width.min(m),
+                    }
+                }
+                let mut a = ArraySpec::new(&name, width, depth, due);
+                if rng.f64() < self.cap_prob {
+                    a.max_elems_per_cycle = Some(rng.range_u32(1, (m / width.max(1)).max(1)));
+                }
+                a
+            })
+            .collect();
+        Problem::new(BusConfig::new(m), arrays)
+    }
+
+    /// Generate a random valid problem, tallying rejected attempts into
+    /// `stats` (see [`GenStats::assert_healthy`]).
+    pub fn generate_counted(&self, rng: &mut Rng, stats: &mut GenStats) -> Problem {
+        loop {
+            stats.attempts += 1;
+            match self.attempt(rng) {
+                Ok(p) => return p,
+                Err(_) => stats.rejected += 1,
             }
         }
+    }
+
+    /// Generate a random valid problem (rejections uncounted; prefer
+    /// [`ProblemGen::generate_counted`] in suites).
+    pub fn generate(&self, rng: &mut Rng) -> Problem {
+        let mut stats = GenStats::default();
+        self.generate_counted(rng, &mut stats)
     }
 }
 
 /// Shrinker: propose structurally simpler problems that often preserve a
-/// failure (fewer arrays, shallower arrays, smaller dues, dropped caps).
+/// failure — fewer arrays, then progressively more degenerate geometry
+/// (single-element depths, width 1, due 0, canonical names), so minimal
+/// reproducers land on the same corners the fuzz generator targets.
+/// Every candidate revalidates through [`Problem::new`] before being
+/// proposed.
 pub fn shrink_problem(p: &Problem) -> Vec<Problem> {
     let mut out = Vec::new();
+    let push_mapped = |out: &mut Vec<Problem>, f: &dyn Fn(&ArraySpec) -> ArraySpec| {
+        let arrays = p.arrays.iter().map(f).collect();
+        if let Ok(q) = Problem::new(p.bus, arrays) {
+            out.push(q);
+        }
+    };
     // Drop one array at a time.
     if p.arrays.len() > 1 {
         for i in 0..p.arrays.len() {
@@ -69,42 +180,68 @@ pub fn shrink_problem(p: &Problem) -> Vec<Problem> {
     }
     // Halve depths.
     if p.arrays.iter().any(|a| a.depth > 1) {
-        let arrays = p
-            .arrays
-            .iter()
-            .map(|a| {
-                let mut b = a.clone();
-                b.depth = (b.depth / 2).max(1);
-                b
-            })
-            .collect();
-        if let Ok(q) = Problem::new(p.bus, arrays) {
-            out.push(q);
-        }
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.depth = (b.depth / 2).max(1);
+            b
+        });
+        // Collapse to single-element arrays in one step.
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.depth = 1;
+            b
+        });
     }
-    // Zero the due dates.
+    // Halve the due dates.
     if p.arrays.iter().any(|a| a.due > 0) {
-        let arrays = p
-            .arrays
-            .iter()
-            .map(|a| {
-                let mut b = a.clone();
-                b.due /= 2;
-                b
-            })
-            .collect();
-        if let Ok(q) = Problem::new(p.bus, arrays) {
-            out.push(q);
-        }
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.due /= 2;
+            b
+        });
+        // Zero them in one step.
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.due = 0;
+            b
+        });
+    }
+    // Halve widths, and collapse to width 1 in one step.
+    if p.arrays.iter().any(|a| a.width > 1) {
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.width = (b.width / 2).max(1);
+            b
+        });
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.width = 1;
+            b
+        });
     }
     // Remove caps.
     if p.arrays.iter().any(|a| a.max_elems_per_cycle.is_some()) {
+        push_mapped(&mut out, &|a| {
+            let mut b = a.clone();
+            b.max_elems_per_cycle = None;
+            b
+        });
+    }
+    // Canonicalize names (drops sanitization collisions from the
+    // reproducer when they are not what the failure depends on).
+    if p
+        .arrays
+        .iter()
+        .enumerate()
+        .any(|(i, a)| a.name != format!("a{i}"))
+    {
         let arrays = p
             .arrays
             .iter()
-            .map(|a| {
+            .enumerate()
+            .map(|(i, a)| {
                 let mut b = a.clone();
-                b.max_elems_per_cycle = None;
+                b.name = format!("a{i}");
                 b
             })
             .collect();
@@ -142,14 +279,95 @@ mod tests {
     }
 
     #[test]
-    fn shrinker_produces_valid_simpler_instances() {
-        let g = ProblemGen::default();
-        let mut rng = Rng::new(12);
-        let p = g.generate(&mut rng);
-        for q in shrink_problem(&p) {
-            assert!(q.arrays.len() <= p.arrays.len());
-            assert!(q.total_bits() <= p.total_bits());
+    fn counted_generation_reports_rejections_and_stays_healthy() {
+        let g = ProblemGen {
+            degenerate_prob: 0.3,
+            collide_names_prob: 0.3,
+            ..ProblemGen::default()
+        };
+        let mut rng = Rng::new(21);
+        let mut stats = GenStats::default();
+        let mut saw_collision = false;
+        let mut saw_width1 = false;
+        let mut saw_single_elem = false;
+        let mut saw_due_eq_depth = false;
+        for _ in 0..400 {
+            let p = g.generate_counted(&mut rng, &mut stats);
+            saw_collision |= p.arrays.iter().any(|a| a.name.contains('-'));
+            saw_width1 |= p.arrays.iter().any(|a| a.width == 1);
+            saw_single_elem |= p.arrays.iter().any(|a| a.depth == 1);
+            saw_due_eq_depth |= p.arrays.iter().any(|a| a.due == a.depth);
         }
+        assert!(stats.attempts >= 400);
+        // The degenerate menu includes depth == 0, which Problem::new
+        // rejects — so rejections must actually be observed and counted.
+        assert!(stats.rejected > 0, "zero-length corner never drawn");
+        stats.assert_healthy("gen self-test");
+        assert!(saw_collision, "no sanitized-name collision generated");
+        assert!(saw_width1, "no width-1 array generated");
+        assert!(saw_single_elem, "no single-element array generated");
+        assert!(saw_due_eq_depth, "no due == depth array generated");
+    }
+
+    #[test]
+    fn min_arrays_is_respected() {
+        let g = ProblemGen {
+            min_arrays: 3,
+            ..ProblemGen::default()
+        };
+        let mut rng = Rng::new(31);
+        for _ in 0..100 {
+            assert!(g.generate(&mut rng).arrays.len() >= 3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "silent-skip budget exceeded")]
+    fn unhealthy_rejection_rate_panics() {
+        let stats = GenStats {
+            attempts: 10,
+            rejected: 6,
+        };
+        stats.assert_healthy("self-test");
+    }
+
+    #[test]
+    fn shrinker_produces_valid_simpler_instances() {
+        let g = ProblemGen {
+            degenerate_prob: 0.3,
+            collide_names_prob: 0.5,
+            ..ProblemGen::default()
+        };
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            let p = g.generate(&mut rng);
+            for q in shrink_problem(&p) {
+                assert!(q.arrays.len() <= p.arrays.len());
+                assert!(q.total_bits() <= p.total_bits());
+                assert_ne!(q, p, "shrink candidate identical to input");
+                // Revalidation: every candidate round-trips Problem::new.
+                assert!(Problem::new(q.bus, q.arrays.clone()).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn shrinker_reaches_degenerate_corners() {
+        let p = Problem::new(
+            BusConfig::new(24),
+            vec![
+                ArraySpec::new("x_0", 13, 40, 17),
+                ArraySpec::new("x-0", 7, 20, 9),
+            ],
+        )
+        .unwrap();
+        let shrunk = shrink_problem(&p);
+        assert!(shrunk.iter().any(|q| q.arrays.iter().all(|a| a.depth == 1)));
+        assert!(shrunk.iter().any(|q| q.arrays.iter().all(|a| a.width == 1)));
+        assert!(shrunk.iter().any(|q| q.arrays.iter().all(|a| a.due == 0)));
+        assert!(shrunk
+            .iter()
+            .any(|q| q.arrays.iter().enumerate().all(|(i, a)| a.name == format!("a{i}"))));
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Deterministic structure-aware fuzzing of the N-way differential
+//! harness (`iris::engine::differential`): every registered engine —
+//! reference, bitwise oracle, optimized plan, compiled, parallel,
+//! streamed, cycle decoder, both cosim directions, multi-channel — must
+//! agree bit for bit on payloads and decode the source arrays exactly,
+//! on problems biased toward the hard corners (m ∈ {24, 40, 72, 100,
+//! 200}, widths off the power-of-two grid, colliding sanitized names,
+//! width-1 and single-element arrays, dues forcing straddles, k > 1
+//! channel partitions).
+//!
+//! The debug-build budget here is deliberately bounded; the 500+
+//! iteration acceptance run lives in `examples/fuzz_smoke.rs`, built in
+//! release mode by the CI `fuzz-smoke` job.
+
+use iris::decode::{DecodePlan, DecodeProgram};
+use iris::engine::differential::{
+    check_legacy_pair_coverage, fuzz_nway, run_nway, run_nway_with_flip, seeded_data, FlipBit,
+    FuzzConfig,
+};
+use iris::layout::LayoutKind;
+use iris::model::{paper_example, ArraySpec, BusConfig, Problem};
+use iris::pack::{PackPlan, PackProgram};
+use iris::schedule::iris_layout;
+
+#[test]
+fn fuzz_differential_bounded() {
+    // Debug-mode slice of the CI fuzz budget: enough trials to hit every
+    // engine pair, ragged buses, and multi-channel partitions.
+    let cfg = FuzzConfig {
+        iterations: 140,
+        ..FuzzConfig::default()
+    };
+    let summary = fuzz_nway(&cfg);
+    check_legacy_pair_coverage(&summary).unwrap();
+    assert!(summary.min_engines >= 6, "{} engines", summary.min_engines);
+    assert!(
+        summary.ragged_bus_trials > 0,
+        "no m % 64 != 0 bus ever drawn"
+    );
+    assert!(
+        summary.multichannel_trials > 0,
+        "no multi-channel trial ever drawn"
+    );
+    summary.gen_stats.assert_healthy("fuzz_differential");
+}
+
+#[test]
+fn fuzzing_is_seed_deterministic() {
+    let cfg = FuzzConfig {
+        iterations: 10,
+        ..FuzzConfig::default()
+    };
+    let a = fuzz_nway(&cfg);
+    let b = fuzz_nway(&cfg);
+    assert_eq!(a.gen_stats, b.gen_stats);
+    assert_eq!(a.payload_pairs, b.payload_pairs);
+    assert_eq!(a.decode_engines, b.decode_engines);
+    assert_eq!(a.ragged_bus_trials, b.ragged_bus_trials);
+    assert_eq!(a.multichannel_trials, b.multichannel_trials);
+}
+
+#[test]
+fn corrupted_payload_fails_nway_with_pointed_diagnostic() {
+    // Negative path: one flipped payload bit must fail the runner and
+    // the diagnostic must name an engine pair, the bus word, and the
+    // bit offset — not just "mismatch".
+    let p = paper_example();
+    let data = seeded_data(&p, 0xBAD);
+    let flip = FlipBit {
+        channel: 0,
+        word: 1,
+        bit: 2,
+    };
+    let err = run_nway_with_flip(&p, LayoutKind::Iris, &data, flip)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("payload divergence"), "{err}");
+    assert!(err.contains("'reference'"), "{err}");
+    assert!(err.contains("bus word 1"), "{err}");
+    assert!(err.contains("bit offset 66"), "{err}");
+}
+
+#[test]
+fn truncated_stream_errors_rather_than_returning_short_data() {
+    // Negative path: a DecodeStream fed everything but the final word
+    // must refuse to finish, not hand back short arrays.
+    let p = paper_example();
+    let layout = iris_layout(&p);
+    let plan = PackPlan::compile(&layout, &p);
+    let data = seeded_data(&p, 0x7C0B);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = PackProgram::compile(&plan).pack(&refs).unwrap();
+    let payload = &buf.words()[..plan.payload_words()];
+
+    let prog = DecodeProgram::compile(&DecodePlan::compile(&layout, &p));
+    let mut full = prog.stream();
+    full.push(payload);
+    assert_eq!(full.finish().unwrap(), data, "well-formed stream decodes");
+
+    let mut truncated = prog.stream();
+    truncated.push(&payload[..payload.len() - 1]);
+    let err = truncated.finish().unwrap_err().to_string();
+    assert!(err.contains("decode stream"), "{err}");
+    assert!(err.contains("still needs"), "{err}");
+}
+
+#[test]
+fn deterministic_hard_corners_roundtrip_nway() {
+    // The corners the fuzz generator biases toward, pinned as explicit
+    // regressions: ragged bus, colliding sanitized names, width-1
+    // elements, single-element arrays, due == depth, k > 1 partitions.
+    let corners = [
+        // "a_0" and "a-0" collide after identifier sanitization.
+        Problem::new(
+            BusConfig::new(24),
+            vec![
+                ArraySpec::new("a_0", 13, 17, 9),
+                ArraySpec::new("a-0", 7, 31, 12),
+            ],
+        )
+        .unwrap(),
+        // Width-1 and full-bus-width elements on a m % 64 != 0 bus.
+        Problem::new(
+            BusConfig::new(100),
+            vec![
+                ArraySpec::new("bit", 1, 63, 10),
+                ArraySpec::new("wide", 64, 9, 20),
+                ArraySpec::new("odd", 37, 21, 15),
+            ],
+        )
+        .unwrap(),
+        // Single-element arrays and due == depth.
+        Problem::new(
+            BusConfig::new(72),
+            vec![
+                ArraySpec::new("one", 19, 1, 1),
+                ArraySpec::new("tight", 11, 24, 24),
+                ArraySpec::new("zero_due", 5, 12, 0),
+            ],
+        )
+        .unwrap(),
+        // Enough arrays for the k = 3 partition to register.
+        Problem::new(
+            BusConfig::new(200),
+            vec![
+                ArraySpec::new("p", 33, 40, 30),
+                ArraySpec::new("q", 17, 55, 12),
+                ArraySpec::new("r", 9, 70, 45),
+                ArraySpec::new("s", 61, 13, 60),
+            ],
+        )
+        .unwrap(),
+    ];
+    for (i, p) in corners.iter().enumerate() {
+        for kind in [LayoutKind::Iris, LayoutKind::PaddedPow2] {
+            let data = seeded_data(p, 0xC0 + i as u64);
+            let report = run_nway(p, kind, &data)
+                .unwrap_or_else(|e| panic!("corner {i} kind {}: {e:#}", kind.name()));
+            assert!(report.engines.len() >= 6, "corner {i}");
+        }
+    }
+}

@@ -1,21 +1,21 @@
 //! Property suite for the multi-channel subsystem: random problems
 //! (including bus widths not divisible by 64 and element widths that do
-//! not divide `m`) are partitioned under every [`PartitionStrategy`],
-//! executed through the channel-parallel [`MultiChannelExecutor`], and
-//! checked bit-for-bit against the serial per-channel references and the
-//! single-channel path.
+//! not divide `m`) are partitioned under every [`PartitionStrategy`] and
+//! checked through the shared N-way differential runner — serial and
+//! channel-parallel [`iris::bus::multichannel::MultiChannelExecutor`]
+//! paths must emit bit-identical per-channel payloads and decode back to
+//! the source arrays (which also pins them to the single-channel path).
+//! Structural partition invariants keep their dedicated tests below.
 
-use iris::bus::multichannel::MultiChannelExecutor;
 use iris::bus::partition::{
     channel_sweep, lateness_lower_bound, partition, partition_with_cache, PartitionStrategy,
     PartitionedLayout,
 };
-use iris::decode::DecodePlan;
+use iris::engine::differential::{run_nway_engines, seeded_data};
+use iris::engine::{Engine, MultiChannel, Reference};
 use iris::layout::cache::LayoutCache;
-use iris::model::Problem;
-use iris::pack::PackPlan;
-use iris::schedule::iris_layout;
-use iris::testing::gen::{random_elements, ProblemGen};
+use iris::layout::LayoutKind;
+use iris::testing::gen::{GenStats, ProblemGen};
 use iris::util::rng::Rng;
 
 /// Generator biased toward awkward geometries: bus widths that are not
@@ -28,78 +28,67 @@ fn awkward_gen() -> ProblemGen {
         max_due: 150,
         bus_widths: vec![24, 56, 96, 100, 120, 250, 256],
         cap_prob: 0.2,
+        ..ProblemGen::default()
     }
-}
-
-fn data_for(p: &Problem, rng: &mut Rng) -> Vec<Vec<u64>> {
-    p.arrays
-        .iter()
-        .map(|a| random_elements(rng, a.width, a.depth))
-        .collect()
 }
 
 #[test]
-fn multichannel_roundtrip_matches_single_channel_and_serial_reference() {
-    let gen = awkward_gen();
+fn multichannel_serial_parallel_and_single_channel_agree_nway() {
+    // Replaces the pairwise serial-vs-parallel roundtrip test: for every
+    // feasible k and strategy, the serial and channel-parallel executors
+    // are one pack group (bit-identical payload asserted), and every
+    // engine — the single-channel reference included — must decode the
+    // group lines back to the source arrays.
+    let gen = ProblemGen {
+        min_arrays: 2,
+        ..awkward_gen()
+    };
     let mut rng = Rng::new(0x4C11);
-    let mut cases = 0usize;
-    while cases < 40 {
-        let p = gen.generate(&mut rng);
-        if p.arrays.len() < 2 {
-            continue;
-        }
-        cases += 1;
-        let data = data_for(&p, &mut rng);
-        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
-        // Single-channel reference: pack + decode the unpartitioned
-        // problem.
-        let l = iris_layout(&p);
-        let buf = PackPlan::compile(&l, &p).pack(&refs).unwrap();
-        let single = DecodePlan::compile(&l, &p).decode(&buf).unwrap();
-        assert_eq!(single, data);
+    let mut stats = GenStats::default();
+    for case in 0..40 {
+        let p = gen.generate_counted(&mut rng, &mut stats);
+        let data = seeded_data(&p, rng.next_u64());
         let max_k = p.arrays.len().min(4);
-        let k = 2 + cases % (max_k - 1).max(1);
-        let k = k.min(max_k);
-        for strategy in PartitionStrategy::ALL {
-            let pl = partition(&p, k, strategy).unwrap();
-            let exec = MultiChannelExecutor::compile(&pl);
-            let serial = exec.pack_serial(&refs).unwrap();
-            let parallel = exec.pack(&refs).unwrap();
-            assert_eq!(
-                serial,
-                parallel,
-                "case {cases} m={} {} k={k}: parallel pack diverged",
-                p.m(),
-                strategy.name()
-            );
-            let d_serial = exec.decode_serial(&serial).unwrap();
-            let d_parallel = exec.decode(&parallel).unwrap();
-            assert_eq!(d_serial, d_parallel, "parallel decode diverged");
-            assert_eq!(
-                d_parallel,
-                single,
-                "case {cases} m={} {} k={k}: multi-channel streams != single-channel",
-                p.m(),
-                strategy.name()
-            );
+        let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(Reference)];
+        for k in 2..=max_k {
+            for strategy in PartitionStrategy::ALL {
+                for serial in [false, true] {
+                    engines.push(Box::new(MultiChannel {
+                        k,
+                        strategy,
+                        kind: LayoutKind::Iris,
+                        serial,
+                    }));
+                }
+            }
         }
+        let report = run_nway_engines(&p, LayoutKind::Iris, &data, &engines, None)
+            .unwrap_or_else(|e| panic!("case {case} m={} n={}: {e:#}", p.m(), p.arrays.len()));
+        // One serial<->parallel payload pair per (k, strategy), none lost.
+        assert_eq!(
+            report.pair_count(),
+            (max_k - 1) * PartitionStrategy::ALL.len(),
+            "case {case}: pair matrix shrank\n{}",
+            report.pair_matrix()
+        );
+        assert_eq!(report.decode_checks.len(), engines.len());
     }
+    stats.assert_healthy("multichannel nway roundtrip");
 }
 
 #[test]
 fn every_strategy_preserves_bits_dues_and_bus() {
-    let gen = awkward_gen();
+    let gen = ProblemGen {
+        min_arrays: 2,
+        ..awkward_gen()
+    };
     let mut rng = Rng::new(0xB175);
-    let mut cases = 0usize;
-    while cases < 40 {
-        let mut p = gen.generate(&mut rng);
-        if p.arrays.len() < 2 {
-            continue;
-        }
-        cases += 1;
+    let mut stats = GenStats::default();
+    for case in 1..=40usize {
+        let mut p = gen.generate_counted(&mut rng, &mut stats);
         // Non-default host word size must survive partitioning.
         p.bus.host_word_bits = 32;
-        let k = 2 + cases % (p.arrays.len() - 1);
+        let k = 2 + case % (p.arrays.len() - 1);
         for strategy in PartitionStrategy::ALL {
             let pl = partition(&p, k, strategy).unwrap();
             assert_eq!(pl.strategy, strategy);
@@ -132,14 +121,16 @@ fn every_strategy_preserves_bits_dues_and_bus() {
             }
         }
     }
+    stats.assert_healthy("multichannel structural invariants");
 }
 
 #[test]
 fn channel_sweep_records_every_point() {
     let gen = awkward_gen();
     let mut rng = Rng::new(0x5EE9);
+    let mut stats = GenStats::default();
     for _ in 0..10 {
-        let p = gen.generate(&mut rng);
+        let p = gen.generate_counted(&mut rng, &mut stats);
         let n = p.arrays.len();
         let max_k = n + 3;
         for strategy in PartitionStrategy::ALL {
@@ -159,12 +150,17 @@ fn channel_sweep_records_every_point() {
             }
         }
     }
+    stats.assert_healthy("channel sweep");
 }
 
 #[test]
 fn refinement_is_lateness_sound_and_cache_transparent() {
-    let gen = awkward_gen();
+    let gen = ProblemGen {
+        min_arrays: 3,
+        ..awkward_gen()
+    };
     let mut rng = Rng::new(0xF00D);
+    let mut stats = GenStats::default();
     let cache = LayoutCache::new();
     let bound = |pl: &PartitionedLayout| {
         pl.problems
@@ -173,21 +169,16 @@ fn refinement_is_lateness_sound_and_cache_transparent() {
             .max()
             .unwrap()
     };
-    let mut cases = 0usize;
-    while cases < 25 {
-        let p = gen.generate(&mut rng);
-        if p.arrays.len() < 3 {
-            continue;
-        }
-        cases += 1;
-        let k = 2 + cases % 2;
+    for case in 1..=25usize {
+        let p = gen.generate_counted(&mut rng, &mut stats);
+        let k = 2 + case % 2;
         let lpt = partition(&p, k, PartitionStrategy::Lpt).unwrap();
         let refined = partition(&p, k, PartitionStrategy::LptRefine).unwrap();
         // The refinement objective's leading term is exactly this bound,
         // and only strictly-improving moves are accepted.
         assert!(
             bound(&refined) <= bound(&lpt),
-            "case {cases}: refine bound {} > lpt bound {}",
+            "case {case}: refine bound {} > lpt bound {}",
             bound(&refined),
             bound(&lpt)
         );
@@ -204,4 +195,5 @@ fn refinement_is_lateness_sound_and_cache_transparent() {
         cache.stats().misses > 0,
         "cache-backed partitions actually scheduled"
     );
+    stats.assert_healthy("refinement soundness");
 }

@@ -10,7 +10,12 @@
 //! 6. reversal optimality signal: Iris L_max ≤ packed-naive L_max;
 //! 7. the layout cache is transparent: hits are bit-identical to fresh
 //!    schedules, permuted-problem hits stay valid and metric-equal;
-//! 8. the parallel DSE engine reproduces the serial sweeps exactly.
+//! 8. the parallel DSE engine reproduces the serial sweeps exactly;
+//! 9. every `shrink_problem` step is itself a valid `Problem`, and the
+//!    generators report (never silently swallow) rejected attempts.
+//!
+//! Every test draws through `generate_counted` and asserts the
+//! rejection rate stays under the 50% silent-skip budget.
 
 use iris::baselines;
 use iris::decode::{DecodePlan, StreamDecoder};
@@ -22,9 +27,10 @@ use iris::layout::LayoutKind;
 use iris::model::Problem;
 use iris::pack::PackPlan;
 use iris::schedule::{iris_layout, iris_layout_opts, ScheduleOptions};
-use iris::testing::gen::{shrink_problem, ProblemGen};
+use iris::testing::gen::{shrink_problem, GenStats, ProblemGen};
 use iris::testing::{forall_shrink, Config};
 use iris::util::rng::Rng;
+use std::cell::RefCell;
 
 const ALL_KINDS: [LayoutKind; 6] = [
     LayoutKind::Iris,
@@ -46,29 +52,32 @@ fn gen() -> ProblemGen {
     ProblemGen::default()
 }
 
+/// Run `body` with a counted-generation closure and assert the suite's
+/// rejection accounting afterwards.
+fn with_counted_gen(suite: &str, g: ProblemGen, body: impl FnOnce(&dyn Fn(&mut Rng) -> Problem)) {
+    let stats = RefCell::new(GenStats::default());
+    let generate = |rng: &mut Rng| g.generate_counted(rng, &mut stats.borrow_mut());
+    body(&generate);
+    stats.borrow().assert_healthy(suite);
+}
+
 #[test]
 fn prop_all_algorithms_produce_valid_layouts() {
-    forall_shrink(
-        &cfg(120),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("valid layouts", gen(), |generate| {
+        forall_shrink(&cfg(120), generate, shrink_problem, |p: &Problem| {
             for kind in ALL_KINDS {
                 let l = baselines::generate(kind, p);
                 validate(&l, p).map_err(|e| format!("{}: {e}", kind.name()))?;
             }
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_iris_makespan_bounds() {
-    forall_shrink(
-        &cfg(120),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("makespan bounds", gen(), |generate| {
+        forall_shrink(&cfg(120), generate, shrink_problem, |p: &Problem| {
             let l = iris_layout(p);
             let m = LayoutMetrics::compute(&l, p);
             let lb = p.c_max_lower_bound();
@@ -95,54 +104,53 @@ fn prop_iris_makespan_bounds() {
             );
             iris::prop_assert!(m.b_eff > 0.0 && m.b_eff <= 1.0 + 1e-12, "eff {}", m.b_eff);
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_pack_decode_roundtrip() {
-    forall_shrink(
-        &cfg(80),
-        |rng| {
-            let p = gen().generate(rng);
-            let seed = rng.next_u64();
-            (p, seed)
-        },
-        |(p, seed)| {
-            shrink_problem(p)
-                .into_iter()
-                .map(|q| (q, *seed))
-                .collect()
-        },
-        |(p, seed): &(Problem, u64)| {
-            let mut rng = Rng::new(*seed);
-            let data: Vec<Vec<u64>> = p
-                .arrays
-                .iter()
-                .map(|a| iris::testing::gen::random_elements(&mut rng, a.width, a.depth))
-                .collect();
-            let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
-            for kind in ALL_KINDS {
-                let l = baselines::generate(kind, p);
-                let plan = PackPlan::compile(&l, p);
-                let buf = plan.pack(&refs).map_err(|e| format!("{e}"))?;
-                let got = DecodePlan::compile(&l, p)
-                    .decode(&buf)
-                    .map_err(|e| format!("{e}"))?;
-                iris::prop_assert!(got == data, "{} roundtrip mismatch", kind.name());
-            }
-            Ok(())
-        },
-    );
+    with_counted_gen("pack/decode roundtrip", gen(), |generate| {
+        forall_shrink(
+            &cfg(80),
+            |rng| {
+                let p = generate(rng);
+                let seed = rng.next_u64();
+                (p, seed)
+            },
+            |(p, seed)| {
+                shrink_problem(p)
+                    .into_iter()
+                    .map(|q| (q, *seed))
+                    .collect()
+            },
+            |(p, seed): &(Problem, u64)| {
+                let mut rng = Rng::new(*seed);
+                let data: Vec<Vec<u64>> = p
+                    .arrays
+                    .iter()
+                    .map(|a| iris::testing::gen::random_elements(&mut rng, a.width, a.depth))
+                    .collect();
+                let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+                for kind in ALL_KINDS {
+                    let l = baselines::generate(kind, p);
+                    let plan = PackPlan::compile(&l, p);
+                    let buf = plan.pack(&refs).map_err(|e| format!("{e}"))?;
+                    let got = DecodePlan::compile(&l, p)
+                        .decode(&buf)
+                        .map_err(|e| format!("{e}"))?;
+                    iris::prop_assert!(got == data, "{} roundtrip mismatch", kind.name());
+                }
+                Ok(())
+            },
+        );
+    });
 }
 
 #[test]
 fn prop_fifo_analysis_matches_simulation() {
-    forall_shrink(
-        &cfg(60),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("fifo analysis", gen(), |generate| {
+        forall_shrink(&cfg(60), generate, shrink_problem, |p: &Problem| {
             let mut rng = Rng::new(0xF1F0);
             let data: Vec<Vec<u64>> = p
                 .arrays
@@ -160,17 +168,14 @@ fn prop_fifo_analysis_matches_simulation() {
                 iris::prop_assert!(trace.streams == data, "{} stream order", kind.name());
             }
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_iris_lateness_no_worse_than_packed_naive() {
-    forall_shrink(
-        &cfg(120),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("lateness", gen(), |generate| {
+        forall_shrink(&cfg(120), generate, shrink_problem, |p: &Problem| {
             let iris_m = LayoutMetrics::compute(&iris_layout(p), p);
             let naive_m = LayoutMetrics::compute(&baselines::packed_naive(p), p);
             iris::prop_assert!(
@@ -180,33 +185,27 @@ fn prop_iris_lateness_no_worse_than_packed_naive() {
                 naive_m.l_max
             );
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_strict_and_pooled_both_complete() {
-    forall_shrink(
-        &cfg(80),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("strict/pooled", gen(), |generate| {
+        forall_shrink(&cfg(80), generate, shrink_problem, |p: &Problem| {
             for opts in [ScheduleOptions::default(), ScheduleOptions::paper_strict()] {
                 let l = iris_layout_opts(p, &opts);
                 validate(&l, p).map_err(|e| format!("{opts:?}: {e}"))?;
             }
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_greedy_fill_never_hurts_makespan() {
-    forall_shrink(
-        &cfg(80),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("greedy fill", gen(), |generate| {
+        forall_shrink(&cfg(80), generate, shrink_problem, |p: &Problem| {
             let with_fill = iris_layout_opts(
                 p,
                 &ScheduleOptions {
@@ -228,17 +227,14 @@ fn prop_greedy_fill_never_hurts_makespan() {
                 without.n_cycles()
             );
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_hls_estimates_well_formed() {
-    forall_shrink(
-        &cfg(60),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("hls estimates", gen(), |generate| {
+        forall_shrink(&cfg(60), generate, shrink_problem, |p: &Problem| {
             for kind in [LayoutKind::Iris, LayoutKind::ElementNaive, LayoutKind::PackedNaive] {
                 let l = baselines::generate(kind, p);
                 let e = iris::hls::estimate(&l, p);
@@ -260,17 +256,14 @@ fn prop_hls_estimates_well_formed() {
                 }
             }
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_cache_hit_layout_bit_identical_to_fresh_schedule() {
-    forall_shrink(
-        &cfg(60),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("cache identity", gen(), |generate| {
+        forall_shrink(&cfg(60), generate, shrink_problem, |p: &Problem| {
             let cache = LayoutCache::new();
             for kind in [LayoutKind::Iris, LayoutKind::DueAlignedNaive] {
                 let fresh = baselines::generate(kind, p);
@@ -290,48 +283,55 @@ fn prop_cache_hit_layout_bit_identical_to_fresh_schedule() {
                 );
             }
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
 fn prop_cache_hit_on_permuted_problem_valid_and_metric_equal() {
-    forall_shrink(
-        &cfg(60),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
-            if p.arrays.len() < 2 {
-                return Ok(());
-            }
-            let cache = LayoutCache::new();
-            let (orig, _) = cache.layout_for_tracked(LayoutKind::Iris, p);
-            let mut rev = p.clone();
-            rev.arrays.reverse();
-            let (remapped, hit) = cache.layout_for_tracked(LayoutKind::Iris, &rev);
-            iris::prop_assert!(hit, "permuted problem must share the cache entry");
-            validate(&remapped, &rev).map_err(|e| format!("remapped layout invalid: {e}"))?;
-            let a = LayoutMetrics::compute(&orig, p);
-            let b = LayoutMetrics::compute(&remapped, &rev);
-            iris::prop_assert!(
-                a.c_max == b.c_max
-                    && a.l_max == b.l_max
-                    && a.occupied_cycles == b.occupied_cycles
-                    && a.fifo.total_bits == b.fifo.total_bits,
-                "metrics changed under remap: {a:?} vs {b:?}"
-            );
-            Ok(())
-        },
-    );
+    // min_arrays = 2 replaces the silent `return Ok(())` skip on
+    // single-array instances the old version used.
+    let g = ProblemGen {
+        min_arrays: 2,
+        ..gen()
+    };
+    with_counted_gen("cache permutation", g, |generate| {
+        forall_shrink(
+            &cfg(60),
+            generate,
+            |p| {
+                shrink_problem(p)
+                    .into_iter()
+                    .filter(|q| q.arrays.len() >= 2)
+                    .collect()
+            },
+            |p: &Problem| {
+                let cache = LayoutCache::new();
+                let (orig, _) = cache.layout_for_tracked(LayoutKind::Iris, p);
+                let mut rev = p.clone();
+                rev.arrays.reverse();
+                let (remapped, hit) = cache.layout_for_tracked(LayoutKind::Iris, &rev);
+                iris::prop_assert!(hit, "permuted problem must share the cache entry");
+                validate(&remapped, &rev).map_err(|e| format!("remapped layout invalid: {e}"))?;
+                let a = LayoutMetrics::compute(&orig, p);
+                let b = LayoutMetrics::compute(&remapped, &rev);
+                iris::prop_assert!(
+                    a.c_max == b.c_max
+                        && a.l_max == b.l_max
+                        && a.occupied_cycles == b.occupied_cycles
+                        && a.fifo.total_bits == b.fifo.total_bits,
+                    "metrics changed under remap: {a:?} vs {b:?}"
+                );
+                Ok(())
+            },
+        );
+    });
 }
 
 #[test]
 fn prop_parallel_delta_sweep_matches_serial() {
-    forall_shrink(
-        &cfg(40),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("parallel dse", gen(), |generate| {
+        forall_shrink(&cfg(40), generate, shrink_problem, |p: &Problem| {
             let serial = dse::delta_sweep(p, &[4, 2, 1]);
             let engine = DseEngine::new().threads(4);
             let parallel = engine.delta_sweep(p, &[4, 2, 1]);
@@ -356,8 +356,8 @@ fn prop_parallel_delta_sweep_matches_serial() {
                 "second sweep must hit the cache"
             );
             Ok(())
-        },
-    );
+        });
+    });
 }
 
 #[test]
@@ -365,11 +365,8 @@ fn prop_iris_busy_density_at_least_packed_naive() {
     // The densest-alone override guarantees every Iris busy cycle carries
     // at least as many payload bits as a homogeneous packed cycle could;
     // consequently Iris never uses more busy cycles than packed-naive.
-    forall_shrink(
-        &cfg(120),
-        |rng| gen().generate(rng),
-        shrink_problem,
-        |p: &Problem| {
+    with_counted_gen("busy density", gen(), |generate| {
+        forall_shrink(&cfg(120), generate, shrink_problem, |p: &Problem| {
             let iris_m = LayoutMetrics::compute(&iris_layout(p), p);
             let packed = baselines::packed_naive(p);
             iris::prop_assert!(
@@ -379,6 +376,55 @@ fn prop_iris_busy_density_at_least_packed_naive() {
                 packed.n_cycles()
             );
             Ok(())
-        },
-    );
+        });
+    });
+}
+
+#[test]
+fn prop_every_shrink_step_is_a_valid_problem() {
+    // Satellite: shrinking must stay inside the Problem invariants even
+    // from degenerate/colliding starting points, never propose the
+    // unchanged input, and never grow the instance.
+    let g = ProblemGen {
+        degenerate_prob: 0.3,
+        collide_names_prob: 0.4,
+        ..ProblemGen::default()
+    };
+    with_counted_gen("shrink validity", g, |generate| {
+        forall_shrink(&cfg(150), generate, shrink_problem, |p: &Problem| {
+            for q in shrink_problem(p) {
+                iris::prop_assert!(q != *p, "shrink candidate identical to input");
+                iris::prop_assert!(
+                    q.total_bits() <= p.total_bits(),
+                    "shrink grew the instance: {} > {} bits",
+                    q.total_bits(),
+                    p.total_bits()
+                );
+                Problem::new(q.bus, q.arrays.clone())
+                    .map_err(|e| format!("shrink step left Problem invariants: {e}"))?;
+            }
+            Ok(())
+        });
+    });
+}
+
+#[test]
+fn generator_rejections_are_counted_not_silent() {
+    // The degenerate menu deliberately draws zero-length arrays, which
+    // Problem::new rejects; the counted generator must surface those
+    // rejections while staying under the 50% budget.
+    let g = ProblemGen {
+        degenerate_prob: 0.5,
+        ..ProblemGen::default()
+    };
+    let mut rng = Rng::new(0x51E7);
+    let mut stats = GenStats::default();
+    for _ in 0..300 {
+        let p = g.generate_counted(&mut rng, &mut stats);
+        assert!(p.arrays.iter().all(|a| a.depth > 0));
+    }
+    assert!(stats.attempts > 300, "no rejected attempts ever drawn");
+    assert!(stats.rejected > 0, "rejections must be counted");
+    assert_eq!(stats.attempts - stats.rejected, 300);
+    stats.assert_healthy("properties generator");
 }
