@@ -1,8 +1,9 @@
 //! Bench: the accelerator-side decode hot path (Listing-2 equivalent) —
 //! GB/s of payload extracted from bus lines across the compiled word
-//! program (serial / parallel / incremental stream), the interpreted
-//! plan, the bit-by-bit scalar baseline, and the cycle-accurate II=1
-//! stream-decoder simulation.
+//! program (serial / parallel / incremental stream), the run-coalesced
+//! engine (bulk copies + lane-batched gathers), the interpreted plan,
+//! the bit-by-bit scalar baseline, and the cycle-accurate II=1
+//! stream-decoder simulation, against a memcpy roofline.
 //!
 //! Doubles as the CI perf-smoke gate: `--quick` shrinks calibration and
 //! the workload set, `--check` enforces `benchkit/thresholds.json` (see
@@ -11,7 +12,7 @@
 use iris::baselines;
 use iris::benchkit::{black_box, finish_gate, parse_bench_args, section, Bencher, Stats};
 use iris::coordinator::pipeline::synthetic_data;
-use iris::decode::{decode_bitwise, DecodePlan, DecodeProgram, StreamDecoder};
+use iris::decode::{decode_bitwise, CoalescedDecode, DecodePlan, DecodeProgram, StreamDecoder};
 use iris::layout::LayoutKind;
 use iris::model::{helmholtz_problem, matmul_problem, Problem};
 use iris::pack::PackPlan;
@@ -38,6 +39,12 @@ fn bench_workload(
     let b = main.clone().with_bytes(bytes);
     out.push(b.run(&label("compiled"), || {
         black_box(prog.decode(&buf).unwrap());
+    }));
+    // Run-coalesced lowering: word-aligned elements come out as bulk
+    // copies, the rest through the lane-batched gather loop.
+    let cprog = CoalescedDecode::compile(&layout, p);
+    out.push(b.run(&label("coalesced"), || {
+        black_box(cprog.decode(&buf).unwrap());
     }));
     out.push(b.run(&label("plan"), || {
         black_box(dp.decode(&buf).unwrap());
@@ -81,6 +88,19 @@ fn main() {
     if !quick {
         bench_workload("matmul(33,31)", &mp, LayoutKind::DueAlignedNaive, &b, false, &mut stats);
     }
+
+    // Gate-scoped memcpy roofline over the same payload: the thresholds
+    // pin the coalesced engine to a fixed fraction of it, so it runs in
+    // --quick too.
+    section("memcpy roofline (same payload)");
+    let bytes = hp.total_bits() as usize / 8;
+    let src = vec![0x5Au8; bytes];
+    let mut dst = vec![0u8; bytes];
+    let roof = b.clone().with_bytes(bytes as u64);
+    stats.push(roof.run("decode memcpy (helmholtz payload)", || {
+        dst.copy_from_slice(black_box(&src));
+        black_box(&dst);
+    }));
 
     finish_gate("bench_decode_hot", "decode ", &args, &stats);
 }

@@ -60,13 +60,7 @@ fn main() {
             .map(|seed| {
                 let p = synthetic_problem(8, seed);
                 let data = synthetic_data(&p, seed);
-                server.submit(TransferRequest {
-                    problem: p,
-                    data,
-                    kind: LayoutKind::Iris,
-                    channels: None,
-                    cosim: false,
-                })
+                server.submit(TransferRequest::builder(p, data).build().unwrap())
             })
             .collect();
         for rx in rxs {

@@ -8,7 +8,7 @@
 //! Run: `cargo run --release --example layout_server`
 
 use iris::coordinator::pipeline::{synthetic_data, synthetic_problem};
-use iris::coordinator::server::{LayoutServer, TransferRequest};
+use iris::coordinator::server::{LayoutServer, ServerConfig, TransferRequest};
 use iris::layout::LayoutKind;
 use std::time::Instant;
 
@@ -17,20 +17,21 @@ use std::time::Instant;
 const DISTINCT_PROBLEMS: u64 = 32;
 
 fn drive(kind: LayoutKind, requests: u64) -> anyhow::Result<(f64, f64, f64)> {
-    let server = LayoutServer::start(4, 8);
+    let server = LayoutServer::with_config(ServerConfig {
+        workers: 4,
+        max_batch: 8,
+        cache: None,
+    });
     let t0 = Instant::now();
     let reqs: Vec<TransferRequest> = (0..requests)
         .map(|i| {
             let seed = i % DISTINCT_PROBLEMS;
             let p = synthetic_problem(10, seed);
             let data = synthetic_data(&p, seed ^ 0xABCD);
-            TransferRequest {
-                problem: p,
-                data,
-                kind,
-                channels: None,
-                cosim: false,
-            }
+            TransferRequest::builder(p, data)
+                .kind(kind)
+                .build()
+                .expect("valid demo request")
         })
         .collect();
     let ticket = server.submit_batch(reqs);
@@ -75,13 +76,7 @@ fn drive_multichannel(k: usize) -> anyhow::Result<()> {
     let p = synthetic_problem(10, 7);
     let data = synthetic_data(&p, 7 ^ 0xABCD);
     let resp = server
-        .submit(TransferRequest {
-            problem: p,
-            data,
-            kind: LayoutKind::Iris,
-            channels: Some(k),
-            cosim: false,
-        })
+        .submit(TransferRequest::builder(p, data).channels(k).build()?)
         .recv()??;
     assert!(resp.decode_exact, "multi-channel decode mismatch");
     assert_eq!(resp.channels, k);

@@ -1,0 +1,133 @@
+//! Typed coordinator errors.
+//!
+//! The serving path used to report failures as ad-hoc `anyhow!`/`bail!`
+//! strings, forcing consumers of [`super::server::TransferResponse`]
+//! channels to string-grep for failure classes. [`Error`] makes every
+//! failure class a matchable variant while keeping `anyhow` interop in
+//! both directions: `Error` implements [`std::error::Error`], so the
+//! vendored shim's blanket `From` converts it into `anyhow::Error` at
+//! any `?`, and [`Error::from`] wraps an `anyhow::Error` coming up from
+//! lower layers into [`Error::Internal`].
+
+use std::fmt;
+
+/// Everything the coordinator serving path can fail with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum Error {
+    /// A transfer asked for more HBM pseudo-channels than the problem
+    /// has arrays (the partitioner assigns whole arrays to channels).
+    InfeasibleChannels {
+        /// Channels requested.
+        requested: usize,
+        /// Arrays in the problem.
+        arrays: usize,
+    },
+    /// A workload name that the pipeline does not know.
+    UnknownWorkload(String),
+    /// Cycle-accurate co-simulation of the generated read module
+    /// produced streams that differ from the source data.
+    CosimDivergence {
+        /// Diverging channel on the multi-channel path; `None` on the
+        /// single-channel path.
+        channel: Option<usize>,
+    },
+    /// A decoder returned element streams that differ from the source
+    /// data (host-side roundtrip failure, as opposed to a cosim one).
+    DecodeMismatch {
+        /// Which decode path diverged.
+        what: &'static str,
+    },
+    /// A request was rejected before reaching a worker (e.g. a builder
+    /// constraint like `channels == Some(0)`).
+    InvalidRequest(String),
+    /// The worker pool shut down before answering.
+    WorkerDisconnected,
+    /// A lower layer failed with an untyped (`anyhow`) error.
+    Internal(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InfeasibleChannels { requested, arrays } => write!(
+                f,
+                "cannot serve over {requested} channels: problem has only {arrays} arrays"
+            ),
+            Error::UnknownWorkload(name) => write!(f, "unknown workload '{name}'"),
+            Error::CosimDivergence { channel: None } => {
+                write!(f, "cosim validation: simulated streams differ from source data")
+            }
+            Error::CosimDivergence { channel: Some(c) } => {
+                write!(f, "cosim validation: channel {c} streams differ from source data")
+            }
+            Error::DecodeMismatch { what } => {
+                write!(f, "decode mismatch: {what}")
+            }
+            Error::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            Error::WorkerDisconnected => write!(f, "layout server worker disconnected"),
+            Error::Internal(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Error {
+        Error::Internal(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn variants() -> Vec<Error> {
+        vec![
+            Error::InfeasibleChannels {
+                requested: 99,
+                arrays: 3,
+            },
+            Error::UnknownWorkload("fft".into()),
+            Error::CosimDivergence { channel: None },
+            Error::CosimDivergence { channel: Some(2) },
+            Error::DecodeMismatch { what: "stream decoder produced wrong element order" },
+            Error::InvalidRequest("channels must be >= 1".into()),
+            Error::WorkerDisconnected,
+            Error::Internal("scheduler exploded".into()),
+        ]
+    }
+
+    #[test]
+    fn display_is_nonempty_and_distinct() {
+        let msgs: Vec<String> = variants().iter().map(|e| e.to_string()).collect();
+        for m in &msgs {
+            assert!(!m.is_empty());
+        }
+        for i in 0..msgs.len() {
+            for j in i + 1..msgs.len() {
+                assert_ne!(msgs[i], msgs[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn anyhow_interop_roundtrips_the_message() {
+        for e in variants() {
+            let msg = e.to_string();
+            // Typed -> anyhow (shim blanket From over std::error::Error).
+            let any: anyhow::Error = e.into();
+            assert_eq!(any.to_string(), msg);
+            // anyhow -> typed (wrapped as Internal, message preserved).
+            let back = Error::from(any);
+            assert_eq!(back.to_string(), msg);
+        }
+    }
+
+    #[test]
+    fn implements_std_error() {
+        let e: Box<dyn std::error::Error> = Box::new(Error::WorkerDisconnected);
+        assert_eq!(e.to_string(), "layout server worker disconnected");
+    }
+}

@@ -5,8 +5,11 @@
 //! topology and metrics; compiled XLA artifacts are the only compute
 //! dependency (Python is build-time-only).
 
+pub mod error;
 pub mod pipeline;
 pub mod server;
+
+pub use error::Error;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -36,6 +39,12 @@ pub struct Metrics {
     /// worker threads (`decode::program::PARALLEL_MIN_ELEMS`) — the
     /// decode-side twin of `parallel_packs`.
     pub parallel_decodes: AtomicU64,
+    /// Transfers served by the run-coalesced engine
+    /// (`pack::CoalescedPack` / `decode::CoalescedDecode`) instead of the
+    /// scalar compiled word programs — either because the request pinned
+    /// `EngineChoice::Coalesced` or because auto-routing found enough
+    /// word-aligned copy coverage in the layout.
+    pub coalesced_transfers: AtomicU64,
     /// Transfers that additionally ran the cycle-accurate read-module
     /// co-simulation (`cosim::ReadCosim`) because the request asked for
     /// `validate: cosim`.
@@ -108,26 +117,119 @@ impl Metrics {
         self.channels_served.fetch_add(channels, Ordering::Relaxed);
     }
 
+    /// Consistent point-in-time copy of every counter (plus the derived
+    /// rates), suitable for returning across the server boundary or
+    /// serializing. Individual loads are relaxed, so counters touched by
+    /// concurrent workers may be mutually skewed by in-flight requests.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_latency_ns: self.mean_latency_ns(),
+            max_latency_ns: self.max_latency_ns.load(Ordering::Relaxed),
+            cache_hit_rate: self.cache_hit_rate(),
+            dse_points: self.dse_points.load(Ordering::Relaxed),
+            mean_dse_point_latency_ns: self.mean_dse_point_latency_ns(),
+            parallel_packs: self.parallel_packs.load(Ordering::Relaxed),
+            parallel_decodes: self.parallel_decodes.load(Ordering::Relaxed),
+            coalesced_transfers: self.coalesced_transfers.load(Ordering::Relaxed),
+            multichannel_transfers: self.multichannel_transfers.load(Ordering::Relaxed),
+            channels_served: self.channels_served.load(Ordering::Relaxed),
+            cosim_validations: self.cosim_validations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// One-line human-readable rendering of [`Metrics::snapshot`].
     pub fn summary(&self) -> String {
-        format!(
+        self.snapshot().to_string()
+    }
+}
+
+/// Plain-data copy of [`Metrics`] taken by [`Metrics::snapshot`]. Unlike
+/// the atomics it is `Clone + PartialEq`, renders the legacy one-line
+/// summary via `Display`, and serializes via [`MetricsSnapshot::to_json`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_latency_ns: f64,
+    pub max_latency_ns: u64,
+    /// Layout-cache hit rate in `[0, 1]`.
+    pub cache_hit_rate: f64,
+    pub dse_points: u64,
+    pub mean_dse_point_latency_ns: f64,
+    pub parallel_packs: u64,
+    pub parallel_decodes: u64,
+    pub coalesced_transfers: u64,
+    pub multichannel_transfers: u64,
+    pub channels_served: u64,
+    pub cosim_validations: u64,
+}
+
+impl MetricsSnapshot {
+    /// Serialize every field under its struct name (rates as fractions,
+    /// latencies in raw nanoseconds — no human formatting).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        o.set("requests", Json::Num(self.requests as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("errors", Json::Num(self.errors as f64))
+            .set("batches", Json::Num(self.batches as f64))
+            .set("mean_latency_ns", Json::Num(self.mean_latency_ns))
+            .set("max_latency_ns", Json::Num(self.max_latency_ns as f64))
+            .set("cache_hit_rate", Json::Num(self.cache_hit_rate))
+            .set("dse_points", Json::Num(self.dse_points as f64))
+            .set(
+                "mean_dse_point_latency_ns",
+                Json::Num(self.mean_dse_point_latency_ns),
+            )
+            .set("parallel_packs", Json::Num(self.parallel_packs as f64))
+            .set("parallel_decodes", Json::Num(self.parallel_decodes as f64))
+            .set(
+                "coalesced_transfers",
+                Json::Num(self.coalesced_transfers as f64),
+            )
+            .set(
+                "multichannel_transfers",
+                Json::Num(self.multichannel_transfers as f64),
+            )
+            .set("channels_served", Json::Num(self.channels_served as f64))
+            .set(
+                "cosim_validations",
+                Json::Num(self.cosim_validations as f64),
+            );
+        o
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
             "requests={} completed={} errors={} batches={} mean_latency={} \
              max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={} \
-             parallel_packs={} parallel_decodes={} multichannel={} channels_served={} \
-             cosim_validations={}",
-            self.requests.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.errors.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            crate::util::human_ns(self.mean_latency_ns()),
-            crate::util::human_ns(self.max_latency_ns.load(Ordering::Relaxed) as f64),
-            100.0 * self.cache_hit_rate(),
-            self.dse_points.load(Ordering::Relaxed),
-            crate::util::human_ns(self.mean_dse_point_latency_ns()),
-            self.parallel_packs.load(Ordering::Relaxed),
-            self.parallel_decodes.load(Ordering::Relaxed),
-            self.multichannel_transfers.load(Ordering::Relaxed),
-            self.channels_served.load(Ordering::Relaxed),
-            self.cosim_validations.load(Ordering::Relaxed),
+             parallel_packs={} parallel_decodes={} coalesced={} multichannel={} \
+             channels_served={} cosim_validations={}",
+            self.requests,
+            self.completed,
+            self.errors,
+            self.batches,
+            crate::util::human_ns(self.mean_latency_ns),
+            crate::util::human_ns(self.max_latency_ns as f64),
+            100.0 * self.cache_hit_rate,
+            self.dse_points,
+            crate::util::human_ns(self.mean_dse_point_latency_ns),
+            self.parallel_packs,
+            self.parallel_decodes,
+            self.coalesced_transfers,
+            self.multichannel_transfers,
+            self.channels_served,
+            self.cosim_validations,
         )
     }
 }
@@ -163,6 +265,42 @@ mod tests {
         assert_eq!(m.dse_points.load(Ordering::Relaxed), 10);
         assert!((m.mean_dse_point_latency_ns() - 400.0).abs() < 1e-9);
         assert!(m.summary().contains("dse_points=10"));
+    }
+
+    #[test]
+    fn snapshot_matches_summary_and_serializes() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record(100, true);
+        m.record(500, false);
+        m.record_cache(true);
+        m.record_cache(false);
+        m.coalesced_transfers.fetch_add(2, Ordering::Relaxed);
+        m.record_multichannel(4);
+        let s = m.snapshot();
+        assert_eq!(s.to_string(), m.summary());
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.max_latency_ns, 500);
+        assert!((s.cache_hit_rate - 0.5).abs() < 1e-12);
+        assert_eq!(s.coalesced_transfers, 2);
+        assert!(m.summary().contains("coalesced=2"));
+        // Snapshots are decoupled from the live counters.
+        m.record(900, true);
+        assert_eq!(s.completed, 2);
+        assert_ne!(m.snapshot(), s);
+        let j = s.to_json();
+        assert_eq!(j.get("requests").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(
+            j.get("coalesced_transfers").and_then(|v| v.as_u64()),
+            Some(2)
+        );
+        assert_eq!(
+            j.get("cache_hit_rate").and_then(|v| v.as_f64()),
+            Some(0.5)
+        );
+        assert!(j.to_string_compact().contains("\"channels_served\":4"));
     }
 
     #[test]

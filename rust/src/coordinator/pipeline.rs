@@ -21,7 +21,7 @@ use crate::quant;
 use crate::runtime::Runtime;
 use crate::testing::gen::random_elements;
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -46,6 +46,18 @@ impl Workload {
         match self {
             Workload::Helmholtz => "helmholtz".into(),
             Workload::MatMul { w_a, w_b } => format!("matmul({w_a},{w_b})"),
+        }
+    }
+
+    /// Parse a CLI workload name; `w_a`/`w_b` are the matmul operand
+    /// widths (ignored for helmholtz). Unknown names are the typed
+    /// [`super::Error::UnknownWorkload`], so callers can distinguish a
+    /// typo from a pipeline failure.
+    pub fn parse(name: &str, w_a: u32, w_b: u32) -> Result<Workload, super::Error> {
+        match name {
+            "helmholtz" => Ok(Workload::Helmholtz),
+            "matmul" => Ok(Workload::MatMul { w_a, w_b }),
+            other => Err(super::Error::UnknownWorkload(other.to_string())),
         }
     }
 }
@@ -299,7 +311,10 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     let trace = sd.run(&buf)?;
     sd.verify_against_analysis(&trace)?;
     if trace.streams != raw_arrays {
-        bail!("stream decoder produced wrong element order");
+        return Err(super::Error::DecodeMismatch {
+            what: "stream decoder produced wrong element order",
+        }
+        .into());
     }
 
     // ------------------------------------------------ cosim validation
@@ -569,6 +584,22 @@ pub fn synthetic_data(problem: &Problem, seed: u64) -> Vec<Vec<u64>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn workload_parse_roundtrips_and_types_unknown_names() {
+        assert_eq!(Workload::parse("helmholtz", 0, 0).unwrap(), Workload::Helmholtz);
+        assert_eq!(
+            Workload::parse("matmul", 33, 31).unwrap(),
+            Workload::MatMul { w_a: 33, w_b: 31 }
+        );
+        match Workload::parse("fft", 8, 8) {
+            Err(crate::coordinator::Error::UnknownWorkload(name)) => assert_eq!(name, "fft"),
+            other => panic!("expected UnknownWorkload, got {other:?}"),
+        }
+        // The legacy CLI message is preserved through Display.
+        let msg = Workload::parse("fft", 8, 8).unwrap_err().to_string();
+        assert_eq!(msg, "unknown workload 'fft'");
+    }
 
     #[test]
     fn transport_only_pipeline_all_workloads_all_layouts() {

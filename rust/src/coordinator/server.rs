@@ -1,34 +1,61 @@
 //! Threaded layout/transfer server: the serving face of the coordinator.
 //!
-//! Clients submit [`TransferRequest`]s (a problem plus its data) one at a
-//! time ([`LayoutServer::submit`]) or as an ordered batch
-//! ([`LayoutServer::submit_batch`]); design-space sweeps go through the
-//! DSE endpoint ([`LayoutServer::submit_dse`]). Worker threads batch
-//! greedily (dynamic batching: drain whatever is queued, up to
-//! `max_batch`), fetch the layout from the shared memoized
+//! Clients build [`TransferRequest`]s with [`TransferRequest::builder`]
+//! (a problem plus its data, with optional channels / cosim / engine
+//! knobs) and submit them one at a time ([`LayoutServer::submit`]) or as
+//! an ordered batch ([`LayoutServer::submit_batch`]); design-space sweeps
+//! go through the DSE endpoint ([`LayoutServer::submit_dse`]). Worker
+//! threads batch greedily (dynamic batching: drain whatever is queued, up
+//! to `max_batch`), fetch the layout from the shared memoized
 //! [`LayoutCache`] (scheduling only on a miss), pack, stream-decode, and
 //! return per-request [`TransferResponse`]s with layout metrics and
-//! modeled HBM timing. std::thread + mpsc stand in for tokio (offline
-//! environment; see DESIGN.md §Threading).
+//! modeled HBM timing. Failures travel typed ([`Error`]) so clients can
+//! match on the failure class instead of grepping message strings.
+//! std::thread + mpsc stand in for tokio (offline environment; see
+//! DESIGN.md §Threading).
 
-use super::Metrics;
+use super::{Error, Metrics, MetricsSnapshot};
 use crate::bus::multichannel::MultiChannelExecutor;
 use crate::bus::partition::{partition_opts, PartitionStrategy};
 use crate::bus::HbmChannel;
-use crate::decode::{DecodePlan, DecodeProgram, PARALLEL_MIN_ELEMS};
+use crate::decode::{CoalescedDecode, DecodePlan, DecodeProgram, PARALLEL_MIN_ELEMS};
 use crate::dse::{DesignPoint, DseEngine};
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
-use crate::pack::{PackPlan, PackProgram, PARALLEL_MIN_OPS};
-use anyhow::{anyhow, Result};
+use crate::pack::{CoalescedPack, PackPlan, PackProgram, PARALLEL_MIN_OPS};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// One transfer job.
+/// Which host-side pack/decode engine serves a transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineChoice {
+    /// Route per layout: the run-coalesced engine when at least
+    /// [`COALESCE_AUTO_COVERAGE`] of the payload lowers to bulk word
+    /// copies, the scalar compiled word programs otherwise.
+    #[default]
+    Auto,
+    /// Always the scalar compiled word programs
+    /// ([`PackProgram`]/[`DecodeProgram`]).
+    Compiled,
+    /// Always the run-coalesced engine
+    /// ([`CoalescedPack`]/[`CoalescedDecode`]), even on layouts that
+    /// lower to no copies at all.
+    Coalesced,
+}
+
+/// [`EngineChoice::Auto`] picks the coalesced engine when at least this
+/// fraction of payload words is served by bulk copies — below it the
+/// coalesced engine degenerates to the lane-batched residual loop and
+/// the compiled programs' fused per-op loop wins.
+pub const COALESCE_AUTO_COVERAGE: f64 = 0.5;
+
+/// One transfer job. Construct via [`TransferRequest::builder`]; direct
+/// struct-literal construction is a legacy pattern that breaks whenever
+/// a request knob is added.
 pub struct TransferRequest {
     pub problem: Problem,
     pub data: Vec<Vec<u64>>,
@@ -50,6 +77,81 @@ pub struct TransferRequest {
     /// path every channel is co-simulated and the slowest one is
     /// reported (channels stream concurrently).
     pub cosim: bool,
+    /// Host-side engine selection (single-channel path only; the
+    /// multi-channel executor has its own compiled per-channel programs).
+    pub engine: EngineChoice,
+}
+
+impl TransferRequest {
+    /// Start building a request for `problem` with its source `data`.
+    /// Defaults: Iris layout, single channel, no cosim,
+    /// [`EngineChoice::Auto`].
+    pub fn builder(problem: Problem, data: Vec<Vec<u64>>) -> TransferRequestBuilder {
+        TransferRequestBuilder {
+            problem,
+            data,
+            kind: LayoutKind::Iris,
+            channels: None,
+            cosim: false,
+            engine: EngineChoice::Auto,
+        }
+    }
+}
+
+/// Builder returned by [`TransferRequest::builder`]. Knobs are optional;
+/// [`TransferRequestBuilder::build`] validates the combination.
+pub struct TransferRequestBuilder {
+    problem: Problem,
+    data: Vec<Vec<u64>>,
+    kind: LayoutKind,
+    channels: Option<usize>,
+    cosim: bool,
+    engine: EngineChoice,
+}
+
+impl TransferRequestBuilder {
+    /// Layout family to serve the transfer with (default Iris).
+    pub fn kind(mut self, kind: LayoutKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Serve over `k` HBM pseudo-channels (see
+    /// [`TransferRequest::channels`]).
+    pub fn channels(mut self, k: usize) -> Self {
+        self.channels = Some(k);
+        self
+    }
+
+    /// Additionally run cycle-accurate read-module co-simulation.
+    pub fn cosim(mut self, on: bool) -> Self {
+        self.cosim = on;
+        self
+    }
+
+    /// Pin the host-side pack/decode engine (default
+    /// [`EngineChoice::Auto`]).
+    pub fn engine(mut self, engine: EngineChoice) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Validate and produce the request. Rejects `channels(0)` — zero
+    /// channels cannot carry a transfer and `None` already means "the
+    /// single-channel path".
+    pub fn build(self) -> Result<TransferRequest, Error> {
+        if self.channels == Some(0) {
+            return Err(Error::InvalidRequest("channels must be >= 1".into()));
+        }
+        Ok(TransferRequest {
+            problem: self.problem,
+            data: self.data,
+            kind: self.kind,
+            channels: self.channels,
+            cosim: self.cosim,
+            engine: self.engine,
+        })
+    }
 }
 
 /// Result returned to the submitter.
@@ -72,6 +174,10 @@ pub struct TransferResponse {
     /// Per-channel utilization of the aggregate streaming window
     /// (payload bits over `C_max · m`); empty on the single-channel path.
     pub channel_eff: Vec<f64>,
+    /// Engine that actually served the transfer: `"compiled"`,
+    /// `"coalesced"`, or `"multichannel"` (the routing outcome of
+    /// [`TransferRequest::engine`]).
+    pub engine: &'static str,
     /// Cosim-measured read-module cycles (bus + stalls + drain tail;
     /// slowest channel on the multi-channel path). None unless the
     /// request asked for cosim validation.
@@ -97,14 +203,14 @@ pub struct DseResponse {
 }
 
 enum Job {
-    Transfer(TransferRequest, Sender<Result<TransferResponse>>),
-    Dse(DseRequest, Sender<Result<DseResponse>>),
+    Transfer(TransferRequest, Sender<Result<TransferResponse, Error>>),
+    Dse(DseRequest, Sender<Result<DseResponse, Error>>),
 }
 
 /// Handle to an in-flight batch; [`BatchTicket::wait`] returns responses
 /// in submission order regardless of worker completion order.
 pub struct BatchTicket {
-    rxs: Vec<Receiver<Result<TransferResponse>>>,
+    rxs: Vec<Receiver<Result<TransferResponse, Error>>>,
 }
 
 impl BatchTicket {
@@ -117,14 +223,33 @@ impl BatchTicket {
     }
 
     /// Block until every response of the batch has arrived.
-    pub fn wait(self) -> Vec<Result<TransferResponse>> {
+    pub fn wait(self) -> Vec<Result<TransferResponse, Error>> {
         self.rxs
             .into_iter()
-            .map(|rx| {
-                rx.recv()
-                    .unwrap_or_else(|_| Err(anyhow!("layout server worker disconnected")))
-            })
+            .map(|rx| rx.recv().unwrap_or_else(|_| Err(Error::WorkerDisconnected)))
             .collect()
+    }
+}
+
+/// Startup knobs for [`LayoutServer::with_config`]; the one constructor
+/// behind the legacy `start`/`start_with_cache` pair.
+pub struct ServerConfig {
+    /// Worker threads (clamped to at least 1).
+    pub workers: usize,
+    /// Dynamic-batching cap per worker wakeup.
+    pub max_batch: usize,
+    /// Shared schedule memo table (e.g. one already warmed by a
+    /// [`DseEngine`]); `None` gives the server a fresh private cache.
+    pub cache: Option<Arc<LayoutCache>>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            workers: 4,
+            max_batch: 8,
+            cache: None,
+        }
     }
 }
 
@@ -134,29 +259,23 @@ pub struct LayoutServer {
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     /// Shared schedule memo table; pass your own via
-    /// [`LayoutServer::start_with_cache`] to share it with a [`DseEngine`].
+    /// [`ServerConfig::cache`] to share it with a [`DseEngine`].
     pub cache: Arc<LayoutCache>,
     pub max_batch: usize,
 }
 
 impl LayoutServer {
-    /// Spawn `n_workers` workers with the given batching cap and a fresh
-    /// private layout cache.
-    pub fn start(n_workers: usize, max_batch: usize) -> LayoutServer {
-        LayoutServer::start_with_cache(n_workers, max_batch, Arc::new(LayoutCache::new()))
-    }
-
-    /// Spawn workers sharing an existing layout cache (e.g. one already
-    /// warmed by a [`DseEngine`]).
-    pub fn start_with_cache(
-        n_workers: usize,
-        max_batch: usize,
-        cache: Arc<LayoutCache>,
-    ) -> LayoutServer {
+    /// Spawn the worker pool described by `cfg`. This is the real
+    /// constructor; [`LayoutServer::start`] and
+    /// [`LayoutServer::start_with_cache`] are thin wrappers kept for
+    /// existing callers.
+    pub fn with_config(cfg: ServerConfig) -> LayoutServer {
+        let cache = cfg.cache.unwrap_or_else(|| Arc::new(LayoutCache::new()));
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
-        let workers = (0..n_workers.max(1))
+        let max_batch = cfg.max_batch;
+        let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let metrics = Arc::clone(&metrics);
@@ -173,8 +292,32 @@ impl LayoutServer {
         }
     }
 
+    /// Spawn `n_workers` workers with the given batching cap and a fresh
+    /// private layout cache. Wrapper over [`LayoutServer::with_config`].
+    pub fn start(n_workers: usize, max_batch: usize) -> LayoutServer {
+        LayoutServer::with_config(ServerConfig {
+            workers: n_workers,
+            max_batch,
+            cache: None,
+        })
+    }
+
+    /// Spawn workers sharing an existing layout cache. Wrapper over
+    /// [`LayoutServer::with_config`].
+    pub fn start_with_cache(
+        n_workers: usize,
+        max_batch: usize,
+        cache: Arc<LayoutCache>,
+    ) -> LayoutServer {
+        LayoutServer::with_config(ServerConfig {
+            workers: n_workers,
+            max_batch,
+            cache: Some(cache),
+        })
+    }
+
     /// Submit a request; the response arrives on the returned channel.
-    pub fn submit(&self, req: TransferRequest) -> Receiver<Result<TransferResponse>> {
+    pub fn submit(&self, req: TransferRequest) -> Receiver<Result<TransferResponse, Error>> {
         self.metrics
             .requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -199,7 +342,7 @@ impl LayoutServer {
     /// Submit a δ/W design-space sweep; the worker evaluates it through
     /// the shared layout cache and reports per-point latency in
     /// [`Metrics`].
-    pub fn submit_dse(&self, req: DseRequest) -> Receiver<Result<DseResponse>> {
+    pub fn submit_dse(&self, req: DseRequest) -> Receiver<Result<DseResponse, Error>> {
         self.metrics
             .dse_requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -210,6 +353,11 @@ impl LayoutServer {
             .send(Job::Dse(req, rtx))
             .expect("workers alive");
         rrx
+    }
+
+    /// Point-in-time copy of the server counters — the metrics endpoint.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
     }
 
     /// Graceful shutdown: close the queue and join workers.
@@ -284,7 +432,7 @@ fn process(
     req: &TransferRequest,
     cache: &LayoutCache,
     metrics: &Metrics,
-) -> Result<TransferResponse> {
+) -> Result<TransferResponse, Error> {
     if let Some(k) = req.channels {
         if k > 1 {
             return process_multichannel(req, k, cache, metrics);
@@ -296,38 +444,84 @@ fn process(
     let layout_metrics = LayoutMetrics::compute(&layout, &req.problem);
     let plan = PackPlan::compile(&layout, &req.problem);
     let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
-    // Compiled word-program engine (bit-identical to the interpreted
-    // plans; property-tested). Large transfers shard bus-cycles across
-    // the same worker fan-out the DSE engine uses.
-    let prog = PackProgram::compile(&plan);
     let threads = crate::dse::default_threads();
-    let buf = if prog.num_ops() >= PARALLEL_MIN_OPS && threads > 1 {
-        // Counted only when the sharded executor actually runs (the
-        // same condition pack_parallel short-circuits on).
-        metrics
-            .parallel_packs
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        prog.pack_parallel(&refs, threads)?
-    } else {
-        prog.pack(&refs)?
+    // Engine routing: the run-coalesced engine serves layouts whose
+    // word-aligned runs lower to bulk copies; Auto probes the lowering
+    // (cheap relative to the transfer) and takes it only when coverage
+    // clears the crossover threshold.
+    let coalesced = match req.engine {
+        EngineChoice::Compiled => None,
+        EngineChoice::Coalesced => Some(CoalescedPack::from_plan(&plan, &layout)),
+        EngineChoice::Auto => {
+            let cp = CoalescedPack::from_plan(&plan, &layout);
+            if cp.copy_coverage() >= COALESCE_AUTO_COVERAGE {
+                Some(cp)
+            } else {
+                None
+            }
+        }
     };
-    let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &req.problem));
-    // Large decodes shard element ranges the same way large packs shard
-    // bus-cycles (same fan-out, same kind of threshold).
-    let decoded = if dprog.num_elements() >= PARALLEL_MIN_ELEMS && threads > 1 {
+    let (buf, engine) = if let Some(cp) = &coalesced {
         metrics
-            .parallel_decodes
+            .coalesced_transfers
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        dprog.decode_parallel(&buf, threads)?
+        // Same sharding policy as the compiled path, over the coalesced
+        // op count (each bulk copy counts its words).
+        let buf = if cp.copy_words() + cp.residual().len() >= PARALLEL_MIN_OPS && threads > 1 {
+            metrics
+                .parallel_packs
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            cp.pack_parallel(&refs, threads)?
+        } else {
+            cp.pack(&refs)?
+        };
+        (buf, "coalesced")
     } else {
-        dprog.decode(&buf)?
+        // Compiled word-program engine (bit-identical to the interpreted
+        // plans; property-tested). Large transfers shard bus-cycles
+        // across the same worker fan-out the DSE engine uses.
+        let prog = PackProgram::compile(&plan);
+        let buf = if prog.num_ops() >= PARALLEL_MIN_OPS && threads > 1 {
+            // Counted only when the sharded executor actually runs (the
+            // same condition pack_parallel short-circuits on).
+            metrics
+                .parallel_packs
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            prog.pack_parallel(&refs, threads)?
+        } else {
+            prog.pack(&refs)?
+        };
+        (buf, "compiled")
+    };
+    // Decode mirrors the pack-side engine choice; large decodes shard
+    // element ranges the same way large packs shard bus-cycles.
+    let decoded = if coalesced.is_some() {
+        let dprog = CoalescedDecode::compile(&layout, &req.problem);
+        if dprog.num_elements() >= PARALLEL_MIN_ELEMS && threads > 1 {
+            metrics
+                .parallel_decodes
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            dprog.decode_parallel(&buf, threads)?
+        } else {
+            dprog.decode(&buf)?
+        }
+    } else {
+        let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &req.problem));
+        if dprog.num_elements() >= PARALLEL_MIN_ELEMS && threads > 1 {
+            metrics
+                .parallel_decodes
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            dprog.decode_parallel(&buf, threads)?
+        } else {
+            dprog.decode(&buf)?
+        }
     };
     let (cosim_cycles, cosim_ii) = if req.cosim {
         let trace = crate::cosim::ReadCosim::new(&layout, &req.problem)
             .with_capacity(crate::cosim::Capacity::Analyzed)
             .run(&buf)?;
         if trace.streams != req.data {
-            anyhow::bail!("cosim validation: simulated streams differ from source data");
+            return Err(Error::CosimDivergence { channel: None });
         }
         metrics
             .cosim_validations
@@ -347,6 +541,7 @@ fn process(
         cache_hit,
         channels: 1,
         channel_eff: Vec::new(),
+        engine,
         cosim_cycles,
         cosim_ii,
     })
@@ -361,7 +556,15 @@ fn process_multichannel(
     k: usize,
     cache: &LayoutCache,
     metrics: &Metrics,
-) -> Result<TransferResponse> {
+) -> Result<TransferResponse, Error> {
+    // The partitioner assigns whole arrays to channels, so more channels
+    // than arrays can never be served; reject typed before scheduling.
+    if k > req.problem.arrays.len() {
+        return Err(Error::InfeasibleChannels {
+            requested: k,
+            arrays: req.problem.arrays.len(),
+        });
+    }
     let mut all_hit = true;
     let pl = partition_opts(&req.problem, k, PartitionStrategy::Lpt, |p| {
         let (l, hit) = cache.layout_for_tracked(req.kind, p);
@@ -391,9 +594,7 @@ fn process_multichannel(
                     .zip(expect.iter())
                     .all(|(s, e)| s.as_slice() == *e);
             if !exact {
-                anyhow::bail!(
-                    "cosim validation: channel {c} streams differ from source data"
-                );
+                return Err(Error::CosimDivergence { channel: Some(c) });
             }
             worst_cycles = worst_cycles.max(trace.total_cycles);
             worst_ii = worst_ii.max(trace.ii());
@@ -422,6 +623,7 @@ fn process_multichannel(
         cache_hit: all_hit,
         channels: k,
         channel_eff: pl.channel_utilization(m),
+        engine: "multichannel",
         cosim_cycles,
         cosim_ii,
     })
@@ -436,13 +638,7 @@ mod tests {
     fn request(n_arrays: usize, seed: u64) -> TransferRequest {
         let p = synthetic_problem(n_arrays, seed);
         let data = synthetic_data(&p, seed);
-        TransferRequest {
-            problem: p,
-            data,
-            kind: LayoutKind::Iris,
-            channels: None,
-            cosim: false,
-        }
+        TransferRequest::builder(p, data).build().unwrap()
     }
 
     #[test]
@@ -484,6 +680,114 @@ mod tests {
     }
 
     #[test]
+    fn with_config_shares_a_caller_cache() {
+        let cache = Arc::new(LayoutCache::new());
+        let server = LayoutServer::with_config(ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            cache: Some(Arc::clone(&cache)),
+        });
+        server.submit(request(4, 5)).recv().unwrap().unwrap();
+        assert!(cache.stats().misses >= 1, "served through the shared cache");
+        server.shutdown();
+        // Defaults give a usable pool with a private cache.
+        let server = LayoutServer::with_config(ServerConfig::default());
+        assert!(server.submit(request(3, 1)).recv().unwrap().is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_zero_channels() {
+        let p = synthetic_problem(3, 2);
+        let data = synthetic_data(&p, 2);
+        let err = TransferRequest::builder(p, data)
+            .channels(0)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidRequest(_)), "{err:?}");
+        // The rejection also survives the anyhow boundary intact.
+        let any: anyhow::Error = err.into();
+        assert!(any.to_string().contains("channels must be >= 1"));
+    }
+
+    #[test]
+    fn builder_sets_every_knob() {
+        let p = synthetic_problem(4, 3);
+        let data = synthetic_data(&p, 3);
+        let req = TransferRequest::builder(p, data)
+            .kind(LayoutKind::Iris)
+            .channels(2)
+            .cosim(true)
+            .engine(EngineChoice::Compiled)
+            .build()
+            .unwrap();
+        assert_eq!(req.kind, LayoutKind::Iris);
+        assert_eq!(req.channels, Some(2));
+        assert!(req.cosim);
+        assert_eq!(req.engine, EngineChoice::Compiled);
+    }
+
+    #[test]
+    fn engine_choice_is_honored_and_reported() {
+        let server = LayoutServer::start(1, 2);
+        let mk = |engine| {
+            let p = synthetic_problem(5, 31);
+            let data = synthetic_data(&p, 31);
+            TransferRequest::builder(p, data)
+                .engine(engine)
+                .build()
+                .unwrap()
+        };
+        let compiled = server
+            .submit(mk(EngineChoice::Compiled))
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(compiled.engine, "compiled");
+        assert!(compiled.decode_exact);
+        assert_eq!(server.metrics.coalesced_transfers.load(Ordering::Relaxed), 0);
+        let coalesced = server
+            .submit(mk(EngineChoice::Coalesced))
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(coalesced.engine, "coalesced");
+        assert!(coalesced.decode_exact, "coalesced engine must stay bit-exact");
+        assert_eq!(server.metrics.coalesced_transfers.load(Ordering::Relaxed), 1);
+        // Same transport metrics regardless of the host-side engine.
+        assert_eq!(coalesced.c_max, compiled.c_max);
+        assert!((coalesced.b_eff - compiled.b_eff).abs() < 1e-15);
+        assert!(server.metrics.summary().contains("coalesced=1"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn auto_routes_aligned_layouts_to_the_coalesced_engine() {
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        // Width-64 arrays on a 256-bit bus: every element is word-aligned,
+        // so the lowering is pure copies and Auto must take it.
+        let p = Problem::new(
+            BusConfig::new(256),
+            vec![
+                ArraySpec::new("a", 64, 96, 9),
+                ArraySpec::new("b", 64, 64, 5),
+            ],
+        )
+        .unwrap();
+        let data = synthetic_data(&p, 11);
+        let server = LayoutServer::start(1, 1);
+        let resp = server
+            .submit(TransferRequest::builder(p, data).build().unwrap())
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert_eq!(resp.engine, "coalesced");
+        assert!(resp.decode_exact);
+        assert_eq!(server.metrics.coalesced_transfers.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
     fn batch_responses_match_single_submissions() {
         // Reference: one-at-a-time on a single-worker server.
         let reference = LayoutServer::start(1, 1);
@@ -504,6 +808,7 @@ mod tests {
             assert!((b.b_eff - s.b_eff).abs() < 1e-15);
             assert_eq!(b.hbm_seconds, s.hbm_seconds);
             assert!(b.decode_exact && s.decode_exact);
+            assert_eq!(b.engine, s.engine, "routing must be deterministic");
         }
         server.shutdown();
     }
@@ -554,7 +859,8 @@ mod tests {
     fn large_transfers_take_the_parallel_pack_path() {
         use crate::model::{ArraySpec, BusConfig, Problem};
         // One deep 32-bit array on a 256-bit bus: ~20k aligned ops, past
-        // the PARALLEL_MIN_OPS sharding threshold.
+        // the PARALLEL_MIN_OPS sharding threshold. Pin the compiled
+        // engine so the counters below are about its sharded executors.
         let p = Problem::new(
             BusConfig::alveo_u280(),
             vec![ArraySpec::new("big", 32, 20_000, 100)],
@@ -563,17 +869,17 @@ mod tests {
         let data = synthetic_data(&p, 1);
         let server = LayoutServer::start(2, 2);
         let resp = server
-            .submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels: None,
-                cosim: false,
-            })
+            .submit(
+                TransferRequest::builder(p, data)
+                    .engine(EngineChoice::Compiled)
+                    .build()
+                    .unwrap(),
+            )
             .recv()
             .unwrap()
             .unwrap();
         assert!(resp.decode_exact, "parallel pack must stay bit-exact");
+        assert_eq!(resp.engine, "compiled");
         // The counters only advance when the sharded executors can run;
         // 20k elements clear both the pack-op and decode-element
         // thresholds.
@@ -595,19 +901,14 @@ mod tests {
         let data = synthetic_data(&p, 3);
         let server = LayoutServer::start(2, 4);
         let resp = server
-            .submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels: Some(3),
-                cosim: false,
-            })
+            .submit(TransferRequest::builder(p, data).channels(3).build().unwrap())
             .recv()
             .unwrap()
             .unwrap();
         assert!(resp.decode_exact, "multi-channel roundtrip must be exact");
         assert_eq!(resp.channels, 3);
         assert_eq!(resp.channel_eff.len(), 3);
+        assert_eq!(resp.engine, "multichannel");
         assert!(resp.b_eff > 0.0 && resp.b_eff <= 1.0);
         for &u in &resp.channel_eff {
             assert!(u > 0.0 && u <= 1.0, "utilization {u}");
@@ -629,13 +930,7 @@ mod tests {
         let mk = || {
             let p = synthetic_problem(6, 17);
             let data = synthetic_data(&p, 17);
-            TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels: Some(2),
-                cosim: false,
-            }
+            TransferRequest::builder(p, data).channels(2).build().unwrap()
         };
         let r1 = server.submit(mk()).recv().unwrap().unwrap();
         let r2 = server.submit(mk()).recv().unwrap().unwrap();
@@ -649,21 +944,23 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_channel_count_is_an_error_response() {
+    fn infeasible_channel_count_is_a_typed_error() {
         let server = LayoutServer::start(1, 1);
         let p = synthetic_problem(3, 9);
         let data = synthetic_data(&p, 9);
         let result = server
-            .submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels: Some(99),
-                cosim: false,
-            })
+            .submit(TransferRequest::builder(p, data).channels(99).build().unwrap())
             .recv()
             .unwrap();
-        assert!(result.is_err(), "k > arrays must be reported, not dropped");
+        // The variant survives the worker channel, so clients match on
+        // it instead of grepping the message string.
+        match result {
+            Err(Error::InfeasibleChannels { requested, arrays }) => {
+                assert_eq!(requested, 99);
+                assert_eq!(arrays, 3);
+            }
+            other => panic!("expected InfeasibleChannels, got {other:?}"),
+        }
         assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 1);
         server.shutdown();
     }
@@ -726,13 +1023,13 @@ mod tests {
         let data = synthetic_data(&p, 13);
         let server = LayoutServer::start(2, 2);
         let resp = server
-            .submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels: Some(3),
-                cosim: true,
-            })
+            .submit(
+                TransferRequest::builder(p, data)
+                    .channels(3)
+                    .cosim(true)
+                    .build()
+                    .unwrap(),
+            )
             .recv()
             .unwrap()
             .unwrap();
@@ -744,6 +1041,20 @@ mod tests {
         assert!(cycles >= resp.c_max);
         assert!((resp.cosim_ii.unwrap() - 1.0).abs() < 1e-12);
         assert_eq!(server.metrics.cosim_validations.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_endpoint_reflects_served_traffic() {
+        let server = LayoutServer::start(1, 2);
+        server.submit(request(4, 61)).recv().unwrap().unwrap();
+        server.submit(request(4, 61)).recv().unwrap().unwrap();
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.errors, 0);
+        assert_eq!(snap.to_string(), server.metrics.summary());
+        assert!(snap.to_json().to_string_compact().contains("\"completed\":2"));
         server.shutdown();
     }
 
@@ -761,13 +1072,7 @@ mod tests {
 
         let server = LayoutServer::start(2, 4);
         let resp = server
-            .submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels: None,
-                cosim: false,
-            })
+            .submit(TransferRequest::builder(p, data).build().unwrap())
             .recv()
             .unwrap()
             .unwrap();

@@ -28,7 +28,10 @@
 
 pub mod program;
 
-pub use program::{DecodeOp, DecodeProgram, DecodeStream, PARALLEL_MIN_ELEMS};
+pub use program::{
+    CoalescedDecode, CoalescedDecodeStream, DecodeOp, DecodeProgram, DecodeSeg, DecodeStream,
+    PARALLEL_MIN_ELEMS,
+};
 
 use crate::layout::fifo::FifoAnalysis;
 use crate::layout::Layout;

@@ -26,6 +26,9 @@
 //!   reading the shared buffer, with bit-identical output.
 
 use super::DecodePlan;
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::pack::coalesce::{LANES, U64x4};
 use crate::util::bitvec::BitVec;
 use anyhow::{bail, Result};
 
@@ -296,6 +299,476 @@ impl DecodeStream<'_> {
     }
 }
 
+/// One segment of a coalesced decode program: a contiguous element range
+/// of one array that is either a bulk word copy or a run of residual
+/// gathers. Segments tile each array's element space exactly, in order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DecodeSeg {
+    /// `words` consecutive elements read straight out of `words`
+    /// consecutive source words (word-aligned 64-bit fields).
+    Copy {
+        /// First element index.
+        elem: u32,
+        /// First source word.
+        src_word: u32,
+        /// Length in words == elements.
+        words: u32,
+    },
+    /// Consecutive elements gathered through residual [`DecodeOp`]s
+    /// (executed [`LANES`] at a time).
+    Gather {
+        /// First element index.
+        elem: u32,
+        /// One op per element, in element order.
+        ops: Vec<DecodeOp>,
+    },
+}
+
+impl DecodeSeg {
+    fn elem(&self) -> usize {
+        match self {
+            DecodeSeg::Copy { elem, .. } | DecodeSeg::Gather { elem, .. } => *elem as usize,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            DecodeSeg::Copy { words, .. } => *words as usize,
+            DecodeSeg::Gather { ops, .. } => ops.len(),
+        }
+    }
+}
+
+/// Gather a run of residual ops [`LANES`] at a time through the portable
+/// [`U64x4`] struct; `out` is the contiguous output slice of the run.
+fn gather_lanes(ops: &[DecodeOp], words: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(ops.len(), out.len());
+    let mut i = 0;
+    while i + LANES <= ops.len() {
+        let c = &ops[i..i + LANES];
+        let lo = U64x4([
+            words[c[0].src_word as usize],
+            words[c[1].src_word as usize],
+            words[c[2].src_word as usize],
+            words[c[3].src_word as usize],
+        ]);
+        let hi = U64x4([
+            words[c[0].src_word as usize + 1],
+            words[c[1].src_word as usize + 1],
+            words[c[2].src_word as usize + 1],
+            words[c[3].src_word as usize + 1],
+        ]);
+        let sh = U64x4([
+            c[0].shift as u64,
+            c[1].shift as u64,
+            c[2].shift as u64,
+            c[3].shift as u64,
+        ]);
+        let inv = U64x4([
+            63 - c[0].shift as u64,
+            63 - c[1].shift as u64,
+            63 - c[2].shift as u64,
+            63 - c[3].shift as u64,
+        ]);
+        let msk = U64x4([c[0].mask, c[1].mask, c[2].mask, c[3].mask]);
+        let v = lo.shr(sh).or(hi.shl(U64x4::splat(1)).shl(inv)).and(msk);
+        out[i..i + LANES].copy_from_slice(&v.0);
+        i += LANES;
+    }
+    for k in i..ops.len() {
+        out[k] = gather(words, &ops[k]);
+    }
+}
+
+/// Execute `n` elements of one array starting at element `e0`, writing
+/// into `out` (where `out[0]` is element `e0`). Segment boundaries are
+/// crossed and segments are split transparently, so callers can shard
+/// the element space at arbitrary points.
+fn exec_elems(segs: &[DecodeSeg], e0: usize, n: usize, words: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(out.len(), n);
+    let mut si = segs.partition_point(|s| s.elem() + s.len() <= e0);
+    let mut done = 0usize;
+    while done < n {
+        let seg = &segs[si];
+        let off = (e0 + done) - seg.elem();
+        let take = (seg.len() - off).min(n - done);
+        match seg {
+            DecodeSeg::Copy { src_word, .. } => {
+                let s = *src_word as usize + off;
+                out[done..done + take].copy_from_slice(&words[s..s + take]);
+            }
+            DecodeSeg::Gather { ops, .. } => {
+                gather_lanes(&ops[off..off + take], words, &mut out[done..done + take]);
+            }
+        }
+        done += take;
+        si += 1;
+    }
+}
+
+/// A [`DecodeProgram`] lowered one level further, mirroring
+/// [`crate::pack::CoalescedPack`]: the word-aligned 64-bit element runs
+/// found by [`crate::pack::copy_regions`] decode as bulk
+/// `copy_from_slice` reads, and the residual gathers run [`LANES`]
+/// lanes at a time. Bit-identical to [`DecodeProgram::decode`] on every
+/// layout; memcpy-class on aligned ones.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoalescedDecode {
+    /// Bus width m (bits per cycle), copied from the plan.
+    pub m: u32,
+    /// Per-array segments in element order (source words non-decreasing).
+    segs: Vec<Vec<DecodeSeg>>,
+    lens: Vec<usize>,
+    min_words: usize,
+}
+
+impl CoalescedDecode {
+    /// Lower a layout straight to the coalesced decode program.
+    pub fn compile(layout: &Layout, problem: &Problem) -> CoalescedDecode {
+        Self::from_plan(&DecodePlan::compile(layout, problem), layout)
+    }
+
+    /// Lower an already-compiled plan (the serving path compiles the
+    /// plan once and chooses an executor afterwards).
+    pub fn from_plan(plan: &DecodePlan, layout: &Layout) -> CoalescedDecode {
+        let regions = crate::pack::copy_regions(layout);
+        let mut by_arr: Vec<Vec<crate::pack::CopyRegion>> = vec![Vec::new(); plan.widths.len()];
+        for r in regions {
+            by_arr[r.array as usize].push(r);
+        }
+        for v in &mut by_arr {
+            v.sort_unstable_by_key(|r| r.elem);
+        }
+        let mut min_words = 0usize;
+        let segs = plan
+            .offsets
+            .iter()
+            .enumerate()
+            .map(|(a, offs)| {
+                let w = plan.widths[a];
+                let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+                let regs = &by_arr[a];
+                let mut segs_a: Vec<DecodeSeg> = Vec::new();
+                let mut e = 0usize;
+                let mut ri = 0usize;
+                while e < offs.len() {
+                    if ri < regs.len() && regs[ri].elem as usize == e {
+                        let r = regs[ri];
+                        min_words = min_words.max(r.dst_word as usize + r.words as usize);
+                        segs_a.push(DecodeSeg::Copy {
+                            elem: e as u32,
+                            src_word: r.dst_word,
+                            words: r.words,
+                        });
+                        e += r.words as usize;
+                        ri += 1;
+                    } else {
+                        let next = if ri < regs.len() {
+                            regs[ri].elem as usize
+                        } else {
+                            offs.len()
+                        };
+                        let ops: Vec<DecodeOp> = offs[e..next]
+                            .iter()
+                            .map(|&off| {
+                                let wi = (off >> 6) as u32;
+                                min_words = min_words.max(wi as usize + 2);
+                                DecodeOp {
+                                    mask,
+                                    src_word: wi,
+                                    shift: (off & 63) as u8,
+                                }
+                            })
+                            .collect();
+                        segs_a.push(DecodeSeg::Gather {
+                            elem: e as u32,
+                            ops,
+                        });
+                        e = next;
+                    }
+                }
+                segs_a
+            })
+            .collect();
+        CoalescedDecode {
+            m: plan.m,
+            segs,
+            lens: plan.offsets.iter().map(|o| o.len()).collect(),
+            min_words,
+        }
+    }
+
+    /// Per-array compiled segments.
+    pub fn segs(&self) -> &[Vec<DecodeSeg>] {
+        &self.segs
+    }
+
+    /// Total elements across all arrays.
+    pub fn num_elements(&self) -> usize {
+        self.lens.iter().sum()
+    }
+
+    /// Elements decoded by bulk copies (== copy words).
+    pub fn copy_words(&self) -> usize {
+        self.segs
+            .iter()
+            .flatten()
+            .map(|s| match s {
+                DecodeSeg::Copy { words, .. } => *words as usize,
+                DecodeSeg::Gather { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Minimum buffer length in words (copies read exactly their words;
+    /// residual gathers still need the pack guard word).
+    pub fn min_words(&self) -> usize {
+        self.min_words
+    }
+
+    fn check_buffer(&self, buf: &BitVec) -> Result<()> {
+        if buf.words().len() < self.min_words {
+            bail!(
+                "coalesced decode: buffer has {} words, needs {} (incl. pack guard word)",
+                buf.words().len(),
+                self.min_words
+            );
+        }
+        Ok(())
+    }
+
+    /// Decode all arrays from a packed buffer (with guard word).
+    pub fn decode(&self, buf: &BitVec) -> Result<Vec<Vec<u64>>> {
+        self.check_buffer(buf)?;
+        let words = buf.words();
+        let mut out: Vec<Vec<u64>> = self.lens.iter().map(|&n| vec![0u64; n]).collect();
+        for (a, segs) in self.segs.iter().enumerate() {
+            let out_a = &mut out[a];
+            for seg in segs {
+                match seg {
+                    DecodeSeg::Copy {
+                        elem,
+                        src_word,
+                        words: n,
+                    } => {
+                        let (e, s, n) = (*elem as usize, *src_word as usize, *n as usize);
+                        out_a[e..e + n].copy_from_slice(&words[s..s + n]);
+                    }
+                    DecodeSeg::Gather { elem, ops } => {
+                        let e = *elem as usize;
+                        gather_lanes(ops, words, &mut out_a[e..e + ops.len()]);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode with (array, element-range) chunks sharded over `threads`
+    /// scoped workers, splitting segments at chunk boundaries.
+    /// Bit-identical to [`CoalescedDecode::decode`]; small programs
+    /// (fewer than [`PARALLEL_MIN_ELEMS`] elements) run serially.
+    pub fn decode_parallel(&self, buf: &BitVec, threads: usize) -> Result<Vec<Vec<u64>>> {
+        self.check_buffer(buf)?;
+        let total = self.num_elements();
+        if threads <= 1 || total < PARALLEL_MIN_ELEMS {
+            return self.decode(buf);
+        }
+        let words = buf.words();
+        // Bound the fan-out: more shards than cores only adds spawn cost.
+        let threads = threads.min(64);
+        let target = crate::util::ceil_div(total as u64, threads as u64) as usize;
+        let mut out: Vec<Vec<u64>> = self.lens.iter().map(|&n| vec![0u64; n]).collect();
+        std::thread::scope(|scope| {
+            // Same unit-grouping shape as `DecodeProgram::decode_parallel`,
+            // with segment-splitting element ranges as the unit.
+            let mut groups: Vec<Vec<(&[DecodeSeg], usize, &mut [u64])>> = Vec::new();
+            let mut cur: Vec<(&[DecodeSeg], usize, &mut [u64])> = Vec::new();
+            let mut cur_elems = 0usize;
+            for (a, out_a) in out.iter_mut().enumerate() {
+                let segs = self.segs[a].as_slice();
+                let mut e0 = 0usize;
+                let mut rest: &mut [u64] = out_a;
+                while !rest.is_empty() {
+                    let take = (target - cur_elems).min(rest.len());
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+                    rest = tail;
+                    cur.push((segs, e0, chunk));
+                    e0 += take;
+                    cur_elems += take;
+                    if cur_elems >= target {
+                        groups.push(std::mem::take(&mut cur));
+                        cur_elems = 0;
+                    }
+                }
+            }
+            if !cur.is_empty() {
+                groups.push(cur);
+            }
+            for group in groups {
+                scope.spawn(move || {
+                    for (segs, e0, chunk) in group {
+                        exec_elems(segs, e0, chunk.len(), words, chunk);
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    /// Start an incremental coalesced decoder; same contract as
+    /// [`DecodeProgram::stream`] (word chunks in, one carry word of
+    /// state), with copy segments consumed straight out of the pushed
+    /// chunks.
+    pub fn stream(&self) -> CoalescedDecodeStream<'_> {
+        CoalescedDecodeStream {
+            prog: self,
+            cursors: vec![(0, 0); self.segs.len()],
+            outs: self
+                .lens
+                .iter()
+                .map(|&n| Vec::with_capacity(n))
+                .collect(),
+            carry: 0,
+            received: 0,
+        }
+    }
+}
+
+/// Incremental word-fed coalesced decoder; see
+/// [`CoalescedDecode::stream`]. Copy elements resolve as soon as their
+/// single source word arrives; residual gathers wait for the word after
+/// their last source word, exactly like [`DecodeStream`].
+pub struct CoalescedDecodeStream<'p> {
+    prog: &'p CoalescedDecode,
+    /// Per array: (segment index, elements consumed within it).
+    cursors: Vec<(usize, u32)>,
+    outs: Vec<Vec<u64>>,
+    carry: u64,
+    received: usize,
+}
+
+impl CoalescedDecodeStream<'_> {
+    /// Total bus words consumed so far.
+    pub fn words_received(&self) -> usize {
+        self.received
+    }
+
+    /// Elements decoded so far, per array.
+    pub fn decoded_counts(&self) -> Vec<usize> {
+        self.outs.iter().map(|v| v.len()).collect()
+    }
+
+    /// Feed the next chunk of bus words (payload word order; trailing
+    /// zeros such as the guard word are harmless).
+    pub fn push(&mut self, chunk: &[u64]) {
+        if chunk.is_empty() {
+            return;
+        }
+        let base = self.received;
+        let carry = self.carry;
+        let frontier = base + chunk.len();
+        let word = |i: usize| -> u64 {
+            if i >= base {
+                chunk[i - base]
+            } else {
+                debug_assert_eq!(i + 1, base, "stream fell behind the carry window");
+                carry
+            }
+        };
+        for (a, segs) in self.prog.segs.iter().enumerate() {
+            let (mut si, mut done) = self.cursors[a];
+            'segs: while si < segs.len() {
+                match &segs[si] {
+                    DecodeSeg::Copy { src_word, words: n, .. } => {
+                        while done < *n {
+                            let s = *src_word as usize + done as usize;
+                            if s >= frontier {
+                                break 'segs;
+                            }
+                            if s >= base {
+                                let avail = (*n - done).min((frontier - s) as u32);
+                                let lo = s - base;
+                                self.outs[a]
+                                    .extend_from_slice(&chunk[lo..lo + avail as usize]);
+                                done += avail;
+                            } else {
+                                debug_assert_eq!(s + 1, base, "stream fell behind the carry window");
+                                self.outs[a].push(carry);
+                                done += 1;
+                            }
+                        }
+                    }
+                    DecodeSeg::Gather { ops, .. } => {
+                        while (done as usize) < ops.len() {
+                            let op = ops[done as usize];
+                            if op.src_word as usize + 1 >= frontier {
+                                break 'segs;
+                            }
+                            let lo = word(op.src_word as usize) >> op.shift;
+                            let hi = (word(op.src_word as usize + 1) << 1) << (63 - op.shift);
+                            self.outs[a].push((lo | hi) & op.mask);
+                            done += 1;
+                        }
+                    }
+                }
+                si += 1;
+                done = 0;
+            }
+            self.cursors[a] = (si, done);
+        }
+        self.carry = *chunk.last().expect("chunk non-empty");
+        self.received = frontier;
+    }
+
+    /// Drain the boundary elements and return the decoded streams;
+    /// errors if the words pushed so far do not cover every element
+    /// (same contract as [`DecodeStream::finish`]).
+    pub fn finish(mut self) -> Result<Vec<Vec<u64>>> {
+        let frontier = self.received;
+        let carry = self.carry;
+        for (a, segs) in self.prog.segs.iter().enumerate() {
+            let (mut si, mut done) = self.cursors[a];
+            while si < segs.len() {
+                match &segs[si] {
+                    DecodeSeg::Copy { src_word, words: n, .. } => {
+                        while done < *n {
+                            let s = *src_word as usize + done as usize;
+                            // Only the carry word (the last word received)
+                            // can still resolve a pending copy element.
+                            if s + 1 != frontier {
+                                bail!(
+                                    "decode stream: ended after {frontier} words but array \
+                                     #{a} still needs word {s}"
+                                );
+                            }
+                            self.outs[a].push(carry);
+                            done += 1;
+                        }
+                    }
+                    DecodeSeg::Gather { ops, .. } => {
+                        for op in &ops[done as usize..] {
+                            let s = op.src_word as usize;
+                            let straddles = op.shift as u32 + op.mask.count_ones() > 64;
+                            if s + 1 > frontier || straddles {
+                                bail!(
+                                    "decode stream: ended after {frontier} words but array \
+                                     #{a} still needs word {}",
+                                    s + usize::from(straddles)
+                                );
+                            }
+                            self.outs[a].push((carry >> op.shift) & op.mask);
+                        }
+                    }
+                }
+                si += 1;
+                done = 0;
+            }
+        }
+        Ok(self.outs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +892,131 @@ mod tests {
     #[test]
     fn decode_rejects_guardless_buffer() {
         let (prog, buf, _) = packed(&paper_example(), LayoutKind::Iris, 3);
+        let min = prog.min_words();
+        let short = BitVec::from_words(buf.words()[..min - 1].to_vec(), (min - 1) * 64);
+        assert!(prog.decode(&short).is_err());
+        assert!(prog.decode_parallel(&short, 4).is_err());
+    }
+
+    /// All-64-bit arrays on a word-multiple bus: the coalesced decoder
+    /// must absorb everything into copy segments.
+    fn aligned_problem() -> Problem {
+        Problem::new(
+            crate::model::BusConfig::new(256),
+            vec![
+                crate::model::ArraySpec::new("u", 64, 96, 9),
+                crate::model::ArraySpec::new("v", 64, 64, 5),
+                crate::model::ArraySpec::new("w", 64, 32, 2),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn coalesced(
+        p: &Problem,
+        kind: LayoutKind,
+        seed: u64,
+    ) -> (CoalescedDecode, BitVec, Vec<Vec<u64>>) {
+        let l = baselines::generate(kind, p);
+        let plan = PackPlan::compile(&l, p);
+        let arrays = arrays_for(p, seed);
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        let buf = plan.pack(&refs).unwrap();
+        let prog = CoalescedDecode::compile(&l, p);
+        (prog, buf, arrays)
+    }
+
+    #[test]
+    fn coalesced_decode_roundtrips_all_layouts() {
+        for p in [
+            paper_example(),
+            matmul_problem(33, 31),
+            matmul_problem(64, 64),
+            aligned_problem(),
+        ] {
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+            ] {
+                let (prog, buf, arrays) = coalesced(&p, kind, 0xC0DE);
+                assert_eq!(prog.decode(&buf).unwrap(), arrays, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_decode_aligned_is_pure_copies() {
+        let p = aligned_problem();
+        let (prog, buf, arrays) = coalesced(&p, LayoutKind::Iris, 0xA11);
+        assert_eq!(prog.copy_words(), prog.num_elements());
+        assert!(prog
+            .segs()
+            .iter()
+            .flatten()
+            .all(|s| matches!(s, DecodeSeg::Copy { .. })));
+        assert_eq!(prog.decode(&buf).unwrap(), arrays);
+    }
+
+    #[test]
+    fn coalesced_parallel_decode_bit_identical() {
+        for p in [aligned_problem(), matmul_problem(30, 19)] {
+            let (prog, buf, arrays) = coalesced(&p, LayoutKind::Iris, 7);
+            for threads in [1, 2, 3, 8] {
+                assert_eq!(
+                    prog.decode_parallel(&buf, threads).unwrap(),
+                    arrays,
+                    "threads={threads} m={}",
+                    p.m()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_stream_matches_batch_for_any_chunking() {
+        for p in [
+            paper_example(),
+            matmul_problem(33, 31),
+            aligned_problem(),
+        ] {
+            let (prog, buf, arrays) = coalesced(&p, LayoutKind::Iris, 0x57);
+            for chunk in [1usize, 2, 3, 7, 64, 4096] {
+                let mut ds = prog.stream();
+                for piece in buf.words().chunks(chunk) {
+                    ds.push(piece);
+                }
+                assert_eq!(ds.finish().unwrap(), arrays, "chunk={chunk} m={}", p.m());
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_stream_decodes_copy_elements_eagerly() {
+        // On the aligned problem a copy element is ready the moment its
+        // own word arrives — no guard-word wait.
+        let p = aligned_problem();
+        let (prog, buf, _) = coalesced(&p, LayoutKind::Iris, 9);
+        let mut ds = prog.stream();
+        ds.push(&buf.words()[..1]);
+        assert_eq!(ds.decoded_counts().iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn coalesced_stream_errors_on_truncated_feed() {
+        for p in [paper_example(), aligned_problem()] {
+            let (prog, buf, _) = coalesced(&p, LayoutKind::Iris, 2);
+            let mut ds = prog.stream();
+            ds.push(&buf.words()[..1]);
+            assert!(ds.finish().is_err(), "missing words must be reported");
+        }
+    }
+
+    #[test]
+    fn coalesced_decode_rejects_short_buffer() {
+        let (prog, buf, _) = coalesced(&matmul_problem(33, 31), LayoutKind::Iris, 3);
         let min = prog.min_words();
         let short = BitVec::from_words(buf.words()[..min - 1].to_vec(), (min - 1) * 64);
         assert!(prog.decode(&short).is_err());

@@ -431,6 +431,9 @@ pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
         "bitwise",
         "plan",
         "compiled",
+        "coalesced",
+        "coalesced-parallel",
+        "coalesced-stream",
         "parallel",
         "streamed",
         "cycle-decoder",
@@ -458,6 +461,9 @@ pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
         "bitwise",
         "plan",
         "compiled",
+        "coalesced",
+        "coalesced-parallel",
+        "coalesced-stream",
         "parallel",
         "streamed",
         "cycle-decoder",

@@ -23,10 +23,10 @@ use crate::baselines;
 use crate::bus::multichannel::MultiChannelExecutor;
 use crate::bus::partition::{partition_opts, PartitionStrategy};
 use crate::cosim::{ReadCosim, WriteCosim};
-use crate::decode::{decode_bitwise, DecodePlan, DecodeProgram, StreamDecoder};
+use crate::decode::{decode_bitwise, CoalescedDecode, DecodePlan, DecodeProgram, StreamDecoder};
 use crate::layout::{Layout, LayoutKind};
 use crate::model::Problem;
-use crate::pack::{pack_bitwise, pack_reference, PackPlan, PackProgram};
+use crate::pack::{pack_bitwise, pack_reference, CoalescedPack, PackPlan, PackProgram};
 use crate::util::bitvec::BitVec;
 use crate::util::ceil_div;
 use crate::Result;
@@ -350,6 +350,122 @@ impl Engine for Streamed {
     }
 }
 
+/// Run-coalesced engine: [`CoalescedPack`] / [`CoalescedDecode`] — bulk
+/// `copy_from_slice` for word-aligned 64-bit element runs (found through
+/// `codegen::detect_runs`), 4-lane execution of the residual rotate-mask
+/// ops. The memcpy-class path for aligned layouts; bit-identical to
+/// every other engine by the N-way harness.
+pub struct Coalesced;
+
+impl Engine for Coalesced {
+    fn name(&self) -> String {
+        "coalesced".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let prog = CoalescedPack::compile(layout, problem);
+        let buf = prog.pack(&refs(data))?;
+        Ok(BusLines::single(&buf, prog.payload_words(), prog.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "coalesced")?;
+        CoalescedDecode::compile(layout, problem).decode(&ch.to_buffer())
+    }
+}
+
+/// Scoped-thread parallel executors over the coalesced programs
+/// (`pack_parallel` / `decode_parallel` with word-range shards that
+/// never split a copy region).
+pub struct CoalescedParallel {
+    pub threads: usize,
+}
+
+impl Engine for CoalescedParallel {
+    fn name(&self) -> String {
+        "coalesced-parallel".into()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let prog = CoalescedPack::compile(layout, problem);
+        let buf = prog.pack_parallel(&refs(data), self.threads)?;
+        Ok(BusLines::single(&buf, prog.payload_words(), prog.buffer_bits()))
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "coalesced-parallel")?;
+        CoalescedDecode::compile(layout, problem).decode_parallel(&ch.to_buffer(), self.threads)
+    }
+}
+
+/// Tile streaming over the coalesced programs: copy regions split at
+/// tile boundaries on the pack side; on the decode side copy elements
+/// resolve as soon as their word arrives.
+pub struct CoalescedStreamed {
+    pub tile_cycles: u64,
+}
+
+impl Engine for CoalescedStreamed {
+    fn name(&self) -> String {
+        "coalesced-stream".into()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            streaming: true,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let prog = CoalescedPack::compile(layout, problem);
+        let data_refs = refs(data);
+        let mut words: Vec<u64> = Vec::with_capacity(prog.payload_words());
+        for tile in prog.stream(&data_refs, self.tile_cycles)? {
+            words.extend_from_slice(&tile);
+        }
+        if words.len() != prog.payload_words() {
+            bail!(
+                "coalesced stream pack emitted {} words, payload is {}",
+                words.len(),
+                prog.payload_words()
+            );
+        }
+        Ok(BusLines {
+            channels: vec![ChannelLines {
+                words,
+                bits: prog.buffer_bits(),
+            }],
+        })
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "coalesced-stream")?;
+        let prog = CoalescedDecode::compile(layout, problem);
+        let mut ds = prog.stream();
+        let chunk = (self.tile_cycles.max(1) as usize).max(1);
+        for tile in ch.words.chunks(chunk) {
+            ds.push(tile);
+        }
+        ds.finish()
+    }
+}
+
 /// Cycle-accurate II=1 read-module model ([`StreamDecoder`]): packs via
 /// the interpreted plan, decodes by simulating the FIFO drain cycle by
 /// cycle.
@@ -557,6 +673,9 @@ pub fn engines_for(problem: &Problem, kind: LayoutKind) -> Vec<Box<dyn Engine>> 
         Box::new(BitwiseOracle),
         Box::new(Optimized),
         Box::new(Compiled),
+        Box::new(Coalesced),
+        Box::new(CoalescedParallel { threads: 4 }),
+        Box::new(CoalescedStreamed { tile_cycles: 7 }),
         Box::new(Parallel { threads: 4 }),
         Box::new(Streamed { tile_cycles: 7 }),
         Box::new(CycleDecoder),
@@ -617,6 +736,9 @@ mod tests {
             "bitwise",
             "plan",
             "compiled",
+            "coalesced",
+            "coalesced-parallel",
+            "coalesced-stream",
             "parallel",
             "streamed",
             "cycle-decoder",
@@ -633,7 +755,7 @@ mod tests {
         for e in &engines {
             let caps = e.caps();
             match e.name().as_str() {
-                "streamed" | "cycle-decoder" => assert!(caps.streaming),
+                "streamed" | "coalesced-stream" | "cycle-decoder" => assert!(caps.streaming),
                 "cosim-read" | "cosim-write" => assert!(caps.cosim),
                 n if n.starts_with("multichannel") => assert!(caps.channels > 1),
                 _ => assert_eq!(caps, EngineCaps::default()),

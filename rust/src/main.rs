@@ -17,7 +17,7 @@
 //!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
 //!                        [--wa W] [--wb W] [--algo ...] [--no-xla] [--cosim]
 //!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
-//!                        [--channels K] [--cosim]
+//!                        [--channels K] [--cosim] [--engine auto|compiled|coalesced]
 //!   dse                  width search demo [--lo W] [--hi W]
 //!   perf                 quick hot-path perf summary (see EXPERIMENTS.md §Perf)
 //!
@@ -28,7 +28,7 @@
 use anyhow::{anyhow, bail, Result};
 use iris::baselines;
 use iris::coordinator::pipeline::{self, PipelineConfig, Workload};
-use iris::coordinator::server::{LayoutServer, TransferRequest};
+use iris::coordinator::server::{EngineChoice, LayoutServer, TransferRequest};
 use iris::eval::{comparison_table, example::ExampleReport, figures, table6, table7};
 use iris::layout::metrics::LayoutMetrics;
 use iris::layout::LayoutKind;
@@ -82,6 +82,7 @@ usage: iris <subcommand> [options]
   cosim FILE.json [--algo KIND] [--capacity analyzed|unbounded|N] [--seed S]
   e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla] [--cosim]
   serve [--workers N] [--requests N] [--batch B] [--channels K] [--cosim]
+        [--engine auto|compiled|coalesced]
   dse [--lo W] [--hi W]
   channels [FILE.json] [--max-k K]   multi-channel partition sweep (all strategies)
 
@@ -345,14 +346,11 @@ fn cmd_dfg() -> Result<()> {
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
-    let workload = match args.opt_str("workload", "helmholtz") {
-        "helmholtz" => Workload::Helmholtz,
-        "matmul" => Workload::MatMul {
-            w_a: args.opt_u32("wa", 64)?,
-            w_b: args.opt_u32("wb", 64)?,
-        },
-        other => bail!("unknown workload '{other}'"),
-    };
+    let workload = Workload::parse(
+        args.opt_str("workload", "helmholtz"),
+        args.opt_u32("wa", 64)?,
+        args.opt_u32("wb", 64)?,
+    )?;
     let kind = parse_kind(args.opt_str("algo", "iris"))?;
     let mut cfg = PipelineConfig::new(workload, kind);
     cfg.cosim = args.flag("cosim");
@@ -384,19 +382,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let channels = (channels > 1).then_some(channels);
     let cosim = args.flag("cosim");
+    let engine = match args.opt_str("engine", "auto") {
+        "auto" => EngineChoice::Auto,
+        "compiled" => EngineChoice::Compiled,
+        "coalesced" => EngineChoice::Coalesced,
+        other => bail!("unknown engine '{other}' (auto|compiled|coalesced)"),
+    };
     let server = LayoutServer::start(workers, batch);
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
         .map(|seed| {
             let p = pipeline::synthetic_problem(8, seed);
             let data = pipeline::synthetic_data(&p, seed);
-            server.submit(TransferRequest {
-                problem: p,
-                data,
-                kind: LayoutKind::Iris,
-                channels,
-                cosim,
-            })
+            let mut b = TransferRequest::builder(p, data).cosim(cosim).engine(engine);
+            if let Some(k) = channels {
+                b = b.channels(k);
+            }
+            server.submit(b.build().expect("demo request is valid"))
         })
         .collect();
     let mut ok = 0;
@@ -407,7 +409,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let dt = t0.elapsed();
-    println!("{}", server.metrics.summary());
+    println!("{}", server.metrics_snapshot());
     println!(
         "{ok}/{requests} exact; wall {:.1} ms; throughput {:.0} req/s",
         dt.as_secs_f64() * 1e3,

@@ -1,0 +1,775 @@
+//! Run-coalesced lowering: one level below the compiled word programs.
+//!
+//! The word program ([`PackProgram`]) is scalar — one rotate-and-mask OR
+//! per op — so aligned, burst-friendly layouts (the exact case Iris is
+//! designed to produce) pay the same per-element cost as ragged ones.
+//! This pass lowers further, into two instruction classes:
+//!
+//! * **Copy regions** ([`CopyRegion`]): maximal chains of word-aligned
+//!   64-bit fields whose destination words and source elements are both
+//!   consecutive. They execute as `copy_from_slice` — memcpy-class
+//!   throughput, no per-element work at all.
+//! * **Residual ops**: every remaining [`WordOp`] unchanged, executed
+//!   4 lanes at a time through the portable [`U64x4`] struct (plain
+//!   arrays the compiler auto-vectorizes; no `std::simd`, which is not
+//!   available on the stable toolchain at the crate's MSRV).
+//!
+//! Candidate chains are discovered through [`crate::codegen::detect_runs`]
+//! (property-tested elsewhere for maximal/contiguous/exact-cover): a run
+//! whose cycle pattern carries no 64-bit lane is skipped wholesale, and
+//! the aligned cells of the surviving runs are merged across cycle
+//! boundaries, so a run of `L` cycles with one aligned lane becomes a
+//! single `L`-word copy.
+//!
+//! Soundness of mixing `=`-copies with `|=`-ops: a word-aligned 64-bit
+//! field owns its destination word entirely (placements are disjoint, and
+//! a spill into word `w` could only come from a field that overlaps it),
+//! so copy words and residual words never intersect. The partition
+//! property — every payload bit covered exactly once by (copies ∪
+//! residual masks) — is asserted by the property tests below.
+//!
+//! [`CoalescedPack`] mirrors the [`PackProgram`] executor surface
+//! (serial, scoped-thread parallel, cycle-tile streaming); the decode
+//! mirror lives in [`crate::decode::CoalescedDecode`]. Both register
+//! behind [`crate::engine::Engine`], so the N-way differential runner
+//! and the fuzz-smoke CI gate prove them bit-identical to every other
+//! path.
+
+use super::{PackPlan, PackProgram, WordOp, PARALLEL_MIN_OPS};
+use crate::codegen::detect_runs;
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::util::bitvec::BitVec;
+use anyhow::{bail, Result};
+
+/// Lane count of the portable vector struct. Four `u64`s fill one
+/// AVX2 register (or two NEON registers); wide enough to expose ILP,
+/// small enough that the remainder loop stays trivial.
+pub const LANES: usize = 4;
+
+/// Portable 4-lane `u64` vector: a plain array with element-wise ops the
+/// compiler can auto-vectorize on stable Rust. All shift lanes must be
+/// in `0..=63`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct U64x4(pub [u64; 4]);
+
+impl U64x4 {
+    /// Broadcast one value to all lanes.
+    #[inline]
+    pub fn splat(v: u64) -> U64x4 {
+        U64x4([v; LANES])
+    }
+
+    /// Lane-wise left rotation by per-lane amounts.
+    #[inline]
+    pub fn rotate_left(self, n: U64x4) -> U64x4 {
+        let mut r = [0u64; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i].rotate_left(n.0[i] as u32);
+        }
+        U64x4(r)
+    }
+
+    /// Lane-wise logical right shift by per-lane amounts (each `< 64`).
+    #[inline]
+    pub fn shr(self, n: U64x4) -> U64x4 {
+        let mut r = [0u64; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] >> n.0[i];
+        }
+        U64x4(r)
+    }
+
+    /// Lane-wise logical left shift by per-lane amounts (each `< 64`).
+    #[inline]
+    pub fn shl(self, n: U64x4) -> U64x4 {
+        let mut r = [0u64; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] << n.0[i];
+        }
+        U64x4(r)
+    }
+
+    /// Lane-wise AND.
+    #[inline]
+    pub fn and(self, m: U64x4) -> U64x4 {
+        let mut r = [0u64; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] & m.0[i];
+        }
+        U64x4(r)
+    }
+
+    /// Lane-wise OR.
+    #[inline]
+    pub fn or(self, o: U64x4) -> U64x4 {
+        let mut r = [0u64; LANES];
+        for i in 0..LANES {
+            r[i] = self.0[i] | o.0[i];
+        }
+        U64x4(r)
+    }
+}
+
+/// One coalesced bulk copy: `words` consecutive destination words fed by
+/// `words` consecutive source elements of one array. Valid only for
+/// word-aligned 64-bit fields, where element and word are the same
+/// thing in both address spaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CopyRegion {
+    /// First destination u64 word in the packed buffer.
+    pub dst_word: u32,
+    /// Source array (index into the `arrays` argument).
+    pub array: u32,
+    /// First source element.
+    pub elem: u32,
+    /// Region length in words == elements.
+    pub words: u32,
+}
+
+impl CopyRegion {
+    fn dst_end(&self) -> usize {
+        self.dst_word as usize + self.words as usize
+    }
+}
+
+/// Detect every coalescible copy region of a layout: maximal chains of
+/// word-aligned 64-bit placements with consecutive destination words and
+/// consecutive source elements. Regions are returned sorted by
+/// `dst_word` and are pairwise disjoint (in destination words and in
+/// source elements alike).
+///
+/// [`detect_runs`] drives the scan: runs whose cycle pattern has no
+/// 64-bit lane are skipped without touching their placements, and cells
+/// from the surviving runs merge across cycle (and run) boundaries.
+pub fn copy_regions(layout: &Layout) -> Vec<CopyRegion> {
+    let m = layout.m as u64;
+    let mut cells: Vec<CopyRegion> = Vec::new();
+    for run in detect_runs(layout) {
+        if !run.pattern.0.iter().any(|&(_, _, w)| w == 64) {
+            continue;
+        }
+        for t in run.start..run.start + run.len {
+            let base = t * m;
+            for p in &layout.cycles[t as usize] {
+                if p.width != 64 || p.elem > u32::MAX as u64 {
+                    continue;
+                }
+                let off = base + p.bit_lo as u64;
+                if off % 64 != 0 {
+                    continue;
+                }
+                cells.push(CopyRegion {
+                    dst_word: (off / 64) as u32,
+                    array: p.array,
+                    elem: p.elem as u32,
+                    words: 1,
+                });
+            }
+        }
+    }
+    // A 64-bit aligned field owns its whole destination word, so cells
+    // are unique per word; sorting by word puts mergeable neighbours
+    // adjacent regardless of cycle-internal placement order.
+    cells.sort_unstable_by_key(|c| c.dst_word);
+    let mut regions: Vec<CopyRegion> = Vec::with_capacity(cells.len());
+    for c in cells {
+        if let Some(last) = regions.last_mut() {
+            if last.dst_word + last.words == c.dst_word
+                && last.array == c.array
+                && last.elem + last.words == c.elem
+            {
+                last.words += 1;
+                continue;
+            }
+        }
+        regions.push(c);
+    }
+    regions
+}
+
+/// Execute residual ops 4 lanes at a time. `base` is the word index of
+/// `words[0]` in the full buffer (non-zero inside parallel shards and
+/// stream tiles). Lane grouping is safe with the `|=` scatter even when
+/// two lanes target the same word — the scatter is sequential.
+fn residual_or(ops: &[WordOp], arrays: &[&[u64]], words: &mut [u64], base: usize) {
+    let mut chunks = ops.chunks_exact(LANES);
+    for c in chunks.by_ref() {
+        let v = U64x4([
+            arrays[c[0].src_arr as usize][c[0].src_elem as usize],
+            arrays[c[1].src_arr as usize][c[1].src_elem as usize],
+            arrays[c[2].src_arr as usize][c[2].src_elem as usize],
+            arrays[c[3].src_arr as usize][c[3].src_elem as usize],
+        ]);
+        let rot = U64x4([c[0].rot as u64, c[1].rot as u64, c[2].rot as u64, c[3].rot as u64]);
+        let msk = U64x4([c[0].mask, c[1].mask, c[2].mask, c[3].mask]);
+        let r = v.rotate_left(rot).and(msk);
+        for i in 0..LANES {
+            words[c[i].dst_word as usize - base] |= r.0[i];
+        }
+    }
+    for op in chunks.remainder() {
+        let v = arrays[op.src_arr as usize][op.src_elem as usize];
+        words[op.dst_word as usize - base] |= v.rotate_left(op.rot as u32) & op.mask;
+    }
+}
+
+/// A [`PackProgram`] lowered one level further: bulk copy regions plus
+/// lane-executed residual ops. Same external contract as the word
+/// program (zeroed buffer in, guard word untouched, bit-identical
+/// output), with memcpy-class throughput on aligned layouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoalescedPack {
+    /// Bus width m (bits per cycle), copied from the plan.
+    pub m: u32,
+    /// Total bus cycles, copied from the plan.
+    pub cycles: u64,
+    widths: Vec<u32>,
+    lens: Vec<usize>,
+    /// Bulk copies, sorted by `dst_word`, pairwise disjoint.
+    copies: Vec<CopyRegion>,
+    /// Ops not absorbed into a copy, sorted by `dst_word`.
+    residual: Vec<WordOp>,
+    payload_words: usize,
+    buffer_words: usize,
+}
+
+impl CoalescedPack {
+    /// Lower a layout straight to the coalesced program.
+    pub fn compile(layout: &Layout, problem: &Problem) -> CoalescedPack {
+        Self::from_plan(&PackPlan::compile(layout, problem), layout)
+    }
+
+    /// Lower an already-compiled plan (the serving path compiles the
+    /// plan once and chooses an executor afterwards).
+    pub fn from_plan(plan: &PackPlan, layout: &Layout) -> CoalescedPack {
+        let prog = PackProgram::compile(plan);
+        let copies = copy_regions(layout);
+        // Per-array (first-elem, len) intervals for the absorption test,
+        // sorted by element (equivalently destination word, since
+        // per-array offsets are strictly increasing).
+        let mut by_arr: Vec<Vec<(u32, u32)>> = vec![Vec::new(); plan.widths.len()];
+        for r in &copies {
+            by_arr[r.array as usize].push((r.elem, r.words));
+        }
+        for v in &mut by_arr {
+            v.sort_unstable();
+        }
+        let covered = |a: usize, e: u32| -> bool {
+            let v = &by_arr[a];
+            let i = v.partition_point(|&(start, _)| start <= e);
+            i > 0 && {
+                let (start, len) = v[i - 1];
+                e - start < len
+            }
+        };
+        // A covered element's single op is exactly {rot: 0, mask: MAX}
+        // (width 64, in-word offset 0, no spill), so absorption keeps
+        // the op stream and the copy set an exact partition.
+        let residual: Vec<WordOp> = prog
+            .ops()
+            .iter()
+            .filter(|op| {
+                !(op.rot == 0
+                    && op.mask == u64::MAX
+                    && covered(op.src_arr as usize, op.src_elem))
+            })
+            .copied()
+            .collect();
+        CoalescedPack {
+            m: plan.m,
+            cycles: plan.cycles,
+            widths: plan.widths.clone(),
+            lens: plan.offsets.iter().map(|o| o.len()).collect(),
+            copies,
+            residual,
+            payload_words: plan.payload_words(),
+            buffer_words: plan.buffer_words(),
+        }
+    }
+
+    /// The coalesced copy regions, sorted by destination word.
+    pub fn copies(&self) -> &[CopyRegion] {
+        &self.copies
+    }
+
+    /// The residual ops, sorted by destination word.
+    pub fn residual(&self) -> &[WordOp] {
+        &self.residual
+    }
+
+    /// Payload words written by bulk copies.
+    pub fn copy_words(&self) -> usize {
+        self.copies.iter().map(|r| r.words as usize).sum()
+    }
+
+    /// Fraction of payload words written by bulk copies (0.0..=1.0).
+    /// The serving path's `Auto` engine choice routes here when this is
+    /// high.
+    pub fn copy_coverage(&self) -> f64 {
+        if self.payload_words == 0 {
+            return 0.0;
+        }
+        self.copy_words() as f64 / self.payload_words as f64
+    }
+
+    /// Payload size in bits (`cycles · m`).
+    pub fn buffer_bits(&self) -> u64 {
+        self.cycles * self.m as u64
+    }
+
+    /// Payload u64 words (excludes the guard word).
+    pub fn payload_words(&self) -> usize {
+        self.payload_words
+    }
+
+    /// Buffer u64 words including the (never written) guard word.
+    pub fn buffer_words(&self) -> usize {
+        self.buffer_words
+    }
+
+    fn check_inputs(&self, arrays: &[&[u64]]) -> Result<()> {
+        super::check_pack_inputs(
+            "coalesced pack",
+            &self.widths,
+            self.lens.len(),
+            |a| self.lens[a],
+            arrays,
+        )
+    }
+
+    fn check_buffer(&self, buf: &BitVec) -> Result<()> {
+        if buf.len_bits() < self.buffer_words * 64 {
+            bail!(
+                "coalesced pack: buffer too small ({} < {} bits incl. guard word)",
+                buf.len_bits(),
+                self.buffer_words * 64
+            );
+        }
+        Ok(())
+    }
+
+    fn execute(&self, arrays: &[&[u64]], words: &mut [u64]) {
+        for r in &self.copies {
+            let (a, e) = (r.array as usize, r.elem as usize);
+            let (d, n) = (r.dst_word as usize, r.words as usize);
+            words[d..d + n].copy_from_slice(&arrays[a][e..e + n]);
+        }
+        residual_or(&self.residual, arrays, words, 0);
+    }
+
+    /// Pack source arrays into a fresh buffer (payload + zero guard word).
+    pub fn pack(&self, arrays: &[&[u64]]) -> Result<BitVec> {
+        let mut buf = BitVec::zeros(self.buffer_words * 64);
+        self.pack_into(arrays, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Pack into an existing **zeroed** buffer; same contract as
+    /// [`PackProgram::pack_into`].
+    pub fn pack_into(&self, arrays: &[&[u64]], buf: &mut BitVec) -> Result<()> {
+        self.check_inputs(arrays)?;
+        self.check_buffer(buf)?;
+        self.execute(arrays, buf.words_mut());
+        Ok(())
+    }
+
+    /// Word boundaries cutting the payload into at most `parts`
+    /// contiguous disjoint ranges, nudged so no cut lands inside a copy
+    /// region (residual ops are single words, so any word boundary is
+    /// safe for them).
+    fn cut_words(&self, parts: usize) -> Vec<usize> {
+        let total = self.payload_words;
+        let mut cuts = vec![0usize];
+        for t in 1..parts {
+            let mut w = total * t / parts;
+            let i = self.copies.partition_point(|r| (r.dst_word as usize) < w);
+            if i > 0 && self.copies[i - 1].dst_end() > w {
+                // Inside region i-1: move back to its start.
+                w = self.copies[i - 1].dst_word as usize;
+            }
+            if w > *cuts.last().expect("cuts non-empty") && w < total {
+                cuts.push(w);
+            }
+        }
+        cuts.push(total);
+        cuts
+    }
+
+    /// Pack with disjoint word ranges sharded over `threads` scoped
+    /// workers; bit-identical to [`CoalescedPack::pack`]. Small programs
+    /// (copy words + residual ops below [`PARALLEL_MIN_OPS`]) run
+    /// serially.
+    pub fn pack_parallel(&self, arrays: &[&[u64]], threads: usize) -> Result<BitVec> {
+        let mut buf = BitVec::zeros(self.buffer_words * 64);
+        self.pack_parallel_into(arrays, &mut buf, threads)?;
+        Ok(buf)
+    }
+
+    /// In-place variant of [`CoalescedPack::pack_parallel`]; the buffer
+    /// must be zeroed.
+    pub fn pack_parallel_into(
+        &self,
+        arrays: &[&[u64]],
+        buf: &mut BitVec,
+        threads: usize,
+    ) -> Result<()> {
+        self.check_inputs(arrays)?;
+        self.check_buffer(buf)?;
+        let work = self.copy_words() + self.residual.len();
+        if threads <= 1 || work < PARALLEL_MIN_OPS || self.payload_words == 0 {
+            self.execute(arrays, buf.words_mut());
+            return Ok(());
+        }
+        // Bound the fan-out: more shards than cores only adds spawn cost.
+        let cuts = self.cut_words(threads.min(64));
+        let mut rest: &mut [u64] = &mut buf.words_mut()[..self.payload_words];
+        let mut base = 0usize;
+        std::thread::scope(|scope| {
+            for bounds in cuts.windows(2) {
+                let (w0, w1) = (bounds[0], bounds[1]);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(w1 - base);
+                rest = tail;
+                base = w1;
+                let c0 = self.copies.partition_point(|r| (r.dst_word as usize) < w0);
+                let c1 = self.copies.partition_point(|r| (r.dst_word as usize) < w1);
+                let o0 = self.residual.partition_point(|op| (op.dst_word as usize) < w0);
+                let o1 = self.residual.partition_point(|op| (op.dst_word as usize) < w1);
+                let copies = &self.copies[c0..c1];
+                let ops = &self.residual[o0..o1];
+                scope.spawn(move || {
+                    for r in copies {
+                        let (a, e) = (r.array as usize, r.elem as usize);
+                        let (d, n) = (r.dst_word as usize - w0, r.words as usize);
+                        head[d..d + n].copy_from_slice(&arrays[a][e..e + n]);
+                    }
+                    residual_or(ops, arrays, head, w0);
+                });
+            }
+        });
+        Ok(())
+    }
+
+    /// Stream the packed buffer as word-aligned cycle-tiles of
+    /// `tile_cycles` bus cycles each; identical tiling (and thus
+    /// bit-identical concatenation) to [`PackProgram::stream`], with
+    /// copy regions split at tile boundaries.
+    pub fn stream<'p, 'a>(
+        &'p self,
+        arrays: &[&'a [u64]],
+        tile_cycles: u64,
+    ) -> Result<CoalescedPackStream<'p, 'a>> {
+        self.check_inputs(arrays)?;
+        if tile_cycles == 0 {
+            bail!("coalesced pack stream: tile_cycles must be positive");
+        }
+        Ok(CoalescedPackStream {
+            prog: self,
+            arrays: arrays.to_vec(),
+            copy_cursor: 0,
+            op_cursor: 0,
+            next_word: 0,
+            tile: 0,
+            tile_bits: tile_cycles.saturating_mul(self.m as u64),
+        })
+    }
+}
+
+/// Incremental packer over a coalesced program; see
+/// [`CoalescedPack::stream`]. Each [`Iterator::next`] yields the u64
+/// words of one cycle-tile.
+pub struct CoalescedPackStream<'p, 'a> {
+    prog: &'p CoalescedPack,
+    arrays: Vec<&'a [u64]>,
+    copy_cursor: usize,
+    op_cursor: usize,
+    next_word: usize,
+    tile: u64,
+    tile_bits: u64,
+}
+
+impl CoalescedPackStream<'_, '_> {
+    /// Payload words emitted so far.
+    pub fn words_emitted(&self) -> usize {
+        self.next_word
+    }
+}
+
+impl Iterator for CoalescedPackStream<'_, '_> {
+    type Item = Vec<u64>;
+
+    fn next(&mut self) -> Option<Vec<u64>> {
+        let prog = self.prog;
+        let total = prog.payload_words;
+        if self.next_word >= total {
+            return None;
+        }
+        let payload_bits = prog.buffer_bits();
+        // Same tile-boundary walk as `PackStream::next`: merge tiny
+        // tiles forward until at least one whole word is covered.
+        let mut w1 = self.next_word;
+        while w1 <= self.next_word {
+            self.tile += 1;
+            let end_bit = self.tile.saturating_mul(self.tile_bits).min(payload_bits);
+            w1 = if end_bit == payload_bits {
+                total
+            } else {
+                (end_bit / 64) as usize
+            };
+        }
+        let w0 = self.next_word;
+        let mut out = vec![0u64; w1 - w0];
+        while self.copy_cursor < prog.copies.len() {
+            let r = prog.copies[self.copy_cursor];
+            let rs = r.dst_word as usize;
+            let re = r.dst_end();
+            if rs >= w1 {
+                break;
+            }
+            // Regions can span several tiles; copy the intersection and
+            // keep the cursor on a region until its tail is emitted.
+            let s = rs.max(w0);
+            let e = re.min(w1);
+            let src = r.elem as usize + (s - rs);
+            out[s - w0..e - w0].copy_from_slice(&self.arrays[r.array as usize][src..src + (e - s)]);
+            if re <= w1 {
+                self.copy_cursor += 1;
+            } else {
+                break;
+            }
+        }
+        let o1 = prog.residual[self.op_cursor..]
+            .partition_point(|op| (op.dst_word as usize) < w1)
+            + self.op_cursor;
+        residual_or(
+            &prog.residual[self.op_cursor..o1],
+            &self.arrays,
+            &mut out,
+            w0,
+        );
+        self.op_cursor = o1;
+        self.next_word = w1;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::layout::LayoutKind;
+    use crate::model::{matmul_problem, paper_example, ArraySpec, BusConfig, Problem};
+    use crate::pack::pack_reference;
+    use crate::testing::gen::random_elements;
+    use crate::util::rng::Rng;
+
+    fn arrays_for(p: &Problem, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(seed);
+        p.arrays
+            .iter()
+            .map(|a| random_elements(&mut rng, a.width, a.depth))
+            .collect()
+    }
+
+    /// An all-64-bit problem on a word-multiple bus: every element is a
+    /// word-aligned full word, so lowering must absorb everything into
+    /// copies.
+    fn aligned_problem() -> Problem {
+        Problem::new(
+            BusConfig::new(256),
+            vec![
+                ArraySpec::new("u", 64, 96, 9),
+                ArraySpec::new("v", 64, 64, 5),
+                ArraySpec::new("w", 64, 32, 2),
+            ],
+        )
+        .unwrap()
+    }
+
+    fn all_problems() -> Vec<Problem> {
+        vec![
+            paper_example(),
+            matmul_problem(33, 31),
+            matmul_problem(64, 64),
+            aligned_problem(),
+        ]
+    }
+
+    #[test]
+    fn coalesced_matches_reference_all_layouts() {
+        for p in all_problems() {
+            let arrays = arrays_for(&p, 0xC0A1);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+            ] {
+                let layout = baselines::generate(kind, &p);
+                let plan = PackPlan::compile(&layout, &p);
+                let prog = CoalescedPack::compile(&layout, &p);
+                let fast = prog.pack(&refs).unwrap();
+                let slow = pack_reference(&plan, &refs).unwrap();
+                assert_eq!(fast, slow, "{} on m={}", kind.name(), p.m());
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_layouts_lower_to_pure_copies() {
+        let p = aligned_problem();
+        let layout = baselines::generate(LayoutKind::Iris, &p);
+        let prog = CoalescedPack::compile(&layout, &p);
+        assert_eq!(prog.residual().len(), 0, "aligned layout left residual ops");
+        assert_eq!(prog.copy_words(), prog.payload_words());
+        assert!((prog.copy_coverage() - 1.0).abs() < 1e-12);
+        // Runs, not cells: far fewer regions than elements.
+        let n_elems: usize = p.arrays.iter().map(|a| a.depth as usize).sum();
+        assert!(
+            prog.copies().len() < n_elems / 4,
+            "{} regions for {} elements — coalescing did not fire",
+            prog.copies().len(),
+            n_elems
+        );
+    }
+
+    #[test]
+    fn sub_word_bus_has_no_copies() {
+        let p = paper_example(); // m = 8: no 64-bit fields possible
+        let layout = baselines::generate(LayoutKind::Iris, &p);
+        let prog = CoalescedPack::compile(&layout, &p);
+        assert!(prog.copies().is_empty());
+        assert_eq!(prog.copy_coverage(), 0.0);
+    }
+
+    /// The partition property: every payload bit that belongs to a field
+    /// is covered exactly once by (copy words ∪ residual masks), and no
+    /// bit outside the fields is covered at all.
+    #[test]
+    fn lowering_is_an_exact_partition() {
+        for p in all_problems() {
+            for kind in [
+                LayoutKind::Iris,
+                LayoutKind::ElementNaive,
+                LayoutKind::PackedNaive,
+                LayoutKind::DueAlignedNaive,
+                LayoutKind::PaddedPow2,
+            ] {
+                let layout = baselines::generate(kind, &p);
+                let plan = PackPlan::compile(&layout, &p);
+                let prog = CoalescedPack::compile(&layout, &p);
+                // Expected field bits: pack all-ones data through the
+                // reference packer.
+                let ones: Vec<Vec<u64>> = p
+                    .arrays
+                    .iter()
+                    .map(|a| {
+                        let m = if a.width == 64 {
+                            u64::MAX
+                        } else {
+                            (1u64 << a.width) - 1
+                        };
+                        vec![m; a.depth as usize]
+                    })
+                    .collect();
+                let refs: Vec<&[u64]> = ones.iter().map(|v| v.as_slice()).collect();
+                let expect = pack_reference(&plan, &refs).unwrap();
+                let mut seen = vec![0u64; prog.buffer_words()];
+                let mut popcount: u64 = 0;
+                for r in prog.copies() {
+                    for w in r.dst_word as usize..r.dst_end() {
+                        seen[w] |= u64::MAX;
+                    }
+                    popcount += r.words as u64 * 64;
+                }
+                for op in prog.residual() {
+                    seen[op.dst_word as usize] |= op.mask;
+                    popcount += op.mask.count_ones() as u64;
+                }
+                let expect_pop: u64 = expect.words()[..prog.payload_words()]
+                    .iter()
+                    .map(|w| w.count_ones() as u64)
+                    .sum();
+                assert_eq!(
+                    &seen[..prog.payload_words()],
+                    &expect.words()[..prog.payload_words()],
+                    "{} on m={}: covered bits != field bits",
+                    kind.name(),
+                    p.m()
+                );
+                assert_eq!(
+                    popcount,
+                    expect_pop,
+                    "{} on m={}: some bit covered more than once",
+                    kind.name(),
+                    p.m()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn copy_regions_are_sorted_and_disjoint() {
+        for p in all_problems() {
+            let layout = baselines::generate(LayoutKind::Iris, &p);
+            let regions = copy_regions(&layout);
+            for w in regions.windows(2) {
+                assert!(w[0].dst_end() <= w[1].dst_word as usize, "overlap: {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical() {
+        for p in [aligned_problem(), matmul_problem(33, 31)] {
+            let layout = baselines::generate(LayoutKind::Iris, &p);
+            let prog = CoalescedPack::compile(&layout, &p);
+            let arrays = arrays_for(&p, 0xFA11);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            let serial = prog.pack(&refs).unwrap();
+            for threads in [2, 3, 8] {
+                let par = prog.pack_parallel(&refs, threads).unwrap();
+                assert_eq!(par, serial, "threads={threads} m={}", p.m());
+            }
+        }
+    }
+
+    #[test]
+    fn stream_concatenation_matches_full_pack() {
+        for p in all_problems() {
+            let layout = baselines::generate(LayoutKind::Iris, &p);
+            let prog = CoalescedPack::compile(&layout, &p);
+            let arrays = arrays_for(&p, 0x57E4);
+            let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+            let full = prog.pack(&refs).unwrap();
+            for tile_cycles in [1, 3, 7, 1024] {
+                let mut words: Vec<u64> = Vec::new();
+                for tile in prog.stream(&refs, tile_cycles).unwrap() {
+                    words.extend_from_slice(&tile);
+                }
+                assert_eq!(words.len(), prog.payload_words());
+                assert_eq!(
+                    &words[..],
+                    &full.words()[..prog.payload_words()],
+                    "tile_cycles={tile_cycles} m={}",
+                    p.m()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let p = aligned_problem();
+        let layout = baselines::generate(LayoutKind::Iris, &p);
+        let prog = CoalescedPack::compile(&layout, &p);
+        let arrays = arrays_for(&p, 1);
+        let mut refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        refs.pop();
+        assert!(prog.pack(&refs).is_err(), "wrong array count accepted");
+        let refs: Vec<&[u64]> = arrays.iter().map(|v| v.as_slice()).collect();
+        assert!(prog.stream(&refs, 0).is_err(), "tile_cycles=0 accepted");
+    }
+}

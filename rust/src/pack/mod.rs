@@ -20,9 +20,17 @@
 //! Every packer here is registered behind [`crate::engine::Engine`] and
 //! checked for bit-identity against all other execution paths by the
 //! N-way differential runner in [`crate::engine::differential`].
+//!
+//! One level below the word program sits the run-coalesced engine in
+//! [`coalesce`] ([`CoalescedPack`]): contiguous word-aligned 64-bit
+//! element runs collapse into bulk `copy_from_slice` regions and the
+//! residual ops execute four lanes at a time, so aligned layouts reach
+//! memcpy-class throughput.
 
+pub mod coalesce;
 pub mod program;
 
+pub use coalesce::{copy_regions, CoalescedPack, CoalescedPackStream, CopyRegion, U64x4};
 pub use program::{PackProgram, PackStream, WordOp, PARALLEL_MIN_OPS};
 
 use crate::layout::Layout;

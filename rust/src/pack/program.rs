@@ -31,6 +31,11 @@
 //!   of the output, so bus-cycles shard across scoped worker threads
 //!   (the same fan-out shape as [`crate::dse::DseEngine`]) with no
 //!   atomics and bit-identical output.
+//!
+//! The word program is also the input of the run-coalesced lowering in
+//! [`crate::pack::coalesce`] ([`super::CoalescedPack`]), which absorbs
+//! the ops of word-aligned 64-bit element runs into bulk copy regions
+//! and keeps the rest as a residual op stream.
 
 use super::PackPlan;
 use crate::util::bitvec::BitVec;

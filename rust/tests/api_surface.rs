@@ -1,0 +1,102 @@
+//! Pinned public-surface snapshot for the coordinator API.
+//!
+//! The coordinator is the crate's serving face (builder-constructed
+//! requests, typed errors, the metrics snapshot), so accidental surface
+//! changes — a renamed builder knob, a dropped `Error` variant, a field
+//! silently turning private — are breaking changes for downstream users.
+//! This test extracts every `pub fn` / `pub struct` / `pub enum` /
+//! `pub const` / `pub use` / `pub mod` / `pub type` / `pub trait`
+//! declaration line from `rust/src/coordinator/*.rs` and compares the
+//! result against a committed golden file.
+//!
+//! The golden file lives at `rust/tests/golden/coordinator_api.txt`.
+//! If it is missing (first run on a fresh machine) the test *bootstraps*
+//! it — writes the current surface and passes with a loud note. To
+//! intentionally change the coordinator API, delete the file and re-run
+//! the test to regenerate it, then commit both in the same change.
+
+fn repo_path(rel: &str) -> std::path::PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&root).join(rel)
+}
+
+/// One line per public declaration, in source order, prefixed with the
+/// file it came from. Only the declaration's first line is captured, so
+/// multi-line signatures fingerprint by name and leading parameters.
+fn surface() -> String {
+    const FILES: [&str; 4] = ["mod.rs", "error.rs", "pipeline.rs", "server.rs"];
+    const PREFIXES: [&str; 8] = [
+        "pub fn ",
+        "pub struct ",
+        "pub enum ",
+        "pub trait ",
+        "pub const ",
+        "pub use ",
+        "pub mod ",
+        "pub type ",
+    ];
+    let dir = repo_path("rust/src/coordinator");
+    let mut out = String::new();
+    for f in FILES {
+        let src = std::fs::read_to_string(dir.join(f))
+            .unwrap_or_else(|e| panic!("read coordinator source {f}: {e}"));
+        for line in src.lines() {
+            let t = line.trim();
+            if PREFIXES.iter().any(|p| t.starts_with(p)) {
+                out.push_str(f);
+                out.push_str(": ");
+                out.push_str(t);
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn coordinator_api_surface_matches_golden_file() {
+    let current = surface();
+    let path = repo_path("rust/tests/golden/coordinator_api.txt");
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => {
+            assert_eq!(
+                current, golden,
+                "the coordinator public API drifted from {path:?}; if the \
+                 change is intentional, delete the golden file, re-run this \
+                 test to regenerate it, and commit both together"
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &current).unwrap();
+            eprintln!(
+                "NOTE: bootstrapped golden file at {path:?} — commit it to \
+                 make this check binding"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_api_surface_has_the_load_bearing_items() {
+    // Golden-file byte-stability aside, pin the items this API contract
+    // is about, so a regenerated golden cannot silently drop them.
+    let s = surface();
+    for needle in [
+        "error.rs: pub enum Error {",
+        "server.rs: pub enum EngineChoice {",
+        "server.rs: pub fn builder(",
+        "server.rs: pub fn build(",
+        "server.rs: pub fn channels(",
+        "server.rs: pub fn cosim(",
+        "server.rs: pub fn engine(",
+        "server.rs: pub struct ServerConfig {",
+        "server.rs: pub fn with_config(",
+        "server.rs: pub fn metrics_snapshot(",
+        "mod.rs: pub struct MetricsSnapshot {",
+        "mod.rs: pub fn snapshot(",
+        "pipeline.rs: pub fn parse(",
+    ] {
+        assert!(s.contains(needle), "missing from coordinator surface: {needle}\n{s}");
+    }
+}

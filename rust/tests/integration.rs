@@ -138,16 +138,13 @@ fn server_under_mixed_load() {
         } else {
             None
         };
-        rxs.push((
-            seed,
-            server.submit(TransferRequest {
-                problem: p,
-                data,
-                kind,
-                channels,
-                cosim: seed % 4 == 0,
-            }),
-        ));
+        let mut b = TransferRequest::builder(p, data)
+            .kind(kind)
+            .cosim(seed % 4 == 0);
+        if let Some(k) = channels {
+            b = b.channels(k);
+        }
+        rxs.push((seed, server.submit(b.build().unwrap())));
     }
     for (seed, rx) in rxs {
         let resp = rx.recv().unwrap().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
