@@ -10,7 +10,9 @@
 //! `iris::benchkit::finish_gate`).
 
 use iris::baselines;
-use iris::benchkit::{black_box, finish_gate, parse_bench_args, section, Bencher, Stats};
+use iris::benchkit::{
+    black_box, emit_bench_json, finish_gate, parse_bench_args, section, Bencher, Stats,
+};
 use iris::coordinator::pipeline::synthetic_data;
 use iris::decode::{decode_bitwise, CoalescedDecode, DecodePlan, DecodeProgram, StreamDecoder};
 use iris::layout::LayoutKind;
@@ -102,5 +104,6 @@ fn main() {
         black_box(&dst);
     }));
 
+    emit_bench_json("bench_decode_hot", &args, &stats);
     finish_gate("bench_decode_hot", "decode ", &args, &stats);
 }

@@ -10,7 +10,9 @@
 //! `iris::benchkit::finish_gate`).
 
 use iris::baselines;
-use iris::benchkit::{black_box, finish_gate, parse_bench_args, section, Bencher, Stats};
+use iris::benchkit::{
+    black_box, emit_bench_json, finish_gate, parse_bench_args, section, Bencher, Stats,
+};
 use iris::coordinator::pipeline::synthetic_data;
 use iris::layout::LayoutKind;
 use iris::model::{helmholtz_problem, matmul_problem, Problem};
@@ -105,5 +107,35 @@ fn main() {
         black_box(&dst);
     }));
 
+    // Observability overhead: the same compiled hot loop with the global
+    // tracer disabled vs enabled + one span per iteration. The gate pins
+    // the instrumented path to ≥ 0.95× the uninstrumented one, keeping
+    // the tracing layer honest about its "cheap enough to leave on"
+    // claim.
+    section("observability overhead (compiled helmholtz)");
+    let layout = baselines::generate(LayoutKind::Iris, &hp);
+    let plan = PackPlan::compile(&layout, &hp);
+    let prog = PackProgram::compile(&plan);
+    let data = synthetic_data(&hp, 7);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let mut buf = plan.alloc_buffer();
+    let ob = b.clone().with_bytes(hp.total_bits() / 8);
+    stats.push(ob.run("pack obs/uninstrumented (compiled)", || {
+        buf.words_mut().fill(0);
+        prog.pack_into(&refs, &mut buf).unwrap();
+        black_box(&buf);
+    }));
+    let tracer = iris::obs::global();
+    tracer.set_enabled(true);
+    stats.push(ob.run("pack obs/instrumented (compiled)", || {
+        let _span = tracer.span("bench.pack");
+        buf.words_mut().fill(0);
+        prog.pack_into(&refs, &mut buf).unwrap();
+        black_box(&buf);
+    }));
+    tracer.set_enabled(false);
+    tracer.clear();
+
+    emit_bench_json("bench_pack_hot", &args, &stats);
     finish_gate("bench_pack_hot", "pack ", &args, &stats);
 }

@@ -8,7 +8,8 @@
 //! (`--quick --check` against `benchkit/thresholds.json`, prefix `mc `).
 
 use iris::benchkit::{
-    black_box, compare, finish_gate, parse_bench_args, section, Bencher, Stats, Thresholds,
+    black_box, compare, emit_bench_json, finish_gate, parse_bench_args, section, Bencher, Stats,
+    Thresholds,
 };
 use iris::bus::multichannel::MultiChannelExecutor;
 use iris::bus::partition::{channel_sweep, partition, PartitionStrategy};
@@ -207,6 +208,8 @@ fn main() {
         find("mc decode k=4"),
         find("mc decode k=1"),
     );
+
+    emit_bench_json("bench_scaling", &args, &mc_stats);
 
     // Perf-smoke gate: `mc ` floors and k=4-vs-k=1 speedups from
     // benchkit/thresholds.json (no-op without --check). The speedup

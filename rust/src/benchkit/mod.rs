@@ -52,6 +52,28 @@ impl Stats {
         baseline.median_ns / self.median_ns.max(1e-9)
     }
 
+    /// Machine-readable form of one measurement (the shape written to
+    /// `BENCH_8.json` by [`emit_bench_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set("samples", Json::Num(self.samples as f64));
+        o.set("iters_per_sample", Json::Num(self.iters_per_sample as f64));
+        o.set("mean_ns", Json::Num(self.mean_ns));
+        o.set("median_ns", Json::Num(self.median_ns));
+        o.set("stddev_ns", Json::Num(self.stddev_ns));
+        o.set("mad_ns", Json::Num(self.mad_ns));
+        o.set("min_ns", Json::Num(self.min_ns));
+        o.set("max_ns", Json::Num(self.max_ns));
+        if let Some(b) = self.bytes_per_iter {
+            o.set("bytes_per_iter", Json::Num(b as f64));
+        }
+        if let Some(gbs) = self.throughput_gbs() {
+            o.set("gbs", Json::Num(gbs));
+        }
+        o
+    }
+
     /// Render a single criterion-like report line.
     pub fn report_line(&self) -> String {
         let mut line = format!(
@@ -206,13 +228,17 @@ pub fn compare(label: &str, contender: &Stats, baseline: &Stats) {
 ///   and the reduced workload set;
 /// * `--check` / `--check=<path>` (or env `IRIS_BENCH_CHECK=<path>`) —
 ///   after running, enforce the thresholds file (default
-///   `benchkit/thresholds.json` under `CARGO_MANIFEST_DIR`).
+///   `benchkit/thresholds.json` under `CARGO_MANIFEST_DIR`);
+/// * `--json` / `--json=<path>` (or env `IRIS_BENCH_JSON=<path>`) —
+///   after running, merge this bench's stats into a machine-readable
+///   results file (default `BENCH_8.json` under `CARGO_MANIFEST_DIR`).
 ///
 /// Unknown flags (e.g. the `--bench` cargo appends) are ignored.
 #[derive(Debug, Clone, Default)]
 pub struct BenchArgs {
     pub quick: bool,
     pub check: Option<String>,
+    pub json: Option<String>,
 }
 
 /// Default location of the checked-in thresholds file.
@@ -220,6 +246,14 @@ pub fn default_thresholds_path() -> String {
     match std::env::var("CARGO_MANIFEST_DIR") {
         Ok(dir) => format!("{dir}/benchkit/thresholds.json"),
         Err(_) => "benchkit/thresholds.json".to_string(),
+    }
+}
+
+/// Default location of the machine-readable bench results file.
+pub fn default_bench_json_path() -> String {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => format!("{dir}/BENCH_8.json"),
+        Err(_) => "BENCH_8.json".to_string(),
     }
 }
 
@@ -232,6 +266,7 @@ pub fn parse_bench_args() -> BenchArgs {
     let mut args = BenchArgs {
         quick: quick_env,
         check: std::env::var("IRIS_BENCH_CHECK").ok(),
+        json: std::env::var("IRIS_BENCH_JSON").ok(),
     };
     for arg in std::env::args().skip(1) {
         if arg == "--quick" {
@@ -240,6 +275,10 @@ pub fn parse_bench_args() -> BenchArgs {
             args.check = Some(default_thresholds_path());
         } else if let Some(path) = arg.strip_prefix("--check=") {
             args.check = Some(path.to_string());
+        } else if arg == "--json" {
+            args.json = Some(default_bench_json_path());
+        } else if let Some(path) = arg.strip_prefix("--json=") {
+            args.json = Some(path.to_string());
         }
     }
     args
@@ -391,6 +430,29 @@ pub fn finish_gate(bench: &str, prefix: &str, args: &BenchArgs, stats: &[Stats])
     }
 }
 
+/// Merge this bench's stats into the machine-readable results file named
+/// by `args.json` (a no-op when not requested). The document is an
+/// object keyed by bench binary name, so the hot-path benches compose
+/// into one `BENCH_8.json` when run in sequence; re-running a bench
+/// replaces only its own entry.
+pub fn emit_bench_json(bench: &str, args: &BenchArgs, stats: &[Stats]) {
+    let Some(path) = &args.json else {
+        return;
+    };
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| json::parse(&t).ok())
+        .filter(|j| matches!(j, Json::Obj(_)))
+        .unwrap_or_else(Json::obj);
+    let mut entry = Json::obj();
+    entry.set("stats", Json::Arr(stats.iter().map(Stats::to_json).collect()));
+    doc.set(bench, entry);
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("{bench}: wrote {} measurements to {path}", stats.len()),
+        Err(e) => eprintln!("{bench}: cannot write {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -534,6 +596,36 @@ mod tests {
             .min_speedup
             .iter()
             .any(|(c, b, _)| c.contains("(coalesced)") && b.contains("memcpy")));
+    }
+
+    #[test]
+    fn bench_json_merges_across_benches() {
+        let path = std::env::temp_dir().join("iris_bench_json_selftest.json");
+        let _ = std::fs::remove_file(&path);
+        let args = BenchArgs {
+            json: Some(path.to_str().unwrap().to_string()),
+            ..Default::default()
+        };
+        emit_bench_json("bench_a", &args, &[stat("pack x (compiled)", 500.0, Some(1000))]);
+        emit_bench_json("bench_b", &args, &[stat("decode x (compiled)", 250.0, None)]);
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let a_stats = doc.get("bench_a").unwrap().get("stats").unwrap();
+        let first = a_stats.idx(0).unwrap();
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("pack x (compiled)"));
+        // 1000 bytes / 500 ns = 2 GB/s survives the round-trip.
+        assert_eq!(first.get("gbs").and_then(Json::as_f64), Some(2.0));
+        // bench_b rode along without clobbering bench_a.
+        assert!(doc.get("bench_b").is_some());
+        // Re-emitting bench_a replaces only its entry.
+        emit_bench_json("bench_a", &args, &[stat("pack y (compiled)", 100.0, None)]);
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let a_stats = doc.get("bench_a").unwrap().get("stats").unwrap();
+        assert_eq!(
+            a_stats.idx(0).unwrap().get("name").and_then(Json::as_str),
+            Some("pack y (compiled)")
+        );
+        assert!(doc.get("bench_b").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -134,6 +134,7 @@ impl MultiChannelExecutor {
     /// ([`crate::dse::fan_out`]). Channels write disjoint buffers, so the
     /// result is bit-identical to [`MultiChannelExecutor::pack_serial`].
     pub fn pack(&self, data: &[&[u64]]) -> Result<Vec<BitVec>> {
+        let _span = crate::obs::global().span("mc.pack");
         let split = self.split_data(data)?;
         fan_out(self.packs.len(), default_threads(), |c| {
             self.packs[c].pack(&split[c])
@@ -157,6 +158,7 @@ impl MultiChannelExecutor {
     /// [`MultiChannelExecutor::pack`]); bit-identical to
     /// [`MultiChannelExecutor::decode_serial`].
     pub fn decode(&self, bufs: &[BitVec]) -> Result<Vec<Vec<u64>>> {
+        let _span = crate::obs::global().span("mc.decode");
         self.check_bufs(bufs)?;
         let per_channel: Vec<ChannelStreams> =
             fan_out(self.decodes.len(), default_threads(), |c| {

@@ -79,6 +79,103 @@ impl From<anyhow::Error> for Error {
     }
 }
 
+/// Data-free classification of an [`Error`], used by the metrics layer
+/// to count failure classes separately — a client mistake
+/// (`InvalidRequest`, `InfeasibleChannels`, `UnknownWorkload`) must not
+/// be conflated with a system fault (`CosimDivergence`,
+/// `DecodeMismatch`, `Internal`) in an error-rate dashboard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    InfeasibleChannels,
+    UnknownWorkload,
+    CosimDivergence,
+    DecodeMismatch,
+    InvalidRequest,
+    WorkerDisconnected,
+    Internal,
+}
+
+impl ErrorKind {
+    /// Every kind, in canonical (declaration) order.
+    pub const ALL: [ErrorKind; 7] = [
+        ErrorKind::InfeasibleChannels,
+        ErrorKind::UnknownWorkload,
+        ErrorKind::CosimDivergence,
+        ErrorKind::DecodeMismatch,
+        ErrorKind::InvalidRequest,
+        ErrorKind::WorkerDisconnected,
+        ErrorKind::Internal,
+    ];
+
+    /// Stable snake_case label (metric dimension value).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorKind::InfeasibleChannels => "infeasible_channels",
+            ErrorKind::UnknownWorkload => "unknown_workload",
+            ErrorKind::CosimDivergence => "cosim_divergence",
+            ErrorKind::DecodeMismatch => "decode_mismatch",
+            ErrorKind::InvalidRequest => "invalid_request",
+            ErrorKind::WorkerDisconnected => "worker_disconnected",
+            ErrorKind::Internal => "internal",
+        }
+    }
+
+    /// Whether the failure is the client's fault (bad request) rather
+    /// than the system's.
+    pub fn is_client_error(self) -> bool {
+        matches!(
+            self,
+            ErrorKind::InfeasibleChannels
+                | ErrorKind::UnknownWorkload
+                | ErrorKind::InvalidRequest
+        )
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl Error {
+    /// The data-free classification of this error.
+    pub fn kind(&self) -> ErrorKind {
+        match self {
+            Error::InfeasibleChannels { .. } => ErrorKind::InfeasibleChannels,
+            Error::UnknownWorkload(_) => ErrorKind::UnknownWorkload,
+            Error::CosimDivergence { .. } => ErrorKind::CosimDivergence,
+            Error::DecodeMismatch { .. } => ErrorKind::DecodeMismatch,
+            Error::InvalidRequest(_) => ErrorKind::InvalidRequest,
+            Error::WorkerDisconnected => ErrorKind::WorkerDisconnected,
+            Error::Internal(_) => ErrorKind::Internal,
+        }
+    }
+}
+
+/// Lock-free per-[`ErrorKind`] counters (one atomic per kind).
+#[derive(Debug, Default)]
+pub struct ErrorKindCounters {
+    counts: [std::sync::atomic::AtomicU64; 7],
+}
+
+impl ErrorKindCounters {
+    pub fn record(&self, kind: ErrorKind) {
+        self.counts[kind.index()].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn get(&self, kind: ErrorKind) -> u64 {
+        self.counts[kind.index()].load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// `(label, count)` per kind, in [`ErrorKind::ALL`] order (every
+    /// kind present, zero or not, so consumers see a stable shape).
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        ErrorKind::ALL
+            .iter()
+            .map(|&k| (k.label().to_string(), self.get(k)))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +226,37 @@ mod tests {
     fn implements_std_error() {
         let e: Box<dyn std::error::Error> = Box::new(Error::WorkerDisconnected);
         assert_eq!(e.to_string(), "layout server worker disconnected");
+    }
+
+    #[test]
+    fn every_variant_maps_to_a_distinct_kind() {
+        let kinds: Vec<ErrorKind> = variants().iter().map(|e| e.kind()).collect();
+        // variants() carries both CosimDivergence shapes — same kind.
+        assert_eq!(kinds[2], kinds[3]);
+        let unique: std::collections::BTreeSet<&str> =
+            kinds.iter().map(|k| k.label()).collect();
+        assert_eq!(unique.len(), ErrorKind::ALL.len());
+        assert!(ErrorKind::InvalidRequest.is_client_error());
+        assert!(ErrorKind::InfeasibleChannels.is_client_error());
+        assert!(!ErrorKind::Internal.is_client_error());
+        assert!(!ErrorKind::CosimDivergence.is_client_error());
+    }
+
+    #[test]
+    fn kind_counters_track_per_kind() {
+        let c = ErrorKindCounters::default();
+        c.record(ErrorKind::Internal);
+        c.record(ErrorKind::Internal);
+        c.record(ErrorKind::InvalidRequest);
+        assert_eq!(c.get(ErrorKind::Internal), 2);
+        assert_eq!(c.get(ErrorKind::InvalidRequest), 1);
+        assert_eq!(c.get(ErrorKind::CosimDivergence), 0);
+        let snap = c.snapshot();
+        assert_eq!(snap.len(), ErrorKind::ALL.len());
+        assert_eq!(snap[0].0, "infeasible_channels");
+        assert_eq!(
+            snap.iter().find(|(l, _)| l == "internal").unwrap().1,
+            2
+        );
     }
 }

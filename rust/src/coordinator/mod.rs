@@ -9,8 +9,10 @@ pub mod error;
 pub mod pipeline;
 pub mod server;
 
-pub use error::Error;
+pub use error::{Error, ErrorKind};
 
+use crate::obs::{FlowSnapshot, Histogram, HistogramSnapshot, Telemetry};
+use error::ErrorKindCounters;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Lock-free counters shared by the server workers.
@@ -21,8 +23,17 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub total_latency_ns: AtomicU64,
     pub batches: AtomicU64,
-    /// Largest single-request latency observed (tail proxy).
-    pub max_latency_ns: AtomicU64,
+    /// Log-bucketed request-latency distribution (p50/p90/p99/max) —
+    /// replaces the single max-latency counter the server used to keep.
+    pub latency: Histogram,
+    /// Error counts split by [`ErrorKind`], so client mistakes
+    /// (invalid/infeasible requests) are distinguishable from system
+    /// faults (divergence, internal errors).
+    pub error_kinds: ErrorKindCounters,
+    /// Per-engine and per-channel transfer telemetry: bytes moved,
+    /// busy-window nanoseconds (→ achieved GB/s) and payload-vs-capacity
+    /// bits (→ achieved b_eff).
+    pub transfers: Telemetry,
     /// Layout-cache outcomes observed by the workers.
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
@@ -58,13 +69,22 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    pub fn record(&self, latency_ns: u64, ok: bool) {
+    /// Count one finished request: `err` is `None` on success, the
+    /// typed failure otherwise (counted under its [`ErrorKind`]).
+    pub fn record(&self, latency_ns: u64, err: Option<&Error>) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        if !ok {
+        if let Some(e) = err {
             self.errors.fetch_add(1, Ordering::Relaxed);
+            self.error_kinds.record(e.kind());
         }
         self.total_latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
-        self.max_latency_ns.fetch_max(latency_ns, Ordering::Relaxed);
+        self.latency.record(latency_ns);
+    }
+
+    /// Largest single-request latency observed (tail proxy; the full
+    /// distribution lives in [`Metrics::latency`]).
+    pub fn max_latency_ns(&self) -> u64 {
+        self.latency.max()
     }
 
     /// Count one layout-cache lookup outcome.
@@ -128,7 +148,11 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_latency_ns: self.mean_latency_ns(),
-            max_latency_ns: self.max_latency_ns.load(Ordering::Relaxed),
+            max_latency_ns: self.max_latency_ns(),
+            latency: self.latency.snapshot(),
+            errors_by_kind: self.error_kinds.snapshot(),
+            engines: self.transfers.engines(),
+            channels: self.transfers.channels(),
             cache_hit_rate: self.cache_hit_rate(),
             dse_points: self.dse_points.load(Ordering::Relaxed),
             mean_dse_point_latency_ns: self.mean_dse_point_latency_ns(),
@@ -157,7 +181,17 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     pub batches: u64,
     pub mean_latency_ns: f64,
+    /// Exact maximum request latency (= `latency.max`).
     pub max_latency_ns: u64,
+    /// Log-bucketed request-latency distribution (p50/p90/p99 queries).
+    pub latency: HistogramSnapshot,
+    /// `(kind label, count)` per [`ErrorKind`], canonical order, every
+    /// kind present.
+    pub errors_by_kind: Vec<(String, u64)>,
+    /// Per-engine transfer telemetry (achieved GB/s and b_eff).
+    pub engines: Vec<FlowSnapshot>,
+    /// Per-channel transfer telemetry for multi-channel traffic.
+    pub channels: Vec<FlowSnapshot>,
     /// Layout-cache hit rate in `[0, 1]`.
     pub cache_hit_rate: f64,
     pub dse_points: u64,
@@ -202,8 +236,187 @@ impl MetricsSnapshot {
             .set(
                 "cosim_validations",
                 Json::Num(self.cosim_validations as f64),
+            )
+            .set("latency", self.latency.to_json());
+        let mut kinds = Json::obj();
+        for (label, count) in &self.errors_by_kind {
+            kinds.set(label, Json::Num(*count as f64));
+        }
+        o.set("errors_by_kind", kinds)
+            .set(
+                "engines",
+                Json::Arr(self.engines.iter().map(|f| f.to_json()).collect()),
+            )
+            .set(
+                "channels",
+                Json::Arr(self.channels.iter().map(|f| f.to_json()).collect()),
             );
         o
+    }
+
+    /// Inverse of [`to_json`](Self::to_json): rebuild a snapshot from
+    /// its serialized form (derived fields like quantiles are
+    /// recomputed; `errors_by_kind` is re-ordered canonically).
+    pub fn from_json(j: &crate::util::json::Json) -> Option<MetricsSnapshot> {
+        let num = |key: &str| j.get(key).and_then(|v| v.as_f64());
+        let flows = |key: &str| -> Option<Vec<FlowSnapshot>> {
+            match j.get(key) {
+                Some(crate::util::json::Json::Arr(items)) => {
+                    items.iter().map(FlowSnapshot::from_json).collect()
+                }
+                _ => Some(Vec::new()),
+            }
+        };
+        let kinds_obj = j.get("errors_by_kind")?;
+        let errors_by_kind = ErrorKind::ALL
+            .iter()
+            .map(|k| {
+                let count = kinds_obj
+                    .get(k.label())
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64;
+                (k.label().to_string(), count)
+            })
+            .collect();
+        Some(MetricsSnapshot {
+            requests: num("requests")? as u64,
+            completed: num("completed")? as u64,
+            errors: num("errors")? as u64,
+            batches: num("batches")? as u64,
+            mean_latency_ns: num("mean_latency_ns")?,
+            max_latency_ns: num("max_latency_ns")? as u64,
+            latency: HistogramSnapshot::from_json(j.get("latency")?)?,
+            errors_by_kind,
+            engines: flows("engines")?,
+            channels: flows("channels")?,
+            cache_hit_rate: num("cache_hit_rate")?,
+            dse_points: num("dse_points")? as u64,
+            mean_dse_point_latency_ns: num("mean_dse_point_latency_ns")?,
+            parallel_packs: num("parallel_packs")? as u64,
+            parallel_decodes: num("parallel_decodes")? as u64,
+            coalesced_transfers: num("coalesced_transfers")? as u64,
+            multichannel_transfers: num("multichannel_transfers")? as u64,
+            channels_served: num("channels_served")? as u64,
+            cosim_validations: num("cosim_validations")? as u64,
+        })
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of the whole snapshot.
+    pub fn to_prometheus(&self) -> String {
+        use crate::obs::export::{prom_header, prom_line};
+        let mut out = String::new();
+        prom_header(&mut out, "iris_requests_total", "counter", "requests accepted");
+        prom_line(&mut out, "iris_requests_total", "", self.requests as f64);
+        prom_header(&mut out, "iris_completed_total", "counter", "requests finished");
+        prom_line(&mut out, "iris_completed_total", "", self.completed as f64);
+        prom_header(
+            &mut out,
+            "iris_errors_total",
+            "counter",
+            "failed requests by error kind",
+        );
+        prom_line(&mut out, "iris_errors_total", "", self.errors as f64);
+        for (label, count) in &self.errors_by_kind {
+            prom_line(
+                &mut out,
+                "iris_errors_total",
+                &format!("kind=\"{label}\""),
+                *count as f64,
+            );
+        }
+        prom_header(&mut out, "iris_batches_total", "counter", "batched submissions");
+        prom_line(&mut out, "iris_batches_total", "", self.batches as f64);
+        prom_header(
+            &mut out,
+            "iris_request_latency_ns",
+            "histogram",
+            "request latency distribution (log2 buckets)",
+        );
+        // prometheus_lines emits its own TYPE line; keep only one.
+        let mut hist = String::new();
+        self.latency.prometheus_lines("iris_request_latency_ns", &mut hist);
+        let hist = hist
+            .lines()
+            .filter(|l| !l.starts_with("# TYPE"))
+            .collect::<Vec<_>>()
+            .join("\n");
+        out.push_str(&hist);
+        out.push('\n');
+        for q in [0.5, 0.9, 0.99] {
+            prom_line(
+                &mut out,
+                "iris_request_latency_ns_quantile",
+                &format!("quantile=\"{q}\""),
+                self.latency.quantile(q) as f64,
+            );
+        }
+        prom_header(
+            &mut out,
+            "iris_cache_hit_rate",
+            "gauge",
+            "layout cache hit rate (0..1)",
+        );
+        prom_line(&mut out, "iris_cache_hit_rate", "", self.cache_hit_rate);
+        prom_header(&mut out, "iris_dse_points_total", "counter", "DSE design points");
+        prom_line(&mut out, "iris_dse_points_total", "", self.dse_points as f64);
+        prom_header(
+            &mut out,
+            "iris_cosim_validations_total",
+            "counter",
+            "transfers validated by cycle-accurate cosim",
+        );
+        prom_line(
+            &mut out,
+            "iris_cosim_validations_total",
+            "",
+            self.cosim_validations as f64,
+        );
+        for (family, help, pick) in [
+            (
+                "iris_engine_transfers_total",
+                "transfers served per engine",
+                0usize,
+            ),
+            ("iris_engine_bytes_total", "payload bytes moved per engine", 1),
+            ("iris_engine_gbs", "achieved GB/s per engine", 2),
+            (
+                "iris_engine_beff",
+                "achieved bandwidth efficiency per engine",
+                3,
+            ),
+        ] {
+            let kind = if pick >= 2 { "gauge" } else { "counter" };
+            prom_header(&mut out, family, kind, help);
+            for f in &self.engines {
+                let v = match pick {
+                    0 => f.transfers as f64,
+                    1 => f.bytes as f64,
+                    2 => f.gbs(),
+                    _ => f.b_eff(),
+                };
+                prom_line(&mut out, family, &format!("engine=\"{}\"", f.name), v);
+            }
+        }
+        for (family, help, pick) in [
+            (
+                "iris_channel_bytes_total",
+                "payload bytes moved per HBM channel",
+                0usize,
+            ),
+            (
+                "iris_channel_beff",
+                "achieved bandwidth efficiency per HBM channel",
+                1,
+            ),
+        ] {
+            let kind = if pick == 1 { "gauge" } else { "counter" };
+            prom_header(&mut out, family, kind, help);
+            for (i, f) in self.channels.iter().enumerate() {
+                let v = if pick == 0 { f.bytes as f64 } else { f.b_eff() };
+                prom_line(&mut out, family, &format!("channel=\"{i}\""), v);
+            }
+        }
+        out
     }
 }
 
@@ -212,7 +425,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "requests={} completed={} errors={} batches={} mean_latency={} \
-             max_latency={} cache_hit_rate={:.1}% dse_points={} dse_point_latency={} \
+             max_latency={} p50_latency={} p99_latency={} cache_hit_rate={:.1}% \
+             dse_points={} dse_point_latency={} \
              parallel_packs={} parallel_decodes={} coalesced={} multichannel={} \
              channels_served={} cosim_validations={}",
             self.requests,
@@ -221,6 +435,8 @@ impl std::fmt::Display for MetricsSnapshot {
             self.batches,
             crate::util::human_ns(self.mean_latency_ns),
             crate::util::human_ns(self.max_latency_ns as f64),
+            crate::util::human_ns(self.latency.p50() as f64),
+            crate::util::human_ns(self.latency.p99() as f64),
             100.0 * self.cache_hit_rate,
             self.dse_points,
             crate::util::human_ns(self.mean_dse_point_latency_ns),
@@ -242,13 +458,54 @@ mod tests {
     fn metrics_accumulate() {
         let m = Metrics::default();
         m.requests.fetch_add(2, Ordering::Relaxed);
-        m.record(100, true);
-        m.record(300, false);
+        m.record(100, None);
+        m.record(300, Some(&Error::Internal("boom".into())));
         assert_eq!(m.completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.errors.load(Ordering::Relaxed), 1);
         assert!((m.mean_latency_ns() - 200.0).abs() < 1e-9);
-        assert_eq!(m.max_latency_ns.load(Ordering::Relaxed), 300);
+        assert_eq!(m.max_latency_ns(), 300);
+        assert_eq!(m.latency.count(), 2);
+        assert_eq!(m.error_kinds.get(ErrorKind::Internal), 1);
+        assert_eq!(m.error_kinds.get(ErrorKind::InvalidRequest), 0);
         assert!(m.summary().contains("completed=2"));
+    }
+
+    #[test]
+    fn error_kinds_are_not_conflated() {
+        let m = Metrics::default();
+        m.record(
+            10,
+            Some(&Error::InfeasibleChannels {
+                requested: 9,
+                arrays: 2,
+            }),
+        );
+        m.record(20, Some(&Error::CosimDivergence { channel: None }));
+        m.record(30, Some(&Error::Internal("x".into())));
+        m.record(40, Some(&Error::Internal("y".into())));
+        assert_eq!(m.errors.load(Ordering::Relaxed), 4);
+        assert_eq!(m.error_kinds.get(ErrorKind::InfeasibleChannels), 1);
+        assert_eq!(m.error_kinds.get(ErrorKind::CosimDivergence), 1);
+        assert_eq!(m.error_kinds.get(ErrorKind::Internal), 2);
+        let s = m.snapshot();
+        let total: u64 = s.errors_by_kind.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, s.errors, "kind counts must reconcile with errors");
+    }
+
+    #[test]
+    fn latency_histogram_reconciles_with_request_count() {
+        let m = Metrics::default();
+        for v in [100, 200, 400, 800, 100_000] {
+            m.record(v, None);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency.count, s.completed);
+        assert_eq!(s.latency.max, 100_000);
+        assert_eq!(s.max_latency_ns, 100_000);
+        assert!(s.latency.p50() >= 200 && s.latency.p50() < 400 * 2);
+        assert!(s.latency.p99() >= 100_000);
+        let bucket_total: u64 = s.latency.buckets.iter().sum();
+        assert_eq!(bucket_total, s.completed);
     }
 
     #[test]
@@ -271,8 +528,8 @@ mod tests {
     fn snapshot_matches_summary_and_serializes() {
         let m = Metrics::default();
         m.requests.fetch_add(3, Ordering::Relaxed);
-        m.record(100, true);
-        m.record(500, false);
+        m.record(100, None);
+        m.record(500, Some(&Error::WorkerDisconnected));
         m.record_cache(true);
         m.record_cache(false);
         m.coalesced_transfers.fetch_add(2, Ordering::Relaxed);
@@ -287,7 +544,7 @@ mod tests {
         assert_eq!(s.coalesced_transfers, 2);
         assert!(m.summary().contains("coalesced=2"));
         // Snapshots are decoupled from the live counters.
-        m.record(900, true);
+        m.record(900, None);
         assert_eq!(s.completed, 2);
         assert_ne!(m.snapshot(), s);
         let j = s.to_json();
@@ -301,6 +558,32 @@ mod tests {
             Some(0.5)
         );
         assert!(j.to_string_compact().contains("\"channels_served\":4"));
+        // Full JSON round-trip: parse the serialized form back and
+        // rebuild an identical snapshot.
+        let text = j.to_string_compact();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = MetricsSnapshot::from_json(&parsed).expect("snapshot deserializes");
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn prometheus_exposition_carries_the_load_bearing_series() {
+        let m = Metrics::default();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record(100, None);
+        m.record(300, Some(&Error::InvalidRequest("bad".into())));
+        m.transfers.record_engine("compiled", 4096, 1024, 900, 1000);
+        m.transfers.record_channel(0, 2048, 512, 450, 500);
+        let text = m.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE iris_requests_total counter"));
+        assert!(text.contains("iris_requests_total 2\n"));
+        assert!(text.contains("iris_errors_total{kind=\"invalid_request\"} 1"));
+        assert!(text.contains("iris_errors_total{kind=\"internal\"} 0"));
+        assert!(text.contains("iris_request_latency_ns_count 2"));
+        assert!(text.contains("iris_request_latency_ns_max 300"));
+        assert!(text.contains("iris_engine_gbs{engine=\"compiled\"} 4"));
+        assert!(text.contains("iris_engine_beff{engine=\"compiled\"} 0.9"));
+        assert!(text.contains("iris_channel_bytes_total{channel=\"0\"} 2048"));
     }
 
     #[test]

@@ -264,6 +264,8 @@ fn source_data(
 /// Run the full pipeline. `rt = None` skips the PJRT compute+unpack
 /// stages (pure transport validation).
 pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<PipelineReport> {
+    let tracer = crate::obs::global();
+    let _span_run = tracer.span("pipeline.run");
     let problem = cfg.workload.problem();
     let mut rng = Rng::new(cfg.seed);
 
@@ -272,6 +274,7 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     let (raw_arrays, real_arrays, scales) = source_data(cfg.workload, &mut rng);
 
     // ------------------------------------------------ layout + pack
+    let _span_plan = tracer.span("pipeline.plan");
     let layout: Arc<Layout> = match &cfg.cache {
         Some(cache) => cache.layout_for(cfg.kind, &problem),
         None => Arc::new(baselines::generate(cfg.kind, &problem)),
@@ -283,12 +286,15 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     // Program compilation is part of the (reusable) plan stage, so it
     // stays outside the timed hot path, like PackPlan::compile above.
     let prog = cfg.compiled.then(|| crate::pack::PackProgram::compile(&plan));
+    drop(_span_plan);
+    let _span_pack = tracer.span("pipeline.pack");
     let t0 = Instant::now();
     let buf = match &prog {
         Some(prog) => prog.pack(&refs)?,
         None => plan.pack(&refs)?,
     };
     let pack_ns = t0.elapsed().as_nanos() as u64;
+    drop(_span_pack);
 
     // ------------------------------------------------ bus model
     let channel = HbmChannel::alveo_u280();
@@ -299,12 +305,14 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     // ------------------------------------------------ decode (II=1 sim)
     let dp = DecodePlan::compile(&layout, &problem);
     let dprog = cfg.compiled.then(|| crate::decode::DecodeProgram::compile(&dp));
+    let _span_decode = tracer.span("pipeline.decode");
     let t1 = Instant::now();
     let decoded = match &dprog {
         Some(dprog) => dprog.decode(&buf)?,
         None => dp.decode(&buf)?,
     };
     let decode_ns = t1.elapsed().as_nanos() as u64;
+    drop(_span_decode);
     let decode_exact = decoded == raw_arrays;
     // Cycle-accurate stream decoder must agree with the static analysis.
     let sd = StreamDecoder::new(&layout, &problem);
@@ -323,6 +331,7 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     // stalls and reproduce the source streams; the write module must
     // emit the host packer's lines bit for bit.
     let cosim = if cfg.cosim {
+        let _span_cosim = tracer.span("pipeline.cosim");
         let read = crate::cosim::ReadCosim::new(&layout, &problem)
             .with_capacity(crate::cosim::Capacity::Analyzed)
             .run(&buf)?;
@@ -376,6 +385,7 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     }
 
     // ------------------------------------------------ compute + verify
+    let _span_compute = tracer.span("pipeline.compute");
     let (compute_ns, max_abs_err, tolerance) = if let Some(rt) = rt.as_deref_mut() {
         match cfg.workload {
             Workload::Helmholtz => {
@@ -516,12 +526,15 @@ pub fn run_multichannel(
     cfg: &PipelineConfig,
     strategy: PartitionStrategy,
 ) -> Result<MultiChannelReport> {
+    let tracer = crate::obs::global();
+    let _span_run = tracer.span("pipeline.run_multichannel");
     let problem = cfg.workload.problem();
     let k = cfg.channels.unwrap_or(1).max(1);
     let mut rng = Rng::new(cfg.seed);
     let (raw_arrays, _real, _scales) = source_data(cfg.workload, &mut rng);
     // Honor cfg.kind on every channel, exactly like the single-channel
     // run() does for the whole problem.
+    let _span_plan = tracer.span("pipeline.plan");
     let pl = match &cfg.cache {
         Some(cache) => partition_opts(&problem, k, strategy, |p| cache.layout_for(cfg.kind, p))?,
         None => partition_opts(&problem, k, strategy, |p| {
@@ -529,13 +542,18 @@ pub fn run_multichannel(
         })?,
     };
     let exec = MultiChannelExecutor::compile(&pl);
+    drop(_span_plan);
     let refs: Vec<&[u64]> = raw_arrays.iter().map(|v| v.as_slice()).collect();
+    let _span_pack = tracer.span("pipeline.pack");
     let t0 = Instant::now();
     let bufs = exec.pack(&refs)?;
     let pack_ns = t0.elapsed().as_nanos() as u64;
+    drop(_span_pack);
+    let _span_decode = tracer.span("pipeline.decode");
     let t1 = Instant::now();
     let decoded = exec.decode(&bufs)?;
     let decode_ns = t1.elapsed().as_nanos() as u64;
+    drop(_span_decode);
     let channel = HbmChannel::alveo_u280();
     let mut mc = MultiChannel::new(channel);
     for (q, m) in pl.problems.iter().zip(pl.metrics.iter()) {

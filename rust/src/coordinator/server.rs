@@ -400,12 +400,8 @@ fn worker_loop(
                 Job::Transfer(req, resp_tx) => {
                     let t0 = Instant::now();
                     let result = process(&req, &cache, &metrics);
-                    let latency = t0.elapsed().as_nanos() as u64;
-                    metrics.record(latency, result.is_ok());
-                    let result = result.map(|mut r| {
-                        r.latency_ns = latency;
-                        r
-                    });
+                    let latency = (t0.elapsed().as_nanos() as u64).max(1);
+                    metrics.record(latency, result.as_ref().err());
                     let _ = resp_tx.send(result);
                 }
                 Job::Dse(req, resp_tx) => {
@@ -413,10 +409,13 @@ fn worker_loop(
                     // single-threaded through the shared cache so
                     // concurrent sweeps never oversubscribe the host
                     // (DESIGN.md §Threading).
+                    let _span = crate::obs::global().span("server.dse");
                     let engine = DseEngine::with_cache(Arc::clone(&cache)).threads(1);
                     let t0 = Instant::now();
                     let points = engine.delta_sweep(&req.problem, &req.ratios);
-                    let latency = t0.elapsed().as_nanos() as u64;
+                    // Clamp: a sweep did nonzero work, so it must never
+                    // report a zero latency even on coarse clocks.
+                    let latency = (t0.elapsed().as_nanos() as u64).max(1);
                     metrics.record_dse(points.len() as u64, latency);
                     let _ = resp_tx.send(Ok(DseResponse {
                         points,
@@ -438,11 +437,25 @@ fn process(
             return process_multichannel(req, k, cache, metrics);
         }
     }
-    let (layout, cache_hit) = cache.layout_for_tracked(req.kind, &req.problem);
+    let tracer = crate::obs::global();
+    let _span_req = tracer.span("server.process");
+    let t_start = Instant::now();
+    let (layout, cache_hit) = {
+        let _s = tracer.span("server.cache_lookup");
+        cache.layout_for_tracked(req.kind, &req.problem)
+    };
     metrics.record_cache(cache_hit);
-    crate::layout::validate::validate(&layout, &req.problem)?;
-    let layout_metrics = LayoutMetrics::compute(&layout, &req.problem);
-    let plan = PackPlan::compile(&layout, &req.problem);
+    if tracer.enabled() {
+        tracer.instant(if cache_hit { "cache.hit" } else { "cache.miss" });
+    }
+    let (layout_metrics, plan) = {
+        let _s = tracer.span("server.plan");
+        crate::layout::validate::validate(&layout, &req.problem)?;
+        (
+            LayoutMetrics::compute(&layout, &req.problem),
+            PackPlan::compile(&layout, &req.problem),
+        )
+    };
     let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
     let threads = crate::dse::default_threads();
     // Engine routing: the run-coalesced engine serves layouts whose
@@ -461,6 +474,8 @@ fn process(
             }
         }
     };
+    let _span_pack = tracer.span("server.pack");
+    let t_pack = Instant::now();
     let (buf, engine) = if let Some(cp) = &coalesced {
         metrics
             .coalesced_transfers
@@ -493,8 +508,10 @@ fn process(
         };
         (buf, "compiled")
     };
+    drop(_span_pack);
     // Decode mirrors the pack-side engine choice; large decodes shard
     // element ranges the same way large packs shard bus-cycles.
+    let _span_decode = tracer.span("server.decode");
     let decoded = if coalesced.is_some() {
         let dprog = CoalescedDecode::compile(&layout, &req.problem);
         if dprog.num_elements() >= PARALLEL_MIN_ELEMS && threads > 1 {
@@ -516,7 +533,12 @@ fn process(
             dprog.decode(&buf)?
         }
     };
+    drop(_span_decode);
+    // Busy window = pack + decode (the data-moving phases); feeds the
+    // achieved-GB/s and achieved-b_eff per-engine telemetry.
+    let busy_ns = (t_pack.elapsed().as_nanos() as u64).max(1);
     let (cosim_cycles, cosim_ii) = if req.cosim {
+        let _s = tracer.span("server.cosim");
         let trace = crate::cosim::ReadCosim::new(&layout, &req.problem)
             .with_capacity(crate::cosim::Capacity::Analyzed)
             .run(&buf)?;
@@ -530,6 +552,18 @@ fn process(
     } else {
         (None, None)
     };
+    let payload_bits = req.problem.total_bits();
+    // Capacity of the streaming window: C_max bus lines of m bits — the
+    // denominator of Eq. 1, so telemetry b_eff reproduces the layout
+    // metric exactly for a full transfer.
+    let capacity_bits = layout_metrics.c_max * req.problem.m() as u64;
+    metrics.transfers.record_engine(
+        engine,
+        crate::util::ceil_div(payload_bits, 8),
+        busy_ns,
+        payload_bits,
+        capacity_bits,
+    );
     let channel = HbmChannel::alveo_u280();
     Ok(TransferResponse {
         c_max: layout_metrics.c_max,
@@ -537,7 +571,9 @@ fn process(
         b_eff: layout_metrics.b_eff,
         decode_exact: decoded == req.data,
         hbm_seconds: channel.seconds(layout_metrics.c_max),
-        latency_ns: 0,
+        // Worker-queue wait excluded: this is the processing latency of
+        // this request, never 0 for nonzero work (clock-resolution clamp).
+        latency_ns: (t_start.elapsed().as_nanos() as u64).max(1),
         cache_hit,
         channels: 1,
         channel_eff: Vec::new(),
@@ -565,21 +601,39 @@ fn process_multichannel(
             arrays: req.problem.arrays.len(),
         });
     }
+    let tracer = crate::obs::global();
+    let _span_req = tracer.span("server.process_multichannel");
+    let t_start = Instant::now();
     let mut all_hit = true;
-    let pl = partition_opts(&req.problem, k, PartitionStrategy::Lpt, |p| {
-        let (l, hit) = cache.layout_for_tracked(req.kind, p);
-        metrics.record_cache(hit);
-        all_hit &= hit;
-        l
-    })?;
-    let exec = MultiChannelExecutor::compile(&pl);
+    let (pl, exec) = {
+        let _s = tracer.span("server.plan");
+        let pl = partition_opts(&req.problem, k, PartitionStrategy::Lpt, |p| {
+            let (l, hit) = cache.layout_for_tracked(req.kind, p);
+            metrics.record_cache(hit);
+            all_hit &= hit;
+            l
+        })?;
+        let exec = MultiChannelExecutor::compile(&pl);
+        (pl, exec)
+    };
     let refs: Vec<&[u64]> = req.data.iter().map(|v| v.as_slice()).collect();
-    let bufs = exec.pack(&refs)?;
-    let decoded = exec.decode(&bufs)?;
+    let t_pack = Instant::now();
+    let bufs = {
+        let _s = tracer.span("server.pack");
+        exec.pack(&refs)?
+    };
+    let decoded = {
+        let _s = tracer.span("server.decode");
+        exec.decode(&bufs)?
+    };
+    // Channels stream concurrently, so every channel's busy window is
+    // the transfer's pack+decode wall window.
+    let busy_ns = (t_pack.elapsed().as_nanos() as u64).max(1);
     // Per-channel cosim: channels stream concurrently, so the slowest
     // simulated channel is the figure that sits alongside the modeled
     // aggregate HBM time.
     let (cosim_cycles, cosim_ii) = if req.cosim {
+        let _s = tracer.span("server.cosim");
         let mut worst_cycles = 0u64;
         let mut worst_ii = 1.0f64;
         for (c, buf) in bufs.iter().enumerate() {
@@ -612,6 +666,29 @@ fn process_multichannel(
     metrics.record_multichannel(k as u64);
     let m = req.problem.m();
     let summary = pl.summary(m);
+    // Telemetry: aggregate flow under "multichannel" (capacity = k
+    // channels × the aggregate window, so b_eff matches the summary),
+    // plus each channel's share of the window (b_eff matches
+    // channel_utilization).
+    let window_bits = summary.c_max * m as u64;
+    let total_payload = req.problem.total_bits();
+    metrics.transfers.record_engine(
+        "multichannel",
+        crate::util::ceil_div(total_payload, 8),
+        busy_ns,
+        total_payload,
+        window_bits * k as u64,
+    );
+    for (c, problem) in pl.problems.iter().enumerate() {
+        let payload = problem.total_bits();
+        metrics.transfers.record_channel(
+            c,
+            crate::util::ceil_div(payload, 8),
+            busy_ns,
+            payload,
+            window_bits,
+        );
+    }
     let channel = HbmChannel::alveo_u280();
     Ok(TransferResponse {
         c_max: summary.c_max,
@@ -619,7 +696,7 @@ fn process_multichannel(
         b_eff: summary.b_eff,
         decode_exact: decoded == req.data,
         hbm_seconds: pl.seconds(&channel),
-        latency_ns: 0,
+        latency_ns: (t_start.elapsed().as_nanos() as u64).max(1),
         cache_hit: all_hit,
         channels: k,
         channel_eff: pl.channel_utilization(m),

@@ -49,6 +49,34 @@ pub mod write;
 pub use read::{ReadCosim, ReadTrace};
 pub use write::{WriteCosim, WriteTrace};
 
+/// Optional per-cycle recording of a co-simulation run, enabled with
+/// `record_timeline(true)` on either simulator. Feeds the Chrome-trace
+/// exporter ([`crate::obs::ChromeTrace::add_cosim_timeline`]) so FIFO
+/// occupancy and stall behavior can be inspected on a cycle axis in
+/// Perfetto / `about:tracing` (`iris cosim --trace out.json`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CycleTimeline {
+    /// `occupancy[t][j]` = elements resident in array `j`'s FIFO at the
+    /// end of simulated cycle `t` (after that cycle's drain for reads;
+    /// in-flight elements after the produce phase for writes).
+    pub occupancy: Vec<Vec<u32>>,
+    /// `stalled[t]` = the bus made no forward progress in cycle `t`
+    /// (read: admission backpressure; write: output line not ready).
+    pub stalled: Vec<bool>,
+}
+
+impl CycleTimeline {
+    /// Simulated cycles recorded.
+    pub fn cycles(&self) -> usize {
+        self.occupancy.len()
+    }
+
+    /// Total stalled cycles recorded.
+    pub fn stall_count(&self) -> usize {
+        self.stalled.iter().filter(|&&s| s).count()
+    }
+}
+
 use crate::layout::fifo::{FifoAnalysis, WriteFifoAnalysis};
 use crate::layout::Layout;
 use crate::model::Problem;

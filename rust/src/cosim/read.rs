@@ -24,7 +24,7 @@
 //! After the last line, FIFOs drain one element per cycle until empty
 //! (the tail the kernel still has to consume).
 
-use super::Capacity;
+use super::{Capacity, CycleTimeline};
 use crate::layout::fifo::FifoAnalysis;
 use crate::layout::Layout;
 use crate::model::Problem;
@@ -37,6 +37,7 @@ pub struct ReadCosim<'a> {
     layout: &'a Layout,
     problem: &'a Problem,
     capacity: Capacity,
+    timeline: bool,
 }
 
 /// Everything one read co-simulation run measured.
@@ -63,6 +64,9 @@ pub struct ReadTrace {
     pub underflow_cycles: Vec<u64>,
     /// Cycle (1-based) at which each array's stream completed.
     pub stream_completion: Vec<u64>,
+    /// Per-cycle FIFO occupancy/stall recording; `Some` only when the
+    /// run was built with [`ReadCosim::record_timeline`]`(true)`.
+    pub timeline: Option<CycleTimeline>,
 }
 
 impl ReadTrace {
@@ -126,12 +130,21 @@ impl<'a> ReadCosim<'a> {
             layout,
             problem,
             capacity: Capacity::Unbounded,
+            timeline: false,
         }
     }
 
     /// Builder-style capacity model.
     pub fn with_capacity(mut self, capacity: Capacity) -> ReadCosim<'a> {
         self.capacity = capacity;
+        self
+    }
+
+    /// Record a per-cycle [`CycleTimeline`] (FIFO occupancy + stalls)
+    /// on the resulting trace. Off by default: recording costs one
+    /// `Vec` per simulated cycle.
+    pub fn record_timeline(mut self, on: bool) -> ReadCosim<'a> {
+        self.timeline = on;
         self
     }
 
@@ -207,6 +220,11 @@ impl<'a> ReadCosim<'a> {
         let mut stalls = 0u64;
         let mut t = 0u64;
         let mut li = 0usize;
+        let mut tl = if self.timeline {
+            Some(CycleTimeline::default())
+        } else {
+            None
+        };
         // Progress argument: every stall cycle drains at least one
         // element from a blocking FIFO (an empty blocking FIFO errors
         // out instead), so the run is bounded by lines + total elements.
@@ -276,6 +294,16 @@ impl<'a> ReadCosim<'a> {
                     li += 1;
                 } else {
                     stalls += 1;
+                    if let Some(tl) = &mut tl {
+                        tl.stalled.push(true);
+                    }
+                }
+            }
+            if let Some(tl) = &mut tl {
+                // The ingest branch above pushed `true` on a stall; every
+                // other cycle made forward progress.
+                if tl.stalled.len() as u64 == t {
+                    tl.stalled.push(false);
                 }
             }
             // Drain phase: one element per started array per cycle.
@@ -293,6 +321,9 @@ impl<'a> ReadCosim<'a> {
                 }
                 peak_backlog[a] = peak_backlog[a].max(fifos[a].len() as u64);
             }
+            if let Some(tl) = &mut tl {
+                tl.occupancy.push(fifos.iter().map(|f| f.len() as u32).collect());
+            }
             t += 1;
         }
         Ok(ReadTrace {
@@ -305,6 +336,7 @@ impl<'a> ReadCosim<'a> {
             stall_cycles: stalls,
             underflow_cycles: underflow,
             stream_completion: completion,
+            timeline: tl,
         })
     }
 }
@@ -413,6 +445,36 @@ mod tests {
         assert_eq!(structural.total_cycles, valued.total_cycles);
         assert_eq!(structural.stall_cycles, valued.stall_cycles);
         assert_eq!(structural.stream_completion, valued.stream_completion);
+    }
+
+    #[test]
+    fn timeline_reconciles_with_trace_counters() {
+        let p = helmholtz_problem();
+        let (l, buf, _) = packed(&p, LayoutKind::DueAlignedNaive, 3);
+        let fa = FifoAnalysis::compute(&l, &p);
+        let mut caps = fa.depth.clone();
+        let iu = p.array_index("u").unwrap();
+        caps[iu] = caps[iu].saturating_sub(1); // force stalls
+        let plain = ReadCosim::new(&l, &p)
+            .with_capacity(Capacity::Fixed(caps.clone()))
+            .run(&buf)
+            .unwrap();
+        assert!(plain.timeline.is_none(), "timeline is opt-in");
+        let trace = ReadCosim::new(&l, &p)
+            .with_capacity(Capacity::Fixed(caps))
+            .record_timeline(true)
+            .run(&buf)
+            .unwrap();
+        let tl = trace.timeline.as_ref().expect("timeline recorded");
+        assert_eq!(tl.cycles() as u64, trace.total_cycles);
+        assert_eq!(tl.stalled.len(), tl.occupancy.len());
+        assert_eq!(tl.stall_count() as u64, trace.stall_cycles);
+        assert!(trace.stall_cycles > 0, "this workload must stall");
+        // Per-cycle occupancy maxes must reproduce the peak backlog.
+        for a in 0..p.arrays.len() {
+            let peak = tl.occupancy.iter().map(|occ| occ[a] as u64).max().unwrap();
+            assert_eq!(peak, trace.peak_backlog[a], "array {a}");
+        }
     }
 
     #[test]

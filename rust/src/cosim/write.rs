@@ -22,7 +22,7 @@
 //! the emitted buffer must be bit-identical to
 //! [`crate::pack::PackProgram::pack`]'s payload.
 
-use super::Capacity;
+use super::{Capacity, CycleTimeline};
 use crate::layout::fifo::WriteFifoAnalysis;
 use crate::layout::Layout;
 use crate::model::Problem;
@@ -35,6 +35,7 @@ pub struct WriteCosim<'a> {
     layout: &'a Layout,
     problem: &'a Problem,
     capacity: Capacity,
+    timeline: bool,
 }
 
 /// Everything one write co-simulation run measured.
@@ -57,6 +58,9 @@ pub struct WriteTrace {
     pub stall_cycles: u64,
     /// Per-array cycles the kernel was back-pressured by a full FIFO.
     pub producer_stall_cycles: Vec<u64>,
+    /// Per-cycle in-flight/stall recording; `Some` only when the run
+    /// was built with [`WriteCosim::record_timeline`]`(true)`.
+    pub timeline: Option<CycleTimeline>,
 }
 
 impl WriteTrace {
@@ -120,12 +124,20 @@ impl<'a> WriteCosim<'a> {
             layout,
             problem,
             capacity: Capacity::Unbounded,
+            timeline: false,
         }
     }
 
     /// Builder-style capacity model.
     pub fn with_capacity(mut self, capacity: Capacity) -> WriteCosim<'a> {
         self.capacity = capacity;
+        self
+    }
+
+    /// Record a per-cycle [`CycleTimeline`] (in-flight occupancy +
+    /// output stalls) on the resulting trace. Off by default.
+    pub fn record_timeline(mut self, on: bool) -> WriteCosim<'a> {
+        self.timeline = on;
         self
     }
 
@@ -176,6 +188,11 @@ impl<'a> WriteCosim<'a> {
         // right lanes; per-array element order is a layout invariant
         // (`layout::validate`).
         let mut line: Vec<crate::layout::Placement> = Vec::new();
+        let mut tl = if self.timeline {
+            Some(CycleTimeline::default())
+        } else {
+            None
+        };
         let budget = c as u64
             + self.problem.arrays.iter().map(|a| a.depth).sum::<u64>()
             + 2;
@@ -201,6 +218,11 @@ impl<'a> WriteCosim<'a> {
             }
             for a in 0..n {
                 peak_inflight[a] = peak_inflight[a].max(fifos[a].len() as u64);
+            }
+            if let Some(tl) = &mut tl {
+                // Post-production, pre-emission — the instant the
+                // hardware holds the most state, matching peak_inflight.
+                tl.occupancy.push(fifos.iter().map(|f| f.len() as u32).collect());
             }
             // Emit: line `li` leaves iff every element it carries is in
             // flight.
@@ -254,6 +276,9 @@ impl<'a> WriteCosim<'a> {
             } else {
                 stalls += 1;
             }
+            if let Some(tl) = &mut tl {
+                tl.stalled.push(!ready);
+            }
             t += 1;
         }
         Ok(WriteTrace {
@@ -264,6 +289,7 @@ impl<'a> WriteCosim<'a> {
             total_cycles: t,
             stall_cycles: stalls,
             producer_stall_cycles: producer_stalls,
+            timeline: tl,
         })
     }
 }
@@ -357,6 +383,30 @@ mod tests {
             .run(&refs)
             .unwrap_err();
         assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn timeline_reconciles_with_trace_counters() {
+        // Iris layout of the paper example has early multi-element
+        // lines, so the write side must stall waiting for the kernel.
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 6);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let plain = WriteCosim::new(&l, &p).run(&refs).unwrap();
+        assert!(plain.timeline.is_none(), "timeline is opt-in");
+        let trace = WriteCosim::new(&l, &p)
+            .record_timeline(true)
+            .run(&refs)
+            .unwrap();
+        assert_eq!(trace.emitted, plain.emitted, "recording must not perturb");
+        let tl = trace.timeline.as_ref().expect("timeline recorded");
+        assert_eq!(tl.cycles() as u64, trace.total_cycles);
+        assert_eq!(tl.stall_count() as u64, trace.stall_cycles);
+        for a in 0..p.arrays.len() {
+            let peak = tl.occupancy.iter().map(|occ| occ[a] as u64).max().unwrap();
+            assert_eq!(peak, trace.peak_inflight[a], "array {a}");
+        }
     }
 
     #[test]

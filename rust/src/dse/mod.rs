@@ -166,9 +166,11 @@ impl DseEngine {
     /// Evaluate every spec, fanning out over the worker pool. The result
     /// order matches `specs` exactly regardless of completion order.
     pub fn evaluate_many(&self, specs: &[PointSpec]) -> Vec<DesignPoint> {
+        let _span = crate::obs::global().span("dse.evaluate_many");
         let cache = &self.cache;
         fan_out(specs.len(), self.threads, |i| {
             let s = &specs[i];
+            let _span = crate::obs::global().span("dse.point");
             DesignPoint::evaluate_cached(&s.label, s.kind, &s.problem, cache)
         })
     }

@@ -666,7 +666,10 @@ impl Engine for MultiChannel {
 /// The default engine registry for a problem: every execution path that
 /// is feasible for it. Single-channel paths always register; the
 /// multi-channel configurations need at least `k` arrays. A new engine
-/// (e.g. a SIMD pack path) registers by pushing itself here.
+/// (e.g. a SIMD pack path) registers by pushing itself here — and
+/// inherits tracing + bandwidth telemetry for free, because every
+/// registered engine is wrapped in
+/// [`crate::obs::InstrumentedEngine`] on the way out.
 pub fn engines_for(problem: &Problem, kind: LayoutKind) -> Vec<Box<dyn Engine>> {
     let mut engines: Vec<Box<dyn Engine>> = vec![
         Box::new(Reference),
@@ -708,6 +711,9 @@ pub fn engines_for(problem: &Problem, kind: LayoutKind) -> Vec<Box<dyn Engine>> 
         }
     }
     engines
+        .into_iter()
+        .map(|e| Box::new(crate::obs::InstrumentedEngine::new(e)) as Box<dyn Engine>)
+        .collect()
 }
 
 #[cfg(test)]

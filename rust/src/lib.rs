@@ -73,6 +73,7 @@ pub mod bus;
 pub mod pack;
 pub mod decode;
 pub mod engine;
+pub mod obs;
 pub mod quant;
 pub mod codegen;
 pub mod cosim;

@@ -12,13 +12,17 @@
 //!                        [--algo ...] [--out DIR] (no target flags = all targets)
 //!   cosim FILE.json      cycle-accurate co-simulation of the generated read and
 //!                        write modules [--algo ...] [--capacity analyzed|unbounded|N]
-//!                        [--seed S]
+//!                        [--seed S] [--trace OUT.json] (per-cycle FIFO occupancy /
+//!                        stall timeline as Chrome trace-event JSON)
 //!   dfg                  derive Table-5 due dates from the accelerator DFGs
 //!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
 //!                        [--wa W] [--wb W] [--algo ...] [--no-xla] [--cosim]
 //!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
 //!                        [--channels K] [--cosim] [--engine auto|compiled|coalesced]
 //!   dse                  width search demo [--lo W] [--hi W]
+//!   stats                serve a demo workload and dump coordinator telemetry
+//!                        [--requests N] [--workers N] [--channels K]
+//!                        [--format prom|json] [--trace OUT.json]
 //!   perf                 quick hot-path perf summary (see EXPERIMENTS.md §Perf)
 //!
 //! Problem-file positionals also accept the builtin names `paper`,
@@ -63,6 +67,7 @@ fn main() -> Result<()> {
         Some("e2e") => cmd_e2e(&args),
         Some("serve") => cmd_serve(&args),
         Some("dse") => cmd_dse(&args),
+        Some("stats") => cmd_stats(&args),
         Some("channels") => cmd_channels(&args),
         Some("perf") => cmd_perf(),
         _ => {
@@ -80,10 +85,13 @@ usage: iris <subcommand> [options]
   layout FILE.json [--algo KIND] [--ascii] [--paper-strict]
   codegen FILE.json [--host] [--hls] [--write] [--rust] [--algo KIND] [--out DIR]
   cosim FILE.json [--algo KIND] [--capacity analyzed|unbounded|N] [--seed S]
+        [--trace OUT.json]
   e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla] [--cosim]
   serve [--workers N] [--requests N] [--batch B] [--channels K] [--cosim]
         [--engine auto|compiled|coalesced]
   dse [--lo W] [--hi W]
+  stats [--requests N] [--workers N] [--channels K] [--format prom|json]
+        [--trace OUT.json]
   channels [FILE.json] [--max-k K]   multi-channel partition sweep (all strategies)
 
 FILE.json also accepts builtin problems: paper | helmholtz | matmul
@@ -282,14 +290,17 @@ fn cmd_cosim(args: &Args) -> Result<()> {
         problem.arrays.len(),
         problem.m()
     );
+    let trace_path = args.opt("trace");
     let read = ReadCosim::new(&layout, &problem)
         .with_capacity(capacity.clone())
+        .record_timeline(trace_path.is_some())
         .run(&buf)?;
     let dprog =
         iris::decode::DecodeProgram::compile(&iris::decode::DecodePlan::compile(&layout, &problem));
     let read_exact = read.streams == dprog.decode(&buf)?;
     let write = WriteCosim::new(&layout, &problem)
         .with_capacity(capacity)
+        .record_timeline(trace_path.is_some())
         .run(&refs)?;
     let payload = prog.payload_words();
     let write_exact = write.emitted.words()[..payload] == buf.words()[..payload];
@@ -329,6 +340,18 @@ fn cmd_cosim(args: &Args) -> Result<()> {
         est.fifo_bits,
         read.fifo_bits(&problem)
     );
+    if let Some(path) = trace_path {
+        let names: Vec<String> = problem.arrays.iter().map(|a| a.name.clone()).collect();
+        let mut ct = iris::obs::ChromeTrace::new();
+        if let Some(tl) = &read.timeline {
+            ct.add_cosim_timeline("read", &names, tl);
+        }
+        if let Some(tl) = &write.timeline {
+            ct.add_cosim_timeline("write", &names, tl);
+        }
+        std::fs::write(path, ct.to_string_compact())?;
+        println!("cycle trace ({} events) written to {path} — open in Perfetto/chrome://tracing", ct.len());
+    }
     if !(read_exact && write_exact) {
         bail!("co-simulation produced non-identical bits");
     }
@@ -425,6 +448,47 @@ fn cmd_dse(args: &Args) -> Result<()> {
     println!("searching matmul operand widths in [{lo},{hi}] on a 256-bit bus…");
     let (wa, wb, eff) = iris::dse::best_width_pair(iris::model::matmul_problem, lo, hi);
     println!("best: (W_A, W_B) = ({wa},{wb}) with Iris efficiency {:.2}%", eff * 100.0);
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let requests = args.opt_u64("requests", 16)?;
+    let workers = args.opt_u64("workers", 2)? as usize;
+    let channels = args.opt_u64("channels", 1)? as usize;
+    let trace_path = args.opt("trace");
+    let tracer = iris::obs::global();
+    if trace_path.is_some() {
+        tracer.set_enabled(true);
+    }
+    let server = LayoutServer::start(workers, 8);
+    let rxs: Vec<_> = (0..requests)
+        .map(|seed| {
+            let p = pipeline::synthetic_problem(8, seed);
+            let data = pipeline::synthetic_data(&p, seed);
+            let mut b = TransferRequest::builder(p, data);
+            if channels > 1 {
+                b = b.channels(channels.min(8));
+            }
+            server.submit(b.build().expect("demo request is valid"))
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv()??;
+    }
+    let snap = server.metrics_snapshot();
+    match args.opt_str("format", "prom") {
+        "json" => println!("{}", snap.to_json().to_string_pretty()),
+        "prom" | "prometheus" => print!("{}", snap.to_prometheus()),
+        other => bail!("unknown --format '{other}' (prom|json)"),
+    }
+    if let Some(path) = trace_path {
+        tracer.set_enabled(false);
+        let mut ct = iris::obs::ChromeTrace::new();
+        ct.add_spans(&tracer.drain());
+        std::fs::write(path, ct.to_string_compact())?;
+        println!("span trace ({} events) written to {path} — open in Perfetto/chrome://tracing", ct.len());
+    }
+    server.shutdown();
     Ok(())
 }
 

@@ -1,0 +1,155 @@
+//! [`InstrumentedEngine`]: spans + bandwidth telemetry for any engine.
+//!
+//! The wrapper is identity-transparent — `name`, `caps`, and
+//! `pack_group` delegate unchanged, so the differential harness's
+//! pair-matrix diagnostics and the registry tests see the inner engine
+//! exactly as before. Around `pack`/`decode` it opens a span (when the
+//! global tracer is enabled) and credits the global
+//! [`Telemetry`](crate::obs::Telemetry) with the bytes that actually
+//! crossed the wrapper: payload bits summed over the emitted
+//! [`BusLines`]. Because the byte count is derived from the engine's
+//! *output* rather than from the request, a reconciliation test can
+//! assert counters match bytes moved without trusting the engine.
+//!
+//! `engine::engines_for` wraps every registered engine, so any engine
+//! added in the future inherits instrumentation for free.
+
+use crate::engine::{ArrayData, BusLines, Engine, EngineCaps};
+use crate::layout::Layout;
+use crate::model::Problem;
+use crate::obs;
+use crate::util::ceil_div;
+use crate::Result;
+use std::time::Instant;
+
+/// Decorates an [`Engine`] with tracing spans and byte-accurate
+/// transfer telemetry. See module docs.
+pub struct InstrumentedEngine {
+    inner: Box<dyn Engine>,
+}
+
+impl InstrumentedEngine {
+    pub fn new(inner: Box<dyn Engine>) -> Self {
+        InstrumentedEngine { inner }
+    }
+
+    /// The wrapped engine (diagnostics).
+    pub fn inner(&self) -> &dyn Engine {
+        self.inner.as_ref()
+    }
+}
+
+fn lines_bytes(lines: &BusLines) -> u64 {
+    lines.channels.iter().map(|c| ceil_div(c.bits, 8)).sum()
+}
+
+impl Engine for InstrumentedEngine {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        self.inner.caps()
+    }
+
+    fn pack_group(&self) -> String {
+        self.inner.pack_group()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let tracer = obs::global();
+        let _span = if tracer.enabled() {
+            tracer.span_owned(format!("engine.pack:{}", self.inner.name()))
+        } else {
+            tracer.span("engine.pack")
+        };
+        let t0 = Instant::now();
+        let lines = self.inner.pack(problem, layout, data)?;
+        let busy_ns = t0.elapsed().as_nanos() as u64;
+        let bytes = lines_bytes(&lines);
+        let payload_bits = problem.total_bits();
+        let capacity_bits: u64 = lines.channels.iter().map(|c| c.bits).sum();
+        obs::global_telemetry().record_engine(
+            &self.inner.name(),
+            bytes,
+            busy_ns.max(1),
+            payload_bits,
+            capacity_bits,
+        );
+        Ok(lines)
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let tracer = obs::global();
+        let _span = if tracer.enabled() {
+            tracer.span_owned(format!("engine.decode:{}", self.inner.name()))
+        } else {
+            tracer.span("engine.decode")
+        };
+        self.inner.decode(problem, layout, lines)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Reference;
+    use crate::layout::{Layout, LayoutKind};
+    use crate::model::Problem;
+
+    fn tiny() -> (Problem, Layout, Vec<ArrayData>) {
+        let p = Problem::new(
+            crate::model::BusConfig::new(64),
+            vec![
+                crate::model::ArraySpec::new("a", 8, 4, 16),
+                crate::model::ArraySpec::new("b", 16, 4, 16),
+            ],
+        )
+        .unwrap();
+        let l = crate::baselines::generate(LayoutKind::Iris, &p);
+        let data = vec![vec![1, 2, 3, 4], vec![10, 20, 30, 40]];
+        (p, l, data)
+    }
+
+    #[test]
+    fn wrapper_is_identity_transparent() {
+        let e = InstrumentedEngine::new(Box::new(Reference));
+        assert_eq!(e.name(), "reference");
+        assert_eq!(e.caps(), EngineCaps::default());
+        assert_eq!(e.pack_group(), "single");
+    }
+
+    #[test]
+    fn wrapper_round_trips_and_counts_payload_bytes() {
+        let (p, l, data) = tiny();
+        let plain = Reference.pack(&p, &l, &data).unwrap();
+        let before = obs::global_telemetry()
+            .engines()
+            .into_iter()
+            .find(|f| f.name == "reference")
+            .map(|f| (f.transfers, f.bytes))
+            .unwrap_or((0, 0));
+        let e = InstrumentedEngine::new(Box::new(Reference));
+        let lines = e.pack(&p, &l, &data).unwrap();
+        assert_eq!(lines, plain, "wrapper must not alter the payload");
+        let decoded = e.decode(&p, &l, &lines).unwrap();
+        assert_eq!(decoded, data);
+        let after = obs::global_telemetry()
+            .engines()
+            .into_iter()
+            .find(|f| f.name == "reference")
+            .map(|f| (f.transfers, f.bytes))
+            .unwrap();
+        assert_eq!(after.0, before.0 + 1, "one transfer credited");
+        assert_eq!(
+            after.1,
+            before.1 + lines_bytes(&lines),
+            "bytes credited must equal the payload that crossed the wrapper"
+        );
+    }
+}

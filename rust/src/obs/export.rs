@@ -1,0 +1,227 @@
+//! Exporters: Chrome trace-event JSON and Prometheus text helpers.
+//!
+//! [`ChromeTrace`] builds the JSON object format understood by
+//! `about:tracing`, `chrome://tracing`, and Perfetto:
+//! `{"traceEvents": [...], ...}` with complete (`ph:"X"`), instant
+//! (`ph:"i"`), and counter (`ph:"C"`) events. Two sources feed it:
+//!
+//! - span streams from a [`Tracer`](crate::obs::Tracer) — wall-clock
+//!   `ts` in microseconds (fractional, so ns resolution survives);
+//! - per-cycle FIFO timelines from `ReadCosim`/`WriteCosim` — there the
+//!   time axis is *bus cycles*, exported as 1 µs per cycle so Perfetto's
+//!   zoom shows cycle numbers directly.
+//!
+//! The Prometheus side lives mostly in
+//! `coordinator::MetricsSnapshot::to_prometheus` (which owns the
+//! fields); this module provides the line-format helpers it shares with
+//! tests.
+
+use crate::cosim::CycleTimeline;
+use crate::obs::span::{SpanKind, SpanRecord};
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Builder for a Chrome trace-event ("Trace Event Format") JSON file.
+#[derive(Default)]
+pub struct ChromeTrace {
+    events: Vec<Json>,
+}
+
+impl ChromeTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn base(name: &str, ph: &str, ts_us: f64, pid: u64, tid: u64) -> Json {
+        let mut e = Json::obj();
+        e.set("name", Json::Str(name.to_string()));
+        e.set("ph", Json::Str(ph.to_string()));
+        e.set("ts", Json::Num(ts_us));
+        e.set("pid", Json::Num(pid as f64));
+        e.set("tid", Json::Num(tid as f64));
+        e
+    }
+
+    /// A complete event (`ph:"X"`): a span with an explicit duration.
+    pub fn complete(&mut self, name: &str, tid: u64, ts_ns: u64, dur_ns: u64) {
+        let mut e = Self::base(name, "X", ts_ns as f64 / 1e3, 1, tid);
+        e.set("dur", Json::Num(dur_ns as f64 / 1e3));
+        self.events.push(e);
+    }
+
+    /// A thread-scoped instant event (`ph:"i"`).
+    pub fn instant(&mut self, name: &str, tid: u64, ts_ns: u64) {
+        let mut e = Self::base(name, "i", ts_ns as f64 / 1e3, 1, tid);
+        e.set("s", Json::Str("t".to_string()));
+        self.events.push(e);
+    }
+
+    /// A counter event (`ph:"C"`) carrying one or more named series.
+    pub fn counter(&mut self, name: &str, ts_us: f64, series: &[(String, f64)]) {
+        let mut e = Self::base(name, "C", ts_us, 1, 0);
+        let mut args = Json::obj();
+        for (k, v) in series {
+            args.set(k, Json::Num(*v));
+        }
+        e.set("args", args);
+        self.events.push(e);
+    }
+
+    /// Append every span/instant record from a tracer drain.
+    pub fn add_spans(&mut self, records: &[SpanRecord]) {
+        for r in records {
+            match r.kind {
+                SpanKind::Span => self.complete(&r.name, r.tid, r.start_ns, r.dur_ns),
+                SpanKind::Instant => self.instant(&r.name, r.tid, r.start_ns),
+            }
+        }
+    }
+
+    /// Export a cosim per-cycle timeline: one counter track named
+    /// `"<prefix> fifo"` with a series per array (FIFO occupancy), plus
+    /// an instant per stalled bus cycle. Time axis: 1 µs = 1 bus cycle.
+    pub fn add_cosim_timeline(&mut self, prefix: &str, arrays: &[String], tl: &CycleTimeline) {
+        let track = format!("{prefix} fifo");
+        for (t, occ) in tl.occupancy.iter().enumerate() {
+            let series: Vec<(String, f64)> = occ
+                .iter()
+                .enumerate()
+                .map(|(a, &depth)| {
+                    let label = arrays.get(a).cloned().unwrap_or_else(|| format!("a{a}"));
+                    (label, depth as f64)
+                })
+                .collect();
+            self.counter(&track, t as f64, &series);
+        }
+        for (t, &stalled) in tl.stalled.iter().enumerate() {
+            if stalled {
+                // Cycle-axis instants: ts in "µs" units = cycle number.
+                let mut e = Self::base(&format!("{prefix} stall"), "i", t as f64, 1, 0);
+                e.set("s", Json::Str("g".to_string()));
+                self.events.push(e);
+            }
+        }
+    }
+
+    /// The final `{"traceEvents": [...]}` object.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("traceEvents", Json::Arr(self.events.clone()));
+        o.set("displayTimeUnit", Json::Str("ns".to_string()));
+        o
+    }
+
+    /// Serialize compactly (the format Perfetto ingests).
+    pub fn to_string_compact(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+/// One Prometheus line: `name{labels} value` with `# TYPE` emitted by
+/// the caller. `labels` is preformatted (`engine="compiled"`) or empty.
+pub fn prom_line(out: &mut String, name: &str, labels: &str, value: f64) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {value}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {value}");
+    }
+}
+
+/// `# HELP` + `# TYPE` header for a metric.
+pub fn prom_header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::borrow::Cow;
+
+    #[test]
+    fn spans_export_as_complete_events_with_us_timestamps() {
+        let mut ct = ChromeTrace::new();
+        ct.add_spans(&[
+            SpanRecord {
+                name: Cow::Borrowed("pack"),
+                kind: SpanKind::Span,
+                start_ns: 1500,
+                dur_ns: 2500,
+                tid: 3,
+            },
+            SpanRecord {
+                name: Cow::Borrowed("cache.hit"),
+                kind: SpanKind::Instant,
+                start_ns: 4000,
+                dur_ns: 0,
+                tid: 3,
+            },
+        ]);
+        let j = ct.to_json();
+        let evs = match j.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("expected traceEvents array, got {other:?}"),
+        };
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(evs[0].get("ts").and_then(|t| t.as_f64()), Some(1.5));
+        assert_eq!(evs[0].get("dur").and_then(|d| d.as_f64()), Some(2.5));
+        assert_eq!(evs[1].get("ph").and_then(|p| p.as_str()), Some("i"));
+        // The whole document must reparse as valid JSON.
+        let text = ct.to_string_compact();
+        assert!(
+            crate::util::json::parse(&text).is_ok(),
+            "chrome trace must be valid JSON"
+        );
+    }
+
+    #[test]
+    fn cosim_timeline_exports_counters_and_stalls() {
+        let tl = CycleTimeline {
+            occupancy: vec![vec![1, 0], vec![2, 1], vec![1, 1]],
+            stalled: vec![false, true, false],
+        };
+        let mut ct = ChromeTrace::new();
+        ct.add_cosim_timeline("read", &["u".to_string(), "v".to_string()], &tl);
+        // 3 counter events + 1 stall instant.
+        assert_eq!(ct.len(), 4);
+        let j = ct.to_json();
+        let evs = match j.get("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            _ => panic!("traceEvents missing"),
+        };
+        let counters: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C"))
+            .collect();
+        assert_eq!(counters.len(), 3);
+        let args = counters[1].get("args").unwrap();
+        assert_eq!(args.get("u").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(args.get("v").and_then(|v| v.as_f64()), Some(1.0));
+        let stalls: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("read stall"))
+            .collect();
+        assert_eq!(stalls.len(), 1);
+        assert_eq!(stalls[0].get("ts").and_then(|t| t.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn prom_helpers_format_lines() {
+        let mut out = String::new();
+        prom_header(&mut out, "iris_requests_total", "counter", "requests seen");
+        prom_line(&mut out, "iris_requests_total", "", 3.0);
+        prom_line(&mut out, "iris_engine_gbs", "engine=\"compiled\"", 2.5);
+        assert!(out.contains("# TYPE iris_requests_total counter"));
+        assert!(out.contains("iris_requests_total 3\n"));
+        assert!(out.contains("iris_engine_gbs{engine=\"compiled\"} 2.5\n"));
+    }
+}

@@ -1,0 +1,325 @@
+//! Log-bucketed latency histogram: 64 power-of-two buckets, lock-free.
+//!
+//! Bucket `0` holds the value 0; bucket `i ≥ 1` holds values in
+//! `[2^(i-1), 2^i)`; the last bucket (63) absorbs everything from
+//! `2^62` up. Recording is one relaxed `fetch_add` on the bucket plus
+//! count/sum updates and a `fetch_max` for the exact maximum — cheap
+//! enough for the coordinator's per-request path.
+//!
+//! Quantiles are answered from a [`HistogramSnapshot`]: walk the
+//! cumulative counts to the target rank and report the bucket's upper
+//! bound, clamped to the exact observed max. With power-of-two buckets
+//! the estimate is within 2× of the true value, which is the right
+//! trade for latencies spanning ns..s; the exact `max` is kept
+//! separately because tail outliers are what pages people.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets.
+pub const NUM_BUCKETS: usize = 64;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    // v = 0 → 0; v in [2^(i-1), 2^i) → i; huge values clamp to 63.
+    ((64 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+}
+
+/// Upper bound (inclusive) of bucket `i`, used as the quantile estimate.
+#[inline]
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Concurrent log-bucketed histogram of `u64` samples (nanoseconds, by
+/// convention, but unit-agnostic).
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .field("max", &self.max())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`], with quantile queries and
+/// JSON (de)serialization.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    /// `buckets[i]` = samples in bucket `i` (see module docs for bounds).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    /// Exact maximum observed sample.
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Upper-bound estimate of the `q`-quantile (`0.0 ..= 1.0`), clamped
+    /// to the exact max. Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Serialize. Buckets are emitted sparse — `[[index, count], …]` —
+    /// since latency distributions touch a handful of the 64 buckets.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", Json::Num(self.count as f64));
+        o.set("sum", Json::Num(self.sum as f64));
+        o.set("max", Json::Num(self.max as f64));
+        o.set("p50", Json::Num(self.p50() as f64));
+        o.set("p90", Json::Num(self.p90() as f64));
+        o.set("p99", Json::Num(self.p99() as f64));
+        let sparse: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| Json::Arr(vec![Json::Num(i as f64), Json::Num(n as f64)]))
+            .collect();
+        o.set("buckets", Json::Arr(sparse));
+        o
+    }
+
+    /// Inverse of [`to_json`](Self::to_json). Quantile fields are
+    /// derived, so only count/sum/max/buckets are read back.
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let mut buckets = vec![0u64; NUM_BUCKETS];
+        if let Some(Json::Arr(pairs)) = j.get("buckets") {
+            for p in pairs {
+                if let Json::Arr(kv) = p {
+                    let i = kv.first()?.as_f64()? as usize;
+                    let n = kv.get(1)?.as_f64()? as u64;
+                    if i < NUM_BUCKETS {
+                        buckets[i] = n;
+                    }
+                }
+            }
+        }
+        Some(HistogramSnapshot {
+            buckets,
+            count: j.get("count")?.as_f64()? as u64,
+            sum: j.get("sum")?.as_f64()? as u64,
+            max: j.get("max")?.as_f64()? as u64,
+        })
+    }
+
+    /// Prometheus histogram exposition for metric `name` (one
+    /// `_bucket` line per non-empty bucket with cumulative counts, plus
+    /// `_sum` / `_count` / `_max`).
+    pub fn prometheus_lines(&self, name: &str, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            let le = bucket_upper(i);
+            if le == u64::MAX {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            } else {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+            }
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", self.count);
+        let _ = writeln!(out, "{name}_sum {}", self.sum);
+        let _ = writeln!(out, "{name}_count {}", self.count);
+        let _ = writeln!(out, "{name}_max {}", self.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(10), 1023);
+    }
+
+    #[test]
+    fn quantiles_from_known_distribution() {
+        let h = Histogram::new();
+        // 90 fast samples (~100ns bucket), 9 medium (~10µs), 1 slow (1ms).
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..9 {
+            h.record(10_000);
+        }
+        h.record(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max, 1_000_000);
+        assert_eq!(s.sum, 90 * 100 + 9 * 10_000 + 1_000_000);
+        // p50 lands in the 100ns bucket: [64,128) → upper bound 127.
+        assert_eq!(s.p50(), 127);
+        // p90 is the 90th of 100 — still the fast bucket.
+        assert_eq!(s.p90(), 127);
+        // p99 reaches the medium bucket: [8192,16384) → 16383.
+        assert_eq!(s.p99(), 16383);
+        // p100 clamps to exact max.
+        assert_eq!(s.quantile(1.0), 1_000_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let h = Histogram::new();
+        for v in [0, 1, 7, 300, 300, 4096, 1 << 40] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let j = s.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_compact()).unwrap();
+        let back = HistogramSnapshot::from_json(&parsed).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn quantile_estimate_within_2x_of_truth() {
+        let h = Histogram::new();
+        let mut vals: Vec<u64> = (1..=1000).map(|i| i * 37 + 11).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        for q in [0.5, 0.9, 0.99] {
+            let exact = vals[((q * 1000.0).ceil() as usize).min(1000) - 1];
+            let est = s.quantile(q);
+            assert!(est >= exact, "estimate is an upper bound: {est} < {exact}");
+            assert!(est < exact * 2, "estimate within 2x: {est} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn prometheus_lines_are_cumulative() {
+        let h = Histogram::new();
+        h.record(100);
+        h.record(100);
+        h.record(10_000);
+        let mut out = String::new();
+        h.snapshot().prometheus_lines("iris_latency_ns", &mut out);
+        assert!(out.contains("# TYPE iris_latency_ns histogram"));
+        assert!(out.contains("iris_latency_ns_bucket{le=\"127\"} 2"));
+        assert!(out.contains("iris_latency_ns_bucket{le=\"16383\"} 3"));
+        assert!(out.contains("iris_latency_ns_bucket{le=\"+Inf\"} 3"));
+        assert!(out.contains("iris_latency_ns_sum 10200"));
+        assert!(out.contains("iris_latency_ns_count 3"));
+        assert!(out.contains("iris_latency_ns_max 10000"));
+    }
+}

@@ -1,0 +1,68 @@
+//! Observability substrate: structured tracing, latency histograms, and
+//! bandwidth telemetry — zero external dependencies.
+//!
+//! The paper's headline number is bandwidth efficiency (b_eff, Table 6/7),
+//! but a static layout metric says nothing about what a *live* transfer
+//! achieved. This module closes that gap with three building blocks that
+//! every layer of the crate shares:
+//!
+//! - [`span`]: a thread-safe span/event tracer with ns resolution and a
+//!   bounded ring buffer. The request path (plan → cache lookup → pack →
+//!   transport → decode → cosim validate) is instrumented in
+//!   `coordinator::server`, `coordinator::pipeline`, `dse`, and
+//!   `bus::multichannel`. Tracing is off by default; a disabled tracer
+//!   costs one relaxed atomic load per call site.
+//! - [`hist`]: log-bucketed (power-of-two) latency histograms answering
+//!   p50/p90/p99/max from 64 atomic counters, replacing the lone
+//!   `max_latency` the coordinator used to track.
+//! - [`telemetry`]: per-engine and per-channel transfer counters — bytes
+//!   moved, busy nanoseconds (→ achieved GB/s), and payload-vs-capacity
+//!   bits (→ achieved b_eff, directly comparable to
+//!   `layout::metrics::LayoutMetrics::b_eff`).
+//!
+//! [`export`] renders the results: Prometheus-style text exposition
+//! helpers (the full page is assembled by
+//! `coordinator::MetricsSnapshot::to_prometheus`, which owns the fields)
+//! and a Chrome-trace-event JSON builder (`about:tracing` / Perfetto)
+//! that serializes both span streams and the per-cycle FIFO
+//! occupancy/stall timelines recorded by `ReadCosim`/`WriteCosim`.
+//!
+//! [`engine_wrap::InstrumentedEngine`] decorates any `engine::Engine`
+//! with spans plus byte-accurate telemetry; `engine::engines_for` wraps
+//! every registered engine, so the differential harness doubles as proof
+//! that spans balance and counters reconcile with bytes actually moved.
+
+pub mod engine_wrap;
+pub mod export;
+pub mod hist;
+pub mod span;
+pub mod telemetry;
+
+pub use engine_wrap::InstrumentedEngine;
+pub use export::ChromeTrace;
+pub use hist::{Histogram, HistogramSnapshot};
+pub use span::{SpanKind, SpanRecord, Tracer};
+pub use telemetry::{FlowSnapshot, Telemetry};
+
+use std::sync::OnceLock;
+
+/// Process-global tracer shared by every instrumented call site.
+///
+/// Disabled by default: `global().set_enabled(true)` arms it (the CLI
+/// does this for `iris stats --trace` / traced pipeline runs, benches do
+/// it for the overhead gate). Library code only ever *records* through
+/// this handle; policy stays with the caller.
+pub fn global() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(Tracer::default)
+}
+
+/// Process-global transfer telemetry fed by [`InstrumentedEngine`].
+///
+/// The coordinator's `Metrics` owns its own per-server [`Telemetry`];
+/// this one aggregates across ad-hoc engine invocations (harness runs,
+/// benches) so reconciliation tests can audit raw engine traffic.
+pub fn global_telemetry() -> &'static Telemetry {
+    static TELEMETRY: OnceLock<Telemetry> = OnceLock::new();
+    TELEMETRY.get_or_init(Telemetry::default)
+}

@@ -1,0 +1,346 @@
+//! Span/event tracing core: thread-safe, ns-resolution, bounded.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Near-zero cost when disabled.** Every public entry point checks
+//!    one relaxed atomic load before doing anything else; a disabled
+//!    tracer allocates nothing and takes no locks, so instrumentation
+//!    can live on the pack/decode hot path (the benched overhead gate in
+//!    `bench_pack_hot` holds the *enabled* tracer to ≤5% too).
+//! 2. **Bounded memory.** Records land in a ring buffer of fixed
+//!    capacity; when full, the oldest record is evicted and a `dropped`
+//!    counter incremented — a long-running server can leave tracing on
+//!    without unbounded growth.
+//! 3. **Balance is auditable.** `started()` / `finished()` /
+//!    `open_spans()` counters let tests prove every span guard that
+//!    opened also closed, independent of ring eviction.
+//!
+//! Timestamps are nanoseconds since the tracer's construction
+//! (monotonic, via `Instant`), so records from different threads share
+//! one clock and export directly to Chrome trace-event `ts` values.
+
+use std::borrow::Cow;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity: enough for ~10k served requests at the
+/// coordinator's ~6 spans/request before eviction starts.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// What a [`SpanRecord`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A duration: `start_ns .. start_ns + dur_ns`.
+    Span,
+    /// A point event; `dur_ns` is 0.
+    Instant,
+}
+
+/// One completed span or instant event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub name: Cow<'static, str>,
+    pub kind: SpanKind,
+    /// Nanoseconds since tracer construction.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Small dense per-process thread id (not the OS tid).
+    pub tid: u64,
+}
+
+struct Ring {
+    buf: VecDeque<SpanRecord>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(rec);
+    }
+}
+
+/// Thread-safe span/event tracer with a bounded ring buffer.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    started: AtomicU64,
+    finished: AtomicU64,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl Tracer {
+    /// A disabled tracer whose ring holds at most `capacity` records.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                buf: VecDeque::new(),
+                capacity: capacity.max(1),
+                dropped: 0,
+            }),
+            started: AtomicU64::new(0),
+            finished: AtomicU64::new(0),
+        }
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Nanoseconds since tracer construction.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Open a span named by a static string. Recording happens when the
+    /// returned guard drops; an inert guard is returned while disabled.
+    #[inline]
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        if !self.enabled() {
+            return Span { inner: None };
+        }
+        self.begin(Cow::Borrowed(name))
+    }
+
+    /// Open a span with a runtime-built name. Callers should check
+    /// [`Tracer::enabled`] before formatting the name so the disabled
+    /// path stays allocation-free.
+    #[inline]
+    pub fn span_owned(&self, name: String) -> Span<'_> {
+        if !self.enabled() {
+            return Span { inner: None };
+        }
+        self.begin(Cow::Owned(name))
+    }
+
+    fn begin(&self, name: Cow<'static, str>) -> Span<'_> {
+        self.started.fetch_add(1, Ordering::Relaxed);
+        Span {
+            inner: Some(OpenSpan {
+                tracer: self,
+                name,
+                start_ns: self.now_ns(),
+            }),
+        }
+    }
+
+    /// Record a point event.
+    #[inline]
+    pub fn instant(&self, name: &'static str) {
+        if !self.enabled() {
+            return;
+        }
+        let rec = SpanRecord {
+            name: Cow::Borrowed(name),
+            kind: SpanKind::Instant,
+            start_ns: self.now_ns(),
+            dur_ns: 0,
+            tid: thread_ordinal(),
+        };
+        self.ring.lock().unwrap().push(rec);
+    }
+
+    fn close(&self, name: Cow<'static, str>, start_ns: u64) {
+        let end_ns = self.now_ns();
+        self.finished.fetch_add(1, Ordering::Relaxed);
+        // Record even if tracing was switched off mid-span, so
+        // started/finished stay the balance invariant and the ring never
+        // holds a span that was opened but not counted.
+        let rec = SpanRecord {
+            name,
+            kind: SpanKind::Span,
+            start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns),
+            tid: thread_ordinal(),
+        };
+        self.ring.lock().unwrap().push(rec);
+    }
+
+    /// Spans opened over the tracer's lifetime.
+    pub fn started(&self) -> u64 {
+        self.started.load(Ordering::Relaxed)
+    }
+
+    /// Spans closed over the tracer's lifetime.
+    pub fn finished(&self) -> u64 {
+        self.finished.load(Ordering::Relaxed)
+    }
+
+    /// Currently open span guards (`started - finished`). Zero when all
+    /// instrumented scopes have unwound — the balance proof.
+    pub fn open_spans(&self) -> u64 {
+        self.started().saturating_sub(self.finished())
+    }
+
+    /// Records evicted from the ring because it was full.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// Snapshot the ring without draining it, oldest first.
+    pub fn events(&self) -> Vec<SpanRecord> {
+        self.ring.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// Take every buffered record, leaving the ring empty.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let mut ring = self.ring.lock().unwrap();
+        ring.buf.drain(..).collect()
+    }
+
+    /// Empty the ring and reset the dropped counter (the balance
+    /// counters are cumulative and survive a clear).
+    pub fn clear(&self) {
+        let mut ring = self.ring.lock().unwrap();
+        ring.buf.clear();
+        ring.dropped = 0;
+    }
+}
+
+struct OpenSpan<'a> {
+    tracer: &'a Tracer,
+    name: Cow<'static, str>,
+    start_ns: u64,
+}
+
+/// RAII guard returned by [`Tracer::span`]; records on drop.
+pub struct Span<'a> {
+    inner: Option<OpenSpan<'a>>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(open) = self.inner.take() {
+            open.tracer.close(open.name, open.start_ns);
+        }
+    }
+}
+
+/// Small dense thread id: 1 for the first thread that traces, 2 for the
+/// next, … Stable for a thread's lifetime, compact in trace exports.
+fn thread_ordinal() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static ORDINAL: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ORDINAL.with(|t| *t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::default();
+        {
+            let _s = t.span("noop");
+            t.instant("noop");
+        }
+        assert_eq!(t.started(), 0);
+        assert_eq!(t.events().len(), 0);
+    }
+
+    #[test]
+    fn spans_balance_and_record_duration() {
+        let t = Tracer::default();
+        t.set_enabled(true);
+        {
+            let _outer = t.span("outer");
+            let _inner = t.span_owned("inner:0".to_string());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        t.instant("mark");
+        assert_eq!(t.started(), 2);
+        assert_eq!(t.finished(), 2);
+        assert_eq!(t.open_spans(), 0);
+        let ev = t.events();
+        assert_eq!(ev.len(), 3);
+        // Inner drops before outer, so it lands first.
+        assert_eq!(ev[0].name, "inner:0");
+        assert_eq!(ev[1].name, "outer");
+        assert!(ev[1].dur_ns >= ev[0].dur_ns, "outer encloses inner");
+        assert!(ev[0].dur_ns >= 1_000_000, "slept 1ms inside the span");
+        assert_eq!(ev[2].kind, SpanKind::Instant);
+        assert_eq!(ev[2].dur_ns, 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let t = Tracer::with_capacity(4);
+        t.set_enabled(true);
+        for _ in 0..10 {
+            t.instant("tick");
+        }
+        assert_eq!(t.events().len(), 4);
+        assert_eq!(t.dropped(), 6);
+        t.clear();
+        assert_eq!(t.events().len(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn drain_empties_the_ring() {
+        let t = Tracer::default();
+        t.set_enabled(true);
+        t.instant("a");
+        t.instant("b");
+        let taken = t.drain();
+        assert_eq!(taken.len(), 2);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn span_opened_before_disable_still_closes() {
+        let t = Tracer::default();
+        t.set_enabled(true);
+        let s = t.span("crossing");
+        t.set_enabled(false);
+        drop(s);
+        assert_eq!(t.open_spans(), 0);
+        assert_eq!(t.events().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_threads_all_land_in_one_ring() {
+        let t = std::sync::Arc::new(Tracer::default());
+        t.set_enabled(true);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let t = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let _s = t.span("worker");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.started(), 200);
+        assert_eq!(t.open_spans(), 0);
+        assert_eq!(t.events().len(), 200);
+        let tids: std::collections::BTreeSet<u64> =
+            t.events().iter().map(|e| e.tid).collect();
+        assert!(tids.len() >= 2, "expected multiple thread ordinals");
+    }
+}

@@ -1,0 +1,253 @@
+//! Per-engine and per-channel transfer telemetry.
+//!
+//! Each completed transfer contributes four numbers to a flow counter:
+//! bytes moved, busy nanoseconds (wall time of the pack+decode window),
+//! payload bits, and capacity bits (bus window size × transfer cycles).
+//! From those the snapshot derives the two figures the paper argues
+//! about: achieved GB/s (`bytes / busy_ns`) and achieved bandwidth
+//! efficiency `b_eff = payload_bits / capacity_bits` — directly
+//! comparable to the static `layout::metrics::LayoutMetrics::b_eff`
+//! prediction, which is how the acceptance test reconciles them.
+//!
+//! Flows are keyed by engine name ("compiled", "coalesced",
+//! "multichannel", …) or by channel index for multi-channel transfers.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct Counter {
+    transfers: u64,
+    bytes: u64,
+    busy_ns: u64,
+    payload_bits: u64,
+    capacity_bits: u64,
+}
+
+impl Counter {
+    fn add(&mut self, bytes: u64, busy_ns: u64, payload_bits: u64, capacity_bits: u64) {
+        self.transfers += 1;
+        self.bytes += bytes;
+        self.busy_ns += busy_ns;
+        self.payload_bits += payload_bits;
+        self.capacity_bits += capacity_bits;
+    }
+}
+
+/// Aggregated counters for one flow (an engine or a channel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSnapshot {
+    /// Engine name, or `ch<i>` for channel flows.
+    pub name: String,
+    pub transfers: u64,
+    pub bytes: u64,
+    pub busy_ns: u64,
+    pub payload_bits: u64,
+    pub capacity_bits: u64,
+}
+
+impl FlowSnapshot {
+    /// Achieved throughput in GB/s over the busy window (0 if unknown).
+    pub fn gbs(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.busy_ns as f64
+        }
+    }
+
+    /// Achieved bandwidth efficiency: payload bits over capacity bits.
+    pub fn b_eff(&self) -> f64 {
+        if self.capacity_bits == 0 {
+            0.0
+        } else {
+            self.payload_bits as f64 / self.capacity_bits as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set("transfers", Json::Num(self.transfers as f64));
+        o.set("bytes", Json::Num(self.bytes as f64));
+        o.set("busy_ns", Json::Num(self.busy_ns as f64));
+        o.set("payload_bits", Json::Num(self.payload_bits as f64));
+        o.set("capacity_bits", Json::Num(self.capacity_bits as f64));
+        o.set("gbs", Json::Num(self.gbs()));
+        o.set("b_eff", Json::Num(self.b_eff()));
+        o
+    }
+
+    /// Inverse of [`to_json`](Self::to_json); `gbs`/`b_eff` are derived.
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(FlowSnapshot {
+            name: j.get("name")?.as_str()?.to_string(),
+            transfers: j.get("transfers")?.as_f64()? as u64,
+            bytes: j.get("bytes")?.as_f64()? as u64,
+            busy_ns: j.get("busy_ns")?.as_f64()? as u64,
+            payload_bits: j.get("payload_bits")?.as_f64()? as u64,
+            capacity_bits: j.get("capacity_bits")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// Thread-safe per-engine / per-channel transfer counters.
+#[derive(Default)]
+pub struct Telemetry {
+    engines: Mutex<BTreeMap<String, Counter>>,
+    channels: Mutex<Vec<Counter>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("engines", &self.engines.lock().unwrap().len())
+            .field("channels", &self.channels.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl Telemetry {
+    /// Credit one transfer to `engine`.
+    pub fn record_engine(
+        &self,
+        engine: &str,
+        bytes: u64,
+        busy_ns: u64,
+        payload_bits: u64,
+        capacity_bits: u64,
+    ) {
+        self.engines
+            .lock()
+            .unwrap()
+            .entry(engine.to_string())
+            .or_default()
+            .add(bytes, busy_ns, payload_bits, capacity_bits);
+    }
+
+    /// Credit one transfer's share to channel `ch` (grows the table on
+    /// first sight of a new channel index).
+    pub fn record_channel(
+        &self,
+        ch: usize,
+        bytes: u64,
+        busy_ns: u64,
+        payload_bits: u64,
+        capacity_bits: u64,
+    ) {
+        let mut channels = self.channels.lock().unwrap();
+        if channels.len() <= ch {
+            channels.resize(ch + 1, Counter::default());
+        }
+        channels[ch].add(bytes, busy_ns, payload_bits, capacity_bits);
+    }
+
+    /// Per-engine snapshots, sorted by engine name.
+    pub fn engines(&self) -> Vec<FlowSnapshot> {
+        self.engines
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| FlowSnapshot {
+                name: name.clone(),
+                transfers: c.transfers,
+                bytes: c.bytes,
+                busy_ns: c.busy_ns,
+                payload_bits: c.payload_bits,
+                capacity_bits: c.capacity_bits,
+            })
+            .collect()
+    }
+
+    /// Per-channel snapshots in channel order.
+    pub fn channels(&self) -> Vec<FlowSnapshot> {
+        self.channels
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| FlowSnapshot {
+                name: format!("ch{i}"),
+                transfers: c.transfers,
+                bytes: c.bytes,
+                busy_ns: c.busy_ns,
+                payload_bits: c.payload_bits,
+                capacity_bits: c.capacity_bits,
+            })
+            .collect()
+    }
+
+    /// Total bytes credited across all engines (reconciliation hook).
+    pub fn total_engine_bytes(&self) -> u64 {
+        self.engines.lock().unwrap().values().map(|c| c.bytes).sum()
+    }
+
+    /// Forget everything (tests).
+    pub fn reset(&self) {
+        self.engines.lock().unwrap().clear();
+        self.channels.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_counters_accumulate_and_derive_rates() {
+        let t = Telemetry::default();
+        t.record_engine("compiled", 1000, 500, 8000, 10000);
+        t.record_engine("compiled", 1000, 500, 8000, 10000);
+        t.record_engine("coalesced", 4096, 1024, 100, 100);
+        let e = t.engines();
+        assert_eq!(e.len(), 2);
+        // BTreeMap order: coalesced before compiled.
+        assert_eq!(e[0].name, "coalesced");
+        assert_eq!(e[0].gbs(), 4.0);
+        assert_eq!(e[0].b_eff(), 1.0);
+        assert_eq!(e[1].name, "compiled");
+        assert_eq!(e[1].transfers, 2);
+        assert_eq!(e[1].bytes, 2000);
+        assert_eq!(e[1].b_eff(), 0.8);
+        assert_eq!(t.total_engine_bytes(), 2000 + 4096);
+    }
+
+    #[test]
+    fn channel_table_grows_on_demand() {
+        let t = Telemetry::default();
+        t.record_channel(2, 10, 1, 80, 100);
+        t.record_channel(0, 20, 1, 160, 200);
+        let c = t.channels();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0].name, "ch0");
+        assert_eq!(c[0].bytes, 20);
+        assert_eq!(c[1].transfers, 0);
+        assert_eq!(c[2].bytes, 10);
+    }
+
+    #[test]
+    fn flow_snapshot_json_round_trip() {
+        let t = Telemetry::default();
+        t.record_engine("compiled", 123, 456, 789, 1000);
+        let snap = &t.engines()[0];
+        let j = snap.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_compact()).unwrap();
+        let back = FlowSnapshot::from_json(&parsed).unwrap();
+        assert_eq!(&back, snap);
+    }
+
+    #[test]
+    fn zero_windows_do_not_divide_by_zero() {
+        let f = FlowSnapshot {
+            name: "x".into(),
+            transfers: 0,
+            bytes: 0,
+            busy_ns: 0,
+            payload_bits: 0,
+            capacity_bits: 0,
+        };
+        assert_eq!(f.gbs(), 0.0);
+        assert_eq!(f.b_eff(), 0.0);
+    }
+}

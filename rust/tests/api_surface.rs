@@ -23,8 +23,7 @@ fn repo_path(rel: &str) -> std::path::PathBuf {
 /// One line per public declaration, in source order, prefixed with the
 /// file it came from. Only the declaration's first line is captured, so
 /// multi-line signatures fingerprint by name and leading parameters.
-fn surface() -> String {
-    const FILES: [&str; 4] = ["mod.rs", "error.rs", "pipeline.rs", "server.rs"];
+fn surface_of(dir: &str, files: &[&str]) -> String {
     const PREFIXES: [&str; 8] = [
         "pub fn ",
         "pub struct ",
@@ -35,11 +34,11 @@ fn surface() -> String {
         "pub mod ",
         "pub type ",
     ];
-    let dir = repo_path("rust/src/coordinator");
+    let dir = repo_path(dir);
     let mut out = String::new();
-    for f in FILES {
+    for f in files {
         let src = std::fs::read_to_string(dir.join(f))
-            .unwrap_or_else(|e| panic!("read coordinator source {f}: {e}"));
+            .unwrap_or_else(|e| panic!("read source {f}: {e}"));
         for line in src.lines() {
             let t = line.trim();
             if PREFIXES.iter().any(|p| t.starts_with(p)) {
@@ -53,27 +52,81 @@ fn surface() -> String {
     out
 }
 
-#[test]
-fn coordinator_api_surface_matches_golden_file() {
-    let current = surface();
-    let path = repo_path("rust/tests/golden/coordinator_api.txt");
+fn surface() -> String {
+    surface_of(
+        "rust/src/coordinator",
+        &["mod.rs", "error.rs", "pipeline.rs", "server.rs"],
+    )
+}
+
+fn obs_surface() -> String {
+    surface_of(
+        "rust/src/obs",
+        &["mod.rs", "span.rs", "hist.rs", "telemetry.rs", "export.rs", "engine_wrap.rs"],
+    )
+}
+
+/// Compare `current` against the golden at `rel`, bootstrapping the file
+/// (with a loud note) when it does not exist yet.
+fn check_against_golden(current: &str, rel: &str, what: &str) {
+    let path = repo_path(rel);
     match std::fs::read_to_string(&path) {
         Ok(golden) => {
             assert_eq!(
                 current, golden,
-                "the coordinator public API drifted from {path:?}; if the \
+                "the {what} public API drifted from {path:?}; if the \
                  change is intentional, delete the golden file, re-run this \
                  test to regenerate it, and commit both together"
             );
         }
         Err(_) => {
             std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-            std::fs::write(&path, &current).unwrap();
+            std::fs::write(&path, current).unwrap();
             eprintln!(
                 "NOTE: bootstrapped golden file at {path:?} — commit it to \
                  make this check binding"
             );
         }
+    }
+}
+
+#[test]
+fn coordinator_api_surface_matches_golden_file() {
+    check_against_golden(
+        &surface(),
+        "rust/tests/golden/coordinator_api.txt",
+        "coordinator",
+    );
+}
+
+#[test]
+fn obs_api_surface_matches_golden_file() {
+    check_against_golden(&obs_surface(), "rust/tests/golden/obs_api.txt", "obs");
+}
+
+#[test]
+fn obs_api_surface_has_the_load_bearing_items() {
+    let s = obs_surface();
+    for needle in [
+        "mod.rs: pub fn global(",
+        "mod.rs: pub fn global_telemetry(",
+        "span.rs: pub struct Tracer {",
+        "span.rs: pub struct SpanRecord {",
+        "span.rs: pub fn span(",
+        "span.rs: pub fn set_enabled(",
+        "span.rs: pub fn drain(",
+        "hist.rs: pub struct Histogram {",
+        "hist.rs: pub struct HistogramSnapshot {",
+        "hist.rs: pub fn quantile(",
+        "hist.rs: pub fn prometheus_lines(",
+        "telemetry.rs: pub struct Telemetry {",
+        "telemetry.rs: pub struct FlowSnapshot {",
+        "telemetry.rs: pub fn b_eff(",
+        "export.rs: pub struct ChromeTrace {",
+        "export.rs: pub fn add_cosim_timeline(",
+        "engine_wrap.rs: pub struct InstrumentedEngine {",
+    ] {
+        assert!(s.contains(needle), "missing from obs surface: {needle}\n{s}");
     }
 }
 

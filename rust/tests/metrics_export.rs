@@ -1,0 +1,173 @@
+//! `MetricsSnapshot` export coverage.
+//!
+//! Three layers:
+//!
+//! - a deterministic, hand-seeded [`Metrics`] whose Prometheus text
+//!   exposition is pinned against a committed golden file
+//!   (`rust/tests/golden/metrics_prom.txt`, bootstrap-on-missing like
+//!   the other goldens) plus needle assertions that stay binding even
+//!   before the golden is committed;
+//! - a live [`LayoutServer`] snapshot round-tripped through JSON
+//!   (`to_json` → text → `parse` → `from_json` → equal);
+//! - the reconciliation guarantees: the latency histogram's totals must
+//!   equal the completed-request count, and no transfer or DSE response
+//!   may report zero latency for nonzero work (the `latency_ns: 0`
+//!   placeholder regression).
+
+use iris::coordinator::pipeline::{synthetic_data, synthetic_problem};
+use iris::coordinator::server::{DseRequest, LayoutServer, TransferRequest};
+use iris::coordinator::{Error, Metrics, MetricsSnapshot};
+use std::sync::atomic::Ordering;
+
+fn repo_path(rel: &str) -> std::path::PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&root).join(rel)
+}
+
+/// Fixed counter values → byte-stable `to_prometheus` output. Every
+/// derived figure lands on a short decimal (gbs 4, b_eff 0.9, hit rate
+/// 0.5) so the golden is insensitive to float formatting edge cases.
+fn seeded_metrics() -> Metrics {
+    let m = Metrics::default();
+    m.requests.fetch_add(4, Ordering::Relaxed);
+    m.batches.fetch_add(1, Ordering::Relaxed);
+    m.record(100, None);
+    m.record(100, None);
+    m.record(10_000, None);
+    m.record(300, Some(&Error::InvalidRequest("bad width".into())));
+    m.record_cache(true);
+    m.record_cache(false);
+    m.record_dse(4, 2000);
+    m.cosim_validations.fetch_add(1, Ordering::Relaxed);
+    m.transfers.record_engine("compiled", 4096, 1024, 900, 1000);
+    m.transfers.record_channel(0, 2048, 512, 450, 500);
+    m
+}
+
+#[test]
+fn prometheus_exposition_matches_golden_file() {
+    let text = seeded_metrics().snapshot().to_prometheus();
+    let path = repo_path("rust/tests/golden/metrics_prom.txt");
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => {
+            assert_eq!(
+                text, golden,
+                "Prometheus exposition drifted from {path:?}; if the change \
+                 is intentional, delete the golden file, re-run this test to \
+                 regenerate it, and commit both together"
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &text).unwrap();
+            eprintln!(
+                "NOTE: bootstrapped golden file at {path:?} — commit it to \
+                 make this check binding"
+            );
+        }
+    }
+}
+
+#[test]
+fn prometheus_exposition_is_structurally_complete() {
+    let text = seeded_metrics().snapshot().to_prometheus();
+    for needle in [
+        "# TYPE iris_requests_total counter",
+        "iris_requests_total 4\n",
+        "iris_completed_total 4\n",
+        "iris_errors_total 1\n",
+        "iris_errors_total{kind=\"invalid_request\"} 1",
+        "iris_errors_total{kind=\"internal\"} 0",
+        "# TYPE iris_request_latency_ns histogram",
+        "iris_request_latency_ns_bucket{le=\"127\"} 2",
+        "iris_request_latency_ns_bucket{le=\"511\"} 3",
+        "iris_request_latency_ns_bucket{le=\"16383\"} 4",
+        "iris_request_latency_ns_bucket{le=\"+Inf\"} 4",
+        "iris_request_latency_ns_sum 10500",
+        "iris_request_latency_ns_count 4",
+        "iris_request_latency_ns_max 10000",
+        "iris_request_latency_ns_quantile{quantile=\"0.5\"} 127",
+        "iris_request_latency_ns_quantile{quantile=\"0.99\"} 10000",
+        "iris_cache_hit_rate 0.5",
+        "iris_dse_points_total 4",
+        "iris_cosim_validations_total 1",
+        "iris_engine_transfers_total{engine=\"compiled\"} 1",
+        "iris_engine_bytes_total{engine=\"compiled\"} 4096",
+        "iris_engine_gbs{engine=\"compiled\"} 4",
+        "iris_engine_beff{engine=\"compiled\"} 0.9",
+        "iris_channel_bytes_total{channel=\"0\"} 2048",
+        "iris_channel_beff{channel=\"0\"} 0.9",
+    ] {
+        assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
+    }
+    // Every kind label is present, zero or not (stable dashboard shape).
+    assert_eq!(text.matches("iris_errors_total{kind=").count(), 7);
+}
+
+#[test]
+fn live_server_snapshot_round_trips_through_json() {
+    let server = LayoutServer::start(2, 4);
+    let mut responses = Vec::new();
+
+    let p = synthetic_problem(5, 1);
+    let d = synthetic_data(&p, 1);
+    responses.push(
+        server
+            .submit(TransferRequest::builder(p, d).build().unwrap())
+            .recv()
+            .unwrap(),
+    );
+    let batch: Vec<TransferRequest> = (2..5u64)
+        .map(|seed| {
+            let p = synthetic_problem(4, seed);
+            let d = synthetic_data(&p, seed);
+            TransferRequest::builder(p, d).build().unwrap()
+        })
+        .collect();
+    responses.extend(server.submit_batch(batch).wait());
+    let dse = server
+        .submit_dse(DseRequest {
+            problem: synthetic_problem(4, 9),
+            ratios: vec![4, 2],
+        })
+        .recv()
+        .unwrap()
+        .expect("dse sweep succeeds");
+
+    let snap = server.metrics_snapshot();
+    server.shutdown();
+
+    // Satellite regression: nonzero work must never report latency 0 —
+    // neither per-transfer (direct or batched) nor per-sweep.
+    for r in &responses {
+        let r = r.as_ref().expect("transfer succeeds");
+        assert!(r.latency_ns > 0, "zero-latency placeholder resurfaced: {r:?}");
+    }
+    assert!(!dse.points.is_empty());
+    assert!(dse.latency_ns > 0, "zero-latency placeholder on the DSE path");
+
+    // Histogram totals reconcile with the request counters.
+    assert_eq!(snap.completed, 4);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(
+        snap.latency.count, snap.completed,
+        "every completed request lands one histogram sample"
+    );
+    let bucket_total: u64 = snap.latency.buckets.iter().sum();
+    assert_eq!(bucket_total, snap.completed);
+    assert!(snap.latency.p50() > 0);
+    assert!(snap.max_latency_ns >= snap.latency.p50());
+    assert_eq!(snap.dse_points, dse.points.len() as u64);
+
+    // Full JSON round-trip of a snapshot with live (non-round) values.
+    let text = snap.to_json().to_string_pretty();
+    let parsed = iris::util::json::parse(&text).expect("snapshot JSON parses");
+    let back = MetricsSnapshot::from_json(&parsed).expect("snapshot deserializes");
+    assert_eq!(back, snap);
+
+    // And the live snapshot's Prometheus view agrees with the counters.
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("iris_completed_total 4\n"));
+    assert!(prom.contains("iris_request_latency_ns_count 4"));
+    assert!(prom.contains("iris_engine_transfers_total{engine="));
+}

@@ -1,0 +1,216 @@
+//! End-to-end observability integration.
+//!
+//! Covers the PR-level acceptance criteria that no unit test owns:
+//!
+//! - a traced helmholtz pipeline run leaves the global tracer balanced
+//!   (every span guard closed) and exports a valid Chrome-trace JSON
+//!   document;
+//! - every engine in the registry is wrapped in `InstrumentedEngine`,
+//!   and the bytes it credits to the global telemetry reconcile exactly
+//!   with the payload bytes that crossed the wrapper;
+//! - the layout server's per-transfer achieved `b_eff` telemetry agrees
+//!   with the static `LayoutMetrics::b_eff` prediction (within 1%; on
+//!   the single-channel path the capacity denominators are identical,
+//!   so they match exactly);
+//! - the multi-channel path populates per-channel flows.
+//!
+//! Tests touching the process-global tracer/telemetry serialize on one
+//! mutex and restore the tracer to disabled-and-empty before releasing
+//! it, so they compose with the test harness's in-process parallelism.
+
+use iris::coordinator::pipeline::{self, PipelineConfig, Workload};
+use iris::coordinator::server::{EngineChoice, LayoutServer, TransferRequest};
+use iris::engine::{engines_for, Engine};
+use iris::layout::metrics::LayoutMetrics;
+use iris::layout::LayoutKind;
+use iris::obs::ChromeTrace;
+use iris::util::ceil_div;
+use std::sync::{Mutex, MutexGuard};
+
+static GLOBAL_OBS: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    // A panic in another test must not wedge the rest of the file.
+    GLOBAL_OBS.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[test]
+fn traced_pipeline_balances_spans_and_exports_valid_chrome_json() {
+    let _g = obs_lock();
+    let tracer = iris::obs::global();
+    tracer.clear();
+    tracer.set_enabled(true);
+
+    let mut cfg = PipelineConfig::new(Workload::Helmholtz, LayoutKind::Iris);
+    cfg.cosim = true;
+    let report = pipeline::run(&cfg, None).expect("traced pipeline run");
+    tracer.set_enabled(false);
+
+    assert!(report.decode_exact, "tracing must not perturb the transfer");
+    assert_eq!(
+        tracer.open_spans(),
+        0,
+        "every span guard opened by the pipeline must have closed"
+    );
+    let spans = tracer.drain();
+    for name in [
+        "pipeline.run",
+        "pipeline.plan",
+        "pipeline.pack",
+        "pipeline.decode",
+        "pipeline.cosim",
+        "pipeline.compute",
+    ] {
+        assert!(
+            spans.iter().any(|s| s.name == name),
+            "missing span '{name}' in {spans:?}"
+        );
+    }
+
+    let mut ct = ChromeTrace::new();
+    ct.add_spans(&spans);
+    assert_eq!(ct.len(), spans.len());
+    let text = ct.to_string_compact();
+    let doc = iris::util::json::parse(&text).expect("chrome trace is valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(events.len(), spans.len());
+    // Stage spans export as complete events nested inside pipeline.run.
+    let run = events
+        .iter()
+        .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("pipeline.run"))
+        .expect("pipeline.run event");
+    assert_eq!(run.get("ph").and_then(|p| p.as_str()), Some("X"));
+    let run_ts = run.get("ts").and_then(|t| t.as_f64()).unwrap();
+    let run_end = run_ts + run.get("dur").and_then(|d| d.as_f64()).unwrap();
+    for e in events {
+        let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap();
+        assert!(
+            ts >= run_ts && ts <= run_end,
+            "stage event outside the pipeline.run window"
+        );
+    }
+}
+
+#[test]
+fn instrumented_registry_reconciles_credited_bytes_with_bytes_moved() {
+    let _g = obs_lock();
+    let telemetry = iris::obs::global_telemetry();
+    let p = pipeline::synthetic_problem(4, 0xA11CE);
+    let layout = iris::baselines::generate(LayoutKind::Iris, &p);
+    let data = pipeline::synthetic_data(&p, 7);
+
+    for engine in engines_for(&p, LayoutKind::Iris) {
+        let name = engine.name();
+        let before = telemetry
+            .engines()
+            .into_iter()
+            .find(|f| f.name == name)
+            .map(|f| (f.transfers, f.bytes))
+            .unwrap_or((0, 0));
+        let lines = engine
+            .pack(&p, &layout, &data)
+            .unwrap_or_else(|e| panic!("{name}: pack failed: {e}"));
+        let moved: u64 = lines.channels.iter().map(|c| ceil_div(c.bits, 8)).sum();
+        let decoded = engine
+            .decode(&p, &layout, &lines)
+            .unwrap_or_else(|e| panic!("{name}: decode failed: {e}"));
+        assert_eq!(decoded, data, "{name}: roundtrip through the wrapper");
+
+        let after = telemetry
+            .engines()
+            .into_iter()
+            .find(|f| f.name == name)
+            .unwrap_or_else(|| panic!("{name}: no telemetry flow credited"));
+        assert_eq!(after.transfers, before.0 + 1, "{name}: one transfer credited");
+        assert_eq!(
+            after.bytes,
+            before.1 + moved,
+            "{name}: credited bytes must reconcile with the payload that crossed"
+        );
+        let b_eff = after.b_eff();
+        assert!(
+            b_eff > 0.0 && b_eff <= 1.0 + 1e-12,
+            "{name}: achieved b_eff {b_eff} out of (0, 1]"
+        );
+    }
+}
+
+#[test]
+fn server_achieved_beff_matches_the_static_layout_metric() {
+    let p = pipeline::synthetic_problem(6, 42);
+    let data = pipeline::synthetic_data(&p, 9);
+    let layout = iris::baselines::generate(LayoutKind::Iris, &p);
+    let predicted = LayoutMetrics::compute(&layout, &p).b_eff;
+    assert!(predicted > 0.0);
+
+    let server = LayoutServer::start(2, 4);
+    let req = TransferRequest::builder(p, data)
+        .kind(LayoutKind::Iris)
+        .engine(EngineChoice::Compiled)
+        .build()
+        .unwrap();
+    let resp = server
+        .submit(req)
+        .recv()
+        .unwrap()
+        .expect("transfer succeeds");
+    let snap = server.metrics_snapshot();
+    server.shutdown();
+
+    assert!(resp.latency_ns > 0, "nonzero work must report nonzero latency");
+    let flow = snap
+        .engines
+        .iter()
+        .find(|f| f.name == "compiled")
+        .expect("compiled engine flow in the snapshot");
+    let achieved = flow.b_eff();
+    let rel = (achieved - predicted).abs() / predicted;
+    assert!(
+        rel <= 0.01,
+        "achieved b_eff {achieved} drifted from LayoutMetrics::b_eff {predicted} \
+         (relative {rel}); both are payload/(C_max*m), so they must agree"
+    );
+    assert!(flow.gbs() > 0.0, "busy window recorded");
+    assert!((resp.b_eff - predicted).abs() <= predicted * 0.01);
+}
+
+#[test]
+fn multichannel_transfers_populate_per_channel_flows() {
+    let p = pipeline::synthetic_problem(6, 5);
+    let data = pipeline::synthetic_data(&p, 5);
+    let server = LayoutServer::start(1, 4);
+    let req = TransferRequest::builder(p, data)
+        .channels(2)
+        .build()
+        .unwrap();
+    let resp = server
+        .submit(req)
+        .recv()
+        .unwrap()
+        .expect("multi-channel transfer succeeds");
+    let snap = server.metrics_snapshot();
+    server.shutdown();
+
+    assert_eq!(resp.channels, 2);
+    assert!(resp.latency_ns > 0);
+    assert_eq!(snap.multichannel_transfers, 1);
+    assert!(
+        snap.engines.iter().any(|f| f.name == "multichannel"),
+        "aggregate multichannel flow missing: {:?}",
+        snap.engines
+    );
+    assert_eq!(snap.channels.len(), 2, "one flow per served channel");
+    for (i, f) in snap.channels.iter().enumerate() {
+        assert_eq!(f.name, format!("ch{i}"));
+        assert_eq!(f.transfers, 1);
+        assert!(f.bytes > 0, "channel {i} moved payload");
+        let b_eff = f.b_eff();
+        assert!(
+            b_eff > 0.0 && b_eff <= 1.0 + 1e-12,
+            "channel {i} b_eff {b_eff} out of (0, 1]"
+        );
+    }
+}
