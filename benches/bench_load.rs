@@ -1,0 +1,136 @@
+//! Bench: the streaming serving stack under concurrent load.
+//!
+//! Runs `iris::benchkit::load` — many clients opening persistent
+//! sessions against one `LayoutServer`, feeding whole-cycle tiles and
+//! collecting decoded arrays — and reports p50/p99 open-to-finish
+//! latency, sustained payload GB/s, and peak resident payload bytes.
+//! Then measures the serve-one-payload hot path both ways on the same
+//! big transfer: a per-request materialized decode (compile + one-shot
+//! decode, matching what `LayoutServer::process` does) versus the
+//! session path (open + feed tiles + finish).
+//!
+//! Doubles as the CI `load-smoke` gate: `--quick` shrinks the load,
+//! `--check` enforces the `load ` rules in `benchkit/thresholds.json`
+//! (streamed ≥ 0.8× materialized throughput, an absolute GB/s floor,
+//! and a p99 latency ceiling), and the bounded-memory acceptance bars
+//! (transfer ≥ 64× the session budget with ≤ 4× tile resident, typed
+//! `Overloaded` rejection) are asserted unconditionally.
+
+use iris::benchkit::load::{big_data, big_problem, LoadConfig};
+use iris::benchkit::{
+    black_box, emit_bench_json, finish_gate, parse_bench_args, section, Bencher, Stats,
+};
+use iris::coordinator::server::{LayoutServer, ServerConfig, SessionRequest};
+use iris::decode::{DecodePlan, DecodeProgram};
+use iris::layout::LayoutKind;
+use iris::pack::{PackPlan, PackProgram};
+
+/// Wrap an already-measured quantity (the load run's p99, the sustained
+/// run) as a `Stats` row so the thresholds gate and `BENCH_9.json` see
+/// it alongside the `Bencher` measurements.
+fn scalar_stat(name: &str, median_ns: f64, samples: usize, bytes: Option<u64>) -> Stats {
+    Stats {
+        name: name.to_string(),
+        samples,
+        iters_per_sample: 1,
+        mean_ns: median_ns,
+        median_ns,
+        stddev_ns: 0.0,
+        mad_ns: 0.0,
+        min_ns: median_ns,
+        max_ns: median_ns,
+        bytes_per_iter: bytes,
+    }
+}
+
+fn main() {
+    let args = parse_bench_args();
+    let quick = args.quick;
+    let mut stats: Vec<Stats> = Vec::new();
+
+    section("streaming load (concurrent sessions)");
+    let cfg = if quick {
+        LoadConfig::quick()
+    } else {
+        LoadConfig::full()
+    };
+    let report = iris::benchkit::load::run(&cfg).expect("load run");
+    println!("{}", report.summary());
+    // The ISSUE's bounded-memory acceptance bars hold regardless of
+    // machine speed, so they are asserted even without --check.
+    assert_eq!(report.exact, report.sessions, "sessions decoded wrong bits");
+    assert!(report.oversize_rejected, "over-budget open was not rejected");
+    assert!(
+        report.big_transfer_ratio >= 64.0,
+        "big transfer only {:.1}x the session budget",
+        report.big_transfer_ratio
+    );
+    assert!(
+        report.big_transfer_resident_bytes <= 4 * report.big_transfer_tile_bytes,
+        "big transfer resident {} B over 4x tile {} B",
+        report.big_transfer_resident_bytes,
+        report.big_transfer_tile_bytes
+    );
+    assert!(
+        report.peak_resident_bytes <= 4 * report.tile_bytes,
+        "session resident {} B over 4x tile {} B",
+        report.peak_resident_bytes,
+        report.tile_bytes
+    );
+    stats.push(scalar_stat(
+        "load session p99",
+        report.p99_ms * 1e6,
+        report.sessions as usize,
+        None,
+    ));
+    stats.push(scalar_stat(
+        "load sessions (sustained)",
+        report.wall_seconds * 1e9,
+        1,
+        Some(report.payload_bytes),
+    ));
+
+    // Streamed vs materialized serving of the same big payload. Both
+    // sides pay the per-request decoder compilation the serving paths
+    // pay (`process` compiles per request; `open_session` per session),
+    // so the ratio isolates the tile-by-tile overhead.
+    section("serve one payload: streamed vs materialized");
+    let p = big_problem();
+    let data = big_data(&p);
+    let server = LayoutServer::with_config(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        cache: None,
+        session_budget_bytes: cfg.session_budget_bytes,
+        global_budget_bytes: cfg.global_budget_bytes,
+    });
+    let layout = server.cache.layout_for(LayoutKind::Iris, &p);
+    let plan = PackPlan::compile(&layout, &p);
+    let prog = PackProgram::compile(&plan);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = prog.pack(&refs).expect("pack big payload");
+    let payload = &buf.words()[..plan.payload_words()];
+    let bytes = payload.len() as u64 * 8;
+    let b = if quick {
+        Bencher::smoke().with_bytes(bytes)
+    } else {
+        Bencher::quick().with_bytes(bytes)
+    };
+    stats.push(b.run("load decode (materialized)", || {
+        let dprog = DecodeProgram::compile(&DecodePlan::compile(&layout, &p));
+        black_box(dprog.decode(&buf).unwrap());
+    }));
+    stats.push(b.run("load decode (streamed)", || {
+        let mut session = server
+            .open_session(SessionRequest::new(p.clone(), cfg.tile_cycles))
+            .expect("admit bench session");
+        for chunk in payload.chunks(session.tile_words()) {
+            session.feed(chunk).unwrap();
+        }
+        black_box(session.finish().unwrap());
+    }));
+    server.shutdown();
+
+    emit_bench_json("bench_load", &args, &stats);
+    finish_gate("bench_load", "load ", &args, &stats);
+}

@@ -1,0 +1,375 @@
+//! Streaming-session load generator for the serving stack.
+//!
+//! Drives many concurrent clients against one [`LayoutServer`], every
+//! client opening a persistent session, feeding its packed payload as
+//! whole-cycle tiles, and collecting the decoded arrays — the
+//! bounded-memory path behind `iris serve --stream`. The run reports
+//! p50/p99 open-to-finish latency, sustained payload bandwidth, peak
+//! resident payload bytes (per session and the server's in-flight-byte
+//! gauge), and admission-control behaviour.
+//!
+//! Two acceptance probes run before the timed load, both deterministic:
+//!
+//! * **bounded residency** — a transfer at least 64× the per-session
+//!   budget completes while the session's resident high-water mark stays
+//!   within 4× the admitted tile (tile + carry word, with headroom);
+//! * **backpressure** — a session declaring a tile above the per-session
+//!   budget is rejected with [`Error::Overloaded`] and a retry hint.
+//!
+//! `benches/bench_load.rs` wraps this into the perf-smoke gate
+//! (`--quick --check`), where `benchkit/thresholds.json` enforces the
+//! streamed-vs-materialized throughput ratio and the p99 ceiling.
+
+use crate::coordinator::pipeline::{synthetic_data, synthetic_problem};
+use crate::coordinator::server::{LayoutServer, ServerConfig, SessionRequest};
+use crate::coordinator::Error;
+use crate::layout::LayoutKind;
+use crate::model::{ArraySpec, BusConfig, Problem};
+use crate::pack::{PackPlan, PackProgram};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Load-run knobs. `quick` keeps CI's load-smoke job in seconds;
+/// `full` is the local soak configuration.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Total sessions to serve in the timed phase.
+    pub sessions: u64,
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Bus cycles per fed tile.
+    pub tile_cycles: u64,
+    /// Distinct synthetic problems cycled through (layouts cache-hit
+    /// after each problem's first session).
+    pub distinct_problems: u64,
+    /// Arrays per synthetic problem.
+    pub arrays_per_problem: usize,
+    /// Per-session resident-payload budget handed to the server.
+    pub session_budget_bytes: u64,
+    /// Global resident-payload budget across all open sessions. Sized
+    /// near `clients × tile` so admission control actually engages.
+    pub global_budget_bytes: u64,
+    /// Server worker threads (the one-shot queue; sessions don't use it).
+    pub workers: usize,
+}
+
+impl LoadConfig {
+    /// CI load-smoke configuration (seconds, not minutes). The global
+    /// budget admits ~6 of the 256-byte tiles the 8-cycle sessions
+    /// reserve, so 12 clients keep admission control engaged.
+    pub fn quick() -> LoadConfig {
+        LoadConfig {
+            sessions: 96,
+            clients: 12,
+            tile_cycles: 8,
+            distinct_problems: 12,
+            arrays_per_problem: 6,
+            session_budget_bytes: 4096,
+            global_budget_bytes: 1536,
+            workers: 2,
+        }
+    }
+
+    /// Local soak: hundreds of sessions over 32 clients contending for
+    /// ~8 in-flight tiles.
+    pub fn full() -> LoadConfig {
+        LoadConfig {
+            sessions: 512,
+            clients: 32,
+            tile_cycles: 8,
+            distinct_problems: 24,
+            arrays_per_problem: 8,
+            session_budget_bytes: 4096,
+            global_budget_bytes: 2048,
+            workers: 4,
+        }
+    }
+}
+
+/// What one load run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Sessions served in the timed phase.
+    pub sessions: u64,
+    /// Sessions whose decoded arrays matched the source bit for bit.
+    pub exact: u64,
+    /// `Error::Overloaded` open rejections observed (and retried) by
+    /// clients during the timed phase. Scheduling-dependent; may be 0 on
+    /// an unloaded machine — the deterministic probe is
+    /// `oversize_rejected`.
+    pub overload_retries: u64,
+    /// The deterministic backpressure probe: an over-budget tile was
+    /// rejected with a positive retry hint.
+    pub oversize_rejected: bool,
+    /// p50 open-to-finish session latency, milliseconds.
+    pub p50_ms: f64,
+    /// p99 open-to-finish session latency, milliseconds.
+    pub p99_ms: f64,
+    /// Timed-phase wall clock, seconds.
+    pub wall_seconds: f64,
+    /// Payload bytes moved through sessions in the timed phase.
+    pub payload_bytes: u64,
+    /// Sustained payload bandwidth over the timed phase, GB/s.
+    pub gbs: f64,
+    /// Largest per-session resident high-water mark seen (largest fed
+    /// chunk + one carry word).
+    pub peak_resident_bytes: u64,
+    /// Admitted tile of the timed-phase sessions, bytes.
+    pub tile_bytes: u64,
+    /// Server in-flight-byte gauge high-water across the whole run.
+    pub peak_in_flight_bytes: u64,
+    /// Big-transfer probe: payload bytes over the per-session budget
+    /// (the acceptance bar is ≥ 64).
+    pub big_transfer_ratio: f64,
+    /// Big-transfer probe residency: peak resident bytes of that session.
+    pub big_transfer_resident_bytes: u64,
+    /// Big-transfer probe tile, bytes.
+    pub big_transfer_tile_bytes: u64,
+}
+
+impl LoadReport {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "load: {}/{} exact over {:.2}s ({:.3} GB/s payload) | latency p50 {:.2} ms \
+             p99 {:.2} ms | peak resident {} B/session (tile {} B), server in-flight peak \
+             {} B | {} overload retries, oversize rejected={} | big transfer {:.0}x budget \
+             at {} B resident",
+            self.exact,
+            self.sessions,
+            self.wall_seconds,
+            self.gbs,
+            self.p50_ms,
+            self.p99_ms,
+            self.peak_resident_bytes,
+            self.tile_bytes,
+            self.peak_in_flight_bytes,
+            self.overload_retries,
+            self.oversize_rejected,
+            self.big_transfer_ratio,
+            self.big_transfer_resident_bytes,
+        )
+    }
+}
+
+/// The big-transfer probe problem: one wide, deep array whose payload is
+/// far beyond the load configs' per-session budget (~320 KB on the
+/// 256-bit bus vs the 4 KiB budget).
+pub fn big_problem() -> Problem {
+    Problem::new(
+        BusConfig::alveo_u280(),
+        vec![ArraySpec::new("big", 64, 40_000, 100)],
+    )
+    .expect("big probe problem is valid")
+}
+
+/// Source data for [`big_problem`].
+pub fn big_data(p: &Problem) -> Vec<Vec<u64>> {
+    synthetic_data(p, 0xB16)
+}
+
+/// Client-side pack of a problem's payload words through the server's
+/// shared layout cache (so the session's decoder sees the same layout).
+fn packed_payload(server: &LayoutServer, p: &Problem, data: &[Vec<u64>]) -> Result<Vec<u64>> {
+    let layout = server.cache.layout_for(LayoutKind::Iris, p);
+    let plan = PackPlan::compile(&layout, p);
+    let prog = PackProgram::compile(&plan);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = prog.pack(&refs)?;
+    Ok(buf.words()[..plan.payload_words()].to_vec())
+}
+
+/// Stream one pre-packed payload through a session, retrying opens that
+/// hit admission control. Returns (exact, latency_ns, resident_bytes).
+fn serve_once(
+    server: &LayoutServer,
+    p: &Problem,
+    payload: &[u64],
+    data: &[Vec<u64>],
+    tile_cycles: u64,
+    retries: &AtomicU64,
+) -> Result<(bool, u64, u64)> {
+    let mut session = loop {
+        match server.open_session(SessionRequest::new(p.clone(), tile_cycles)) {
+            Ok(s) => break s,
+            Err(Error::Overloaded { retry_after }) => {
+                retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(retry_after);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    };
+    let tile_words = session.tile_words();
+    for chunk in payload.chunks(tile_words) {
+        session.feed(chunk)?;
+    }
+    let report = session.finish()?;
+    Ok((
+        report.decoded == data,
+        report.latency_ns,
+        report.peak_resident_bytes,
+    ))
+}
+
+/// Run the load generator: the two deterministic acceptance probes, then
+/// the timed many-client phase.
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    let server = LayoutServer::with_config(ServerConfig {
+        workers: cfg.workers,
+        max_batch: 4,
+        cache: None,
+        session_budget_bytes: cfg.session_budget_bytes,
+        global_budget_bytes: cfg.global_budget_bytes,
+    });
+
+    // ---- probe 1: backpressure is typed and deterministic
+    let big = big_problem();
+    let oversize_probe = server.open_session(SessionRequest::new(big.clone(), u64::MAX));
+    let oversize_rejected = match oversize_probe {
+        Err(Error::Overloaded { retry_after }) => retry_after.as_millis() > 0,
+        Ok(_) => bail!("oversize tile was admitted"),
+        Err(e) => bail!("oversize tile: expected Overloaded, got {e}"),
+    };
+
+    // ---- probe 2: a transfer ≥ 64× the session budget, O(tile) resident
+    let big_src = big_data(&big);
+    let big_payload = packed_payload(&server, &big, &big_src)?;
+    let big_bytes = big_payload.len() as u64 * 8;
+    let big_transfer_ratio = big_bytes as f64 / cfg.session_budget_bytes as f64;
+    let none = AtomicU64::new(0);
+    let (big_exact, _, big_resident) =
+        serve_once(&server, &big, &big_payload, &big_src, cfg.tile_cycles, &none)?;
+    if !big_exact {
+        bail!("big-transfer probe decoded wrong bits");
+    }
+    let big_tile_bytes = crate::engine::chunk_words(&big, cfg.tile_cycles) as u64 * 8;
+    if big_resident > 4 * big_tile_bytes {
+        bail!(
+            "big-transfer probe resident {big_resident} B exceeds 4x tile \
+             ({big_tile_bytes} B)"
+        );
+    }
+
+    // ---- timed phase: many clients over a mix of cached problems
+    let mix = (0..cfg.distinct_problems)
+        .map(|seed| {
+            let p = synthetic_problem(cfg.arrays_per_problem, seed);
+            let data = synthetic_data(&p, seed);
+            let payload = packed_payload(&server, &p, &data)?;
+            Ok((p, data, payload))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let tile_bytes = mix
+        .iter()
+        .map(|(p, _, _)| crate::engine::chunk_words(p, cfg.tile_cycles) as u64 * 8)
+        .max()
+        .ok_or_else(|| anyhow!("load config has no problems"))?;
+
+    let next = AtomicU64::new(0);
+    let exact = AtomicU64::new(0);
+    let retries = AtomicU64::new(0);
+    let peak_resident = AtomicU64::new(0);
+    let payload_bytes = AtomicU64::new(0);
+    let latencies: Mutex<Vec<u64>> = Mutex::new(Vec::with_capacity(cfg.sessions as usize));
+    let failure: Mutex<Option<String>> = Mutex::new(None);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..cfg.clients.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cfg.sessions {
+                    break;
+                }
+                let (p, data, payload) = &mix[(i % cfg.distinct_problems) as usize];
+                match serve_once(&server, p, payload, data, cfg.tile_cycles, &retries) {
+                    Ok((ok, latency_ns, resident)) => {
+                        if ok {
+                            exact.fetch_add(1, Ordering::Relaxed);
+                        }
+                        payload_bytes.fetch_add(payload.len() as u64 * 8, Ordering::Relaxed);
+                        peak_resident.fetch_max(resident, Ordering::Relaxed);
+                        latencies.lock().expect("latency lock").push(latency_ns);
+                    }
+                    Err(e) => {
+                        *failure.lock().expect("failure lock") = Some(e.to_string());
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64().max(1e-9);
+    if let Some(e) = failure.into_inner().expect("failure lock") {
+        bail!("load client failed: {e}");
+    }
+
+    let mut lat = latencies.into_inner().expect("latency lock");
+    lat.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        let idx = ((lat.len() as f64 - 1.0) * q).round() as usize;
+        lat[idx.min(lat.len() - 1)] as f64 / 1e6
+    };
+    let moved = payload_bytes.load(Ordering::Relaxed);
+    let snap = server.metrics_snapshot();
+    let report = LoadReport {
+        sessions: cfg.sessions,
+        exact: exact.load(Ordering::Relaxed),
+        overload_retries: retries.load(Ordering::Relaxed),
+        oversize_rejected,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        wall_seconds,
+        payload_bytes: moved,
+        gbs: moved as f64 / 1e9 / wall_seconds,
+        peak_resident_bytes: peak_resident.load(Ordering::Relaxed),
+        tile_bytes,
+        peak_in_flight_bytes: snap.peak_in_flight_bytes,
+        big_transfer_ratio,
+        big_transfer_resident_bytes: big_resident,
+        big_transfer_tile_bytes: big_tile_bytes,
+    };
+    server.shutdown();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_load_run_meets_the_acceptance_bars() {
+        // Scaled-down quick config so the unit suite stays fast; the
+        // full quick/full profiles run in benches/bench_load.rs.
+        let cfg = LoadConfig {
+            sessions: 24,
+            clients: 6,
+            distinct_problems: 4,
+            ..LoadConfig::quick()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.exact, r.sessions, "{}", r.summary());
+        assert!(r.oversize_rejected);
+        // The ISSUE's bounded-memory bar: ≥ 64× the budget moved with
+        // O(tile) resident state.
+        assert!(r.big_transfer_ratio >= 64.0, "{}", r.summary());
+        assert!(
+            r.big_transfer_resident_bytes <= 4 * r.big_transfer_tile_bytes,
+            "{}",
+            r.summary()
+        );
+        assert!(r.peak_resident_bytes <= 4 * r.tile_bytes, "{}", r.summary());
+        assert!(r.p99_ms >= r.p50_ms);
+        assert!(r.gbs > 0.0 && r.payload_bytes > 0);
+        // The server gauge saw at least one session's reservation and
+        // never exceeded the configured global budget.
+        assert!(r.peak_in_flight_bytes > 0);
+        assert!(r.peak_in_flight_bytes <= cfg.global_budget_bytes);
+        assert!(r.summary().contains("exact"));
+    }
+}

@@ -18,6 +18,8 @@ use crate::util::json::{self, Json};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+pub mod load;
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -53,7 +55,7 @@ impl Stats {
     }
 
     /// Machine-readable form of one measurement (the shape written to
-    /// `BENCH_8.json` by [`emit_bench_json`]).
+    /// `BENCH_9.json` by [`emit_bench_json`]).
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", Json::Str(self.name.clone()));
@@ -231,7 +233,7 @@ pub fn compare(label: &str, contender: &Stats, baseline: &Stats) {
 ///   `benchkit/thresholds.json` under `CARGO_MANIFEST_DIR`);
 /// * `--json` / `--json=<path>` (or env `IRIS_BENCH_JSON=<path>`) —
 ///   after running, merge this bench's stats into a machine-readable
-///   results file (default `BENCH_8.json` under `CARGO_MANIFEST_DIR`).
+///   results file (default `BENCH_9.json` under `CARGO_MANIFEST_DIR`).
 ///
 /// Unknown flags (e.g. the `--bench` cargo appends) are ignored.
 #[derive(Debug, Clone, Default)]
@@ -252,8 +254,8 @@ pub fn default_thresholds_path() -> String {
 /// Default location of the machine-readable bench results file.
 pub fn default_bench_json_path() -> String {
     match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(dir) => format!("{dir}/BENCH_8.json"),
-        Err(_) => "BENCH_8.json".to_string(),
+        Ok(dir) => format!("{dir}/BENCH_9.json"),
+        Err(_) => "BENCH_9.json".to_string(),
     }
 }
 
@@ -301,6 +303,11 @@ pub struct Thresholds {
     /// `(contender, baseline, min_ratio)`: contender must be at least
     /// `min_ratio`× faster than baseline (by median time).
     pub min_speedup: Vec<(String, String, f64)>,
+    /// Benchmark name → maximum median latency in milliseconds. Used by
+    /// the load generator's p99 gate; `slack` loosens the ceiling (the
+    /// allowed latency is `ceiling / slack`), mirroring how it loosens
+    /// the throughput floors.
+    pub max_ms: BTreeMap<String, f64>,
 }
 
 impl Thresholds {
@@ -338,10 +345,19 @@ impl Thresholds {
                 }
             }
         }
+        let mut max_ms = BTreeMap::new();
+        if let Some(Json::Obj(map)) = doc.get("max_ms") {
+            for (k, v) in map {
+                if let Some(f) = v.as_f64() {
+                    max_ms.insert(k.clone(), f);
+                }
+            }
+        }
         Ok(Thresholds {
             slack,
             min_gbs,
             min_speedup,
+            max_ms,
         })
     }
 
@@ -349,7 +365,8 @@ impl Thresholds {
     pub fn num_rules(&self, prefix: &str) -> usize {
         let floors = self.min_gbs.keys().filter(|k| k.starts_with(prefix)).count();
         let speedups = self.min_speedup.iter().filter(|(c, _, _)| c.starts_with(prefix)).count();
-        floors + speedups
+        let ceilings = self.max_ms.keys().filter(|k| k.starts_with(prefix)).count();
+        floors + speedups + ceilings
     }
 
     /// Check all rules scoped to `prefix` (so one thresholds file can
@@ -394,6 +411,25 @@ impl Thresholds {
                 _ => out.push(format!("speedup rule '{c}' vs '{b}': missing measurement")),
             }
         }
+        for (name, &ceiling_ms) in &self.max_ms {
+            if !name.starts_with(prefix) {
+                continue;
+            }
+            match find(name) {
+                None => out.push(format!("latency ceiling '{name}' has no measurement")),
+                Some(s) => {
+                    let ms = s.median_ns / 1e6;
+                    let allowed = ceiling_ms / self.slack.max(1e-9);
+                    if ms > allowed {
+                        out.push(format!(
+                            "'{name}': {ms:.2} ms above ceiling {allowed:.2} \
+                             (recorded {ceiling_ms:.2} / slack {:.2})",
+                            self.slack
+                        ));
+                    }
+                }
+            }
+        }
         out
     }
 }
@@ -433,7 +469,7 @@ pub fn finish_gate(bench: &str, prefix: &str, args: &BenchArgs, stats: &[Stats])
 /// Merge this bench's stats into the machine-readable results file named
 /// by `args.json` (a no-op when not requested). The document is an
 /// object keyed by bench binary name, so the hot-path benches compose
-/// into one `BENCH_8.json` when run in sequence; re-running a bench
+/// into one `BENCH_9.json` when run in sequence; re-running a bench
 /// replaces only its own entry.
 pub fn emit_bench_json(bench: &str, args: &BenchArgs, stats: &[Stats]) {
     let Some(path) = &args.json else {
@@ -521,25 +557,30 @@ mod tests {
                 "pack a (bitwise)".to_string(),
                 10.0,
             )],
+            max_ms: [("pack a p99".to_string(), 1.0)].into_iter().collect(),
         };
-        // 1000 bytes in 500 ns = 2 GB/s; bitwise at 20× slower.
+        // 1000 bytes in 500 ns = 2 GB/s; bitwise at 20× slower; p99 at
+        // 0.5 ms under the slacked ceiling (1.0 / 0.5 = 2.0 ms).
         let good = vec![
             stat("pack a (compiled)", 500.0, Some(1000)),
             stat("pack a (bitwise)", 10_000.0, Some(1000)),
+            stat("pack a p99", 500_000.0, None),
         ];
         assert!(th.check("pack ", &good).is_empty());
-        assert_eq!(th.num_rules("pack "), 2);
+        assert_eq!(th.num_rules("pack "), 3);
         assert_eq!(th.num_rules("decode "), 0);
         // Throughput within slack (1.5 GB/s > 2.0 × 0.5) still passes.
         let slow_ok = vec![
             stat("pack a (compiled)", 666.0, Some(1000)),
             stat("pack a (bitwise)", 10_000.0, Some(1000)),
+            stat("pack a p99", 500_000.0, None),
         ];
         assert!(th.check("pack ", &slow_ok).is_empty());
         // Below the slacked floor fails.
         let too_slow = vec![
             stat("pack a (compiled)", 2000.0, Some(1000)),
             stat("pack a (bitwise)", 30_000.0, Some(1000)),
+            stat("pack a p99", 500_000.0, None),
         ];
         let v = th.check("pack ", &too_slow);
         assert_eq!(v.len(), 1, "{v:?}");
@@ -547,12 +588,22 @@ mod tests {
         let no_speedup = vec![
             stat("pack a (compiled)", 500.0, Some(1000)),
             stat("pack a (bitwise)", 2500.0, Some(1000)),
+            stat("pack a p99", 500_000.0, None),
         ];
         let v = th.check("pack ", &no_speedup);
         assert_eq!(v.len(), 1, "{v:?}");
+        // Latency above the slacked ceiling fails.
+        let slow_tail = vec![
+            stat("pack a (compiled)", 500.0, Some(1000)),
+            stat("pack a (bitwise)", 10_000.0, Some(1000)),
+            stat("pack a p99", 3_000_000.0, None),
+        ];
+        let v = th.check("pack ", &slow_tail);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("ceiling"), "{v:?}");
         // Missing measurements are violations, and out-of-scope rules
         // are not checked.
-        assert_eq!(th.check("pack ", &[]).len(), 2);
+        assert_eq!(th.check("pack ", &[]).len(), 3);
         assert!(th.check("decode ", &[]).is_empty());
     }
 
@@ -563,7 +614,8 @@ mod tests {
             "min_gbs": {"pack x (compiled)": 1.5},
             "min_speedup": [
                 {"contender": "pack x (compiled)", "baseline": "pack x (bitwise)", "ratio": 10}
-            ]
+            ],
+            "max_ms": {"load session p99": 250}
         }"#;
         let path = std::env::temp_dir().join("iris_thresholds_test.json");
         std::fs::write(&path, text).unwrap();
@@ -572,6 +624,7 @@ mod tests {
         assert_eq!(th.min_gbs.get("pack x (compiled)"), Some(&1.5));
         assert_eq!(th.min_speedup.len(), 1);
         assert!((th.min_speedup[0].2 - 10.0).abs() < 1e-12);
+        assert_eq!(th.max_ms.get("load session p99"), Some(&250.0));
         assert!(Thresholds::load("/nonexistent/thresholds.json").is_err());
         let _ = std::fs::remove_file(&path);
     }
@@ -584,6 +637,17 @@ mod tests {
         assert!(th.slack > 0.0 && th.slack <= 1.0);
         assert!(th.num_rules("pack ") >= 2, "pack rules missing");
         assert!(th.num_rules("decode ") >= 2, "decode rules missing");
+        // The streaming load generator is gated on throughput relative
+        // to the materialized decode, an absolute floor, and a p99
+        // latency ceiling (see benches/bench_load.rs).
+        assert!(th.num_rules("load ") >= 3, "load rules missing");
+        assert!(
+            th.min_speedup.iter().any(|(c, b, r)| {
+                c.contains("(streamed)") && b.contains("(materialized)") && *r >= 0.8
+            }),
+            "streamed-vs-materialized gate missing"
+        );
+        assert!(!th.max_ms.is_empty(), "latency ceiling missing");
         // Ratios >= 1 are speedup gates; ratios in (0, 1) pin a
         // contender to a fraction of a roofline baseline (e.g. the
         // coalesced engine vs plain memcpy).

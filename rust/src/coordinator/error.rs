@@ -45,6 +45,14 @@ pub enum Error {
     WorkerDisconnected,
     /// A lower layer failed with an untyped (`anyhow`) error.
     Internal(String),
+    /// Admission control rejected the request because the per-client or
+    /// global in-flight-bytes budget is exhausted. Clients should back
+    /// off for at least `retry_after` before retrying; the server never
+    /// queues over-budget work unboundedly.
+    Overloaded {
+        /// Suggested client back-off before retrying.
+        retry_after: std::time::Duration,
+    },
 }
 
 impl fmt::Display for Error {
@@ -67,6 +75,11 @@ impl fmt::Display for Error {
             Error::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
             Error::WorkerDisconnected => write!(f, "layout server worker disconnected"),
             Error::Internal(msg) => f.write_str(msg),
+            Error::Overloaded { retry_after } => write!(
+                f,
+                "server overloaded: in-flight byte budget exhausted, retry after {}ms",
+                retry_after.as_millis()
+            ),
         }
     }
 }
@@ -93,11 +106,12 @@ pub enum ErrorKind {
     InvalidRequest,
     WorkerDisconnected,
     Internal,
+    Overloaded,
 }
 
 impl ErrorKind {
     /// Every kind, in canonical (declaration) order.
-    pub const ALL: [ErrorKind; 7] = [
+    pub const ALL: [ErrorKind; 8] = [
         ErrorKind::InfeasibleChannels,
         ErrorKind::UnknownWorkload,
         ErrorKind::CosimDivergence,
@@ -105,6 +119,7 @@ impl ErrorKind {
         ErrorKind::InvalidRequest,
         ErrorKind::WorkerDisconnected,
         ErrorKind::Internal,
+        ErrorKind::Overloaded,
     ];
 
     /// Stable snake_case label (metric dimension value).
@@ -117,6 +132,7 @@ impl ErrorKind {
             ErrorKind::InvalidRequest => "invalid_request",
             ErrorKind::WorkerDisconnected => "worker_disconnected",
             ErrorKind::Internal => "internal",
+            ErrorKind::Overloaded => "overloaded",
         }
     }
 
@@ -147,6 +163,7 @@ impl Error {
             Error::InvalidRequest(_) => ErrorKind::InvalidRequest,
             Error::WorkerDisconnected => ErrorKind::WorkerDisconnected,
             Error::Internal(_) => ErrorKind::Internal,
+            Error::Overloaded { .. } => ErrorKind::Overloaded,
         }
     }
 }
@@ -154,7 +171,7 @@ impl Error {
 /// Lock-free per-[`ErrorKind`] counters (one atomic per kind).
 #[derive(Debug, Default)]
 pub struct ErrorKindCounters {
-    counts: [std::sync::atomic::AtomicU64; 7],
+    counts: [std::sync::atomic::AtomicU64; 8],
 }
 
 impl ErrorKindCounters {
@@ -193,6 +210,9 @@ mod tests {
             Error::InvalidRequest("channels must be >= 1".into()),
             Error::WorkerDisconnected,
             Error::Internal("scheduler exploded".into()),
+            Error::Overloaded {
+                retry_after: std::time::Duration::from_millis(25),
+            },
         ]
     }
 
@@ -240,6 +260,9 @@ mod tests {
         assert!(ErrorKind::InfeasibleChannels.is_client_error());
         assert!(!ErrorKind::Internal.is_client_error());
         assert!(!ErrorKind::CosimDivergence.is_client_error());
+        // Overloaded is a server-side admission decision, not a client
+        // mistake — clients are expected to retry after backing off.
+        assert!(!ErrorKind::Overloaded.is_client_error());
     }
 
     #[test]

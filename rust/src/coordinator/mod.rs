@@ -7,6 +7,7 @@
 
 pub mod error;
 pub mod pipeline;
+pub mod proto;
 pub mod server;
 
 pub use error::{Error, ErrorKind};
@@ -66,6 +67,20 @@ pub struct Metrics {
     /// Total channels served across all multi-channel transfers (so
     /// `channels_served / multichannel_transfers` is the mean fan-out).
     pub channels_served: AtomicU64,
+    /// Gauge: streamed payload bytes currently resident in open sessions
+    /// (reserved by admission control, released as frames are consumed).
+    pub in_flight_bytes: AtomicU64,
+    /// High-water mark of `in_flight_bytes` — the peak resident payload
+    /// footprint the server has ever carried at once.
+    pub peak_in_flight_bytes: AtomicU64,
+    /// Gauge: currently open streaming sessions.
+    pub active_sessions: AtomicU64,
+    /// Streaming sessions admitted (counter; `active_sessions` is the
+    /// gauge of the ones still open).
+    pub sessions_opened: AtomicU64,
+    /// Streaming sessions rejected by admission control
+    /// ([`Error::Overloaded`]) because a byte budget was exhausted.
+    pub sessions_rejected: AtomicU64,
 }
 
 impl Metrics {
@@ -137,6 +152,31 @@ impl Metrics {
         self.channels_served.fetch_add(channels, Ordering::Relaxed);
     }
 
+    /// Reserve `bytes` of resident streamed payload against the
+    /// in-flight gauge and advance the peak high-water mark.
+    pub fn in_flight_add(&self, bytes: u64) {
+        let now = self.in_flight_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_in_flight_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Release `bytes` of resident streamed payload (saturating, so a
+    /// double-release cannot wrap the gauge).
+    pub fn in_flight_sub(&self, bytes: u64) {
+        let mut cur = self.in_flight_bytes.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.in_flight_bytes.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     /// Consistent point-in-time copy of every counter (plus the derived
     /// rates), suitable for returning across the server boundary or
     /// serializing. Individual loads are relaxed, so counters touched by
@@ -162,6 +202,11 @@ impl Metrics {
             multichannel_transfers: self.multichannel_transfers.load(Ordering::Relaxed),
             channels_served: self.channels_served.load(Ordering::Relaxed),
             cosim_validations: self.cosim_validations.load(Ordering::Relaxed),
+            in_flight_bytes: self.in_flight_bytes.load(Ordering::Relaxed),
+            peak_in_flight_bytes: self.peak_in_flight_bytes.load(Ordering::Relaxed),
+            active_sessions: self.active_sessions.load(Ordering::Relaxed),
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            sessions_rejected: self.sessions_rejected.load(Ordering::Relaxed),
         }
     }
 
@@ -202,6 +247,14 @@ pub struct MetricsSnapshot {
     pub multichannel_transfers: u64,
     pub channels_served: u64,
     pub cosim_validations: u64,
+    /// Gauge: streamed payload bytes resident in open sessions.
+    pub in_flight_bytes: u64,
+    /// High-water mark of `in_flight_bytes` over the server's lifetime.
+    pub peak_in_flight_bytes: u64,
+    /// Gauge: currently open streaming sessions.
+    pub active_sessions: u64,
+    pub sessions_opened: u64,
+    pub sessions_rejected: u64,
 }
 
 impl MetricsSnapshot {
@@ -236,6 +289,17 @@ impl MetricsSnapshot {
             .set(
                 "cosim_validations",
                 Json::Num(self.cosim_validations as f64),
+            )
+            .set("in_flight_bytes", Json::Num(self.in_flight_bytes as f64))
+            .set(
+                "peak_in_flight_bytes",
+                Json::Num(self.peak_in_flight_bytes as f64),
+            )
+            .set("active_sessions", Json::Num(self.active_sessions as f64))
+            .set("sessions_opened", Json::Num(self.sessions_opened as f64))
+            .set(
+                "sessions_rejected",
+                Json::Num(self.sessions_rejected as f64),
             )
             .set("latency", self.latency.to_json());
         let mut kinds = Json::obj();
@@ -298,6 +362,11 @@ impl MetricsSnapshot {
             multichannel_transfers: num("multichannel_transfers")? as u64,
             channels_served: num("channels_served")? as u64,
             cosim_validations: num("cosim_validations")? as u64,
+            in_flight_bytes: num("in_flight_bytes")? as u64,
+            peak_in_flight_bytes: num("peak_in_flight_bytes")? as u64,
+            active_sessions: num("active_sessions")? as u64,
+            sessions_opened: num("sessions_opened")? as u64,
+            sessions_rejected: num("sessions_rejected")? as u64,
         })
     }
 
@@ -371,6 +440,51 @@ impl MetricsSnapshot {
             "",
             self.cosim_validations as f64,
         );
+        prom_header(
+            &mut out,
+            "iris_in_flight_bytes",
+            "gauge",
+            "streamed payload bytes resident in open sessions",
+        );
+        prom_line(&mut out, "iris_in_flight_bytes", "", self.in_flight_bytes as f64);
+        prom_header(
+            &mut out,
+            "iris_in_flight_bytes_peak",
+            "gauge",
+            "peak resident streamed payload bytes",
+        );
+        prom_line(
+            &mut out,
+            "iris_in_flight_bytes_peak",
+            "",
+            self.peak_in_flight_bytes as f64,
+        );
+        prom_header(
+            &mut out,
+            "iris_active_sessions",
+            "gauge",
+            "currently open streaming sessions",
+        );
+        prom_line(&mut out, "iris_active_sessions", "", self.active_sessions as f64);
+        prom_header(
+            &mut out,
+            "iris_sessions_total",
+            "counter",
+            "streaming sessions admitted",
+        );
+        prom_line(&mut out, "iris_sessions_total", "", self.sessions_opened as f64);
+        prom_header(
+            &mut out,
+            "iris_sessions_rejected_total",
+            "counter",
+            "streaming sessions rejected by admission control",
+        );
+        prom_line(
+            &mut out,
+            "iris_sessions_rejected_total",
+            "",
+            self.sessions_rejected as f64,
+        );
         for (family, help, pick) in [
             (
                 "iris_engine_transfers_total",
@@ -428,7 +542,8 @@ impl std::fmt::Display for MetricsSnapshot {
              max_latency={} p50_latency={} p99_latency={} cache_hit_rate={:.1}% \
              dse_points={} dse_point_latency={} \
              parallel_packs={} parallel_decodes={} coalesced={} multichannel={} \
-             channels_served={} cosim_validations={}",
+             channels_served={} cosim_validations={} in_flight_bytes={} \
+             active_sessions={} sessions={} sessions_rejected={}",
             self.requests,
             self.completed,
             self.errors,
@@ -446,6 +561,10 @@ impl std::fmt::Display for MetricsSnapshot {
             self.multichannel_transfers,
             self.channels_served,
             self.cosim_validations,
+            self.in_flight_bytes,
+            self.active_sessions,
+            self.sessions_opened,
+            self.sessions_rejected,
         )
     }
 }
@@ -584,6 +703,34 @@ mod tests {
         assert!(text.contains("iris_engine_gbs{engine=\"compiled\"} 4"));
         assert!(text.contains("iris_engine_beff{engine=\"compiled\"} 0.9"));
         assert!(text.contains("iris_channel_bytes_total{channel=\"0\"} 2048"));
+    }
+
+    #[test]
+    fn in_flight_gauge_tracks_peak_and_saturates() {
+        let m = Metrics::default();
+        m.in_flight_add(1000);
+        m.in_flight_add(500);
+        assert_eq!(m.in_flight_bytes.load(Ordering::Relaxed), 1500);
+        assert_eq!(m.peak_in_flight_bytes.load(Ordering::Relaxed), 1500);
+        m.in_flight_sub(1200);
+        assert_eq!(m.in_flight_bytes.load(Ordering::Relaxed), 300);
+        // The peak is a high-water mark, not the live gauge.
+        assert_eq!(m.peak_in_flight_bytes.load(Ordering::Relaxed), 1500);
+        // Over-release saturates at zero instead of wrapping.
+        m.in_flight_sub(10_000);
+        assert_eq!(m.in_flight_bytes.load(Ordering::Relaxed), 0);
+        m.active_sessions.fetch_add(2, Ordering::Relaxed);
+        m.sessions_opened.fetch_add(2, Ordering::Relaxed);
+        m.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.peak_in_flight_bytes, 1500);
+        assert_eq!(s.active_sessions, 2);
+        assert_eq!(s.sessions_rejected, 1);
+        assert!(s.to_string().contains("active_sessions=2"));
+        assert!(s.to_prometheus().contains("iris_in_flight_bytes_peak 1500"));
+        let parsed =
+            crate::util::json::parse(&s.to_json().to_string_compact()).unwrap();
+        assert_eq!(MetricsSnapshot::from_json(&parsed).unwrap(), s);
     }
 
     #[test]

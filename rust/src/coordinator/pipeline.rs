@@ -6,12 +6,15 @@
 //! This is what `examples/helmholtz_pipeline.rs` drives and what
 //! EXPERIMENTS.md records as the end-to-end validation.
 
+use super::proto;
+use super::server::{EngineChoice, LayoutServer, ServerConfig, SessionRequest};
 use crate::accel;
 use crate::baselines;
 use crate::bus::multichannel::MultiChannelExecutor;
 use crate::bus::partition::{partition_opts, PartitionStrategy, PartitionSummary};
 use crate::bus::{HbmChannel, MultiChannel};
 use crate::decode::{DecodePlan, StreamDecoder};
+use crate::engine::ChannelLines;
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::{Layout, LayoutKind};
@@ -20,8 +23,10 @@ use crate::pack::PackPlan;
 use crate::quant;
 use crate::runtime::Runtime;
 use crate::testing::gen::random_elements;
+use crate::util::bitvec::BitVec;
+use crate::util::ceil_div;
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -88,6 +93,17 @@ pub struct PipelineConfig {
     /// multi-channel executor ([`run_multichannel`]). `None`/`Some(1)`
     /// keeps the single-channel [`run`] transport.
     pub channels: Option<usize>,
+    /// Stream the transfer through the bounded-memory serving path
+    /// instead of materializing it: the host packs whole-cycle tiles of
+    /// this many bus cycles each straight into [`super::proto`] frames,
+    /// and an admission-controlled [`LayoutServer`] session decodes
+    /// them incrementally with one carry word of state between chunks.
+    /// `None` keeps the one-shot materialized transport. The streamed
+    /// transport is compiled-only, like the multi-channel one
+    /// (`cfg.compiled` is not consulted). In [`run_multichannel`] it
+    /// chunks every channel's ingress into whole-cycle tiles decoded by
+    /// a per-channel incremental decoder.
+    pub chunk_cycles: Option<u64>,
     /// `validate: cosim` mode — additionally execute the generated
     /// read *and* write modules cycle-by-cycle
     /// ([`crate::cosim::ReadCosim`] / [`crate::cosim::WriteCosim`],
@@ -108,6 +124,7 @@ impl PipelineConfig {
             cache: None,
             compiled: true,
             channels: None,
+            chunk_cycles: None,
             cosim: false,
         }
     }
@@ -115,6 +132,13 @@ impl PipelineConfig {
     /// Builder-style: route the layout step through `cache`.
     pub fn with_cache(mut self, cache: Arc<LayoutCache>) -> PipelineConfig {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Builder-style: stream the transfer as whole-cycle tiles of
+    /// `tile_cycles` bus cycles through the serving-session path.
+    pub fn with_chunking(mut self, tile_cycles: u64) -> PipelineConfig {
+        self.chunk_cycles = Some(tile_cycles);
         self
     }
 }
@@ -138,13 +162,33 @@ pub struct CosimStats {
     pub write_exact: bool,
 }
 
+/// Transport accounting of a streamed [`run`] (present when
+/// [`PipelineConfig::chunk_cycles`] is set).
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    /// Bus cycles per tile the transfer was chunked into.
+    pub tile_cycles: u64,
+    /// Admitted whole-cycle tile, in 64-bit words.
+    pub tile_words: usize,
+    /// Payload frames on the wire.
+    pub frames: u64,
+    /// Total wire bytes, frame overhead included.
+    pub wire_bytes: u64,
+    /// Server-side resident high-water mark: the largest fed chunk plus
+    /// the decoder's one carry word (from [`super::server::SessionReport`]).
+    pub peak_resident_bytes: u64,
+    /// Engine the serving session routed to (`"compiled"`/`"coalesced"`).
+    pub engine: &'static str,
+}
+
 /// End-to-end results.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub workload: String,
     pub layout: &'static str,
-    /// Which pack/decode engine ran: "compiled" (word program) or
-    /// "direct" (interpreted plans).
+    /// Which pack/decode engine ran: "compiled" (word program), "direct"
+    /// (interpreted plans), or "streamed" (proto-framed tiles through a
+    /// serving session; see [`PipelineReport::stream`]).
     pub engine: &'static str,
     pub metrics: LayoutMetrics,
     pub pack_ns: u64,
@@ -164,6 +208,8 @@ pub struct PipelineReport {
     /// Cycle-accurate co-simulation measurements (None unless
     /// `cfg.cosim`).
     pub cosim: Option<CosimStats>,
+    /// Streamed-transport accounting (None unless `cfg.chunk_cycles`).
+    pub stream: Option<StreamStats>,
 }
 
 impl PipelineReport {
@@ -206,6 +252,12 @@ impl PipelineReport {
                 c.read_ii,
                 c.write_cycles,
                 c.read_exact && c.write_exact,
+            ));
+        }
+        if let Some(s) = &self.stream {
+            line.push_str(&format!(
+                " | stream: {} frames x {}-word tile, peak resident {} B [{}]",
+                s.frames, s.tile_words, s.peak_resident_bytes, s.engine,
             ));
         }
         line
@@ -285,16 +337,42 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     let refs: Vec<&[u64]> = raw_arrays.iter().map(|v| v.as_slice()).collect();
     // Program compilation is part of the (reusable) plan stage, so it
     // stays outside the timed hot path, like PackPlan::compile above.
-    let prog = cfg.compiled.then(|| crate::pack::PackProgram::compile(&plan));
+    // The streamed transport is compiled-only, like the multi-channel
+    // one, so a chunked run always compiles the program.
+    let prog = (cfg.compiled || cfg.chunk_cycles.is_some())
+        .then(|| crate::pack::PackProgram::compile(&plan));
     drop(_span_plan);
-    let _span_pack = tracer.span("pipeline.pack");
-    let t0 = Instant::now();
-    let buf = match &prog {
-        Some(prog) => prog.pack(&refs)?,
-        None => plan.pack(&refs)?,
+
+    // ------------------------------------------------ transfer
+    // Streamed mode moves the payload as proto-framed whole-cycle tiles
+    // through a bounded-memory serving session; materialized mode packs
+    // (and later decodes) in one shot.
+    let mut stream_stats = None;
+    let mut predecoded = None;
+    let (buf, pack_ns) = match cfg.chunk_cycles {
+        Some(tile_cycles) => {
+            let st = stream_transfer(
+                cfg,
+                &problem,
+                &plan,
+                prog.as_ref().expect("streamed transport compiles the program"),
+                &refs,
+                tile_cycles,
+            )?;
+            stream_stats = Some(st.stats);
+            predecoded = Some((st.decoded, st.decode_ns));
+            (st.buf, st.pack_ns)
+        }
+        None => {
+            let _span_pack = tracer.span("pipeline.pack");
+            let t0 = Instant::now();
+            let buf = match &prog {
+                Some(prog) => prog.pack(&refs)?,
+                None => plan.pack(&refs)?,
+            };
+            (buf, t0.elapsed().as_nanos() as u64)
+        }
     };
-    let pack_ns = t0.elapsed().as_nanos() as u64;
-    drop(_span_pack);
 
     // ------------------------------------------------ bus model
     let channel = HbmChannel::alveo_u280();
@@ -305,14 +383,19 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     // ------------------------------------------------ decode (II=1 sim)
     let dp = DecodePlan::compile(&layout, &problem);
     let dprog = cfg.compiled.then(|| crate::decode::DecodeProgram::compile(&dp));
-    let _span_decode = tracer.span("pipeline.decode");
-    let t1 = Instant::now();
-    let decoded = match &dprog {
-        Some(dprog) => dprog.decode(&buf)?,
-        None => dp.decode(&buf)?,
+    // Streamed runs already decoded incrementally inside the session.
+    let (decoded, decode_ns) = match predecoded {
+        Some(done) => done,
+        None => {
+            let _span_decode = tracer.span("pipeline.decode");
+            let t1 = Instant::now();
+            let decoded = match &dprog {
+                Some(dprog) => dprog.decode(&buf)?,
+                None => dp.decode(&buf)?,
+            };
+            (decoded, t1.elapsed().as_nanos() as u64)
+        }
     };
-    let decode_ns = t1.elapsed().as_nanos() as u64;
-    drop(_span_decode);
     let decode_exact = decoded == raw_arrays;
     // Cycle-accurate stream decoder must agree with the static analysis.
     let sd = StreamDecoder::new(&layout, &problem);
@@ -439,7 +522,13 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     Ok(PipelineReport {
         workload: cfg.workload.name(),
         layout: cfg.kind.name(),
-        engine: if cfg.compiled { "compiled" } else { "direct" },
+        engine: if cfg.chunk_cycles.is_some() {
+            "streamed"
+        } else if cfg.compiled {
+            "compiled"
+        } else {
+            "direct"
+        },
         metrics,
         pack_ns,
         decode_ns,
@@ -451,6 +540,129 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
         hbm_seconds,
         hbm_gbs,
         cosim,
+        stream: stream_stats,
+    })
+}
+
+/// A streamed transfer's outcome: the reconstructed buffer (for the
+/// pipeline's downstream validators), stage timings, the session's
+/// decoded arrays, and transport accounting.
+struct StreamTransfer {
+    buf: BitVec,
+    pack_ns: u64,
+    decode_ns: u64,
+    decoded: Vec<Vec<u64>>,
+    stats: StreamStats,
+}
+
+/// The streamed transport behind [`run`]: pack tile-by-tile into
+/// length-prefixed [`proto`] frames (the wire buffer stands in for the
+/// network link), then replay the wire through an admission-controlled
+/// [`LayoutServer`] session whose decoder keeps one carry word between
+/// chunks. The payload is re-materialized here only for the pipeline's
+/// downstream validators (stream-decoder cross-check, cosim, XLA
+/// unpack); the session itself never holds more than one tile.
+fn stream_transfer(
+    cfg: &PipelineConfig,
+    problem: &Problem,
+    plan: &PackPlan,
+    prog: &crate::pack::PackProgram,
+    refs: &[&[u64]],
+    tile_cycles: u64,
+) -> Result<StreamTransfer> {
+    let tracer = crate::obs::global();
+    let tile_cycles = tile_cycles.max(1);
+    let tile_words = crate::engine::chunk_words(problem, tile_cycles);
+
+    // ---------------------------------- host side: tiles → wire frames
+    let _span_pack = tracer.span("pipeline.pack");
+    let t0 = Instant::now();
+    let mut writer = proto::FrameWriter::new();
+    writer.header(proto::HeaderFrame {
+        signature: proto::problem_signature(problem),
+        n_arrays: problem.arrays.len() as u32,
+        bus_bits: problem.m(),
+        payload_words: plan.payload_words() as u64,
+        tile_words: tile_words as u32,
+        kind: cfg.kind.name().to_string(),
+        engine: "auto".to_string(),
+    });
+    for tile in prog.stream(refs, tile_cycles)? {
+        writer.payload(&tile);
+    }
+    let frames = writer.payload_frames() as u64;
+    let wire = writer.trailer(t0.elapsed().as_nanos() as u64);
+    let pack_ns = t0.elapsed().as_nanos() as u64;
+    drop(_span_pack);
+
+    // ------------------- server side: session over the framed stream
+    let tile_bytes = tile_words as u64 * 8;
+    let server = LayoutServer::with_config(ServerConfig {
+        workers: 1,
+        max_batch: 1,
+        cache: cfg.cache.clone(),
+        session_budget_bytes: tile_bytes.max(super::server::DEFAULT_SESSION_BUDGET),
+        global_budget_bytes: tile_bytes.max(super::server::DEFAULT_GLOBAL_BUDGET),
+    });
+    let _span_decode = tracer.span("pipeline.decode");
+    let t1 = Instant::now();
+    let mut session = server.open_session(SessionRequest {
+        problem: problem.clone(),
+        kind: cfg.kind,
+        engine: EngineChoice::Auto,
+        tile_cycles,
+    })?;
+    let mut payload: Vec<u64> = Vec::with_capacity(plan.payload_words());
+    let mut reader = proto::FrameReader::new(&wire);
+    while let Some(frame) = reader.next_frame()? {
+        match frame {
+            proto::Frame::Header(h) => {
+                if h.signature != proto::problem_signature(problem) {
+                    return Err(super::Error::InvalidRequest(format!(
+                        "stream header signature {:#018x} does not match the served problem",
+                        h.signature
+                    ))
+                    .into());
+                }
+            }
+            proto::Frame::Payload { words, .. } => {
+                // A merged tail tile can exceed the nominal tile by one
+                // word when m does not divide 64; split so every fed
+                // chunk stays within the admitted reservation.
+                for part in words.chunks(tile_words) {
+                    session.feed(part)?;
+                }
+                payload.extend_from_slice(&words);
+            }
+            proto::Frame::Trailer(_) => {}
+            f @ proto::Frame::Error { .. } => {
+                return Err(f.to_error().expect("error frame carries an error").into());
+            }
+        }
+    }
+    let report = session.finish()?;
+    let decode_ns = t1.elapsed().as_nanos() as u64;
+    drop(_span_decode);
+    server.shutdown();
+
+    let buf = ChannelLines {
+        words: payload,
+        bits: plan.buffer_bits(),
+    }
+    .to_buffer();
+    Ok(StreamTransfer {
+        buf,
+        pack_ns,
+        decode_ns,
+        decoded: report.decoded,
+        stats: StreamStats {
+            tile_cycles,
+            tile_words,
+            frames,
+            wire_bytes: wire.len() as u64,
+            peak_resident_bytes: report.peak_resident_bytes,
+            engine: report.engine,
+        },
     })
 }
 
@@ -483,6 +695,9 @@ pub struct MultiChannelReport {
     pub hbm_seconds: f64,
     /// Aggregate achieved GB/s across channels over that wall-clock.
     pub aggregate_gbs: f64,
+    /// Bus cycles per ingress tile when the decode side ran chunked
+    /// (None for the one-shot materialized decode).
+    pub chunk_cycles: Option<u64>,
 }
 
 impl MultiChannelReport {
@@ -491,7 +706,7 @@ impl MultiChannelReport {
     }
 
     pub fn summary_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} [{}/k={}/{}]: C_max={} L_max={} eff={} | pack {} decode {} | \
              decode_exact={} | HBM: {:.1} µs @ {:.2} GB/s aggregate | per-channel {:?}",
             self.workload,
@@ -510,7 +725,11 @@ impl MultiChannelReport {
                 .iter()
                 .map(|e| format!("{:.0}%", e * 100.0))
                 .collect::<Vec<_>>(),
-        )
+        );
+        if let Some(t) = self.chunk_cycles {
+            line.push_str(&format!(" | streamed in {t}-cycle tiles"));
+        }
+        line
     }
 }
 
@@ -551,7 +770,38 @@ pub fn run_multichannel(
     drop(_span_pack);
     let _span_decode = tracer.span("pipeline.decode");
     let t1 = Instant::now();
-    let decoded = exec.decode(&bufs)?;
+    let decoded = match cfg.chunk_cycles {
+        // Streamed multi-channel ingress: every channel decodes its own
+        // whole-cycle tile stream incrementally (one carry word of state
+        // per channel), and the per-channel outputs map back to global
+        // array order by name — the same assignment the executor serves.
+        Some(tile_cycles) => {
+            let tile_cycles = tile_cycles.max(1);
+            let mut decoded: Vec<Vec<u64>> = vec![Vec::new(); problem.arrays.len()];
+            for ((buf, l), q) in bufs.iter().zip(pl.layouts.iter()).zip(pl.problems.iter()) {
+                let dprog =
+                    crate::decode::DecodeProgram::compile(&DecodePlan::compile(l, q));
+                let mut ds = dprog.stream();
+                let payload_words = ceil_div(l.n_cycles() * problem.m() as u64, 64) as usize;
+                let tile = crate::engine::chunk_words(q, tile_cycles);
+                for chunk in buf.words()[..payload_words].chunks(tile) {
+                    ds.push(chunk);
+                }
+                for (a, out) in q.arrays.iter().zip(ds.finish()?) {
+                    let gi = problem
+                        .arrays
+                        .iter()
+                        .position(|g| g.name == a.name)
+                        .ok_or_else(|| {
+                            anyhow!("channel array '{}' missing from the problem", a.name)
+                        })?;
+                    decoded[gi] = out;
+                }
+            }
+            decoded
+        }
+        None => exec.decode(&bufs)?,
+    };
     let decode_ns = t1.elapsed().as_nanos() as u64;
     drop(_span_decode);
     let channel = HbmChannel::alveo_u280();
@@ -571,6 +821,7 @@ pub fn run_multichannel(
         decode_exact: decoded == raw_arrays,
         hbm_seconds: pl.seconds(&channel),
         aggregate_gbs: mc.aggregate_gbs(),
+        chunk_cycles: cfg.chunk_cycles.map(|t| t.max(1)),
     })
 }
 
@@ -844,6 +1095,81 @@ mod tests {
         let stats = cache.stats();
         assert_eq!(stats.misses, 2, "one per channel, scheduled once");
         assert!(stats.hits >= 2, "second run fully cached");
+    }
+
+    #[test]
+    fn streamed_pipeline_matches_materialized() {
+        for wl in [Workload::Helmholtz, Workload::MatMul { w_a: 33, w_b: 31 }] {
+            let base = PipelineConfig {
+                xla_unpack_check: false,
+                ..PipelineConfig::new(wl, LayoutKind::Iris)
+            };
+            let solid = run(&base, None).unwrap();
+            assert!(solid.stream.is_none());
+            assert!(!solid.summary().contains("stream:"));
+            for tile_cycles in [1, 7, 64] {
+                let streamed = run(&base.clone().with_chunking(tile_cycles), None).unwrap();
+                assert!(streamed.decode_exact, "{}", streamed.summary());
+                assert_eq!(streamed.engine, "streamed");
+                // Layout work is untouched by the transport choice.
+                assert_eq!(streamed.metrics, solid.metrics);
+                assert_eq!(streamed.hbm_seconds, solid.hbm_seconds);
+                let s = streamed.stream.as_ref().expect("stream stats");
+                assert_eq!(s.tile_cycles, tile_cycles);
+                assert!(s.frames >= 1);
+                assert!(s.wire_bytes > 0);
+                // Bounded residency: largest fed chunk + one carry word.
+                assert!(
+                    s.peak_resident_bytes <= (s.tile_words as u64 + 1) * 8,
+                    "{}",
+                    streamed.summary()
+                );
+                assert!(streamed.summary().contains("stream:"));
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_pipeline_composes_with_cosim_and_cache() {
+        // The streamed transport reconstructs the exact bus buffer, so
+        // the cycle-accurate validators still pass on top of it, and a
+        // shared cache serves both the pipeline and the session layout.
+        let cache = Arc::new(LayoutCache::new());
+        let cfg = PipelineConfig {
+            xla_unpack_check: false,
+            cosim: true,
+            ..PipelineConfig::new(Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::Iris)
+        }
+        .with_cache(Arc::clone(&cache))
+        .with_chunking(3);
+        let r = run(&cfg, None).unwrap();
+        assert!(r.ok(), "{}", r.summary());
+        let c = r.cosim.as_ref().expect("cosim stats");
+        assert!(c.read_exact && c.write_exact);
+        assert_eq!(c.read_stalls, 0);
+        assert!(r.stream.is_some());
+        // One schedule miss total: the session hit the pipeline's entry.
+        assert_eq!(cache.stats().misses, 1);
+        assert!(cache.stats().hits >= 1);
+    }
+
+    #[test]
+    fn streamed_multichannel_matches_materialized() {
+        let mk = |chunk: Option<u64>| PipelineConfig {
+            xla_unpack_check: false,
+            channels: Some(2),
+            chunk_cycles: chunk,
+            ..PipelineConfig::new(Workload::Helmholtz, LayoutKind::Iris)
+        };
+        let solid = run_multichannel(&mk(None), PartitionStrategy::Lpt).unwrap();
+        assert!(solid.chunk_cycles.is_none());
+        for t in [1, 5, 4096] {
+            let streamed = run_multichannel(&mk(Some(t)), PartitionStrategy::Lpt).unwrap();
+            assert!(streamed.decode_exact, "{}", streamed.summary_line());
+            assert_eq!(streamed.summary, solid.summary);
+            assert_eq!(streamed.chunk_cycles, Some(t));
+            assert!(streamed.summary_line().contains("streamed in"));
+        }
     }
 
     #[test]

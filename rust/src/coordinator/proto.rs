@@ -1,0 +1,763 @@
+//! Length-prefixed chunked frame protocol for streamed transfers.
+//!
+//! The streaming serving path (`LayoutServer::open_session`, `iris serve
+//! --stream`) moves payloads as a sequence of self-describing frames so
+//! a TB-scale transfer never has to be resident at once:
+//!
+//! ```text
+//! stream  := header payload* trailer | header payload* error
+//! frame   := body_len:u32  tag:u8  body[body_len]
+//! header  := magic:u32 version:u16 signature:u64 n_arrays:u32
+//!            bus_bits:u32 payload_words:u64 tile_words:u32
+//!            kind:str engine:str
+//! payload := index:u32 n_words:u32 word:u64 * n_words checksum:u64
+//! trailer := payload_frames:u32 payload_words:u64 checksum:u64
+//!            elapsed_ns:u64
+//! error   := kind:str retry_after_ms:u64 message:str
+//! str     := len:u16 utf8[len]
+//! ```
+//!
+//! All integers are little-endian. Payload frames carry whole bus-cycle
+//! tiles as emitted by `pack::program::PackStream` (word-aligned, guard
+//! word never transmitted) and are checksummed individually, so a
+//! flipped bit is reported with the frame index it corrupted rather
+//! than surfacing as a silent wrong answer downstream. The trailer
+//! checksum chains every payload word, catching dropped or reordered
+//! frames even when each frame is individually intact. Every decode
+//! failure is a typed [`Error`] (malformed wire data →
+//! [`Error::InvalidRequest`]; a received error frame converts back into
+//! the originating variant via [`Frame::to_error`]).
+
+use super::error::Error;
+use crate::model::Problem;
+
+/// `b"IRIS"` read as a little-endian u32.
+pub const PROTO_MAGIC: u32 = u32::from_le_bytes(*b"IRIS");
+/// Bumped on any wire-incompatible grammar change.
+pub const PROTO_VERSION: u16 = 1;
+
+const TAG_HEADER: u8 = 1;
+const TAG_PAYLOAD: u8 = 2;
+const TAG_TRAILER: u8 = 3;
+const TAG_ERROR: u8 = 4;
+
+/// FNV-1a 64-bit over a byte slice (the protocol's only checksum; no
+/// external hash dependencies).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit over words, continuing from a previous state (used for
+/// the chained trailer checksum across payload frames).
+pub fn fnv1a_words(mut h: u64, words: &[u64]) -> u64 {
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Initial state for [`fnv1a_words`] chains.
+pub const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Stable fingerprint of a [`Problem`] (bus config + every array's
+/// name/width/depth/due), so a session can reject payload fed against a
+/// different problem than the one the header announced.
+pub fn problem_signature(p: &Problem) -> u64 {
+    let mut h = FNV_SEED;
+    h = fnv1a_words(h, &[p.bus.width_bits as u64, p.bus.host_word_bits as u64]);
+    for a in &p.arrays {
+        h = fnv1a_words(
+            h,
+            &[
+                fnv1a(a.name.as_bytes()),
+                a.width as u64,
+                a.depth,
+                a.due,
+                a.max_elems_per_cycle.map_or(u64::MAX, |c| c as u64),
+            ],
+        );
+    }
+    h
+}
+
+/// First frame of every stream: what is being transferred and how.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HeaderFrame {
+    /// [`problem_signature`] of the problem this stream serves.
+    pub signature: u64,
+    pub n_arrays: u32,
+    /// Bus width `m` in bits.
+    pub bus_bits: u32,
+    /// Exact payload length in 64-bit words (guard word excluded).
+    pub payload_words: u64,
+    /// Nominal tile granularity in words (frames may be ragged at the
+    /// tail or merged at cycle boundaries, but never exceed the total).
+    pub tile_words: u32,
+    /// Layout algorithm name (`LayoutKind::name`).
+    pub kind: String,
+    /// Engine choice label (`auto`/`compiled`/`coalesced`/...).
+    pub engine: String,
+}
+
+/// Last frame of a successful stream: reconciliation + telemetry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrailerFrame {
+    /// Number of payload frames that preceded this trailer.
+    pub payload_frames: u32,
+    /// Total payload words across those frames.
+    pub payload_words: u64,
+    /// Chained [`fnv1a_words`] checksum over every payload word in
+    /// stream order, seeded with [`FNV_SEED`].
+    pub checksum: u64,
+    /// Producer-side wall time for the stream (telemetry, not verified).
+    pub elapsed_ns: u64,
+}
+
+/// One protocol frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Frame {
+    Header(HeaderFrame),
+    /// A run of whole bus-cycle tiles. `index` counts payload frames
+    /// from 0 so corruption diagnostics can name the exact frame.
+    Payload { index: u32, words: Vec<u64> },
+    Trailer(TrailerFrame),
+    /// Terminal failure notice in place of a trailer.
+    Error {
+        /// `ErrorKind::label` of the originating error.
+        kind: String,
+        /// Backoff hint in milliseconds (0 when not applicable).
+        retry_after_ms: u64,
+        message: String,
+    },
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u16::MAX as usize);
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], Error> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::InvalidRequest(format!(
+                "proto: truncated {} frame body (need {} bytes at offset {}, have {})",
+                self.what,
+                n,
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, Error> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, Error> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, Error> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn string(&mut self) -> Result<String, Error> {
+        let n = self.u16()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| {
+            Error::InvalidRequest(format!("proto: non-UTF8 string in {} frame", self.what))
+        })
+    }
+    fn finish(self) -> Result<(), Error> {
+        if self.pos != self.buf.len() {
+            return Err(Error::InvalidRequest(format!(
+                "proto: {} frame body has {} trailing bytes",
+                self.what,
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Frame {
+    /// Append this frame's wire form to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let mut body = Vec::new();
+        let tag = match self {
+            Frame::Header(h) => {
+                put_u32(&mut body, PROTO_MAGIC);
+                put_u16(&mut body, PROTO_VERSION);
+                put_u64(&mut body, h.signature);
+                put_u32(&mut body, h.n_arrays);
+                put_u32(&mut body, h.bus_bits);
+                put_u64(&mut body, h.payload_words);
+                put_u32(&mut body, h.tile_words);
+                put_str(&mut body, &h.kind);
+                put_str(&mut body, &h.engine);
+                TAG_HEADER
+            }
+            Frame::Payload { index, words } => {
+                put_u32(&mut body, *index);
+                put_u32(&mut body, words.len() as u32);
+                for w in words {
+                    put_u64(&mut body, *w);
+                }
+                put_u64(&mut body, fnv1a_words(FNV_SEED, words));
+                TAG_PAYLOAD
+            }
+            Frame::Trailer(t) => {
+                put_u32(&mut body, t.payload_frames);
+                put_u64(&mut body, t.payload_words);
+                put_u64(&mut body, t.checksum);
+                put_u64(&mut body, t.elapsed_ns);
+                TAG_TRAILER
+            }
+            Frame::Error {
+                kind,
+                retry_after_ms,
+                message,
+            } => {
+                put_str(&mut body, kind);
+                put_u64(&mut body, *retry_after_ms);
+                put_str(&mut body, message);
+                TAG_ERROR
+            }
+        };
+        put_u32(out, body.len() as u32);
+        out.push(tag);
+        out.extend_from_slice(&body);
+    }
+
+    /// Convenience: the wire form as a fresh buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        out
+    }
+
+    /// Decode one frame from the front of `buf`, returning the frame
+    /// and the number of bytes consumed. Malformed input is a typed
+    /// [`Error::InvalidRequest`] naming what broke; a corrupted payload
+    /// frame names its frame index.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), Error> {
+        if buf.len() < 5 {
+            return Err(Error::InvalidRequest(format!(
+                "proto: truncated frame prefix ({} bytes, need 5)",
+                buf.len()
+            )));
+        }
+        let body_len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        let tag = buf[4];
+        if 5 + body_len > buf.len() {
+            return Err(Error::InvalidRequest(format!(
+                "proto: truncated frame: header promises {} body bytes, {} available",
+                body_len,
+                buf.len() - 5
+            )));
+        }
+        let body = &buf[5..5 + body_len];
+        let what = match tag {
+            TAG_HEADER => "header",
+            TAG_PAYLOAD => "payload",
+            TAG_TRAILER => "trailer",
+            TAG_ERROR => "error",
+            other => {
+                return Err(Error::InvalidRequest(format!(
+                    "proto: unknown frame tag {other:#04x}"
+                )))
+            }
+        };
+        let mut r = Reader {
+            buf: body,
+            pos: 0,
+            what,
+        };
+        let frame = match tag {
+            TAG_HEADER => {
+                let magic = r.u32()?;
+                if magic != PROTO_MAGIC {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: bad magic {magic:#010x} (expected {PROTO_MAGIC:#010x})"
+                    )));
+                }
+                let version = r.u16()?;
+                if version != PROTO_VERSION {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: unsupported version {version} (expected {PROTO_VERSION})"
+                    )));
+                }
+                Frame::Header(HeaderFrame {
+                    signature: r.u64()?,
+                    n_arrays: r.u32()?,
+                    bus_bits: r.u32()?,
+                    payload_words: r.u64()?,
+                    tile_words: r.u32()?,
+                    kind: r.string()?,
+                    engine: r.string()?,
+                })
+            }
+            TAG_PAYLOAD => {
+                let index = r.u32()?;
+                let n_words = r.u32()? as usize;
+                let mut words = Vec::with_capacity(n_words);
+                for _ in 0..n_words {
+                    words.push(r.u64()?);
+                }
+                let want = r.u64()?;
+                let got = fnv1a_words(FNV_SEED, &words);
+                if want != got {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: payload frame {index} checksum mismatch \
+                         ({got:#018x} != declared {want:#018x}): corrupted in flight"
+                    )));
+                }
+                Frame::Payload { index, words }
+            }
+            TAG_TRAILER => Frame::Trailer(TrailerFrame {
+                payload_frames: r.u32()?,
+                payload_words: r.u64()?,
+                checksum: r.u64()?,
+                elapsed_ns: r.u64()?,
+            }),
+            _ => Frame::Error {
+                kind: r.string()?,
+                retry_after_ms: r.u64()?,
+                message: r.string()?,
+            },
+        };
+        r.finish()?;
+        Ok((frame, 5 + body_len))
+    }
+
+    /// Build the error frame announcing `e` to the peer.
+    pub fn from_error(e: &Error) -> Frame {
+        let retry_after_ms = match e {
+            Error::Overloaded { retry_after } => retry_after.as_millis() as u64,
+            _ => 0,
+        };
+        Frame::Error {
+            kind: e.kind().label().to_string(),
+            retry_after_ms,
+            message: e.to_string(),
+        }
+    }
+
+    /// Map a received error frame back onto a typed [`Error`]. Variants
+    /// whose payload does not survive the wire round-trip come back as
+    /// the structurally closest representation.
+    pub fn to_error(&self) -> Option<Error> {
+        match self {
+            Frame::Error {
+                kind,
+                retry_after_ms,
+                message,
+            } => Some(match kind.as_str() {
+                "overloaded" => Error::Overloaded {
+                    retry_after: std::time::Duration::from_millis(*retry_after_ms),
+                },
+                "worker_disconnected" => Error::WorkerDisconnected,
+                "invalid_request" => Error::InvalidRequest(
+                    message
+                        .strip_prefix("invalid request: ")
+                        .unwrap_or(message)
+                        .to_string(),
+                ),
+                _ => Error::Internal(message.clone()),
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Streaming frame producer: tracks frame indices and the chained
+/// trailer checksum so callers only push tiles.
+#[derive(Debug, Default)]
+pub struct FrameWriter {
+    buf: Vec<u8>,
+    payload_frames: u32,
+    payload_words: u64,
+    checksum: u64,
+}
+
+impl FrameWriter {
+    pub fn new() -> FrameWriter {
+        FrameWriter {
+            checksum: FNV_SEED,
+            ..FrameWriter::default()
+        }
+    }
+
+    pub fn header(&mut self, h: HeaderFrame) -> &mut Self {
+        Frame::Header(h).encode(&mut self.buf);
+        self
+    }
+
+    /// Append one payload frame of whole bus-cycle tiles.
+    pub fn payload(&mut self, words: &[u64]) -> &mut Self {
+        Frame::Payload {
+            index: self.payload_frames,
+            words: words.to_vec(),
+        }
+        .encode(&mut self.buf);
+        self.payload_frames += 1;
+        self.payload_words += words.len() as u64;
+        self.checksum = fnv1a_words(self.checksum, words);
+        self
+    }
+
+    /// Append the trailer and return the finished wire buffer.
+    pub fn trailer(mut self, elapsed_ns: u64) -> Vec<u8> {
+        Frame::Trailer(TrailerFrame {
+            payload_frames: self.payload_frames,
+            payload_words: self.payload_words,
+            checksum: self.checksum,
+            elapsed_ns,
+        })
+        .encode(&mut self.buf);
+        self.buf
+    }
+
+    /// Append an error frame instead of a trailer and return the buffer.
+    pub fn error(mut self, e: &Error) -> Vec<u8> {
+        Frame::from_error(e).encode(&mut self.buf);
+        self.buf
+    }
+
+    pub fn payload_frames(&self) -> u32 {
+        self.payload_frames
+    }
+    pub fn payload_words(&self) -> u64 {
+        self.payload_words
+    }
+}
+
+/// Validating frame consumer over a complete wire buffer: enforces the
+/// stream grammar (header first, contiguous payload indices, trailer
+/// reconciliation) and surfaces every violation as a typed error naming
+/// the offending frame.
+#[derive(Debug)]
+pub struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    seen_header: bool,
+    payload_frames: u32,
+    payload_words: u64,
+    checksum: u64,
+    done: bool,
+}
+
+impl<'a> FrameReader<'a> {
+    pub fn new(buf: &'a [u8]) -> FrameReader<'a> {
+        FrameReader {
+            buf,
+            pos: 0,
+            seen_header: false,
+            payload_frames: 0,
+            payload_words: 0,
+            checksum: FNV_SEED,
+            done: false,
+        }
+    }
+
+    /// Next frame, or `Ok(None)` at a clean end of stream (a trailer or
+    /// error frame was the last frame and the buffer is exhausted).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, Error> {
+        if self.pos == self.buf.len() {
+            if !self.done {
+                return Err(Error::InvalidRequest(format!(
+                    "proto: stream ended after {} payload frames without a trailer",
+                    self.payload_frames
+                )));
+            }
+            return Ok(None);
+        }
+        if self.done {
+            return Err(Error::InvalidRequest(
+                "proto: data after the trailer frame".into(),
+            ));
+        }
+        let (frame, used) = Frame::decode(&self.buf[self.pos..])?;
+        self.pos += used;
+        match &frame {
+            Frame::Header(_) => {
+                if self.seen_header {
+                    return Err(Error::InvalidRequest(
+                        "proto: duplicate header frame".into(),
+                    ));
+                }
+                self.seen_header = true;
+            }
+            Frame::Payload { index, words } => {
+                if !self.seen_header {
+                    return Err(Error::InvalidRequest(
+                        "proto: payload frame before header".into(),
+                    ));
+                }
+                if *index != self.payload_frames {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: payload frame index {} out of order (expected {})",
+                        index, self.payload_frames
+                    )));
+                }
+                self.payload_frames += 1;
+                self.payload_words += words.len() as u64;
+                self.checksum = fnv1a_words(self.checksum, words);
+            }
+            Frame::Trailer(t) => {
+                if t.payload_frames != self.payload_frames {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: trailer declares {} payload frames, stream carried {}",
+                        t.payload_frames, self.payload_frames
+                    )));
+                }
+                if t.payload_words != self.payload_words {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: trailer declares {} payload words, stream carried {}",
+                        t.payload_words, self.payload_words
+                    )));
+                }
+                if t.checksum != self.checksum {
+                    return Err(Error::InvalidRequest(format!(
+                        "proto: trailer checksum mismatch ({:#018x} != declared \
+                         {:#018x}): a payload frame was dropped or reordered",
+                        self.checksum, t.checksum
+                    )));
+                }
+                self.done = true;
+            }
+            Frame::Error { .. } => {
+                self.done = true;
+            }
+        }
+        Ok(Some(frame))
+    }
+
+    pub fn payload_words(&self) -> u64 {
+        self.payload_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::paper_example;
+
+    fn header() -> HeaderFrame {
+        let p = paper_example();
+        HeaderFrame {
+            signature: problem_signature(&p),
+            n_arrays: p.arrays.len() as u32,
+            bus_bits: p.bus.width_bits,
+            payload_words: 7,
+            tile_words: 4,
+            kind: "iris".into(),
+            engine: "auto".into(),
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        for f in [
+            Frame::Header(header()),
+            Frame::Payload {
+                index: 3,
+                words: vec![0xdead_beef, u64::MAX, 0],
+            },
+            Frame::Trailer(TrailerFrame {
+                payload_frames: 4,
+                payload_words: 7,
+                checksum: 0x1234,
+                elapsed_ns: 99,
+            }),
+            Frame::from_error(&Error::Overloaded {
+                retry_after: std::time::Duration::from_millis(25),
+            }),
+        ] {
+            let bytes = f.to_bytes();
+            let (back, used) = Frame::decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn whole_stream_round_trips_and_reconciles() {
+        let tiles: [&[u64]; 3] = [&[1, 2, 3, 4], &[5, 6], &[7]];
+        let mut w = FrameWriter::new();
+        w.header(header());
+        for t in tiles {
+            w.payload(t);
+        }
+        let bytes = w.trailer(1234);
+
+        let mut r = FrameReader::new(&bytes);
+        let mut words = Vec::new();
+        let mut trailer = None;
+        while let Some(f) = r.next_frame().unwrap() {
+            match f {
+                Frame::Payload { words: w, .. } => words.extend(w),
+                Frame::Trailer(t) => trailer = Some(t),
+                _ => {}
+            }
+        }
+        assert_eq!(words, vec![1, 2, 3, 4, 5, 6, 7]);
+        let t = trailer.unwrap();
+        assert_eq!(t.payload_frames, 3);
+        assert_eq!(t.payload_words, 7);
+        assert_eq!(t.elapsed_ns, 1234);
+    }
+
+    #[test]
+    fn flipped_bit_names_the_corrupted_frame() {
+        let mut w = FrameWriter::new();
+        w.header(header());
+        w.payload(&[10, 20, 30]);
+        w.payload(&[40, 50]);
+        let mut bytes = w.trailer(0);
+        // Find the second payload frame and flip one bit in its words.
+        let mut pos = 0;
+        let mut payloads = 0;
+        let flip_at = loop {
+            let body_len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+            let tag = bytes[pos + 4];
+            if tag == TAG_PAYLOAD {
+                payloads += 1;
+                if payloads == 2 {
+                    break pos + 5 + 8; // index + n_words, first word byte
+                }
+            }
+            pos += 5 + body_len as usize;
+        };
+        bytes[flip_at] ^= 0x04;
+        let mut r = FrameReader::new(&bytes);
+        let err = loop {
+            match r.next_frame() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("corruption went undetected"),
+                Err(e) => break e,
+            }
+        };
+        let msg = err.to_string();
+        assert!(
+            msg.contains("payload frame 1 checksum mismatch"),
+            "diagnostic must name the frame: {msg}"
+        );
+    }
+
+    #[test]
+    fn truncated_and_malformed_streams_are_typed_errors() {
+        let mut w = FrameWriter::new();
+        w.header(header());
+        w.payload(&[1, 2, 3]);
+        let bytes = w.trailer(0);
+
+        // Truncation anywhere in the stream is an error, never a short
+        // success.
+        for cut in [3, bytes.len() - 1, bytes.len() - 20] {
+            let mut r = FrameReader::new(&bytes[..cut]);
+            let err = loop {
+                match r.next_frame() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => panic!("truncated stream at {cut} decoded cleanly"),
+                    Err(e) => break e,
+                }
+            };
+            assert!(matches!(err, Error::InvalidRequest(_)), "{err}");
+        }
+
+        // Missing trailer (clean frame boundary, stream just stops).
+        let mut no_trailer = Vec::new();
+        Frame::Header(header()).encode(&mut no_trailer);
+        Frame::Payload {
+            index: 0,
+            words: vec![1],
+        }
+        .encode(&mut no_trailer);
+        let mut r = FrameReader::new(&no_trailer);
+        r.next_frame().unwrap();
+        r.next_frame().unwrap();
+        let err = r.next_frame().unwrap_err();
+        assert!(err.to_string().contains("without a trailer"), "{err}");
+
+        // Payload before header.
+        let mut head_less = Vec::new();
+        Frame::Payload {
+            index: 0,
+            words: vec![1],
+        }
+        .encode(&mut head_less);
+        let err = FrameReader::new(&head_less).next_frame().unwrap_err();
+        assert!(err.to_string().contains("before header"), "{err}");
+
+        // Bad magic.
+        let mut bad = Frame::Header(header()).to_bytes();
+        bad[5] ^= 0xff;
+        assert!(Frame::decode(&bad).unwrap_err().to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn error_frames_map_back_onto_typed_errors() {
+        let cases = [
+            Error::Overloaded {
+                retry_after: std::time::Duration::from_millis(40),
+            },
+            Error::WorkerDisconnected,
+            Error::InvalidRequest("chunk too small".into()),
+            Error::Internal("scheduler exploded".into()),
+        ];
+        for e in cases {
+            let f = Frame::from_error(&e);
+            let (back, _) = Frame::decode(&f.to_bytes()).unwrap();
+            assert_eq!(back.to_error().unwrap(), e);
+        }
+        // Kinds without a lossless mapping degrade to Internal with the
+        // original message preserved.
+        let e = Error::DecodeMismatch { what: "order" };
+        let f = Frame::from_error(&e);
+        assert_eq!(
+            f.to_error().unwrap(),
+            Error::Internal(e.to_string())
+        );
+    }
+
+    #[test]
+    fn problem_signature_is_sensitive_to_every_field() {
+        let p = paper_example();
+        let base = problem_signature(&p);
+        assert_eq!(base, problem_signature(&paper_example()));
+        let mut q = paper_example();
+        q.arrays[0].due += 1;
+        assert_ne!(base, problem_signature(&q));
+        let mut q = paper_example();
+        q.arrays[0].name.push('x');
+        assert_ne!(base, problem_signature(&q));
+        let mut q = paper_example();
+        q.bus.width_bits += 8;
+        assert_ne!(base, problem_signature(&q));
+    }
+}

@@ -13,22 +13,38 @@
 //! match on the failure class instead of grepping message strings.
 //! std::thread + mpsc stand in for tokio (offline environment; see
 //! DESIGN.md §Threading).
+//!
+//! Beyond one-shot transfers, the server exposes persistent **streaming
+//! sessions** ([`LayoutServer::open_session`]): a client declares the
+//! problem and a whole-cycle tile size, feeds packed bus words chunk by
+//! chunk ([`Session::feed`]), and collects the decoded arrays with
+//! [`Session::finish`] — the server holds only one tile plus one carry
+//! word of decoder state per session, so TB-scale transfers flow with
+//! O(tile) resident memory. Admission control reserves each session's
+//! tile against per-session and global in-flight-byte budgets
+//! ([`ServerConfig::session_budget_bytes`] /
+//! [`ServerConfig::global_budget_bytes`]); a session that would exceed
+//! either is rejected with [`Error::Overloaded`] carrying a retry hint.
 
 use super::{Error, Metrics, MetricsSnapshot};
 use crate::bus::multichannel::MultiChannelExecutor;
 use crate::bus::partition::{partition_opts, PartitionStrategy};
 use crate::bus::HbmChannel;
-use crate::decode::{CoalescedDecode, DecodePlan, DecodeProgram, PARALLEL_MIN_ELEMS};
+use crate::decode::{
+    CoalescedDecode, DecodePlan, DecodeProgram, OwnedCoalescedDecodeStream, OwnedDecodeStream,
+    PARALLEL_MIN_ELEMS,
+};
 use crate::dse::{DesignPoint, DseEngine};
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
 use crate::layout::LayoutKind;
 use crate::model::Problem;
 use crate::pack::{CoalescedPack, PackPlan, PackProgram, PARALLEL_MIN_OPS};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which host-side pack/decode engine serves a transfer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -231,6 +247,18 @@ impl BatchTicket {
     }
 }
 
+/// Default per-session resident-payload budget: the largest tile a
+/// single streaming session may hold (1 MiB).
+pub const DEFAULT_SESSION_BUDGET: u64 = 1 << 20;
+
+/// Default global resident-payload budget across all open sessions
+/// (8 MiB).
+pub const DEFAULT_GLOBAL_BUDGET: u64 = 8 << 20;
+
+/// Back-off hint carried by [`Error::Overloaded`] when admission
+/// control rejects a session.
+pub const SESSION_RETRY_AFTER: Duration = Duration::from_millis(25);
+
 /// Startup knobs for [`LayoutServer::with_config`]; the one constructor
 /// behind the legacy `start`/`start_with_cache` pair.
 pub struct ServerConfig {
@@ -241,6 +269,14 @@ pub struct ServerConfig {
     /// Shared schedule memo table (e.g. one already warmed by a
     /// [`DseEngine`]); `None` gives the server a fresh private cache.
     pub cache: Option<Arc<LayoutCache>>,
+    /// Largest tile (resident payload bytes) one streaming session may
+    /// reserve; a session declaring a bigger tile is rejected with
+    /// [`Error::Overloaded`].
+    pub session_budget_bytes: u64,
+    /// Total resident payload bytes reservable across all concurrently
+    /// open sessions; admission past this is rejected with
+    /// [`Error::Overloaded`].
+    pub global_budget_bytes: u64,
 }
 
 impl Default for ServerConfig {
@@ -249,7 +285,41 @@ impl Default for ServerConfig {
             workers: 4,
             max_batch: 8,
             cache: None,
+            session_budget_bytes: DEFAULT_SESSION_BUDGET,
+            global_budget_bytes: DEFAULT_GLOBAL_BUDGET,
         }
+    }
+}
+
+/// Atomic check-and-reserve ledger behind session admission: the sum of
+/// every open session's tile reservation, bounded by the global budget.
+struct SessionBudget {
+    per_session_limit: u64,
+    global_limit: u64,
+    in_use: AtomicU64,
+}
+
+impl SessionBudget {
+    fn try_reserve(&self, bytes: u64) -> bool {
+        let mut cur = self.in_use.load(Ordering::Relaxed);
+        loop {
+            if cur + bytes > self.global_limit {
+                return false;
+            }
+            match self.in_use.compare_exchange_weak(
+                cur,
+                cur + bytes,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release(&self, bytes: u64) {
+        self.in_use.fetch_sub(bytes, Ordering::Relaxed);
     }
 }
 
@@ -262,6 +332,7 @@ pub struct LayoutServer {
     /// [`ServerConfig::cache`] to share it with a [`DseEngine`].
     pub cache: Arc<LayoutCache>,
     pub max_batch: usize,
+    budget: Arc<SessionBudget>,
 }
 
 impl LayoutServer {
@@ -289,6 +360,11 @@ impl LayoutServer {
             metrics,
             cache,
             max_batch,
+            budget: Arc::new(SessionBudget {
+                per_session_limit: cfg.session_budget_bytes,
+                global_limit: cfg.global_budget_bytes,
+                in_use: AtomicU64::new(0),
+            }),
         }
     }
 
@@ -298,7 +374,7 @@ impl LayoutServer {
         LayoutServer::with_config(ServerConfig {
             workers: n_workers,
             max_batch,
-            cache: None,
+            ..ServerConfig::default()
         })
     }
 
@@ -313,6 +389,7 @@ impl LayoutServer {
             workers: n_workers,
             max_batch,
             cache: Some(cache),
+            ..ServerConfig::default()
         })
     }
 
@@ -367,6 +444,237 @@ impl LayoutServer {
             let _ = w.join();
         }
     }
+
+    /// Open a persistent streaming session: reserve `tile_cycles` worth
+    /// of resident-payload budget, compile the decoder once, and hand
+    /// back a [`Session`] the client feeds packed bus words into. The
+    /// session is admission-controlled — a tile above the per-session
+    /// budget, or one that would push the global in-flight-byte ledger
+    /// past its limit, is rejected with [`Error::Overloaded`] and a
+    /// retry hint, and counted in `sessions_rejected`.
+    pub fn open_session(&self, req: SessionRequest) -> Result<Session, Error> {
+        let tracer = crate::obs::global();
+        let _span = tracer.span("server.open_session");
+        let tile_words = crate::engine::chunk_words(&req.problem, req.tile_cycles);
+        let tile_bytes = (tile_words as u64).saturating_mul(8);
+        if tile_bytes > self.budget.per_session_limit || !self.budget.try_reserve(tile_bytes) {
+            self.metrics.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Overloaded {
+                retry_after: SESSION_RETRY_AFTER,
+            });
+        }
+        // Reservation made: the lease releases it (and the gauges) on
+        // every exit path from here on, including errors below.
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        self.metrics.active_sessions.fetch_add(1, Ordering::Relaxed);
+        self.metrics.in_flight_add(tile_bytes);
+        let lease = SessionLease {
+            budget: Arc::clone(&self.budget),
+            metrics: Arc::clone(&self.metrics),
+            bytes: tile_bytes,
+        };
+        let (layout, cache_hit) = self.cache.layout_for_tracked(req.kind, &req.problem);
+        self.metrics.record_cache(cache_hit);
+        crate::layout::validate::validate(&layout, &req.problem)?;
+        let plan = PackPlan::compile(&layout, &req.problem);
+        let expected_words = plan.payload_words() as u64;
+        // Same engine routing as the one-shot path (see `process`).
+        let coalesced = match req.engine {
+            EngineChoice::Compiled => false,
+            EngineChoice::Coalesced => true,
+            EngineChoice::Auto => {
+                CoalescedPack::from_plan(&plan, &layout).copy_coverage() >= COALESCE_AUTO_COVERAGE
+            }
+        };
+        let (decoder, engine) = if coalesced {
+            let prog = Arc::new(CoalescedDecode::compile(&layout, &req.problem));
+            (
+                SessionDecoder::Coalesced(CoalescedDecode::stream_owned(prog)),
+                "coalesced",
+            )
+        } else {
+            let prog = Arc::new(DecodeProgram::compile(&DecodePlan::compile(
+                &layout,
+                &req.problem,
+            )));
+            (
+                SessionDecoder::Compiled(DecodeProgram::stream_owned(prog)),
+                "compiled",
+            )
+        };
+        Ok(Session {
+            decoder,
+            expected_words,
+            received_words: 0,
+            chunks: 0,
+            max_chunk_words: 0,
+            tile_words,
+            engine,
+            cache_hit,
+            t_open: Instant::now(),
+            lease,
+        })
+    }
+}
+
+/// What a streaming session serves: the problem, its layout family and
+/// engine routing, and the whole-cycle tile size the client will feed.
+pub struct SessionRequest {
+    pub problem: Problem,
+    pub kind: LayoutKind,
+    pub engine: EngineChoice,
+    /// Bus cycles per fed chunk; determines the session's reserved tile
+    /// ([`crate::engine::chunk_words`]).
+    pub tile_cycles: u64,
+}
+
+impl SessionRequest {
+    /// Session with default routing: Iris layout, [`EngineChoice::Auto`].
+    pub fn new(problem: Problem, tile_cycles: u64) -> SessionRequest {
+        SessionRequest {
+            problem,
+            kind: LayoutKind::Iris,
+            engine: EngineChoice::Auto,
+            tile_cycles,
+        }
+    }
+}
+
+/// Budget reservation + gauge bookkeeping for one session; `Drop` gives
+/// back the reservation on every exit path (finish, feed error, or the
+/// client just dropping the session).
+struct SessionLease {
+    budget: Arc<SessionBudget>,
+    metrics: Arc<Metrics>,
+    bytes: u64,
+}
+
+impl Drop for SessionLease {
+    fn drop(&mut self) {
+        self.budget.release(self.bytes);
+        self.metrics.in_flight_sub(self.bytes);
+        self.metrics.active_sessions.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// The session's incremental decoder — the engine-routing outcome of
+/// [`SessionRequest::engine`], owning its program so the session can
+/// outlive the opening call.
+enum SessionDecoder {
+    Compiled(OwnedDecodeStream),
+    Coalesced(OwnedCoalescedDecodeStream),
+}
+
+/// A persistent streaming session (see [`LayoutServer::open_session`]).
+/// Feed packed bus words with [`Session::feed`]; collect the decoded
+/// arrays with [`Session::finish`]. Resident state between feeds is one
+/// carry word — the fed chunk is fully consumed before `feed` returns.
+pub struct Session {
+    decoder: SessionDecoder,
+    expected_words: u64,
+    received_words: u64,
+    chunks: u64,
+    max_chunk_words: usize,
+    tile_words: usize,
+    engine: &'static str,
+    cache_hit: bool,
+    t_open: Instant,
+    lease: SessionLease,
+}
+
+impl Session {
+    /// Payload words the full transfer carries.
+    pub fn expected_words(&self) -> u64 {
+        self.expected_words
+    }
+
+    /// Payload words fed so far.
+    pub fn received_words(&self) -> u64 {
+        self.received_words
+    }
+
+    /// The admitted tile, in words — the largest chunk `feed` accepts.
+    pub fn tile_words(&self) -> usize {
+        self.tile_words
+    }
+
+    /// Engine serving this session (`"compiled"` or `"coalesced"`).
+    pub fn engine(&self) -> &'static str {
+        self.engine
+    }
+
+    /// Feed the next chunk of packed bus words (payload word order).
+    /// Typed rejections: a chunk larger than the admitted tile, or one
+    /// that would overrun the declared payload (over-feed).
+    pub fn feed(&mut self, words: &[u64]) -> Result<(), Error> {
+        if words.len() > self.tile_words {
+            return Err(Error::InvalidRequest(format!(
+                "session: chunk of {} words exceeds the admitted tile of {} words",
+                words.len(),
+                self.tile_words
+            )));
+        }
+        let after = self.received_words + words.len() as u64;
+        if after > self.expected_words {
+            return Err(Error::InvalidRequest(format!(
+                "session: over-fed — {after} words pushed, payload is {} words",
+                self.expected_words
+            )));
+        }
+        match &mut self.decoder {
+            SessionDecoder::Compiled(ds) => ds.push(words),
+            SessionDecoder::Coalesced(ds) => ds.push(words),
+        }
+        self.received_words = after;
+        self.chunks += 1;
+        self.max_chunk_words = self.max_chunk_words.max(words.len());
+        Ok(())
+    }
+
+    /// Drain the decoder and return the decoded arrays plus the
+    /// session's transport report. A truncated feed surfaces the decode
+    /// stream's pointed error (which names the first missing word);
+    /// either way the budget reservation and gauges are released.
+    pub fn finish(self) -> Result<SessionReport, Error> {
+        let latency_ns = (self.t_open.elapsed().as_nanos() as u64).max(1);
+        let metrics = Arc::clone(&self.lease.metrics);
+        let result: Result<Vec<Vec<u64>>, Error> = match self.decoder {
+            SessionDecoder::Compiled(ds) => ds.finish().map_err(Error::from),
+            SessionDecoder::Coalesced(ds) => ds.finish().map_err(Error::from),
+        };
+        metrics.record(latency_ns, result.as_ref().err());
+        let decoded = result?;
+        Ok(SessionReport {
+            decoded,
+            words: self.received_words,
+            chunks: self.chunks,
+            peak_resident_bytes: (self.max_chunk_words as u64 + 1) * 8,
+            engine: self.engine,
+            cache_hit: self.cache_hit,
+            latency_ns,
+        })
+    }
+}
+
+/// What [`Session::finish`] returns: the decoded arrays and the
+/// session's transport accounting.
+#[derive(Debug)]
+pub struct SessionReport {
+    pub decoded: Vec<Vec<u64>>,
+    /// Payload words fed over the session's lifetime.
+    pub words: u64,
+    /// Chunks fed.
+    pub chunks: u64,
+    /// Peak payload bytes resident in the session at any instant: the
+    /// largest fed chunk plus the one carry word of decoder state.
+    pub peak_resident_bytes: u64,
+    /// Engine that served the session.
+    pub engine: &'static str,
+    /// Whether the layout came from the shared cache.
+    pub cache_hit: bool,
+    /// Open-to-finish wall latency.
+    pub latency_ns: u64,
 }
 
 fn worker_loop(
@@ -763,6 +1071,7 @@ mod tests {
             workers: 2,
             max_batch: 4,
             cache: Some(Arc::clone(&cache)),
+            ..ServerConfig::default()
         });
         server.submit(request(4, 5)).recv().unwrap().unwrap();
         assert!(cache.stats().misses >= 1, "served through the shared cache");
@@ -1154,6 +1463,176 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!(resp.decode_exact);
+        server.shutdown();
+    }
+
+    /// Client-side pack for the session tests: the payload words the
+    /// compiled engine would put on the bus for `p`.
+    fn packed_payload(server: &LayoutServer, p: &Problem, data: &[Vec<u64>]) -> Vec<u64> {
+        let (layout, _) = server.cache.layout_for_tracked(LayoutKind::Iris, p);
+        let plan = PackPlan::compile(&layout, p);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let buf = PackProgram::compile(&plan).pack(&refs).unwrap();
+        buf.words()[..plan.payload_words()].to_vec()
+    }
+
+    #[test]
+    fn streaming_session_moves_a_transfer_64x_its_budget_with_tile_residency() {
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        // 40k 64-bit elements on a 256-bit bus: 320 KB of payload
+        // against a 4 KiB per-session budget — an 78× oversubscription
+        // that must flow with only one tile resident.
+        let p = Problem::new(
+            BusConfig::new(256),
+            vec![ArraySpec::new("big", 64, 40_000, 100)],
+        )
+        .unwrap();
+        let data = synthetic_data(&p, 7);
+        let server = LayoutServer::with_config(ServerConfig {
+            workers: 1,
+            max_batch: 1,
+            session_budget_bytes: 4096,
+            global_budget_bytes: 16_384,
+            ..ServerConfig::default()
+        });
+        let payload = packed_payload(&server, &p, &data);
+        assert!(
+            payload.len() as u64 * 8 >= 64 * 4096,
+            "transfer must dwarf the budget: {} bytes",
+            payload.len() * 8
+        );
+
+        // 8 cycles × 256 bits = 32 words = 256 bytes per tile.
+        let mut session = server
+            .open_session(SessionRequest::new(p.clone(), 8))
+            .unwrap();
+        assert_eq!(session.tile_words(), 32);
+        assert_eq!(session.expected_words() as usize, payload.len());
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.active_sessions, 1);
+        assert_eq!(snap.sessions_opened, 1);
+        assert_eq!(snap.in_flight_bytes, 32 * 8);
+
+        for chunk in payload.chunks(session.tile_words()) {
+            session.feed(chunk).unwrap();
+        }
+        assert_eq!(session.received_words(), session.expected_words());
+        let report = session.finish().unwrap();
+        assert_eq!(report.decoded, data, "chunked session must be bit-exact");
+        assert_eq!(report.words as usize, payload.len());
+        assert!(
+            report.peak_resident_bytes <= 4 * 32 * 8,
+            "resident {} bytes for a 256-byte tile",
+            report.peak_resident_bytes
+        );
+        assert!(report.latency_ns > 0);
+
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.active_sessions, 0, "finish releases the session");
+        assert_eq!(snap.in_flight_bytes, 0, "finish releases the reservation");
+        assert_eq!(snap.peak_in_flight_bytes, 32 * 8);
+        assert_eq!(snap.completed, 1, "the session lands one histogram sample");
+        server.shutdown();
+    }
+
+    #[test]
+    fn sessions_are_admission_controlled_with_typed_overload() {
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        let p = Problem::new(
+            BusConfig::new(64),
+            vec![ArraySpec::new("a", 16, 64, 8)],
+        )
+        .unwrap();
+        let server = LayoutServer::with_config(ServerConfig {
+            workers: 1,
+            max_batch: 1,
+            session_budget_bytes: 1024,
+            global_budget_bytes: 2048,
+            ..ServerConfig::default()
+        });
+        // 64-cycle tiles on a 64-bit bus: 512 bytes each — the global
+        // budget admits exactly four.
+        let mut open = Vec::new();
+        for _ in 0..4 {
+            open.push(
+                server
+                    .open_session(SessionRequest::new(p.clone(), 64))
+                    .unwrap(),
+            );
+        }
+        let err = server
+            .open_session(SessionRequest::new(p.clone(), 64))
+            .unwrap_err();
+        match &err {
+            Error::Overloaded { retry_after } => assert!(retry_after.as_millis() > 0),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        // A tile above the per-session budget is rejected outright.
+        let err = server
+            .open_session(SessionRequest::new(p.clone(), 10_000))
+            .unwrap_err();
+        assert!(matches!(err, Error::Overloaded { .. }), "{err:?}");
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.sessions_rejected, 2);
+        assert_eq!(snap.active_sessions, 4);
+        assert_eq!(snap.in_flight_bytes, 4 * 512);
+        // Dropping a session releases its reservation: admission recovers.
+        drop(open.pop());
+        let again = server
+            .open_session(SessionRequest::new(p.clone(), 64))
+            .unwrap();
+        drop(again);
+        drop(open);
+        let snap = server.metrics_snapshot();
+        assert_eq!(snap.active_sessions, 0);
+        assert_eq!(snap.in_flight_bytes, 0);
+        assert_eq!(snap.sessions_opened, 5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn session_over_feed_and_truncation_are_typed_errors() {
+        use crate::model::{ArraySpec, BusConfig, Problem};
+        let p = Problem::new(
+            BusConfig::new(64),
+            vec![ArraySpec::new("a", 16, 64, 8)],
+        )
+        .unwrap();
+        let data = synthetic_data(&p, 3);
+        let server = LayoutServer::start(1, 1);
+        let payload = packed_payload(&server, &p, &data);
+
+        // Over-feed: the whole payload, then one extra word.
+        let mut s = server
+            .open_session(SessionRequest::new(p.clone(), 1_000))
+            .unwrap();
+        s.feed(&payload).unwrap();
+        let err = s.feed(&[0u64]).unwrap_err();
+        assert!(matches!(err, Error::InvalidRequest(_)), "{err:?}");
+        assert!(err.to_string().contains("over-fed"), "{err}");
+        // The rejected feed does not poison the session.
+        assert_eq!(s.finish().unwrap().decoded, data);
+
+        // Truncation: withhold the final word; finish names the first
+        // word the decoder still needs.
+        let mut s = server
+            .open_session(SessionRequest::new(p.clone(), 1_000))
+            .unwrap();
+        s.feed(&payload[..payload.len() - 1]).unwrap();
+        let err = s.finish().unwrap_err();
+        assert!(err.to_string().contains("still needs word"), "{err}");
+
+        // A chunk larger than the admitted tile is rejected typed.
+        let mut s = server
+            .open_session(SessionRequest::new(p.clone(), 1))
+            .unwrap();
+        let err = s.feed(&payload).unwrap_err();
+        assert!(err.to_string().contains("exceeds the admitted tile"), "{err}");
+        let snap = server.metrics_snapshot();
+        drop(s);
+        assert_eq!(snap.active_sessions, 1, "snapshot taken while open");
+        assert_eq!(server.metrics_snapshot().active_sessions, 0);
         server.shutdown();
     }
 }

@@ -30,7 +30,7 @@ pub mod program;
 
 pub use program::{
     CoalescedDecode, CoalescedDecodeStream, DecodeOp, DecodeProgram, DecodeSeg, DecodeStream,
-    PARALLEL_MIN_ELEMS,
+    OwnedCoalescedDecodeStream, OwnedDecodeStream, PARALLEL_MIN_ELEMS,
 };
 
 use crate::layout::fifo::FifoAnalysis;

@@ -198,45 +198,49 @@ impl DecodeProgram {
     /// [`DecodeStream::finish`].
     pub fn stream(&self) -> DecodeStream<'_> {
         DecodeStream {
+            core: StreamCore::new(self),
             prog: self,
-            cursors: vec![0; self.ops.len()],
-            outs: self.ops.iter().map(|v| Vec::with_capacity(v.len())).collect(),
-            carry: 0,
-            received: 0,
+        }
+    }
+
+    /// Owning variant of [`DecodeProgram::stream`] for long-lived
+    /// streaming sessions: the stream keeps the program behind an `Arc`,
+    /// so it can be stored in a session table without borrowing the
+    /// caller's frame.
+    pub fn stream_owned(prog: std::sync::Arc<DecodeProgram>) -> OwnedDecodeStream {
+        OwnedDecodeStream {
+            core: StreamCore::new(&prog),
+            prog,
         }
     }
 }
 
-/// Incremental word-fed decoder; see [`DecodeProgram::stream`]. State
-/// beyond the decoded outputs is one carry word: an element is emitted
-/// as soon as the word *after* its last source word arrives, and earlier
-/// words are forgotten.
-pub struct DecodeStream<'p> {
-    prog: &'p DecodeProgram,
+/// Incremental state shared by [`DecodeStream`] and
+/// [`OwnedDecodeStream`]: per-array op cursors, the decoded outputs, and
+/// one carry word. An element is emitted as soon as the word *after* its
+/// last source word arrives, and earlier words are forgotten.
+#[derive(Debug)]
+struct StreamCore {
     cursors: Vec<usize>,
     outs: Vec<Vec<u64>>,
     carry: u64,
     received: usize,
 }
 
-impl DecodeStream<'_> {
-    /// Total bus words consumed so far.
-    pub fn words_received(&self) -> usize {
-        self.received
+impl StreamCore {
+    fn new(prog: &DecodeProgram) -> StreamCore {
+        StreamCore {
+            cursors: vec![0; prog.ops.len()],
+            outs: prog.ops.iter().map(|v| Vec::with_capacity(v.len())).collect(),
+            carry: 0,
+            received: 0,
+        }
     }
 
-    /// Elements decoded so far, per array.
-    pub fn decoded_counts(&self) -> Vec<usize> {
-        self.outs.iter().map(|v| v.len()).collect()
-    }
-
-    /// Feed the next chunk of bus words (payload word order; the guard
-    /// word may or may not be included — trailing zeros are harmless).
-    pub fn push(&mut self, chunk: &[u64]) {
+    fn push(&mut self, prog: &DecodeProgram, chunk: &[u64]) {
         if chunk.is_empty() {
             return;
         }
-        let prog = self.prog;
         let base = self.received;
         let carry = self.carry;
         let frontier = base + chunk.len();
@@ -269,14 +273,10 @@ impl DecodeStream<'_> {
         self.received = frontier;
     }
 
-    /// Drain the boundary elements (fields ending exactly at the last
-    /// received word, whose straddle read resolves against an implicit
-    /// zero guard) and return the decoded streams. Errors if the words
-    /// pushed so far do not cover every element.
-    pub fn finish(mut self) -> Result<Vec<Vec<u64>>> {
+    fn finish(mut self, prog: &DecodeProgram) -> Result<Vec<Vec<u64>>> {
         let frontier = self.received;
         let carry = self.carry;
-        for (a, aops) in self.prog.ops.iter().enumerate() {
+        for (a, aops) in prog.ops.iter().enumerate() {
             for op in &aops[self.cursors[a]..] {
                 let s = op.src_word as usize;
                 // A field still pending at finish() may only be one that
@@ -296,6 +296,78 @@ impl DecodeStream<'_> {
             }
         }
         Ok(self.outs)
+    }
+}
+
+/// Incremental word-fed decoder; see [`DecodeProgram::stream`]. State
+/// beyond the decoded outputs is one carry word: an element is emitted
+/// as soon as the word *after* its last source word arrives, and earlier
+/// words are forgotten.
+pub struct DecodeStream<'p> {
+    prog: &'p DecodeProgram,
+    core: StreamCore,
+}
+
+impl DecodeStream<'_> {
+    /// Total bus words consumed so far.
+    pub fn words_received(&self) -> usize {
+        self.core.received
+    }
+
+    /// Elements decoded so far, per array.
+    pub fn decoded_counts(&self) -> Vec<usize> {
+        self.core.outs.iter().map(|v| v.len()).collect()
+    }
+
+    /// Feed the next chunk of bus words (payload word order; the guard
+    /// word may or may not be included — trailing zeros are harmless).
+    pub fn push(&mut self, chunk: &[u64]) {
+        self.core.push(self.prog, chunk);
+    }
+
+    /// Drain the boundary elements (fields ending exactly at the last
+    /// received word, whose straddle read resolves against an implicit
+    /// zero guard) and return the decoded streams. Errors if the words
+    /// pushed so far do not cover every element.
+    pub fn finish(self) -> Result<Vec<Vec<u64>>> {
+        self.core.finish(self.prog)
+    }
+}
+
+/// Session-owned twin of [`DecodeStream`] (see
+/// [`DecodeProgram::stream_owned`]); identical semantics, but the
+/// program travels with the stream behind an `Arc`.
+pub struct OwnedDecodeStream {
+    prog: std::sync::Arc<DecodeProgram>,
+    core: StreamCore,
+}
+
+impl OwnedDecodeStream {
+    /// Total bus words consumed so far.
+    pub fn words_received(&self) -> usize {
+        self.core.received
+    }
+
+    /// Elements decoded so far, per array.
+    pub fn decoded_counts(&self) -> Vec<usize> {
+        self.core.outs.iter().map(|v| v.len()).collect()
+    }
+
+    /// The program this stream decodes with.
+    pub fn program(&self) -> &DecodeProgram {
+        &self.prog
+    }
+
+    /// Feed the next chunk of bus words (same contract as
+    /// [`DecodeStream::push`]).
+    pub fn push(&mut self, chunk: &[u64]) {
+        self.core.push(&self.prog, chunk);
+    }
+
+    /// Drain boundary elements and return the decoded streams (same
+    /// contract as [`DecodeStream::finish`]).
+    pub fn finish(self) -> Result<Vec<Vec<u64>>> {
+        self.core.finish(&self.prog)
     }
 }
 
@@ -622,9 +694,40 @@ impl CoalescedDecode {
     /// chunks.
     pub fn stream(&self) -> CoalescedDecodeStream<'_> {
         CoalescedDecodeStream {
+            core: CoalescedStreamCore::new(self),
             prog: self,
-            cursors: vec![(0, 0); self.segs.len()],
-            outs: self
+        }
+    }
+
+    /// Owning variant of [`CoalescedDecode::stream`] for long-lived
+    /// streaming sessions (same rationale as
+    /// [`DecodeProgram::stream_owned`]).
+    pub fn stream_owned(prog: std::sync::Arc<CoalescedDecode>) -> OwnedCoalescedDecodeStream {
+        OwnedCoalescedDecodeStream {
+            core: CoalescedStreamCore::new(&prog),
+            prog,
+        }
+    }
+}
+
+/// Incremental state shared by [`CoalescedDecodeStream`] and
+/// [`OwnedCoalescedDecodeStream`]. Copy elements resolve as soon as
+/// their single source word arrives; residual gathers wait for the word
+/// after their last source word, exactly like [`StreamCore`].
+#[derive(Debug)]
+struct CoalescedStreamCore {
+    /// Per array: (segment index, elements consumed within it).
+    cursors: Vec<(usize, u32)>,
+    outs: Vec<Vec<u64>>,
+    carry: u64,
+    received: usize,
+}
+
+impl CoalescedStreamCore {
+    fn new(prog: &CoalescedDecode) -> CoalescedStreamCore {
+        CoalescedStreamCore {
+            cursors: vec![(0, 0); prog.segs.len()],
+            outs: prog
                 .lens
                 .iter()
                 .map(|&n| Vec::with_capacity(n))
@@ -633,35 +736,8 @@ impl CoalescedDecode {
             received: 0,
         }
     }
-}
 
-/// Incremental word-fed coalesced decoder; see
-/// [`CoalescedDecode::stream`]. Copy elements resolve as soon as their
-/// single source word arrives; residual gathers wait for the word after
-/// their last source word, exactly like [`DecodeStream`].
-pub struct CoalescedDecodeStream<'p> {
-    prog: &'p CoalescedDecode,
-    /// Per array: (segment index, elements consumed within it).
-    cursors: Vec<(usize, u32)>,
-    outs: Vec<Vec<u64>>,
-    carry: u64,
-    received: usize,
-}
-
-impl CoalescedDecodeStream<'_> {
-    /// Total bus words consumed so far.
-    pub fn words_received(&self) -> usize {
-        self.received
-    }
-
-    /// Elements decoded so far, per array.
-    pub fn decoded_counts(&self) -> Vec<usize> {
-        self.outs.iter().map(|v| v.len()).collect()
-    }
-
-    /// Feed the next chunk of bus words (payload word order; trailing
-    /// zeros such as the guard word are harmless).
-    pub fn push(&mut self, chunk: &[u64]) {
+    fn push(&mut self, prog: &CoalescedDecode, chunk: &[u64]) {
         if chunk.is_empty() {
             return;
         }
@@ -676,7 +752,7 @@ impl CoalescedDecodeStream<'_> {
                 carry
             }
         };
-        for (a, segs) in self.prog.segs.iter().enumerate() {
+        for (a, segs) in prog.segs.iter().enumerate() {
             let (mut si, mut done) = self.cursors[a];
             'segs: while si < segs.len() {
                 match &segs[si] {
@@ -721,13 +797,10 @@ impl CoalescedDecodeStream<'_> {
         self.received = frontier;
     }
 
-    /// Drain the boundary elements and return the decoded streams;
-    /// errors if the words pushed so far do not cover every element
-    /// (same contract as [`DecodeStream::finish`]).
-    pub fn finish(mut self) -> Result<Vec<Vec<u64>>> {
+    fn finish(mut self, prog: &CoalescedDecode) -> Result<Vec<Vec<u64>>> {
         let frontier = self.received;
         let carry = self.carry;
-        for (a, segs) in self.prog.segs.iter().enumerate() {
+        for (a, segs) in prog.segs.iter().enumerate() {
             let (mut si, mut done) = self.cursors[a];
             while si < segs.len() {
                 match &segs[si] {
@@ -766,6 +839,76 @@ impl CoalescedDecodeStream<'_> {
             }
         }
         Ok(self.outs)
+    }
+}
+
+/// Incremental word-fed coalesced decoder; see
+/// [`CoalescedDecode::stream`]. Same carry-word contract as
+/// [`DecodeStream`].
+pub struct CoalescedDecodeStream<'p> {
+    prog: &'p CoalescedDecode,
+    core: CoalescedStreamCore,
+}
+
+impl CoalescedDecodeStream<'_> {
+    /// Total bus words consumed so far.
+    pub fn words_received(&self) -> usize {
+        self.core.received
+    }
+
+    /// Elements decoded so far, per array.
+    pub fn decoded_counts(&self) -> Vec<usize> {
+        self.core.outs.iter().map(|v| v.len()).collect()
+    }
+
+    /// Feed the next chunk of bus words (payload word order; trailing
+    /// zeros such as the guard word are harmless).
+    pub fn push(&mut self, chunk: &[u64]) {
+        self.core.push(self.prog, chunk);
+    }
+
+    /// Drain the boundary elements and return the decoded streams;
+    /// errors if the words pushed so far do not cover every element
+    /// (same contract as [`DecodeStream::finish`]).
+    pub fn finish(self) -> Result<Vec<Vec<u64>>> {
+        self.core.finish(self.prog)
+    }
+}
+
+/// Session-owned twin of [`CoalescedDecodeStream`] (see
+/// [`CoalescedDecode::stream_owned`]); identical semantics, but the
+/// program travels with the stream behind an `Arc`.
+pub struct OwnedCoalescedDecodeStream {
+    prog: std::sync::Arc<CoalescedDecode>,
+    core: CoalescedStreamCore,
+}
+
+impl OwnedCoalescedDecodeStream {
+    /// Total bus words consumed so far.
+    pub fn words_received(&self) -> usize {
+        self.core.received
+    }
+
+    /// Elements decoded so far, per array.
+    pub fn decoded_counts(&self) -> Vec<usize> {
+        self.core.outs.iter().map(|v| v.len()).collect()
+    }
+
+    /// The program this stream decodes with.
+    pub fn program(&self) -> &CoalescedDecode {
+        &self.prog
+    }
+
+    /// Feed the next chunk of bus words (same contract as
+    /// [`CoalescedDecodeStream::push`]).
+    pub fn push(&mut self, chunk: &[u64]) {
+        self.core.push(&self.prog, chunk);
+    }
+
+    /// Drain boundary elements and return the decoded streams (same
+    /// contract as [`CoalescedDecodeStream::finish`]).
+    pub fn finish(self) -> Result<Vec<Vec<u64>>> {
+        self.core.finish(&self.prog)
     }
 }
 

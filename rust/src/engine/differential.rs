@@ -439,6 +439,9 @@ pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
         "cycle-decoder",
         "cosim-write",
         "cosim-read",
+        "chunked(streamed)",
+        "chunked(coalesced-stream)",
+        "chunked(compiled)",
     ] {
         let pair = ("reference".to_string(), partner.to_string());
         if !s.payload_pairs.contains(&pair) {
@@ -469,6 +472,9 @@ pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
         "cycle-decoder",
         "cosim-read",
         "cosim-write",
+        "chunked(streamed)",
+        "chunked(coalesced-stream)",
+        "chunked(compiled)",
     ] {
         if !s.decode_engines.contains(engine) {
             bail!("coverage regression: lost decode coverage for '{engine}'");

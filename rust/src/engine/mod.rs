@@ -110,6 +110,25 @@ impl BusLines {
     }
 }
 
+/// Tally of a chunked pack: how many chunks flowed, total payload
+/// words, and the largest single chunk — the resident high-water mark a
+/// bounded-memory consumer must absorb.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChunkStats {
+    pub chunks: u64,
+    pub words: u64,
+    pub max_chunk_words: usize,
+}
+
+impl ChunkStats {
+    /// Record one emitted chunk of `len` words.
+    pub fn note(&mut self, len: usize) {
+        self.chunks += 1;
+        self.words += len as u64;
+        self.max_chunk_words = self.max_chunk_words.max(len);
+    }
+}
+
 /// One execution path for a transfer. Engines sharing a
 /// [`Engine::pack_group`] must produce bit-identical [`BusLines`]; every
 /// engine's `decode` must recover the source arrays from its group's
@@ -138,6 +157,85 @@ pub trait Engine {
     /// in original problem order.
     fn decode(&self, problem: &Problem, layout: &Layout, lines: &BusLines)
         -> Result<Vec<ArrayData>>;
+
+    /// Stream the packed payload through `sink` as `(channel, words)`
+    /// chunks of about `tile_cycles` bus cycles each, in payload word
+    /// order per channel. The default materializes via [`Engine::pack`]
+    /// and re-chunks — correct for every engine, O(payload) resident —
+    /// so the chunked serving path can drive any registered engine;
+    /// engines with `caps().streaming` override it with a true
+    /// O(tile)-resident producer.
+    fn pack_chunks(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        data: &[ArrayData],
+        tile_cycles: u64,
+        sink: &mut dyn FnMut(usize, &[u64]) -> Result<()>,
+    ) -> Result<ChunkStats> {
+        let lines = self.pack(problem, layout, data)?;
+        let tile_words = chunk_words(problem, tile_cycles);
+        let mut stats = ChunkStats::default();
+        for (ci, ch) in lines.channels.iter().enumerate() {
+            for tile in ch.words.chunks(tile_words) {
+                stats.note(tile.len());
+                sink(ci, tile)?;
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Decode a transfer delivered as `(channel, words)` chunks (any
+    /// chunk sizes, payload word order per channel). The default
+    /// reassembles full per-channel buffers and calls
+    /// [`Engine::decode`]; streaming engines override it to hold only
+    /// carry-word state.
+    fn decode_chunks<'a>(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        chunks: &mut dyn Iterator<Item = (usize, &'a [u64])>,
+    ) -> Result<Vec<ArrayData>> {
+        let mut per_channel: Vec<Vec<u64>> = vec![Vec::new(); self.caps().channels];
+        for (ci, words) in chunks {
+            if ci >= per_channel.len() {
+                bail!(
+                    "engine '{}': chunk for channel {ci}, engine has {}",
+                    self.name(),
+                    per_channel.len()
+                );
+            }
+            per_channel[ci].extend_from_slice(words);
+        }
+        let single = per_channel.len() == 1;
+        let channels = per_channel
+            .into_iter()
+            .map(|words| {
+                // Payload bits are reconstructible for single-channel
+                // engines (`n_cycles × m`); multi-channel geometry is
+                // engine-internal, and no decode path reads `bits`.
+                let bits = if single {
+                    layout.n_cycles() * layout.m as u64
+                } else {
+                    words.len() as u64 * 64
+                };
+                ChannelLines { words, bits }
+            })
+            .collect();
+        self.decode(problem, layout, &BusLines { channels })
+    }
+}
+
+/// Words in a whole-cycle chunk of `tile_cycles` bus cycles (≥ 1).
+/// Shared by the materializing `pack_chunks` fallback and the chunk
+/// re-slicers so both sides of a differential pair cut identical tiles.
+/// Saturates instead of overflowing so an absurd `tile_cycles` reaches
+/// the server's admission check (and a clean `Overloaded`) rather than
+/// panicking.
+pub fn chunk_words(problem: &Problem, tile_cycles: u64) -> usize {
+    let bits = tile_cycles.max(1).saturating_mul(problem.m() as u64);
+    let words = (bits / 64).saturating_add(u64::from(bits % 64 != 0));
+    (usize::try_from(words).unwrap_or(usize::MAX)).max(1)
 }
 
 fn refs(data: &[ArrayData]) -> Vec<&[u64]> {
@@ -348,6 +446,42 @@ impl Engine for Streamed {
         }
         ds.finish()
     }
+
+    fn pack_chunks(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        data: &[ArrayData],
+        tile_cycles: u64,
+        sink: &mut dyn FnMut(usize, &[u64]) -> Result<()>,
+    ) -> Result<ChunkStats> {
+        let plan = PackPlan::compile(layout, problem);
+        let prog = PackProgram::compile(&plan);
+        let data_refs = refs(data);
+        let mut stats = ChunkStats::default();
+        for tile in prog.stream(&data_refs, tile_cycles.max(1))? {
+            stats.note(tile.len());
+            sink(0, &tile)?;
+        }
+        Ok(stats)
+    }
+
+    fn decode_chunks<'a>(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        chunks: &mut dyn Iterator<Item = (usize, &'a [u64])>,
+    ) -> Result<Vec<ArrayData>> {
+        let prog = DecodeProgram::compile(&DecodePlan::compile(layout, problem));
+        let mut ds = prog.stream();
+        for (ci, words) in chunks {
+            if ci != 0 {
+                bail!("engine 'streamed': chunk for channel {ci} on a single-channel engine");
+            }
+            ds.push(words);
+        }
+        ds.finish()
+    }
 }
 
 /// Run-coalesced engine: [`CoalescedPack`] / [`CoalescedDecode`] — bulk
@@ -464,6 +598,44 @@ impl Engine for CoalescedStreamed {
         }
         ds.finish()
     }
+
+    fn pack_chunks(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        data: &[ArrayData],
+        tile_cycles: u64,
+        sink: &mut dyn FnMut(usize, &[u64]) -> Result<()>,
+    ) -> Result<ChunkStats> {
+        let prog = CoalescedPack::compile(layout, problem);
+        let data_refs = refs(data);
+        let mut stats = ChunkStats::default();
+        for tile in prog.stream(&data_refs, tile_cycles.max(1))? {
+            stats.note(tile.len());
+            sink(0, &tile)?;
+        }
+        Ok(stats)
+    }
+
+    fn decode_chunks<'a>(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        chunks: &mut dyn Iterator<Item = (usize, &'a [u64])>,
+    ) -> Result<Vec<ArrayData>> {
+        let prog = CoalescedDecode::compile(layout, problem);
+        let mut ds = prog.stream();
+        for (ci, words) in chunks {
+            if ci != 0 {
+                bail!(
+                    "engine 'coalesced-stream': chunk for channel {ci} on a \
+                     single-channel engine"
+                );
+            }
+            ds.push(words);
+        }
+        ds.finish()
+    }
 }
 
 /// Cycle-accurate II=1 read-module model ([`StreamDecoder`]): packs via
@@ -564,6 +736,76 @@ impl Engine for CosimRead {
         let ch = single_channel(lines, "cosim-read")?;
         let trace = ReadCosim::new(layout, problem).run(&ch.to_buffer())?;
         Ok(trace.streams)
+    }
+}
+
+/// Adapter that routes an inner engine's transfers through its chunked
+/// surface: `pack` collects the [`Engine::pack_chunks`] tiles back into
+/// [`BusLines`], `decode` re-slices the lines into whole-cycle chunks
+/// and feeds [`Engine::decode_chunks`]. Registering these wrappers in
+/// [`engines_for`] makes the N-way harness prove chunked ==
+/// materialized bit-for-bit — both for true streaming engines and for
+/// the materializing default fallback.
+pub struct ChunkedEngine {
+    pub inner: Box<dyn Engine>,
+    pub tile_cycles: u64,
+}
+
+impl Engine for ChunkedEngine {
+    fn name(&self) -> String {
+        format!("chunked({})", self.inner.name())
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            streaming: true,
+            ..self.inner.caps()
+        }
+    }
+
+    fn pack_group(&self) -> String {
+        self.inner.pack_group()
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        let channels = self.inner.caps().channels;
+        let mut per_channel: Vec<Vec<u64>> = vec![Vec::new(); channels];
+        self.inner
+            .pack_chunks(problem, layout, data, self.tile_cycles, &mut |ci, tile| {
+                if ci >= per_channel.len() {
+                    bail!("chunked pack: chunk for channel {ci}, engine has {channels}");
+                }
+                per_channel[ci].extend_from_slice(tile);
+                Ok(())
+            })?;
+        let single = per_channel.len() == 1;
+        let channels = per_channel
+            .into_iter()
+            .map(|words| {
+                let bits = if single {
+                    layout.n_cycles() * layout.m as u64
+                } else {
+                    words.len() as u64 * 64
+                };
+                ChannelLines { words, bits }
+            })
+            .collect();
+        Ok(BusLines { channels })
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let tile_words = chunk_words(problem, self.tile_cycles);
+        let mut it = lines
+            .channels
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, ch)| ch.words.chunks(tile_words).map(move |tile| (ci, tile)));
+        self.inner.decode_chunks(problem, layout, &mut it)
     }
 }
 
@@ -684,6 +926,23 @@ pub fn engines_for(problem: &Problem, kind: LayoutKind) -> Vec<Box<dyn Engine>> 
         Box::new(CycleDecoder),
         Box::new(CosimWrite),
         Box::new(CosimRead),
+        // Chunked-surface adapters: a true streaming pack, a true
+        // streaming coalesced pack, and the materializing default
+        // fallback (compiled has no native streaming) — so every fuzz
+        // iteration proves chunked == materialized at a tile size
+        // different from the engines' own (5 vs 7 cycles).
+        Box::new(ChunkedEngine {
+            inner: Box::new(Streamed { tile_cycles: 5 }),
+            tile_cycles: 5,
+        }),
+        Box::new(ChunkedEngine {
+            inner: Box::new(CoalescedStreamed { tile_cycles: 5 }),
+            tile_cycles: 5,
+        }),
+        Box::new(ChunkedEngine {
+            inner: Box::new(Compiled),
+            tile_cycles: 5,
+        }),
     ];
     let n = problem.arrays.len();
     if n >= 2 {
@@ -750,6 +1009,9 @@ mod tests {
             "cycle-decoder",
             "cosim-write",
             "cosim-read",
+            "chunked(streamed)",
+            "chunked(coalesced-stream)",
+            "chunked(compiled)",
         ] {
             assert!(names.iter().any(|n| n == want), "missing {want}: {names:?}");
         }
@@ -763,8 +1025,33 @@ mod tests {
             match e.name().as_str() {
                 "streamed" | "coalesced-stream" | "cycle-decoder" => assert!(caps.streaming),
                 "cosim-read" | "cosim-write" => assert!(caps.cosim),
+                n if n.starts_with("chunked(") => assert!(caps.streaming),
                 n if n.starts_with("multichannel") => assert!(caps.channels > 1),
                 _ => assert_eq!(caps, EngineCaps::default()),
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_surface_matches_materialized_at_every_chunk_size() {
+        // Chunked == materialized must hold for every chunk geometry a
+        // session might feed: 1-cycle tiles, ragged tails, and tiles
+        // far larger than the payload — on an m ∉ 64ℤ bus.
+        let p = matmul_problem(33, 31);
+        let layout = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 0xC40C);
+        let reference = Reference.pack(&p, &layout, &data).unwrap();
+        for tile_cycles in [1, 2, 3, 7, 64, 10_000] {
+            for inner in [
+                Box::new(Streamed { tile_cycles }) as Box<dyn Engine>,
+                Box::new(CoalescedStreamed { tile_cycles }),
+                Box::new(Compiled),
+            ] {
+                let e = ChunkedEngine { inner, tile_cycles };
+                let lines = e.pack(&p, &layout, &data).unwrap();
+                assert_eq!(lines, reference, "{} tile_cycles={tile_cycles}", e.name());
+                let decoded = e.decode(&p, &layout, &lines).unwrap();
+                assert_eq!(decoded, data, "{} tile_cycles={tile_cycles}", e.name());
             }
         }
     }

@@ -17,8 +17,12 @@
 //!   dfg                  derive Table-5 due dates from the accelerator DFGs
 //!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
 //!                        [--wa W] [--wb W] [--algo ...] [--no-xla] [--cosim]
+//!                        [--chunk-bytes N] (stream the transfer as whole-cycle
+//!                        tiles of ~N bytes through a bounded-memory session)
 //!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
 //!                        [--channels K] [--cosim] [--engine auto|compiled|coalesced]
+//!                        [--stream] (persistent sessions + admission control;
+//!                        [--clients N] [--tile-cycles T])
 //!   dse                  width search demo [--lo W] [--hi W]
 //!   stats                serve a demo workload and dump coordinator telemetry
 //!                        [--requests N] [--workers N] [--channels K]
@@ -87,8 +91,10 @@ usage: iris <subcommand> [options]
   cosim FILE.json [--algo KIND] [--capacity analyzed|unbounded|N] [--seed S]
         [--trace OUT.json]
   e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla] [--cosim]
+      [--chunk-bytes N]
   serve [--workers N] [--requests N] [--batch B] [--channels K] [--cosim]
         [--engine auto|compiled|coalesced]
+        [--stream [--clients N] [--tile-cycles T]]
   dse [--lo W] [--hi W]
   stats [--requests N] [--workers N] [--channels K] [--format prom|json]
         [--trace OUT.json]
@@ -377,6 +383,15 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let kind = parse_kind(args.opt_str("algo", "iris"))?;
     let mut cfg = PipelineConfig::new(workload, kind);
     cfg.cosim = args.flag("cosim");
+    if let Some(s) = args.opt("chunk-bytes") {
+        let bytes: u64 = s
+            .parse()
+            .map_err(|_| anyhow!("--chunk-bytes takes a byte count, got '{s}'"))?;
+        // Whole-cycle tiles: one bus cycle carries m bits, so round the
+        // byte budget down to cycles (at least one).
+        let m = workload.problem().m() as u64;
+        cfg.chunk_cycles = Some((bytes.saturating_mul(8) / m).max(1));
+    }
     let mut rt = if args.flag("no-xla") {
         cfg.xla_unpack_check = false;
         None
@@ -393,6 +408,9 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("stream") {
+        return cmd_serve_stream(args);
+    }
     let workers = args.opt_u64("workers", 4)? as usize;
     let requests = args.opt_u64("requests", 64)?;
     let batch = args.opt_u64("batch", 8)? as usize;
@@ -435,6 +453,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("{}", server.metrics_snapshot());
     println!(
         "{ok}/{requests} exact; wall {:.1} ms; throughput {:.0} req/s",
+        dt.as_secs_f64() * 1e3,
+        requests as f64 / dt.as_secs_f64()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// `iris serve --stream`: the persistent-session streaming path. Each
+/// client thread packs its transfer tile-by-tile and feeds whole-cycle
+/// chunks into an admission-controlled [`LayoutServer`] session, backing
+/// off on `Overloaded` — so the demo exercises bounded resident memory
+/// and backpressure end to end.
+fn cmd_serve_stream(args: &Args) -> Result<()> {
+    use iris::coordinator::server::{ServerConfig, SessionRequest};
+    use iris::coordinator::Error;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let workers = args.opt_u64("workers", 4)? as usize;
+    let requests = args.opt_u64("requests", 64)?;
+    let clients = (args.opt_u64("clients", 8)? as usize).max(1);
+    let tile_cycles = args.opt_u64("tile-cycles", 8)?.max(1);
+    let server = LayoutServer::with_config(ServerConfig {
+        workers,
+        ..ServerConfig::default()
+    });
+    let t0 = std::time::Instant::now();
+    let next = AtomicU64::new(0);
+    let ok = AtomicU64::new(0);
+    let retried = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            s.spawn(|| loop {
+                let seed = next.fetch_add(1, Ordering::Relaxed);
+                if seed >= requests {
+                    break;
+                }
+                let p = pipeline::synthetic_problem(8, seed);
+                let data = pipeline::synthetic_data(&p, seed);
+                // Client-side pack through the server's shared cache, so
+                // the session's layout matches bit for bit.
+                let layout = server.cache.layout_for(LayoutKind::Iris, &p);
+                let plan = iris::pack::PackPlan::compile(&layout, &p);
+                let prog = iris::pack::PackProgram::compile(&plan);
+                let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+                let mut session = loop {
+                    match server.open_session(SessionRequest::new(p.clone(), tile_cycles)) {
+                        Ok(sess) => break sess,
+                        Err(Error::Overloaded { retry_after }) => {
+                            retried.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(retry_after);
+                        }
+                        Err(e) => panic!("open_session: {e}"),
+                    }
+                };
+                let tile_words = session.tile_words();
+                for tile in prog.stream(&refs, tile_cycles).expect("pack stream") {
+                    for part in tile.chunks(tile_words) {
+                        session.feed(part).expect("session feed");
+                    }
+                }
+                let report = session.finish().expect("session finish");
+                if report.decoded == data {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed();
+    println!("{}", server.metrics_snapshot());
+    println!(
+        "{}/{requests} exact (streamed; {} overload retries); wall {:.1} ms; {:.0} sessions/s",
+        ok.load(Ordering::Relaxed),
+        retried.load(Ordering::Relaxed),
         dt.as_secs_f64() * 1e3,
         requests as f64 / dt.as_secs_f64()
     );

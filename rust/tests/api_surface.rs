@@ -55,7 +55,7 @@ fn surface_of(dir: &str, files: &[&str]) -> String {
 fn surface() -> String {
     surface_of(
         "rust/src/coordinator",
-        &["mod.rs", "error.rs", "pipeline.rs", "server.rs"],
+        &["mod.rs", "error.rs", "pipeline.rs", "proto.rs", "server.rs"],
     )
 }
 
@@ -146,9 +146,20 @@ fn coordinator_api_surface_has_the_load_bearing_items() {
         "server.rs: pub struct ServerConfig {",
         "server.rs: pub fn with_config(",
         "server.rs: pub fn metrics_snapshot(",
+        "server.rs: pub fn open_session(",
+        "server.rs: pub struct Session {",
+        "server.rs: pub struct SessionReport {",
+        "server.rs: pub fn feed(",
+        "server.rs: pub fn finish(",
+        "proto.rs: pub enum Frame {",
+        "proto.rs: pub struct FrameWriter {",
+        "proto.rs: pub struct FrameReader<'a> {",
+        "proto.rs: pub fn problem_signature(",
         "mod.rs: pub struct MetricsSnapshot {",
         "mod.rs: pub fn snapshot(",
         "pipeline.rs: pub fn parse(",
+        "pipeline.rs: pub fn with_chunking(",
+        "pipeline.rs: pub struct StreamStats {",
     ] {
         assert!(s.contains(needle), "missing from coordinator surface: {needle}\n{s}");
     }

@@ -12,6 +12,9 @@
 //! iteration acceptance run lives in `examples/fuzz_smoke.rs`, built in
 //! release mode by the CI `fuzz-smoke` job.
 
+use iris::coordinator::proto::{problem_signature, Frame, FrameReader, FrameWriter, HeaderFrame};
+use iris::coordinator::server::{LayoutServer, ServerConfig, SessionRequest};
+use iris::coordinator::Error;
 use iris::decode::{DecodePlan, DecodeProgram};
 use iris::engine::differential::{
     check_legacy_pair_coverage, fuzz_nway, run_nway, run_nway_with_flip, seeded_data, FlipBit,
@@ -102,6 +105,138 @@ fn truncated_stream_errors_rather_than_returning_short_data() {
     let err = truncated.finish().unwrap_err().to_string();
     assert!(err.contains("decode stream"), "{err}");
     assert!(err.contains("still needs"), "{err}");
+}
+
+#[test]
+fn overfed_and_truncated_sessions_are_typed_errors() {
+    // The serving surface over DecodeStream: feeding past the declared
+    // payload, feeding a chunk above the admitted tile, and finishing a
+    // short feed must each be a pointed typed error — never short or
+    // padded arrays.
+    let p = paper_example();
+    let layout = iris_layout(&p);
+    let plan = PackPlan::compile(&layout, &p);
+    let data = seeded_data(&p, 0xFEED);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = PackProgram::compile(&plan).pack(&refs).unwrap();
+    let payload = &buf.words()[..plan.payload_words()];
+    let server = LayoutServer::with_config(ServerConfig::default());
+
+    // Well-formed session round-trips (control).
+    let mut s = server.open_session(SessionRequest::new(p.clone(), 2)).unwrap();
+    for chunk in payload.chunks(s.tile_words()) {
+        s.feed(chunk).unwrap();
+    }
+    assert_eq!(s.finish().unwrap().decoded, data);
+
+    // Over-fed: one word past the declared payload.
+    let mut s = server.open_session(SessionRequest::new(p.clone(), 2)).unwrap();
+    for chunk in payload.chunks(s.tile_words()) {
+        s.feed(chunk).unwrap();
+    }
+    let err = s.feed(&[0]).unwrap_err();
+    assert!(matches!(err, Error::InvalidRequest(_)), "{err:?}");
+    assert!(err.to_string().contains("over-fed"), "{err}");
+
+    // Chunk above the admitted tile.
+    let mut s = server.open_session(SessionRequest::new(p.clone(), 1)).unwrap();
+    let too_big = vec![0u64; s.tile_words() + 1];
+    let err = s.feed(&too_big).unwrap_err();
+    assert!(err.to_string().contains("exceeds the admitted tile"), "{err}");
+
+    // Truncated: everything but the final word, then finish.
+    let mut s = server.open_session(SessionRequest::new(p.clone(), 2)).unwrap();
+    for chunk in payload[..payload.len() - 1].chunks(s.tile_words()) {
+        s.feed(chunk).unwrap();
+    }
+    let err = s.finish().unwrap_err();
+    assert!(err.to_string().contains("still needs"), "{err}");
+    server.shutdown();
+}
+
+#[test]
+fn framed_stream_corruption_is_pointed_not_silent() {
+    // End to end through the wire protocol on a real packed stream: an
+    // intact wire reproduces the materialized payload exactly; a flipped
+    // bit in flight is reported with the index of the frame it
+    // corrupted; a short final frame is a typed truncation error. In no
+    // case does wrong payload reach the decoder silently.
+    let p = paper_example();
+    let layout = iris_layout(&p);
+    let plan = PackPlan::compile(&layout, &p);
+    let prog = PackProgram::compile(&plan);
+    let data = seeded_data(&p, 0x51CC);
+    let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+    let buf = prog.pack(&refs).unwrap();
+    let payload = &buf.words()[..plan.payload_words()];
+
+    let tile_cycles = 2u64;
+    let mut w = FrameWriter::new();
+    w.header(HeaderFrame {
+        signature: problem_signature(&p),
+        n_arrays: p.arrays.len() as u32,
+        bus_bits: p.m(),
+        payload_words: plan.payload_words() as u64,
+        tile_words: iris::engine::chunk_words(&p, tile_cycles) as u32,
+        kind: "iris".into(),
+        engine: "auto".into(),
+    });
+    for tile in prog.stream(&refs, tile_cycles).unwrap() {
+        w.payload(&tile);
+    }
+    assert!(w.payload_frames() >= 2, "stream too short to corrupt frame 1");
+    let wire = w.trailer(0);
+
+    // Control: the intact wire reconstructs the materialized payload.
+    let mut r = FrameReader::new(&wire);
+    let mut words = Vec::new();
+    while let Some(f) = r.next_frame().unwrap() {
+        if let Frame::Payload { words: tile, .. } = f {
+            words.extend(tile);
+        }
+    }
+    assert_eq!(words, payload, "framed payload diverged from materialized");
+
+    // Flip one bit inside payload frame 1's words (frame offsets found
+    // by walking the intact wire frame by frame).
+    let mut pos = 0;
+    let mut frame_starts = Vec::new();
+    while pos < wire.len() {
+        let (f, used) = Frame::decode(&wire[pos..]).unwrap();
+        if matches!(f, Frame::Payload { .. }) {
+            frame_starts.push(pos);
+        }
+        pos += used;
+    }
+    let mut corrupted = wire.clone();
+    // body_len(4) + tag(1) + index(4) + n_words(4) → first payload word.
+    corrupted[frame_starts[1] + 13] ^= 0x10;
+    let mut r = FrameReader::new(&corrupted);
+    let err = loop {
+        match r.next_frame() {
+            Ok(Some(_)) => continue,
+            Ok(None) => panic!("flipped bit went undetected"),
+            Err(e) => break e,
+        }
+    };
+    assert!(matches!(err, Error::InvalidRequest(_)), "{err:?}");
+    assert!(
+        err.to_string().contains("payload frame 1 checksum mismatch"),
+        "diagnostic must name the corrupted frame: {}",
+        err
+    );
+
+    // Short final frame: cut the wire mid-trailer.
+    let mut r = FrameReader::new(&wire[..wire.len() - 3]);
+    let err = loop {
+        match r.next_frame() {
+            Ok(Some(_)) => continue,
+            Ok(None) => panic!("short final frame went undetected"),
+            Err(e) => break e,
+        }
+    };
+    assert!(matches!(err, Error::InvalidRequest(_)), "{err:?}");
+    assert!(err.to_string().contains("truncated"), "{err}");
 }
 
 #[test]

@@ -41,6 +41,14 @@ fn seeded_metrics() -> Metrics {
     m.cosim_validations.fetch_add(1, Ordering::Relaxed);
     m.transfers.record_engine("compiled", 4096, 1024, 900, 1000);
     m.transfers.record_channel(0, 2048, 512, 450, 500);
+    // Streaming-session gauges: 2 admitted (1 still open), 1 rejected,
+    // 4 KiB resident now with an 8 KiB high-water mark.
+    m.sessions_opened.fetch_add(2, Ordering::Relaxed);
+    m.active_sessions.fetch_add(1, Ordering::Relaxed);
+    m.sessions_rejected.fetch_add(1, Ordering::Relaxed);
+    m.in_flight_add(4096);
+    m.in_flight_add(4096);
+    m.in_flight_sub(4096);
     m
 }
 
@@ -97,11 +105,19 @@ fn prometheus_exposition_is_structurally_complete() {
         "iris_engine_beff{engine=\"compiled\"} 0.9",
         "iris_channel_bytes_total{channel=\"0\"} 2048",
         "iris_channel_beff{channel=\"0\"} 0.9",
+        "iris_errors_total{kind=\"overloaded\"} 0",
+        "# TYPE iris_in_flight_bytes gauge",
+        "iris_in_flight_bytes 4096",
+        "iris_in_flight_bytes_peak 8192",
+        "# TYPE iris_active_sessions gauge",
+        "iris_active_sessions 1",
+        "iris_sessions_total 2",
+        "iris_sessions_rejected_total 1",
     ] {
         assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
     }
     // Every kind label is present, zero or not (stable dashboard shape).
-    assert_eq!(text.matches("iris_errors_total{kind=").count(), 7);
+    assert_eq!(text.matches("iris_errors_total{kind=").count(), 8);
 }
 
 #[test]
