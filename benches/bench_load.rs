@@ -26,7 +26,7 @@ use iris::layout::LayoutKind;
 use iris::pack::{PackPlan, PackProgram};
 
 /// Wrap an already-measured quantity (the load run's p99, the sustained
-/// run) as a `Stats` row so the thresholds gate and `BENCH_9.json` see
+/// run) as a `Stats` row so the thresholds gate and `BENCH_10.json` see
 /// it alongside the `Bencher` measurements.
 fn scalar_stat(name: &str, median_ns: f64, samples: usize, bytes: Option<u64>) -> Stats {
     Stats {

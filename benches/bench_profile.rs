@@ -1,0 +1,62 @@
+//! Bench: the cycle-level bandwidth profiler — what the timed bus model
+//! costs inside the read co-simulator, and the end-to-end price of a
+//! `profile_problem` sweep (layout + per-channel timed run + report).
+//!
+//! Gated by the `profile ` rules in `benchkit/thresholds.json`: the
+//! timed run must stay within a constant factor of the untimed
+//! structural run (the timer is a few compares per cycle, not a second
+//! simulator), and the timed structural throughput holds a conservative
+//! absolute floor.
+
+use iris::baselines;
+use iris::benchkit::{black_box, emit_bench_json, finish_gate, parse_bench_args, section, Bencher};
+use iris::cosim::{BusTiming, Capacity, ReadCosim};
+use iris::layout::LayoutKind;
+use iris::model::{helmholtz_problem, matmul_problem, Problem};
+use iris::obs::profile_problem;
+
+fn bench_workload(name: &str, p: &Problem, b: &Bencher, stats: &mut Vec<iris::benchkit::Stats>) {
+    let l = baselines::generate(LayoutKind::Iris, p);
+    let bytes = p.total_bits() / 8;
+    let b = b.clone().with_bytes(bytes);
+
+    stats.push(b.run(&format!("profile read {name} (untimed)"), || {
+        black_box(
+            ReadCosim::new(&l, p)
+                .with_capacity(Capacity::Analyzed)
+                .run_structural()
+                .unwrap(),
+        );
+    }));
+    let timing = BusTiming::hbm2();
+    stats.push(b.run(&format!("profile read {name} (timed hbm2)"), || {
+        black_box(
+            ReadCosim::new(&l, p)
+                .with_capacity(Capacity::Analyzed)
+                .with_timing(timing.clone())
+                .run_structural()
+                .unwrap(),
+        );
+    }));
+    stats.push(b.run(&format!("profile report {name} (k=2)"), || {
+        let r = profile_problem(p, LayoutKind::Iris, 2, &timing, &Capacity::Unbounded).unwrap();
+        black_box(r.measured_beff());
+    }));
+}
+
+fn main() {
+    let args = parse_bench_args();
+    let b = if args.quick {
+        Bencher::smoke()
+    } else {
+        Bencher::quick()
+    };
+    let mut stats = Vec::new();
+    section("cycle-level bandwidth profiler");
+    bench_workload("helmholtz", &helmholtz_problem(), &b, &mut stats);
+    if !args.quick {
+        bench_workload("matmul(33,31)", &matmul_problem(33, 31), &b, &mut stats);
+    }
+    emit_bench_json("bench_profile", &args, &stats);
+    finish_gate("bench_profile", "profile ", &args, &stats);
+}

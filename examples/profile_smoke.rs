@@ -1,0 +1,80 @@
+//! CI profile smoke gate (profile-smoke job): run the cycle-level
+//! bandwidth profiler over the paper's workloads under the HBM2 timing
+//! model and hard-fail unless
+//!
+//! * every timed channel-cycle is attributed to exactly one cause (the
+//!   conservation invariant — zero unattributed cycles),
+//! * the Iris layout sustains at least the measured bandwidth
+//!   efficiency of the due-aligned naive baseline on the same problem,
+//! * the naive layout loses at least as many cycles to burst re-arms as
+//!   Iris does (it streams strictly more lines for the same payload),
+//! * measured b_eff never exceeds the idealized one-line-per-cycle
+//!   figure.
+//!
+//! Run: `cargo run --release --example profile_smoke`
+
+use iris::cosim::{BusTiming, Capacity, CycleCause};
+use iris::layout::LayoutKind;
+use iris::model::{helmholtz_problem, matmul_problem, Problem};
+use iris::obs::{profile_problem, StallBreakdown};
+
+fn profile(name: &str, p: &Problem, kind: LayoutKind) -> anyhow::Result<StallBreakdown> {
+    let r = profile_problem(p, kind, 1, &BusTiming::hbm2(), &Capacity::Analyzed)?;
+    r.verify_conservation()?;
+    if r.payload_bits() != p.total_bits() {
+        anyhow::bail!(
+            "{name}/{}: profiled {} payload bits, problem has {}",
+            kind.name(),
+            r.payload_bits(),
+            p.total_bits()
+        );
+    }
+    if r.measured_beff() > r.idealized_beff() + 1e-12 {
+        anyhow::bail!(
+            "{name}/{}: measured b_eff {:.4} exceeds idealized {:.4}",
+            kind.name(),
+            r.measured_beff(),
+            r.idealized_beff()
+        );
+    }
+    Ok(r)
+}
+
+fn check(name: &str, p: &Problem) -> anyhow::Result<()> {
+    let iris = profile(name, p, LayoutKind::Iris)?;
+    let naive = profile(name, p, LayoutKind::DueAlignedNaive)?;
+
+    if iris.measured_beff() + 1e-12 < naive.measured_beff() {
+        anyhow::bail!(
+            "{name}: iris measured b_eff {:.4} below due-aligned naive {:.4}",
+            iris.measured_beff(),
+            naive.measured_beff()
+        );
+    }
+    // Same payload over strictly more lines: the naive layout re-arms
+    // the burst engine at least as often as Iris.
+    let ib = iris.count(CycleCause::BurstBreak);
+    let nb = naive.count(CycleCause::BurstBreak);
+    if nb < ib {
+        anyhow::bail!("{name}: naive paid {nb} burst re-arms, iris paid {ib}");
+    }
+
+    println!(
+        "profile smoke [{name}]: iris {:.4} measured / {:.4} ideal ({} burst re-arms) | \
+         naive {:.4} measured / {:.4} ideal ({} burst re-arms) | OK",
+        iris.measured_beff(),
+        iris.idealized_beff(),
+        ib,
+        naive.measured_beff(),
+        naive.idealized_beff(),
+        nb
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    check("helmholtz", &helmholtz_problem())?;
+    check("matmul(33,31)", &matmul_problem(33, 31))?;
+    println!("profile smoke: all gates passed");
+    Ok(())
+}

@@ -55,7 +55,7 @@ impl Stats {
     }
 
     /// Machine-readable form of one measurement (the shape written to
-    /// `BENCH_9.json` by [`emit_bench_json`]).
+    /// `BENCH_10.json` by [`emit_bench_json`]).
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", Json::Str(self.name.clone()));
@@ -233,7 +233,7 @@ pub fn compare(label: &str, contender: &Stats, baseline: &Stats) {
 ///   `benchkit/thresholds.json` under `CARGO_MANIFEST_DIR`);
 /// * `--json` / `--json=<path>` (or env `IRIS_BENCH_JSON=<path>`) —
 ///   after running, merge this bench's stats into a machine-readable
-///   results file (default `BENCH_9.json` under `CARGO_MANIFEST_DIR`).
+///   results file (default `BENCH_10.json` under `CARGO_MANIFEST_DIR`).
 ///
 /// Unknown flags (e.g. the `--bench` cargo appends) are ignored.
 #[derive(Debug, Clone, Default)]
@@ -254,8 +254,8 @@ pub fn default_thresholds_path() -> String {
 /// Default location of the machine-readable bench results file.
 pub fn default_bench_json_path() -> String {
     match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(dir) => format!("{dir}/BENCH_9.json"),
-        Err(_) => "BENCH_9.json".to_string(),
+        Ok(dir) => format!("{dir}/BENCH_10.json"),
+        Err(_) => "BENCH_10.json".to_string(),
     }
 }
 
@@ -469,7 +469,7 @@ pub fn finish_gate(bench: &str, prefix: &str, args: &BenchArgs, stats: &[Stats])
 /// Merge this bench's stats into the machine-readable results file named
 /// by `args.json` (a no-op when not requested). The document is an
 /// object keyed by bench binary name, so the hot-path benches compose
-/// into one `BENCH_9.json` when run in sequence; re-running a bench
+/// into one `BENCH_10.json` when run in sequence; re-running a bench
 /// replaces only its own entry.
 pub fn emit_bench_json(bench: &str, args: &BenchArgs, stats: &[Stats]) {
     let Some(path) = &args.json else {

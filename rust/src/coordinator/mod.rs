@@ -12,6 +12,7 @@ pub mod server;
 
 pub use error::{Error, ErrorKind};
 
+use crate::cosim::{ChannelProfile, CycleCause};
 use crate::obs::{FlowSnapshot, Histogram, HistogramSnapshot, Telemetry};
 use error::ErrorKindCounters;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -81,6 +82,16 @@ pub struct Metrics {
     /// Streaming sessions rejected by admission control
     /// ([`Error::Overloaded`]) because a byte budget was exhausted.
     pub sessions_rejected: AtomicU64,
+    /// Channel-cycles from timed co-simulation runs
+    /// ([`crate::cosim::BusTiming`]), attributed by
+    /// [`CycleCause::index`] — the conservation invariant guarantees
+    /// these sum to every timed cycle the server simulated.
+    pub stall_cycles: [AtomicU64; 6],
+    /// Payload bits moved by timed runs (numerator of measured b_eff).
+    pub bus_payload_bits: AtomicU64,
+    /// Held-bus capacity bits of timed runs (`held cycles × m`, the
+    /// denominator of measured b_eff).
+    pub bus_held_bits: AtomicU64,
 }
 
 impl Metrics {
@@ -152,6 +163,25 @@ impl Metrics {
         self.channels_served.fetch_add(channels, Ordering::Relaxed);
     }
 
+    /// Fold one timed run's cycle profile into the stall-attribution
+    /// counters and the measured-b_eff accumulators.
+    pub fn record_bus_profile(&self, profile: &ChannelProfile, payload_bits: u64, m: u64) {
+        for cause in CycleCause::ALL {
+            self.stall_cycles[cause.index()].fetch_add(profile.count(cause), Ordering::Relaxed);
+        }
+        self.bus_payload_bits.fetch_add(payload_bits, Ordering::Relaxed);
+        self.bus_held_bits
+            .fetch_add(profile.bus_held_cycles() * m, Ordering::Relaxed);
+    }
+
+    /// Fold a whole [`StallBreakdown`](crate::obs::StallBreakdown)
+    /// (every channel of a profiled run) into the counters.
+    pub fn record_profile_report(&self, report: &crate::obs::StallBreakdown) {
+        for ch in &report.channels {
+            self.record_bus_profile(&ch.profile, ch.payload_bits, report.m);
+        }
+    }
+
     /// Reserve `bytes` of resident streamed payload against the
     /// in-flight gauge and advance the peak high-water mark.
     pub fn in_flight_add(&self, bytes: u64) {
@@ -182,6 +212,7 @@ impl Metrics {
     /// serializing. Individual loads are relaxed, so counters touched by
     /// concurrent workers may be mutually skewed by in-flight requests.
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let tracer = crate::obs::global();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -207,6 +238,18 @@ impl Metrics {
             active_sessions: self.active_sessions.load(Ordering::Relaxed),
             sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
             sessions_rejected: self.sessions_rejected.load(Ordering::Relaxed),
+            stall_cycles_by_cause: CycleCause::ALL
+                .iter()
+                .map(|c| {
+                    let n = self.stall_cycles[c.index()].load(Ordering::Relaxed);
+                    (c.label().to_string(), n)
+                })
+                .collect(),
+            bus_payload_bits: self.bus_payload_bits.load(Ordering::Relaxed),
+            bus_held_bits: self.bus_held_bits.load(Ordering::Relaxed),
+            tracer_spans_started: tracer.started(),
+            tracer_spans_finished: tracer.finished(),
+            tracer_dropped: tracer.dropped(),
         }
     }
 
@@ -255,9 +298,34 @@ pub struct MetricsSnapshot {
     pub active_sessions: u64,
     pub sessions_opened: u64,
     pub sessions_rejected: u64,
+    /// `(cause label, channel-cycles)` per [`CycleCause`], canonical
+    /// order, from timed co-simulation runs.
+    pub stall_cycles_by_cause: Vec<(String, u64)>,
+    /// Payload bits moved by timed runs.
+    pub bus_payload_bits: u64,
+    /// Held-bus capacity bits of timed runs (measured-b_eff denominator).
+    pub bus_held_bits: u64,
+    /// Spans started by the process-global tracer (0 while disabled).
+    pub tracer_spans_started: u64,
+    /// Spans finished by the process-global tracer — started minus
+    /// finished is the open-span balance.
+    pub tracer_spans_finished: u64,
+    /// Span records dropped by the tracer's bounded ring buffer.
+    pub tracer_dropped: u64,
 }
 
 impl MetricsSnapshot {
+    /// Measured bandwidth efficiency across every timed run the server
+    /// profiled: payload bits over held-bus capacity bits (0.0 before
+    /// any timed run).
+    pub fn bus_measured_beff(&self) -> f64 {
+        if self.bus_held_bits == 0 {
+            0.0
+        } else {
+            self.bus_payload_bits as f64 / self.bus_held_bits as f64
+        }
+    }
+
     /// Serialize every field under its struct name (rates as fractions,
     /// latencies in raw nanoseconds — no human formatting).
     pub fn to_json(&self) -> crate::util::json::Json {
@@ -301,7 +369,24 @@ impl MetricsSnapshot {
                 "sessions_rejected",
                 Json::Num(self.sessions_rejected as f64),
             )
+            .set("bus_payload_bits", Json::Num(self.bus_payload_bits as f64))
+            .set("bus_held_bits", Json::Num(self.bus_held_bits as f64))
+            .set("bus_measured_beff", Json::Num(self.bus_measured_beff()))
+            .set(
+                "tracer_spans_started",
+                Json::Num(self.tracer_spans_started as f64),
+            )
+            .set(
+                "tracer_spans_finished",
+                Json::Num(self.tracer_spans_finished as f64),
+            )
+            .set("tracer_dropped", Json::Num(self.tracer_dropped as f64))
             .set("latency", self.latency.to_json());
+        let mut stalls = Json::obj();
+        for (label, cycles) in &self.stall_cycles_by_cause {
+            stalls.set(label, Json::Num(*cycles as f64));
+        }
+        o.set("stall_cycles_by_cause", stalls);
         let mut kinds = Json::obj();
         for (label, count) in &self.errors_by_kind {
             kinds.set(label, Json::Num(*count as f64));
@@ -342,6 +427,20 @@ impl MetricsSnapshot {
                 (k.label().to_string(), count)
             })
             .collect();
+        // Stall attribution and tracer stats default to zero so
+        // pre-profiler snapshots still deserialize.
+        let stalls_obj = j.get("stall_cycles_by_cause");
+        let stall_cycles_by_cause = CycleCause::ALL
+            .iter()
+            .map(|c| {
+                let cycles = stalls_obj
+                    .and_then(|s| s.get(c.label()))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0) as u64;
+                (c.label().to_string(), cycles)
+            })
+            .collect();
+        let opt = |key: &str| num(key).unwrap_or(0.0) as u64;
         Some(MetricsSnapshot {
             requests: num("requests")? as u64,
             completed: num("completed")? as u64,
@@ -367,6 +466,12 @@ impl MetricsSnapshot {
             active_sessions: num("active_sessions")? as u64,
             sessions_opened: num("sessions_opened")? as u64,
             sessions_rejected: num("sessions_rejected")? as u64,
+            stall_cycles_by_cause,
+            bus_payload_bits: opt("bus_payload_bits"),
+            bus_held_bits: opt("bus_held_bits"),
+            tracer_spans_started: opt("tracer_spans_started"),
+            tracer_spans_finished: opt("tracer_spans_finished"),
+            tracer_dropped: opt("tracer_dropped"),
         })
     }
 
@@ -484,6 +589,63 @@ impl MetricsSnapshot {
             "iris_sessions_rejected_total",
             "",
             self.sessions_rejected as f64,
+        );
+        prom_header(
+            &mut out,
+            "iris_stall_cycles_total",
+            "counter",
+            "timed-cosim channel-cycles by cause",
+        );
+        for (label, cycles) in &self.stall_cycles_by_cause {
+            prom_line(
+                &mut out,
+                "iris_stall_cycles_total",
+                &format!("cause=\"{label}\""),
+                *cycles as f64,
+            );
+        }
+        prom_header(
+            &mut out,
+            "iris_bus_measured_beff",
+            "gauge",
+            "measured bandwidth efficiency under the bus timing model",
+        );
+        prom_line(&mut out, "iris_bus_measured_beff", "", self.bus_measured_beff());
+        prom_header(
+            &mut out,
+            "iris_tracer_spans_started_total",
+            "counter",
+            "spans started by the global tracer",
+        );
+        prom_line(
+            &mut out,
+            "iris_tracer_spans_started_total",
+            "",
+            self.tracer_spans_started as f64,
+        );
+        prom_header(
+            &mut out,
+            "iris_tracer_spans_finished_total",
+            "counter",
+            "spans finished by the global tracer",
+        );
+        prom_line(
+            &mut out,
+            "iris_tracer_spans_finished_total",
+            "",
+            self.tracer_spans_finished as f64,
+        );
+        prom_header(
+            &mut out,
+            "iris_tracer_dropped_total",
+            "counter",
+            "span records dropped by the tracer ring buffer",
+        );
+        prom_line(
+            &mut out,
+            "iris_tracer_dropped_total",
+            "",
+            self.tracer_dropped as f64,
         );
         for (family, help, pick) in [
             (
@@ -730,6 +892,42 @@ mod tests {
         assert!(s.to_prometheus().contains("iris_in_flight_bytes_peak 1500"));
         let parsed =
             crate::util::json::parse(&s.to_json().to_string_compact()).unwrap();
+        assert_eq!(MetricsSnapshot::from_json(&parsed).unwrap(), s);
+    }
+
+    #[test]
+    fn bus_profile_counters_attribute_stall_causes() {
+        let m = Metrics::default();
+        let mut pr = ChannelProfile::default();
+        for _ in 0..8 {
+            pr.record(CycleCause::DataBeat);
+        }
+        pr.record(CycleCause::BurstBreak);
+        pr.record(CycleCause::FifoStall);
+        pr.record(CycleCause::Idle);
+        m.record_bus_profile(&pr, 4000, 512);
+        let s = m.snapshot();
+        let by: std::collections::BTreeMap<String, u64> =
+            s.stall_cycles_by_cause.iter().cloned().collect();
+        assert_eq!(by["data_beat"], 8);
+        assert_eq!(by["burst_break"], 1);
+        assert_eq!(by["fifo_stall"], 1);
+        assert_eq!(by["idle"], 1);
+        // Conservation carries through: categories sum to every timed
+        // cycle recorded.
+        let total: u64 = s.stall_cycles_by_cause.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 11);
+        assert_eq!(s.bus_payload_bits, 4000);
+        // Held cycles exclude the idle one: 10 × 512 bits.
+        assert_eq!(s.bus_held_bits, 10 * 512);
+        assert!((s.bus_measured_beff() - 4000.0 / 5120.0).abs() < 1e-12);
+        let text = s.to_prometheus();
+        assert!(text.contains("iris_stall_cycles_total{cause=\"burst_break\"} 1"));
+        assert!(text.contains("iris_stall_cycles_total{cause=\"data_beat\"} 8"));
+        assert!(text.contains("iris_bus_measured_beff 0.78125"));
+        assert!(text.contains("iris_tracer_dropped_total"));
+        // JSON round-trip keeps the stall attribution and tracer stats.
+        let parsed = crate::util::json::parse(&s.to_json().to_string_compact()).unwrap();
         assert_eq!(MetricsSnapshot::from_json(&parsed).unwrap(), s);
     }
 

@@ -112,6 +112,13 @@ pub struct PipelineConfig {
     /// alongside the modeled HBM timing. Off by default: it is a
     /// validation pass, not a transport.
     pub cosim: bool,
+    /// Bus timing model for the cosim validation pass: when set (and
+    /// `cosim` is on), the read module runs against the timed bus —
+    /// burst re-arm, row-activate, and refresh cycles interleave with
+    /// the line stream — and [`CosimStats`] carries the per-cycle
+    /// stall-cause profile plus measured bandwidth efficiency. `None`
+    /// keeps the untimed cycle-exact validators.
+    pub timing: Option<crate::cosim::BusTiming>,
 }
 
 impl PipelineConfig {
@@ -126,6 +133,7 @@ impl PipelineConfig {
             channels: None,
             chunk_cycles: None,
             cosim: false,
+            timing: None,
         }
     }
 
@@ -139,6 +147,12 @@ impl PipelineConfig {
     /// `tile_cycles` bus cycles through the serving-session path.
     pub fn with_chunking(mut self, tile_cycles: u64) -> PipelineConfig {
         self.chunk_cycles = Some(tile_cycles);
+        self
+    }
+
+    /// Builder-style: run the cosim validation pass against `timing`.
+    pub fn with_timing(mut self, timing: crate::cosim::BusTiming) -> PipelineConfig {
+        self.timing = Some(timing);
         self
     }
 }
@@ -160,6 +174,12 @@ pub struct CosimStats {
     pub read_exact: bool,
     /// Write cosim emitted lines bit-identical to the host packer.
     pub write_exact: bool,
+    /// Per-cycle stall-cause profile of the timed read run (`None`
+    /// unless [`PipelineConfig::timing`] was set).
+    pub read_profile: Option<crate::cosim::ChannelProfile>,
+    /// Measured read-side bandwidth efficiency under the installed
+    /// timing model (`None` unless [`PipelineConfig::timing`] was set).
+    pub measured_beff: Option<f64>,
 }
 
 /// Transport accounting of a streamed [`run`] (present when
@@ -253,6 +273,9 @@ impl PipelineReport {
                 c.write_cycles,
                 c.read_exact && c.write_exact,
             ));
+            if let Some(mb) = c.measured_beff {
+                line.push_str(&format!(" measured_beff={mb:.4}"));
+            }
         }
         if let Some(s) = &self.stream {
             line.push_str(&format!(
@@ -415,13 +438,20 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
     // emit the host packer's lines bit for bit.
     let cosim = if cfg.cosim {
         let _span_cosim = tracer.span("pipeline.cosim");
-        let read = crate::cosim::ReadCosim::new(&layout, &problem)
-            .with_capacity(crate::cosim::Capacity::Analyzed)
-            .run(&buf)?;
+        let mut rc = crate::cosim::ReadCosim::new(&layout, &problem)
+            .with_capacity(crate::cosim::Capacity::Analyzed);
+        if let Some(t) = &cfg.timing {
+            rc = rc.with_timing(t.clone());
+        }
+        let read = rc.run(&buf)?;
         let write = crate::cosim::WriteCosim::new(&layout, &problem)
             .with_capacity(crate::cosim::Capacity::Analyzed)
             .run(&refs)?;
         let payload_words = plan.payload_words();
+        let measured_beff = read
+            .profile
+            .as_ref()
+            .map(|pr| pr.measured_beff(problem.total_bits(), problem.m() as u64));
         Some(CosimStats {
             read_cycles: read.total_cycles,
             write_cycles: write.total_cycles,
@@ -430,6 +460,8 @@ pub fn run(cfg: &PipelineConfig, mut rt: Option<&mut Runtime>) -> Result<Pipelin
             read_exact: read.streams == raw_arrays,
             write_exact: write.emitted.words()[..payload_words]
                 == buf.words()[..payload_words],
+            read_profile: read.profile,
+            measured_beff,
         })
     } else {
         None
@@ -916,6 +948,35 @@ mod tests {
                 assert!(r.summary().contains("cosim: read"));
             }
         }
+    }
+
+    #[test]
+    fn timed_cosim_pipeline_reports_measured_bandwidth() {
+        let base = PipelineConfig {
+            xla_unpack_check: false,
+            cosim: true,
+            ..PipelineConfig::new(Workload::MatMul { w_a: 33, w_b: 31 }, LayoutKind::Iris)
+        };
+        let untimed = run(&base, None).unwrap();
+        let uc = untimed.cosim.as_ref().unwrap();
+        assert!(uc.measured_beff.is_none());
+        assert!(uc.read_profile.is_none());
+
+        let timed_cfg = base.clone().with_timing(crate::cosim::BusTiming::hbm2());
+        let timed = run(&timed_cfg, None).unwrap();
+        let c = timed.cosim.as_ref().expect("cosim stats requested");
+        // The timed bus only delays lines: validators still pass.
+        assert!(timed.ok(), "{}", timed.summary());
+        assert!(c.read_exact && c.write_exact);
+        assert_eq!(c.read_stalls, 0);
+        // Timing overheads cost cycles vs the untimed run and every
+        // cycle is attributed to exactly one cause.
+        assert!(c.read_cycles > uc.read_cycles, "{}", timed.summary());
+        let pr = c.read_profile.as_ref().expect("timed run records a profile");
+        pr.verify_conservation(c.read_cycles).unwrap();
+        let mb = c.measured_beff.expect("timed run measures b_eff");
+        assert!(mb > 0.0 && mb <= timed.metrics.b_eff + 1e-12, "{mb}");
+        assert!(timed.summary().contains("measured_beff="));
     }
 
     #[test]

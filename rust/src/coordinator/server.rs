@@ -28,6 +28,7 @@
 
 use super::{Error, Metrics, MetricsSnapshot};
 use crate::bus::multichannel::MultiChannelExecutor;
+use crate::cosim::BusTiming;
 use crate::bus::partition::{partition_opts, PartitionStrategy};
 use crate::bus::HbmChannel;
 use crate::decode::{
@@ -200,6 +201,13 @@ pub struct TransferResponse {
     pub cosim_cycles: Option<u64>,
     /// Cosim-measured read initiation interval (worst channel).
     pub cosim_ii: Option<f64>,
+    /// Measured bandwidth efficiency under the server's installed
+    /// [`BusTiming`] ([`ServerConfig::timing`]): payload bits over the
+    /// bits the held bus could have moved in the timed co-simulation
+    /// (aggregate across channels on the multi-channel path). `None`
+    /// unless the request asked for cosim validation on a server with a
+    /// timing model.
+    pub measured_beff: Option<f64>,
 }
 
 /// One δ/W design-space sweep job for the DSE endpoint.
@@ -277,6 +285,13 @@ pub struct ServerConfig {
     /// open sessions; admission past this is rejected with
     /// [`Error::Overloaded`].
     pub global_budget_bytes: u64,
+    /// Bus timing model for the server's bandwidth accounting. When
+    /// set, telemetry charges every served window its *timed* cycle
+    /// cost (so achieved b_eff reports the measured figure), and
+    /// cosim-validated requests run against the model — feeding the
+    /// stall-cause counters and [`TransferResponse::measured_beff`].
+    /// `None` keeps the idealized one-line-per-cycle accounting.
+    pub timing: Option<BusTiming>,
 }
 
 impl Default for ServerConfig {
@@ -287,6 +302,7 @@ impl Default for ServerConfig {
             cache: None,
             session_budget_bytes: DEFAULT_SESSION_BUDGET,
             global_budget_bytes: DEFAULT_GLOBAL_BUDGET,
+            timing: None,
         }
     }
 }
@@ -345,6 +361,7 @@ impl LayoutServer {
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
+        metrics.transfers.set_timing(cfg.timing.clone());
         let max_batch = cfg.max_batch;
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -845,26 +862,37 @@ fn process(
     // Busy window = pack + decode (the data-moving phases); feeds the
     // achieved-GB/s and achieved-b_eff per-engine telemetry.
     let busy_ns = (t_pack.elapsed().as_nanos() as u64).max(1);
-    let (cosim_cycles, cosim_ii) = if req.cosim {
+    let m_bits = req.problem.m() as u64;
+    let (cosim_cycles, cosim_ii, measured_beff) = if req.cosim {
         let _s = tracer.span("server.cosim");
-        let trace = crate::cosim::ReadCosim::new(&layout, &req.problem)
-            .with_capacity(crate::cosim::Capacity::Analyzed)
-            .run(&buf)?;
+        let mut cosim = crate::cosim::ReadCosim::new(&layout, &req.problem)
+            .with_capacity(crate::cosim::Capacity::Analyzed);
+        if let Some(t) = metrics.transfers.timing() {
+            cosim = cosim.with_timing(t);
+        }
+        let trace = cosim.run(&buf)?;
         if trace.streams != req.data {
             return Err(Error::CosimDivergence { channel: None });
         }
         metrics
             .cosim_validations
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        (Some(trace.total_cycles), Some(trace.ii()))
+        // A timed run carries a per-cycle cause profile: feed the
+        // stall-cause counters and report the measured efficiency.
+        let measured = trace.profile.as_ref().map(|pr| {
+            metrics.record_bus_profile(pr, req.problem.total_bits(), m_bits);
+            pr.measured_beff(req.problem.total_bits(), m_bits)
+        });
+        (Some(trace.total_cycles), Some(trace.ii()), measured)
     } else {
-        (None, None)
+        (None, None, None)
     };
     let payload_bits = req.problem.total_bits();
     // Capacity of the streaming window: C_max bus lines of m bits — the
     // denominator of Eq. 1, so telemetry b_eff reproduces the layout
-    // metric exactly for a full transfer.
-    let capacity_bits = layout_metrics.c_max * req.problem.m() as u64;
+    // metric exactly for a full transfer. Under an installed timing
+    // model the window is charged its timed cycle cost instead.
+    let capacity_bits = metrics.transfers.capacity_bits(layout_metrics.c_max, m_bits);
     metrics.transfers.record_engine(
         engine,
         crate::util::ceil_div(payload_bits, 8),
@@ -888,6 +916,7 @@ fn process(
         engine,
         cosim_cycles,
         cosim_ii,
+        measured_beff,
     })
 }
 
@@ -940,14 +969,20 @@ fn process_multichannel(
     // Per-channel cosim: channels stream concurrently, so the slowest
     // simulated channel is the figure that sits alongside the modeled
     // aggregate HBM time.
-    let (cosim_cycles, cosim_ii) = if req.cosim {
+    let m = req.problem.m();
+    let (cosim_cycles, cosim_ii, measured_beff) = if req.cosim {
         let _s = tracer.span("server.cosim");
+        let timing = metrics.transfers.timing();
         let mut worst_cycles = 0u64;
         let mut worst_ii = 1.0f64;
+        let mut held_cycles = 0u64;
         for (c, buf) in bufs.iter().enumerate() {
-            let trace = crate::cosim::ReadCosim::new(&pl.layouts[c], &pl.problems[c])
-                .with_capacity(crate::cosim::Capacity::Analyzed)
-                .run(buf)?;
+            let mut cosim = crate::cosim::ReadCosim::new(&pl.layouts[c], &pl.problems[c])
+                .with_capacity(crate::cosim::Capacity::Analyzed);
+            if let Some(t) = &timing {
+                cosim = cosim.with_timing(t.clone());
+            }
+            let trace = cosim.run(buf)?;
             let expect: Vec<&[u64]> = pl.members[c].iter().map(|&j| refs[j]).collect();
             let exact = trace.streams.len() == expect.len()
                 && trace
@@ -960,25 +995,39 @@ fn process_multichannel(
             }
             worst_cycles = worst_cycles.max(trace.total_cycles);
             worst_ii = worst_ii.max(trace.ii());
+            if let Some(pr) = &trace.profile {
+                metrics.record_bus_profile(pr, pl.problems[c].total_bits(), m as u64);
+                held_cycles += pr.bus_held_cycles();
+            }
         }
         metrics
             .cosim_validations
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        (Some(worst_cycles), Some(worst_ii))
+        // Aggregate measured efficiency: total payload over the bits
+        // every channel's held bus cycles could have moved.
+        let measured = timing.map(|_| {
+            let payload = req.problem.total_bits();
+            if held_cycles == 0 {
+                0.0
+            } else {
+                payload as f64 / (held_cycles * m as u64) as f64
+            }
+        });
+        (Some(worst_cycles), Some(worst_ii), measured)
     } else {
-        (None, None)
+        (None, None, None)
     };
     // Counted only once the transfer actually went through the
     // multi-channel executor (failed requests land in `errors`, not
     // here).
     metrics.record_multichannel(k as u64);
-    let m = req.problem.m();
     let summary = pl.summary(m);
     // Telemetry: aggregate flow under "multichannel" (capacity = k
     // channels × the aggregate window, so b_eff matches the summary),
     // plus each channel's share of the window (b_eff matches
-    // channel_utilization).
-    let window_bits = summary.c_max * m as u64;
+    // channel_utilization). An installed timing model charges the
+    // window its timed cycle cost instead of the idealized count.
+    let window_bits = metrics.transfers.capacity_bits(summary.c_max, m as u64);
     let total_payload = req.problem.total_bits();
     metrics.transfers.record_engine(
         "multichannel",
@@ -1011,6 +1060,7 @@ fn process_multichannel(
         engine: "multichannel",
         cosim_cycles,
         cosim_ii,
+        measured_beff,
     })
 }
 
@@ -1398,8 +1448,78 @@ mod tests {
         // FIFOs sustain II=1.
         assert!(cycles >= resp.c_max);
         assert!((ii - 1.0).abs() < 1e-12);
+        // No timing model installed: no measured-bandwidth figure.
+        assert!(resp.measured_beff.is_none());
         assert_eq!(server.metrics.cosim_validations.load(Ordering::Relaxed), 1);
         assert!(server.metrics.summary().contains("cosim_validations=1"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn timed_server_reports_measured_beff_and_stall_causes() {
+        use crate::cosim::{BusTiming, CycleCause};
+        let server = LayoutServer::with_config(ServerConfig {
+            workers: 1,
+            max_batch: 1,
+            timing: Some(BusTiming::hbm2()),
+            ..ServerConfig::default()
+        });
+        let mut req = request(5, 41);
+        req.cosim = true;
+        let resp = server.submit(req).recv().unwrap().unwrap();
+        assert!(resp.decode_exact);
+        let measured = resp.measured_beff.expect("timed cosim measures b_eff");
+        assert!(measured > 0.0, "{measured}");
+        assert!(
+            measured <= resp.b_eff + 1e-12,
+            "measured {measured} cannot beat idealized {}",
+            resp.b_eff
+        );
+        // HBM2 burst/row/refresh overhead strictly lengthens the run.
+        assert!(resp.cosim_cycles.unwrap() > resp.c_max);
+        let snap = server.metrics_snapshot();
+        let count = |cause: CycleCause| {
+            snap.stall_cycles_by_cause
+                .iter()
+                .find(|(l, _)| l == cause.label())
+                .map(|(_, c)| *c)
+                .unwrap_or(0)
+        };
+        assert!(count(CycleCause::DataBeat) >= resp.c_max);
+        assert!(count(CycleCause::BurstBreak) > 0, "hbm2 bursts must break");
+        assert!(snap.bus_held_bits >= snap.bus_payload_bits);
+        assert!((snap.bus_measured_beff() - measured).abs() < 1e-12);
+        server.shutdown();
+    }
+
+    #[test]
+    fn timed_multichannel_cosim_aggregates_measured_beff() {
+        use crate::cosim::BusTiming;
+        let p = synthetic_problem(8, 13);
+        let data = synthetic_data(&p, 13);
+        let server = LayoutServer::with_config(ServerConfig {
+            workers: 2,
+            max_batch: 2,
+            timing: Some(BusTiming::hbm2()),
+            ..ServerConfig::default()
+        });
+        let resp = server
+            .submit(
+                TransferRequest::builder(p, data)
+                    .channels(3)
+                    .cosim(true)
+                    .build()
+                    .unwrap(),
+            )
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(resp.decode_exact);
+        // Held-bus utilization: unlike the window-based summary b_eff it
+        // excludes the idle slack of underloaded channels, so it is only
+        // bounded by 1, not by the idealized aggregate figure.
+        let measured = resp.measured_beff.expect("timed cosim measures b_eff");
+        assert!(measured > 0.0 && measured <= 1.0, "{measured}");
         server.shutdown();
     }
 

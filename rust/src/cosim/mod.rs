@@ -44,9 +44,11 @@
 //! DESIGN.md §Co-Simulation.
 
 pub mod read;
+pub mod timing;
 pub mod write;
 
 pub use read::{ReadCosim, ReadTrace};
+pub use timing::{BusTiming, ChannelProfile, ChannelTimer, CycleCause};
 pub use write::{WriteCosim, WriteTrace};
 
 /// Optional per-cycle recording of a co-simulation run, enabled with
@@ -62,6 +64,10 @@ pub struct CycleTimeline {
     pub occupancy: Vec<Vec<u32>>,
     /// `stalled[t]` = the bus made no forward progress in cycle `t`
     /// (read: admission backpressure; write: output line not ready).
+    /// Under a non-ideal [`BusTiming`] this also covers timing-penalty
+    /// cycles (burst re-arm, row activate, refresh) — the per-cause
+    /// split lives in the run's [`ChannelProfile`]; the trace's
+    /// `stall_cycles` counter keeps counting FIFO backpressure only.
     pub stalled: Vec<bool>,
 }
 

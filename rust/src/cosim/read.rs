@@ -24,6 +24,7 @@
 //! After the last line, FIFOs drain one element per cycle until empty
 //! (the tail the kernel still has to consume).
 
+use super::timing::{BusTiming, ChannelProfile, CycleCause};
 use super::{Capacity, CycleTimeline};
 use crate::layout::fifo::FifoAnalysis;
 use crate::layout::Layout;
@@ -38,6 +39,7 @@ pub struct ReadCosim<'a> {
     problem: &'a Problem,
     capacity: Capacity,
     timeline: bool,
+    timing: Option<BusTiming>,
 }
 
 /// Everything one read co-simulation run measured.
@@ -67,6 +69,11 @@ pub struct ReadTrace {
     /// Per-cycle FIFO occupancy/stall recording; `Some` only when the
     /// run was built with [`ReadCosim::record_timeline`]`(true)`.
     pub timeline: Option<CycleTimeline>,
+    /// Per-cycle cause classification; `Some` only when the run was
+    /// built with [`ReadCosim::with_timing`]. Conservation (every
+    /// simulated cycle attributed to exactly one [`CycleCause`]) is
+    /// checked before the trace is returned.
+    pub profile: Option<ChannelProfile>,
 }
 
 impl ReadTrace {
@@ -131,12 +138,23 @@ impl<'a> ReadCosim<'a> {
             problem,
             capacity: Capacity::Unbounded,
             timeline: false,
+            timing: None,
         }
     }
 
     /// Builder-style capacity model.
     pub fn with_capacity(mut self, capacity: Capacity) -> ReadCosim<'a> {
         self.capacity = capacity;
+        self
+    }
+
+    /// Run against a [`BusTiming`] model: burst re-arm, row activate,
+    /// and refresh cycles interleave with the line stream, and the trace
+    /// gains a [`ChannelProfile`] attributing every simulated cycle to a
+    /// cause. [`BusTiming::ideal`] keeps the cycle behavior identical to
+    /// an untimed run while still recording the profile.
+    pub fn with_timing(mut self, timing: BusTiming) -> ReadCosim<'a> {
+        self.timing = Some(timing);
         self
     }
 
@@ -225,10 +243,18 @@ impl<'a> ReadCosim<'a> {
         } else {
             None
         };
+        if let Some(tm) = &self.timing {
+            tm.validate()?;
+        }
+        let mut timer = self.timing.as_ref().map(|tm| tm.timer(m));
+        let mut profile = self.timing.as_ref().map(|_| ChannelProfile::default());
         // Progress argument: every stall cycle drains at least one
         // element from a blocking FIFO (an empty blocking FIFO errors
         // out instead), so the run is bounded by lines + total elements.
-        let budget = c as u64
+        // Timing penalties add a bounded surcharge per line (activate +
+        // burst re-arm), and a validated refresh model steals less than
+        // half of any window, so doubling covers it.
+        let mut budget = c as u64
             + self.layout.total_elements()
             + self
                 .problem
@@ -238,6 +264,12 @@ impl<'a> ReadCosim<'a> {
                 .max()
                 .unwrap_or(0)
             + 2;
+        if let Some(tm) = &self.timing {
+            budget += c as u64 * (tm.activate_cycles as u64 + tm.burst_break_cycles as u64);
+            if tm.refresh_interval > 0 {
+                budget = budget * 2 + tm.refresh_interval + tm.refresh_cycles as u64;
+            }
+        }
         loop {
             let ingesting = li < c;
             if !ingesting && fifos.iter().all(|f| f.is_empty()) {
@@ -246,7 +278,22 @@ impl<'a> ReadCosim<'a> {
             if t > budget {
                 bail!("read cosim: no progress after {t} cycles (internal error)");
             }
-            if ingesting {
+            let penalty = if ingesting {
+                timer.as_mut().and_then(|timer| timer.try_penalty(li as u64))
+            } else {
+                None
+            };
+            if let Some(cause) = penalty {
+                // The bus is paying a timing penalty (burst re-arm, row
+                // activate, refresh): no line moves, the kernel-side
+                // drain below still runs.
+                if let Some(pr) = &mut profile {
+                    pr.record(cause);
+                }
+                if let Some(tl) = &mut tl {
+                    tl.stalled.push(true);
+                }
+            } else if ingesting {
                 let ps = &self.layout.cycles[li];
                 arrivals.iter_mut().for_each(|x| *x = 0);
                 for p in ps {
@@ -291,12 +338,34 @@ impl<'a> ReadCosim<'a> {
                     for a in 0..n {
                         peak_ports[a] = peak_ports[a].max(arrivals[a]);
                     }
+                    if let Some(timer) = &mut timer {
+                        timer.beat();
+                    }
+                    if let Some(pr) = &mut profile {
+                        pr.record(CycleCause::DataBeat);
+                    }
                     li += 1;
                 } else {
                     stalls += 1;
+                    // Backpressure closes the open burst (see
+                    // `ChannelTimer::stall`).
+                    if let Some(timer) = &mut timer {
+                        timer.stall();
+                    }
+                    if let Some(pr) = &mut profile {
+                        pr.record(CycleCause::FifoStall);
+                    }
                     if let Some(tl) = &mut tl {
                         tl.stalled.push(true);
                     }
+                }
+            } else {
+                // Drain tail: nothing left to transfer.
+                if let Some(timer) = &mut timer {
+                    timer.idle();
+                }
+                if let Some(pr) = &mut profile {
+                    pr.record(CycleCause::Idle);
                 }
             }
             if let Some(tl) = &mut tl {
@@ -326,6 +395,9 @@ impl<'a> ReadCosim<'a> {
             }
             t += 1;
         }
+        if let Some(pr) = &profile {
+            pr.verify_conservation(t)?;
+        }
         Ok(ReadTrace {
             streams,
             values_tracked: buf.is_some(),
@@ -337,6 +409,7 @@ impl<'a> ReadCosim<'a> {
             underflow_cycles: underflow,
             stream_completion: completion,
             timeline: tl,
+            profile,
         })
     }
 }
@@ -475,6 +548,52 @@ mod tests {
             let peak = tl.occupancy.iter().map(|occ| occ[a] as u64).max().unwrap();
             assert_eq!(peak, trace.peak_backlog[a], "array {a}");
         }
+    }
+
+    #[test]
+    fn ideal_timing_is_cycle_identical_and_conserves() {
+        let p = helmholtz_problem();
+        let (l, buf, arrays) = packed(&p, LayoutKind::Iris, 5);
+        let untimed = ReadCosim::new(&l, &p).run(&buf).unwrap();
+        assert!(untimed.profile.is_none(), "profile is opt-in");
+        let timed = ReadCosim::new(&l, &p)
+            .with_timing(BusTiming::ideal())
+            .run(&buf)
+            .unwrap();
+        assert_eq!(timed.streams, arrays);
+        assert_eq!(timed.total_cycles, untimed.total_cycles);
+        assert_eq!(timed.stall_cycles, untimed.stall_cycles);
+        assert_eq!(timed.peak_backlog, untimed.peak_backlog);
+        assert_eq!(timed.stream_completion, untimed.stream_completion);
+        let pr = timed.profile.as_ref().expect("timed run records a profile");
+        pr.verify_conservation(timed.total_cycles).unwrap();
+        assert_eq!(pr.count(CycleCause::DataBeat), timed.bus_cycles);
+        assert_eq!(pr.count(CycleCause::FifoStall), 0);
+        // Stall-free ideal run: measured b_eff equals the idealized
+        // payload / (C_max · m) exactly (the drain tail is idle, not
+        // held).
+        let payload: u64 = p.arrays.iter().map(|a| a.depth * a.width as u64).sum();
+        let ideal_beff = payload as f64 / (l.n_cycles() * l.m as u64) as f64;
+        assert!((pr.measured_beff(payload, l.m as u64) - ideal_beff).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hbm2_timing_costs_cycles_but_never_corrupts() {
+        let p = paper_example();
+        let (l, buf, arrays) = packed(&p, LayoutKind::Iris, 0xC0);
+        let timed = ReadCosim::new(&l, &p)
+            .with_timing(BusTiming::hbm2())
+            .run(&buf)
+            .unwrap();
+        assert_eq!(timed.streams, arrays, "timing delays, never corrupts");
+        assert!(timed.total_cycles > l.n_cycles());
+        let pr = timed.profile.as_ref().unwrap();
+        pr.verify_conservation(timed.total_cycles).unwrap();
+        assert!(pr.count(CycleCause::BurstBreak) > 0, "first burst must arm");
+        let payload: u64 = p.arrays.iter().map(|a| a.depth * a.width as u64).sum();
+        let ideal_beff = payload as f64 / (l.n_cycles() * l.m as u64) as f64;
+        let measured = pr.measured_beff(payload, l.m as u64);
+        assert!(measured < ideal_beff, "{measured} vs {ideal_beff}");
     }
 
     #[test]

@@ -1,0 +1,582 @@
+//! Burst/row-aware HBM bus timing for the co-simulators.
+//!
+//! The untimed co-simulators ([`super::ReadCosim`], [`super::WriteCosim`])
+//! model an idealized channel that moves one m-bit line every cycle the
+//! FIFOs permit. Real HBM pseudo-channels do not: transfers happen in
+//! fixed-length *bursts* (re-arming a burst costs command cycles), DRAM
+//! rows must be *activated* before their first access (and a row crossing
+//! closes the open burst), and the device periodically steals cycles for
+//! *refresh*. Ferry et al. (arXiv 2202.05933) measure that these burst
+//! breaks and row activates — not the raw pin rate — dominate achieved
+//! FPGA memory bandwidth, which is exactly the gap between the repo's
+//! static `b_eff` formula and a measured one.
+//!
+//! [`BusTiming`] describes one pseudo-channel's timing parameters;
+//! [`ChannelTimer`] steps that model one cycle at a time alongside a
+//! co-simulation run; [`ChannelProfile`] classifies every simulated cycle
+//! into a [`CycleCause`] with a hard conservation invariant (the six
+//! category counts sum to the total simulated cycles — no cycle is ever
+//! unattributed). `obs::profile` aggregates these into utilization
+//! timelines and stall-breakdown reports; see DESIGN.md §Timing-Model.
+//!
+//! The ideal configuration ([`BusTiming::ideal`]) disables every
+//! mechanism *structurally*: [`ChannelTimer::try_penalty`] cannot return
+//! a penalty, so a timed run under `ideal` is cycle-identical to the
+//! untimed simulator by construction, not by tuning.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Why a channel-cycle elapsed. Every simulated cycle of a timed
+/// co-simulation run is classified into exactly one cause.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CycleCause {
+    /// A bus line moved (the only cycles that carry payload).
+    DataBeat,
+    /// Burst re-arm: the open burst expired (or was broken by a stall or
+    /// row crossing) and the channel paid the command overhead to open a
+    /// new one.
+    BurstBreak,
+    /// Row-buffer miss: the access crossed into a different DRAM row and
+    /// the channel paid the activate latency.
+    RowActivate,
+    /// Periodic refresh stole the cycle.
+    Refresh,
+    /// FIFO backpressure: the module could not accept/produce the line
+    /// (read: a receiving FIFO is full; write: the kernel has not yet
+    /// produced every element the line carries).
+    FifoStall,
+    /// The bus had nothing to transfer (read-side drain tail).
+    Idle,
+}
+
+impl CycleCause {
+    /// All causes, in reporting order. Index with [`CycleCause::index`].
+    pub const ALL: [CycleCause; 6] = [
+        CycleCause::DataBeat,
+        CycleCause::BurstBreak,
+        CycleCause::RowActivate,
+        CycleCause::Refresh,
+        CycleCause::FifoStall,
+        CycleCause::Idle,
+    ];
+
+    /// Position in [`CycleCause::ALL`] (and in [`ChannelProfile`] count
+    /// arrays).
+    pub fn index(self) -> usize {
+        match self {
+            CycleCause::DataBeat => 0,
+            CycleCause::BurstBreak => 1,
+            CycleCause::RowActivate => 2,
+            CycleCause::Refresh => 3,
+            CycleCause::FifoStall => 4,
+            CycleCause::Idle => 5,
+        }
+    }
+
+    /// Stable lowercase label (Prometheus `cause` label, trace lanes,
+    /// CLI table rows).
+    pub fn label(self) -> &'static str {
+        match self {
+            CycleCause::DataBeat => "data_beat",
+            CycleCause::BurstBreak => "burst_break",
+            CycleCause::RowActivate => "row_activate",
+            CycleCause::Refresh => "refresh",
+            CycleCause::FifoStall => "fifo_stall",
+            CycleCause::Idle => "idle",
+        }
+    }
+}
+
+/// Timing parameters of one HBM pseudo-channel. A value of `0` disables
+/// the corresponding mechanism, so [`BusTiming::ideal`] (all zeros)
+/// reproduces the untimed simulators exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BusTiming {
+    /// Lines per burst; after this many data beats the burst must be
+    /// re-armed. `0` = unlimited burst (never re-arms).
+    pub burst_beats: u32,
+    /// Command cycles to (re-)open a burst.
+    pub burst_break_cycles: u32,
+    /// DRAM row-buffer size in bits; crossing a row boundary costs an
+    /// activate and closes the open burst. `0` = no row model.
+    pub row_bits: u64,
+    /// Cycles to activate a row (tRCD-like).
+    pub activate_cycles: u32,
+    /// Cycles between refreshes (tREFI-like). `0` = no refresh model.
+    pub refresh_interval: u64,
+    /// Cycles a refresh steals (tRFC-like).
+    pub refresh_cycles: u32,
+}
+
+impl BusTiming {
+    /// The idealized 1-line/cycle channel: every mechanism disabled, so
+    /// [`ChannelTimer::try_penalty`] is structurally `None` and timed
+    /// runs are cycle-identical to the untimed simulators.
+    pub fn ideal() -> BusTiming {
+        BusTiming {
+            burst_beats: 0,
+            burst_break_cycles: 0,
+            row_bits: 0,
+            activate_cycles: 0,
+            refresh_interval: 0,
+            refresh_cycles: 0,
+        }
+    }
+
+    /// HBM2-class pseudo-channel, consistent with
+    /// [`crate::bus::HbmChannel::alveo_u280`] (64-beat bursts, 4-cycle
+    /// re-arm overhead): 2 KiB row buffer, 14-cycle activate, and a
+    /// refresh that steals 26 cycles roughly every 3.9 µs-equivalent
+    /// window.
+    pub fn hbm2() -> BusTiming {
+        BusTiming {
+            burst_beats: 64,
+            burst_break_cycles: 4,
+            row_bits: 16384,
+            activate_cycles: 14,
+            refresh_interval: 3900,
+            refresh_cycles: 26,
+        }
+    }
+
+    /// True when every mechanism is disabled (no penalty can ever fire).
+    pub fn is_ideal(&self) -> bool {
+        self.burst_beats == 0
+            && self.burst_break_cycles == 0
+            && self.row_bits == 0
+            && self.activate_cycles == 0
+            && self.refresh_interval == 0
+            && self.refresh_cycles == 0
+    }
+
+    /// Reject configurations that cannot make forward progress (a
+    /// refresh period shorter than the refresh itself would starve the
+    /// bus).
+    pub fn validate(&self) -> Result<()> {
+        if self.refresh_interval > 0 && self.refresh_interval <= self.refresh_cycles as u64 {
+            bail!(
+                "bus timing: refresh_interval ({}) must exceed refresh_cycles ({})",
+                self.refresh_interval,
+                self.refresh_cycles
+            );
+        }
+        Ok(())
+    }
+
+    /// Bus lines per DRAM row for an `m`-bit channel (≥ 1 when the row
+    /// model is enabled).
+    pub fn row_lines(&self, m: u64) -> u64 {
+        if self.row_bits == 0 {
+            0
+        } else {
+            (self.row_bits / m.max(1)).max(1)
+        }
+    }
+
+    /// Fresh per-channel timer state for an `m`-bit channel.
+    pub fn timer(&self, m: u64) -> ChannelTimer {
+        ChannelTimer {
+            timing: self.clone(),
+            row_lines: self.row_lines(m),
+            beats_in_burst: 0,
+            burst_open: false,
+            current_row: None,
+            until_refresh: self.refresh_interval,
+            pending: None,
+        }
+    }
+
+    /// Closed-form cycles to stream `lines` sequential lines with no
+    /// FIFO interference: the timed capacity denominator
+    /// (`obs::telemetry` uses this when a timing model is installed).
+    pub fn timed_cycles(&self, lines: u64, m: u64) -> u64 {
+        if self.is_ideal() {
+            return lines;
+        }
+        let mut timer = self.timer(m);
+        let mut t = 0u64;
+        for li in 0..lines {
+            while timer.try_penalty(li).is_some() {
+                t += 1;
+            }
+            timer.beat();
+            t += 1;
+        }
+        t
+    }
+
+    /// JSON form (`iris profile --timing custom.json` round-trips this).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("burst_beats", Json::Num(self.burst_beats as f64));
+        o.set(
+            "burst_break_cycles",
+            Json::Num(self.burst_break_cycles as f64),
+        );
+        o.set("row_bits", Json::Num(self.row_bits as f64));
+        o.set("activate_cycles", Json::Num(self.activate_cycles as f64));
+        o.set("refresh_interval", Json::Num(self.refresh_interval as f64));
+        o.set("refresh_cycles", Json::Num(self.refresh_cycles as f64));
+        o
+    }
+
+    /// Parse the [`BusTiming::to_json`] form. Missing fields default to
+    /// `0` (disabled), so a custom file only names the mechanisms it
+    /// enables.
+    pub fn from_json(j: &Json) -> Result<BusTiming> {
+        let num = |key: &str| -> Result<u64> {
+            match j.get(key) {
+                None => Ok(0),
+                Some(v) => v
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("bus timing: '{key}' is not a number")),
+            }
+        };
+        let t = BusTiming {
+            burst_beats: num("burst_beats")? as u32,
+            burst_break_cycles: num("burst_break_cycles")? as u32,
+            row_bits: num("row_bits")?,
+            activate_cycles: num("activate_cycles")? as u32,
+            refresh_interval: num("refresh_interval")?,
+            refresh_cycles: num("refresh_cycles")? as u32,
+        };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Parse a `--timing` argument: `ideal`, `hbm2`, or a path to a
+    /// custom JSON file.
+    pub fn from_arg(arg: &str) -> Result<BusTiming> {
+        match arg {
+            "ideal" => Ok(BusTiming::ideal()),
+            "hbm2" => Ok(BusTiming::hbm2()),
+            path => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("bus timing: cannot read '{path}': {e}"))?;
+                let j = crate::util::json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("bus timing: '{path}' is not JSON: {e}"))?;
+                BusTiming::from_json(&j)
+            }
+        }
+    }
+}
+
+/// Per-pseudo-channel timing state, stepped one cycle at a time by the
+/// co-simulators. Exactly one of [`ChannelTimer::try_penalty`] (taking
+/// its `Some` result), [`ChannelTimer::beat`], [`ChannelTimer::stall`],
+/// or [`ChannelTimer::idle`] must be charged per simulated cycle — each
+/// advances the refresh clock once.
+#[derive(Debug, Clone)]
+pub struct ChannelTimer {
+    timing: BusTiming,
+    row_lines: u64,
+    beats_in_burst: u32,
+    burst_open: bool,
+    current_row: Option<u64>,
+    until_refresh: u64,
+    pending: Option<(CycleCause, u32)>,
+}
+
+impl ChannelTimer {
+    /// One tick of the refresh clock (every simulated cycle, whatever
+    /// its cause, brings the next refresh closer).
+    fn tick(&mut self) {
+        if self.timing.refresh_interval > 0 {
+            self.until_refresh = self.until_refresh.saturating_sub(1);
+        }
+    }
+
+    /// Ask whether the channel can move line `li` this cycle. `Some`
+    /// means the cycle is consumed by the returned penalty (the caller
+    /// records it and retries next cycle); `None` means the bus is armed
+    /// and the caller proceeds to its FIFO admission / readiness check.
+    ///
+    /// Penalty priority: an in-progress multi-cycle penalty drains
+    /// first, then refresh, then row activate (which closes the open
+    /// burst), then burst re-arm. Under [`BusTiming::ideal`] every
+    /// branch is disabled and this always returns `None`.
+    pub fn try_penalty(&mut self, li: u64) -> Option<CycleCause> {
+        if let Some((cause, left)) = self.pending {
+            self.tick();
+            self.pending = if left > 1 { Some((cause, left - 1)) } else { None };
+            return Some(cause);
+        }
+        if self.timing.refresh_interval > 0
+            && self.until_refresh == 0
+            && self.timing.refresh_cycles > 0
+        {
+            // Refresh precharges the row buffer and closes the burst.
+            self.until_refresh = self.timing.refresh_interval;
+            self.current_row = None;
+            self.burst_open = false;
+            self.begin(CycleCause::Refresh, self.timing.refresh_cycles);
+            self.tick();
+            return Some(CycleCause::Refresh);
+        }
+        if self.row_lines > 0 {
+            let row = li / self.row_lines;
+            if self.current_row != Some(row) {
+                self.current_row = Some(row);
+                // A row crossing closes the open burst even when the
+                // activate itself is free.
+                self.burst_open = false;
+                if self.timing.activate_cycles > 0 {
+                    self.begin(CycleCause::RowActivate, self.timing.activate_cycles);
+                    self.tick();
+                    return Some(CycleCause::RowActivate);
+                }
+            }
+        }
+        if !self.burst_open
+            || (self.timing.burst_beats > 0 && self.beats_in_burst >= self.timing.burst_beats)
+        {
+            self.burst_open = true;
+            self.beats_in_burst = 0;
+            if self.timing.burst_break_cycles > 0 {
+                self.begin(CycleCause::BurstBreak, self.timing.burst_break_cycles);
+                self.tick();
+                return Some(CycleCause::BurstBreak);
+            }
+        }
+        None
+    }
+
+    fn begin(&mut self, cause: CycleCause, total: u32) {
+        // This call consumes the first cycle; queue the remainder.
+        self.pending = if total > 1 { Some((cause, total - 1)) } else { None };
+    }
+
+    /// Charge a data beat (a line moved this cycle).
+    pub fn beat(&mut self) {
+        self.beats_in_burst += 1;
+        self.tick();
+    }
+
+    /// Charge a no-progress cycle while the bus *wanted* to move a line
+    /// (FIFO backpressure / kernel not ready). Backpressure closes the
+    /// open burst: resuming after a stall pays the burst re-arm again,
+    /// which is how stall-prone layouts lose extra cycles to burst
+    /// breaks (Ferry et al. §IV).
+    pub fn stall(&mut self) {
+        self.burst_open = false;
+        self.tick();
+    }
+
+    /// Charge a cycle with nothing to transfer (drain tail).
+    pub fn idle(&mut self) {
+        self.tick();
+    }
+}
+
+/// Per-channel cycle classification of one timed co-simulation run:
+/// every simulated cycle lands in exactly one [`CycleCause`] bucket, and
+/// the per-cycle sequence is kept for utilization timelines.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ChannelProfile {
+    /// Cycle counts indexed by [`CycleCause::index`].
+    pub counts: [u64; 6],
+    /// The cause of every simulated cycle, in order.
+    pub causes: Vec<CycleCause>,
+}
+
+impl ChannelProfile {
+    /// Record one simulated cycle.
+    pub fn record(&mut self, cause: CycleCause) {
+        self.counts[cause.index()] += 1;
+        self.causes.push(cause);
+    }
+
+    /// Cycles attributed (= total simulated cycles when conservation
+    /// holds).
+    pub fn total_cycles(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Count for one cause.
+    pub fn count(&self, cause: CycleCause) -> u64 {
+        self.counts[cause.index()]
+    }
+
+    /// The conservation invariant: the six category counts and the
+    /// per-cycle record both sum to exactly `total` simulated cycles —
+    /// zero unattributed cycles.
+    pub fn verify_conservation(&self, total: u64) -> Result<()> {
+        let sum = self.total_cycles();
+        if sum != total || self.causes.len() as u64 != total {
+            bail!(
+                "cycle conservation violated: {} categorized / {} recorded / {} simulated",
+                sum,
+                self.causes.len(),
+                total
+            );
+        }
+        Ok(())
+    }
+
+    /// Cycles the bus was held (everything except [`CycleCause::Idle`]):
+    /// the denominator of measured bandwidth efficiency.
+    pub fn bus_held_cycles(&self) -> u64 {
+        self.total_cycles() - self.count(CycleCause::Idle)
+    }
+
+    /// Measured bandwidth efficiency: payload bits over the bits the
+    /// held bus could have moved. Equals the idealized
+    /// `payload / (C_max · m)` under [`BusTiming::ideal`] with
+    /// sufficient FIFOs, and strictly degrades as cycles are lost to
+    /// stalls, bursts, rows, and refresh.
+    pub fn measured_beff(&self, payload_bits: u64, m: u64) -> f64 {
+        let held = self.bus_held_cycles();
+        if held == 0 || m == 0 {
+            return 0.0;
+        }
+        payload_bits as f64 / (held * m) as f64
+    }
+
+    /// Data-beat fraction per window of `window` cycles (the utilization
+    /// timeline: 1.0 = every cycle in the window moved a line).
+    pub fn utilization(&self, window: usize) -> Vec<f64> {
+        let w = window.max(1);
+        self.causes
+            .chunks(w)
+            .map(|chunk| {
+                let beats = chunk.iter().filter(|c| **c == CycleCause::DataBeat).count();
+                beats as f64 / chunk.len() as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_timer_never_penalizes() {
+        let t = BusTiming::ideal();
+        assert!(t.is_ideal());
+        let mut timer = t.timer(512);
+        for li in 0..10_000u64 {
+            assert_eq!(timer.try_penalty(li), None);
+            timer.beat();
+        }
+        assert_eq!(t.timed_cycles(4096, 512), 4096);
+    }
+
+    #[test]
+    fn burst_rearm_fires_every_burst_beats_lines() {
+        let t = BusTiming {
+            burst_beats: 4,
+            burst_break_cycles: 2,
+            ..BusTiming::ideal()
+        };
+        let mut timer = t.timer(512);
+        let mut penalties = 0u64;
+        for li in 0..8u64 {
+            while timer.try_penalty(li).is_some() {
+                penalties += 1;
+            }
+            timer.beat();
+        }
+        // Arm at line 0 and re-arm at line 4: 2 breaks × 2 cycles.
+        assert_eq!(penalties, 4);
+        assert_eq!(t.timed_cycles(8, 512), 8 + 4);
+    }
+
+    #[test]
+    fn a_stall_breaks_the_open_burst() {
+        let t = BusTiming {
+            burst_beats: 64,
+            burst_break_cycles: 3,
+            ..BusTiming::ideal()
+        };
+        let mut timer = t.timer(512);
+        // Arm once, move two lines.
+        let mut paid = 0;
+        while timer.try_penalty(0).is_some() {
+            paid += 1;
+        }
+        timer.beat();
+        assert_eq!(timer.try_penalty(1), None);
+        timer.beat();
+        assert_eq!(paid, 3);
+        // Backpressure: the burst closes, so resuming pays again.
+        timer.stall();
+        let mut repaid = 0;
+        while timer.try_penalty(2).is_some() {
+            repaid += 1;
+        }
+        assert_eq!(repaid, 3);
+    }
+
+    #[test]
+    fn row_crossing_activates_and_breaks_the_burst() {
+        // 1024-bit rows on a 512-bit bus: a new row every 2 lines.
+        let t = BusTiming {
+            row_bits: 1024,
+            activate_cycles: 5,
+            burst_beats: 0,
+            burst_break_cycles: 2,
+            ..BusTiming::ideal()
+        };
+        assert_eq!(t.row_lines(512), 2);
+        // Lines 0,1 share row 0; line 2 opens row 1. Each row opening
+        // costs 5 activate cycles + 2 burst re-arm cycles.
+        assert_eq!(t.timed_cycles(4, 512), 4 + 2 * (5 + 2));
+    }
+
+    #[test]
+    fn refresh_steals_cycles_periodically() {
+        let t = BusTiming {
+            refresh_interval: 10,
+            refresh_cycles: 3,
+            ..BusTiming::ideal()
+        };
+        t.validate().unwrap();
+        let cycles = t.timed_cycles(50, 512);
+        assert!(cycles > 50, "refresh must cost cycles: {cycles}");
+        // Duty bound: at most one 3-cycle refresh per 10-cycle window.
+        assert!(cycles <= 50 + (cycles / 10 + 1) * 3);
+    }
+
+    #[test]
+    fn invalid_refresh_rejected() {
+        let t = BusTiming {
+            refresh_interval: 5,
+            refresh_cycles: 26,
+            ..BusTiming::ideal()
+        };
+        assert!(t.validate().is_err());
+        assert!(BusTiming::hbm2().validate().is_ok());
+    }
+
+    #[test]
+    fn json_round_trips_and_from_arg_parses_presets() {
+        let t = BusTiming::hbm2();
+        let j = t.to_json();
+        assert_eq!(BusTiming::from_json(&j).unwrap(), t);
+        assert_eq!(BusTiming::from_arg("ideal").unwrap(), BusTiming::ideal());
+        assert_eq!(BusTiming::from_arg("hbm2").unwrap(), BusTiming::hbm2());
+        assert!(BusTiming::from_arg("/nonexistent/timing.json").is_err());
+    }
+
+    #[test]
+    fn profile_conservation_and_measured_beff() {
+        let mut p = ChannelProfile::default();
+        for _ in 0..10 {
+            p.record(CycleCause::DataBeat);
+        }
+        p.record(CycleCause::BurstBreak);
+        p.record(CycleCause::FifoStall);
+        p.record(CycleCause::Idle);
+        p.verify_conservation(13).unwrap();
+        assert!(p.verify_conservation(12).is_err());
+        assert_eq!(p.bus_held_cycles(), 12);
+        // 10 data beats of a 512-bit bus carrying 480 payload bits each.
+        let beff = p.measured_beff(4800, 512);
+        assert!((beff - 4800.0 / (12.0 * 512.0)).abs() < 1e-12);
+        let u = p.utilization(13);
+        assert_eq!(u.len(), 1);
+        assert!((u[0] - 10.0 / 13.0).abs() < 1e-12);
+    }
+}

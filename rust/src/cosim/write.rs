@@ -22,6 +22,7 @@
 //! the emitted buffer must be bit-identical to
 //! [`crate::pack::PackProgram::pack`]'s payload.
 
+use super::timing::{BusTiming, ChannelProfile, CycleCause};
 use super::{Capacity, CycleTimeline};
 use crate::layout::fifo::WriteFifoAnalysis;
 use crate::layout::Layout;
@@ -36,6 +37,7 @@ pub struct WriteCosim<'a> {
     problem: &'a Problem,
     capacity: Capacity,
     timeline: bool,
+    timing: Option<BusTiming>,
 }
 
 /// Everything one write co-simulation run measured.
@@ -61,6 +63,10 @@ pub struct WriteTrace {
     /// Per-cycle in-flight/stall recording; `Some` only when the run
     /// was built with [`WriteCosim::record_timeline`]`(true)`.
     pub timeline: Option<CycleTimeline>,
+    /// Per-cycle cause classification; `Some` only when the run was
+    /// built with [`WriteCosim::with_timing`]. Conservation is checked
+    /// before the trace is returned.
+    pub profile: Option<ChannelProfile>,
 }
 
 impl WriteTrace {
@@ -125,12 +131,22 @@ impl<'a> WriteCosim<'a> {
             problem,
             capacity: Capacity::Unbounded,
             timeline: false,
+            timing: None,
         }
     }
 
     /// Builder-style capacity model.
     pub fn with_capacity(mut self, capacity: Capacity) -> WriteCosim<'a> {
         self.capacity = capacity;
+        self
+    }
+
+    /// Run against a [`BusTiming`] model (see
+    /// [`super::ReadCosim::with_timing`]); the trace gains a
+    /// [`ChannelProfile`]. The kernel keeps producing during penalty
+    /// cycles — only line emission is gated by the bus.
+    pub fn with_timing(mut self, timing: BusTiming) -> WriteCosim<'a> {
+        self.timing = Some(timing);
         self
     }
 
@@ -193,9 +209,20 @@ impl<'a> WriteCosim<'a> {
         } else {
             None
         };
-        let budget = c as u64
+        if let Some(tm) = &self.timing {
+            tm.validate()?;
+        }
+        let mut timer = self.timing.as_ref().map(|tm| tm.timer(m));
+        let mut profile = self.timing.as_ref().map(|_| ChannelProfile::default());
+        let mut budget = c as u64
             + self.problem.arrays.iter().map(|a| a.depth).sum::<u64>()
             + 2;
+        if let Some(tm) = &self.timing {
+            budget += c as u64 * (tm.activate_cycles as u64 + tm.burst_break_cycles as u64);
+            if tm.refresh_interval > 0 {
+                budget = budget * 2 + tm.refresh_interval + tm.refresh_cycles as u64;
+            }
+        }
         while li < c {
             if t > budget {
                 bail!("write cosim: no progress after {t} cycles (internal error)");
@@ -223,6 +250,19 @@ impl<'a> WriteCosim<'a> {
                 // Post-production, pre-emission — the instant the
                 // hardware holds the most state, matching peak_inflight.
                 tl.occupancy.push(fifos.iter().map(|f| f.len() as u32).collect());
+            }
+            // Timing penalty: the output bus cannot accept a line this
+            // cycle (burst re-arm, row activate, refresh). The kernel
+            // above kept producing; only emission waits.
+            if let Some(cause) = timer.as_mut().and_then(|timer| timer.try_penalty(li as u64)) {
+                if let Some(pr) = &mut profile {
+                    pr.record(cause);
+                }
+                if let Some(tl) = &mut tl {
+                    tl.stalled.push(true);
+                }
+                t += 1;
+                continue;
             }
             // Emit: line `li` leaves iff every element it carries is in
             // flight.
@@ -272,14 +312,29 @@ impl<'a> WriteCosim<'a> {
                 for a in 0..n {
                     peak_ports[a] = peak_ports[a].max(need[a]);
                 }
+                if let Some(timer) = &mut timer {
+                    timer.beat();
+                }
+                if let Some(pr) = &mut profile {
+                    pr.record(CycleCause::DataBeat);
+                }
                 li += 1;
             } else {
                 stalls += 1;
+                if let Some(timer) = &mut timer {
+                    timer.stall();
+                }
+                if let Some(pr) = &mut profile {
+                    pr.record(CycleCause::FifoStall);
+                }
             }
             if let Some(tl) = &mut tl {
                 tl.stalled.push(!ready);
             }
             t += 1;
+        }
+        if let Some(pr) = &profile {
+            pr.verify_conservation(t)?;
         }
         Ok(WriteTrace {
             emitted,
@@ -290,6 +345,7 @@ impl<'a> WriteCosim<'a> {
             stall_cycles: stalls,
             producer_stall_cycles: producer_stalls,
             timeline: tl,
+            profile,
         })
     }
 }
@@ -407,6 +463,48 @@ mod tests {
             let peak = tl.occupancy.iter().map(|occ| occ[a] as u64).max().unwrap();
             assert_eq!(peak, trace.peak_inflight[a], "array {a}");
         }
+    }
+
+    #[test]
+    fn ideal_timing_write_is_cycle_identical_and_conserves() {
+        let p = paper_example();
+        let l = baselines::generate(LayoutKind::Iris, &p);
+        let data = data_for(&p, 21);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let untimed = WriteCosim::new(&l, &p).run(&refs).unwrap();
+        assert!(untimed.profile.is_none(), "profile is opt-in");
+        let timed = WriteCosim::new(&l, &p)
+            .with_timing(BusTiming::ideal())
+            .run(&refs)
+            .unwrap();
+        assert_eq!(timed.emitted, untimed.emitted);
+        assert_eq!(timed.total_cycles, untimed.total_cycles);
+        assert_eq!(timed.stall_cycles, untimed.stall_cycles);
+        assert_eq!(timed.peak_inflight, untimed.peak_inflight);
+        let pr = timed.profile.as_ref().expect("timed run records a profile");
+        pr.verify_conservation(timed.total_cycles).unwrap();
+        assert_eq!(pr.count(CycleCause::DataBeat), timed.bus_cycles);
+        assert_eq!(pr.count(CycleCause::FifoStall), timed.stall_cycles);
+    }
+
+    #[test]
+    fn hbm2_timing_write_still_emits_packer_payload() {
+        let p = matmul_problem(33, 31);
+        let l = baselines::generate(LayoutKind::DueAlignedNaive, &p);
+        let data = data_for(&p, 13);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let plan = PackPlan::compile(&l, &p);
+        let prog = PackProgram::compile(&plan);
+        let packed = prog.pack(&refs).unwrap();
+        let timed = WriteCosim::new(&l, &p)
+            .with_timing(BusTiming::hbm2())
+            .run(&refs)
+            .unwrap();
+        payload_eq(&timed, &packed, prog.payload_words());
+        assert!(timed.total_cycles > l.n_cycles());
+        let pr = timed.profile.as_ref().unwrap();
+        pr.verify_conservation(timed.total_cycles).unwrap();
+        assert!(pr.count(CycleCause::BurstBreak) > 0);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 
 use crate::baselines;
 use crate::bus::partition::{self, PartitionStrategy, SweepPoint};
-use crate::cosim::ReadCosim;
+use crate::cosim::{BusTiming, Capacity, ReadCosim};
 use crate::hls::ResourceEstimate;
 use crate::layout::cache::LayoutCache;
 use crate::layout::metrics::LayoutMetrics;
@@ -94,21 +94,41 @@ pub struct ResourcePoint {
     /// Cosim-measured FIFO storage (Σ peak-backlog · W) — the BRAM axis
     /// of the trade-off.
     pub sim_fifo_bits: u64,
+    /// Cycles the bus was stalled by a full FIFO (0 under
+    /// [`Capacity::Unbounded`]).
+    pub sim_stall_cycles: u64,
+    /// Measured bandwidth efficiency under the engine's installed
+    /// [`BusTiming`]: payload bits over the bits the held bus could have
+    /// moved ([`crate::cosim::ChannelProfile::measured_beff`]). Equals
+    /// the idealized `metrics.b_eff` under [`BusTiming::ideal`] with
+    /// sufficient FIFOs; degrades as cycles are lost to stalls, burst
+    /// re-arms, row activates, and refresh.
+    pub measured_beff: f64,
 }
 
-/// Non-dominated filter over the resource-aware triple (maximize
-/// bandwidth efficiency, minimize cosim-measured latency, minimize
-/// cosim-measured FIFO bits) — the multi-objective front the
-/// resource-aware DSE mode serves.
+/// Non-dominated filter over the resource-aware quadruple (maximize
+/// idealized bandwidth efficiency, maximize *measured* bandwidth
+/// efficiency under the installed [`BusTiming`], minimize cosim-measured
+/// latency, minimize cosim-measured FIFO bits) — the multi-objective
+/// front the resource-aware DSE mode serves.
+///
+/// Under the default [`BusTiming::ideal`] / [`Capacity::Unbounded`]
+/// engine the measured axis coincides with the idealized one and the
+/// front reduces to the classic triple. Under a real timing model the
+/// measured axis can *reorder* the front: a layout whose idealized
+/// `b_eff` wins on paper may stall against bounded FIFOs, repay burst
+/// re-arms on every stall, and fall behind a paper-worse rival.
 pub fn resource_pareto(points: &[ResourcePoint]) -> Vec<usize> {
     let mut front = Vec::new();
     for (i, a) in points.iter().enumerate() {
         let dominated = points.iter().enumerate().any(|(j, b)| {
             j != i
                 && b.point.metrics.b_eff >= a.point.metrics.b_eff
+                && b.measured_beff >= a.measured_beff
                 && b.sim_cycles <= a.sim_cycles
                 && b.sim_fifo_bits <= a.sim_fifo_bits
                 && (b.point.metrics.b_eff > a.point.metrics.b_eff
+                    || b.measured_beff > a.measured_beff
                     || b.sim_cycles < a.sim_cycles
                     || b.sim_fifo_bits < a.sim_fifo_bits)
         });
@@ -130,6 +150,8 @@ pub fn resource_pareto(points: &[ResourcePoint]) -> Vec<usize> {
 pub struct DseEngine {
     cache: Arc<LayoutCache>,
     threads: usize,
+    timing: BusTiming,
+    resource_capacity: Capacity,
 }
 
 impl Default for DseEngine {
@@ -149,12 +171,37 @@ impl DseEngine {
         DseEngine {
             cache,
             threads: default_threads(),
+            timing: BusTiming::ideal(),
+            resource_capacity: Capacity::Unbounded,
         }
     }
 
     /// Override the worker count (builder-style; clamped to ≥ 1).
     pub fn threads(mut self, n: usize) -> DseEngine {
         self.threads = n.max(1);
+        self
+    }
+
+    /// Install a [`BusTiming`] model for the resource-aware sweeps
+    /// (builder-style). The default [`BusTiming::ideal`] keeps
+    /// `sim_cycles` identical to an untimed run and makes
+    /// `measured_beff` coincide with the idealized `metrics.b_eff`; a
+    /// real model (e.g. [`BusTiming::hbm2`]) charges burst re-arm, row
+    /// activate, and refresh cycles, turning `measured_beff` into an
+    /// independent pareto axis.
+    pub fn timing(mut self, timing: BusTiming) -> DseEngine {
+        self.timing = timing;
+        self
+    }
+
+    /// Install a FIFO [`Capacity`] model for the resource-aware sweeps
+    /// (builder-style; default [`Capacity::Unbounded`]). Bounded
+    /// capacities make stall-prone layouts pay measured-bandwidth costs
+    /// the idealized metrics never see. Capacities must admit every
+    /// same-cycle arrival burst of the swept layouts — an overflowing
+    /// point aborts the sweep with a descriptive panic.
+    pub fn resource_capacity(mut self, capacity: Capacity) -> DseEngine {
+        self.resource_capacity = capacity;
         self
     }
 
@@ -246,9 +293,10 @@ impl DseEngine {
 
     /// Resource-aware evaluation of one spec: layout through the shared
     /// cache, then the HLS cost model *and* a structural co-simulation
-    /// of the read module ([`ReadCosim::run_structural`], unbounded
-    /// FIFOs), so every point carries measured cycles/FIFO storage, not
-    /// just modeled ones.
+    /// of the read module ([`ReadCosim::run_structural`]) under the
+    /// engine's installed [`Capacity`] and [`BusTiming`] models, so
+    /// every point carries measured cycles / FIFO storage / bandwidth,
+    /// not just modeled ones.
     fn evaluate_resource(&self, spec: &PointSpec) -> ResourcePoint {
         let layout = self.cache.layout_for(spec.kind, &spec.problem);
         let point = DesignPoint {
@@ -259,15 +307,29 @@ impl DseEngine {
         };
         let estimate = crate::hls::estimate(&layout, &spec.problem);
         let trace = ReadCosim::new(&layout, &spec.problem)
+            .with_capacity(self.resource_capacity.clone())
+            .with_timing(self.timing.clone())
             .run_structural()
-            .expect("unbounded structural cosim cannot fail on a valid layout");
+            .unwrap_or_else(|e| {
+                panic!(
+                    "resource cosim failed on '{}' (capacity below an arrival burst?): {e:#}",
+                    spec.label
+                )
+            });
         let sim_fifo_bits = trace.fifo_bits(&spec.problem);
+        let measured_beff = trace
+            .profile
+            .as_ref()
+            .map(|pr| pr.measured_beff(spec.problem.total_bits(), spec.problem.m() as u64))
+            .unwrap_or(point.metrics.b_eff);
         ResourcePoint {
             point,
             estimate,
             sim_cycles: trace.total_cycles,
             sim_ii: trace.ii(),
             sim_fifo_bits,
+            sim_stall_cycles: trace.stall_cycles,
+            measured_beff,
         }
     }
 
@@ -275,7 +337,9 @@ impl DseEngine {
     /// layout metrics, the HLS cost model, and cosim-measured latency /
     /// FIFO storage, fanning out over the worker pool through the shared
     /// [`LayoutCache`]. Feed the result to [`resource_pareto`] for the
-    /// bandwidth-vs-latency-vs-BRAM trade-off front.
+    /// bandwidth-vs-latency-vs-BRAM trade-off front — with both the
+    /// idealized and the measured bandwidth axis when a non-ideal
+    /// [`BusTiming`] is installed ([`DseEngine::timing`]).
     pub fn resource_sweep(&self, specs: &[PointSpec]) -> Vec<ResourcePoint> {
         fan_out(specs.len(), self.threads, |i| {
             self.evaluate_resource(&specs[i])
@@ -588,6 +652,7 @@ mod tests {
         for rp in &pts {
             // Unbounded structural runs never stall…
             assert!((rp.sim_ii - 1.0).abs() < 1e-12, "{}", rp.point.label);
+            assert_eq!(rp.sim_stall_cycles, 0, "{}", rp.point.label);
             // …measure exactly the analyzed FIFO storage…
             assert_eq!(
                 rp.sim_fifo_bits, rp.point.metrics.fifo.total_bits,
@@ -597,6 +662,15 @@ mod tests {
             // …and the kernel-observed latency is never shorter than the
             // bus makespan.
             assert!(rp.sim_cycles >= rp.point.metrics.c_max, "{}", rp.point.label);
+            // Under the default ideal timing the measured bandwidth axis
+            // collapses onto the idealized Eq.-1 figure.
+            assert!(
+                (rp.measured_beff - rp.point.metrics.b_eff).abs() < 1e-12,
+                "{}: measured {} vs idealized {}",
+                rp.point.label,
+                rp.measured_beff,
+                rp.point.metrics.b_eff
+            );
         }
         // Iris transfers fewer cycles than naive on every pair.
         for pair in pts.chunks(2) {
@@ -628,14 +702,59 @@ mod tests {
                 }
                 let a = &pts[i];
                 let dominates = b.point.metrics.b_eff >= a.point.metrics.b_eff
+                    && b.measured_beff >= a.measured_beff
                     && b.sim_cycles <= a.sim_cycles
                     && b.sim_fifo_bits <= a.sim_fifo_bits
                     && (b.point.metrics.b_eff > a.point.metrics.b_eff
+                        || b.measured_beff > a.measured_beff
                         || b.sim_cycles < a.sim_cycles
                         || b.sim_fifo_bits < a.sim_fifo_bits);
                 assert!(!dominates, "front point {i} dominated by {j}");
             }
         }
+    }
+
+    #[test]
+    fn measured_beff_axis_reorders_the_precision_sweep() {
+        // Under bounded FIFOs and HBM2-style timing, a layout that wins
+        // the idealized Eq.-1 ranking can lose the measured one: every
+        // stall closes the open burst, so stall-prone (naive) points
+        // repay the burst re-arm over and over. Scan a few capacities
+        // and demand at least one measured-vs-idealized rank flip.
+        let pairs = [(64, 64), (33, 31), (30, 19)];
+        let mut flip = None;
+        for cap in [32u64, 64, 128, 256, 512] {
+            let engine = DseEngine::new()
+                .threads(2)
+                .timing(BusTiming::hbm2())
+                .resource_capacity(Capacity::Fixed(vec![cap, cap]));
+            let pts = engine.precision_resource_sweep(matmul_problem, &pairs);
+            assert_eq!(pts.len(), 6);
+            for rp in &pts {
+                // Timing and stalls only ever cost bandwidth.
+                assert!(
+                    rp.measured_beff <= rp.point.metrics.b_eff + 1e-12,
+                    "{} at cap {cap}",
+                    rp.point.label
+                );
+                assert!(rp.sim_cycles >= rp.point.metrics.c_max, "{}", rp.point.label);
+            }
+            let flipped = (0..pts.len()).any(|i| {
+                (0..pts.len()).any(|j| {
+                    pts[i].point.metrics.b_eff > pts[j].point.metrics.b_eff + 1e-9
+                        && pts[j].measured_beff > pts[i].measured_beff + 1e-9
+                })
+            });
+            if flipped {
+                flip = Some((cap, pts));
+                break;
+            }
+        }
+        let (cap, pts) = flip.expect("no capacity produced a measured-vs-idealized rank flip");
+        // The flip came from real stalls (the naive depths exceed every
+        // scanned capacity), and the 4-axis front accepts the points.
+        assert!(pts.iter().any(|rp| rp.sim_stall_cycles > 0), "cap {cap}");
+        assert!(!resource_pareto(&pts).is_empty(), "cap {cap}");
     }
 
     #[test]

@@ -439,6 +439,7 @@ pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
         "cycle-decoder",
         "cosim-write",
         "cosim-read",
+        "cosim-read-timed",
         "chunked(streamed)",
         "chunked(coalesced-stream)",
         "chunked(compiled)",
@@ -471,6 +472,7 @@ pub fn check_legacy_pair_coverage(s: &FuzzSummary) -> Result<()> {
         "streamed",
         "cycle-decoder",
         "cosim-read",
+        "cosim-read-timed",
         "cosim-write",
         "chunked(streamed)",
         "chunked(coalesced-stream)",

@@ -22,7 +22,7 @@ pub mod differential;
 use crate::baselines;
 use crate::bus::multichannel::MultiChannelExecutor;
 use crate::bus::partition::{partition_opts, PartitionStrategy};
-use crate::cosim::{ReadCosim, WriteCosim};
+use crate::cosim::{BusTiming, ReadCosim, WriteCosim};
 use crate::decode::{decode_bitwise, CoalescedDecode, DecodePlan, DecodeProgram, StreamDecoder};
 use crate::layout::{Layout, LayoutKind};
 use crate::model::Problem;
@@ -739,6 +739,61 @@ impl Engine for CosimRead {
     }
 }
 
+/// Timed read-module co-simulation: the payload path of [`CosimRead`],
+/// but decode runs the read module against a non-ideal
+/// [`BusTiming`] — so every fuzz iteration proves that burst breaks, row
+/// activates, and refreshes *delay* but never corrupt the streams, and
+/// that the stall-cycle conservation invariant (every simulated cycle
+/// attributed to exactly one cause, measured b_eff ≤ idealized b_eff)
+/// holds on arbitrary random problems.
+pub struct CosimReadTimed {
+    pub timing: BusTiming,
+}
+
+impl Engine for CosimReadTimed {
+    fn name(&self) -> String {
+        "cosim-read-timed".into()
+    }
+
+    fn caps(&self) -> EngineCaps {
+        EngineCaps {
+            cosim: true,
+            ..EngineCaps::default()
+        }
+    }
+
+    fn pack(&self, problem: &Problem, layout: &Layout, data: &[ArrayData]) -> Result<BusLines> {
+        Compiled.pack(problem, layout, data)
+    }
+
+    fn decode(
+        &self,
+        problem: &Problem,
+        layout: &Layout,
+        lines: &BusLines,
+    ) -> Result<Vec<ArrayData>> {
+        let ch = single_channel(lines, "cosim-read-timed")?;
+        let trace = ReadCosim::new(layout, problem)
+            .with_timing(self.timing.clone())
+            .run(&ch.to_buffer())?;
+        let profile = trace
+            .profile
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("cosim-read-timed: timed run lost its profile"))?;
+        profile.verify_conservation(trace.total_cycles)?;
+        let m = layout.m as u64;
+        let payload = problem.total_bits();
+        let measured = profile.measured_beff(payload, m);
+        let idealized = payload as f64 / (layout.n_cycles() * m) as f64;
+        if measured > idealized + 1e-12 {
+            bail!(
+                "cosim-read-timed: measured b_eff {measured} exceeds idealized {idealized}"
+            );
+        }
+        Ok(trace.streams)
+    }
+}
+
 /// Adapter that routes an inner engine's transfers through its chunked
 /// surface: `pack` collects the [`Engine::pack_chunks`] tiles back into
 /// [`BusLines`], `decode` re-slices the lines into whole-cycle chunks
@@ -926,6 +981,9 @@ pub fn engines_for(problem: &Problem, kind: LayoutKind) -> Vec<Box<dyn Engine>> 
         Box::new(CycleDecoder),
         Box::new(CosimWrite),
         Box::new(CosimRead),
+        Box::new(CosimReadTimed {
+            timing: BusTiming::hbm2(),
+        }),
         // Chunked-surface adapters: a true streaming pack, a true
         // streaming coalesced pack, and the materializing default
         // fallback (compiled has no native streaming) — so every fuzz
@@ -1009,6 +1067,7 @@ mod tests {
             "cycle-decoder",
             "cosim-write",
             "cosim-read",
+            "cosim-read-timed",
             "chunked(streamed)",
             "chunked(coalesced-stream)",
             "chunked(compiled)",
@@ -1024,7 +1083,7 @@ mod tests {
             let caps = e.caps();
             match e.name().as_str() {
                 "streamed" | "coalesced-stream" | "cycle-decoder" => assert!(caps.streaming),
-                "cosim-read" | "cosim-write" => assert!(caps.cosim),
+                "cosim-read" | "cosim-write" | "cosim-read-timed" => assert!(caps.cosim),
                 n if n.starts_with("chunked(") => assert!(caps.streaming),
                 n if n.starts_with("multichannel") => assert!(caps.channels > 1),
                 _ => assert_eq!(caps, EngineCaps::default()),

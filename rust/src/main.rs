@@ -14,11 +14,18 @@
 //!                        write modules [--algo ...] [--capacity analyzed|unbounded|N]
 //!                        [--seed S] [--trace OUT.json] (per-cycle FIFO occupancy /
 //!                        stall timeline as Chrome trace-event JSON)
+//!   profile FILE.json    cycle-level bandwidth profile under a bus timing model
+//!                        [--algo ...] [--timing hbm2|ideal|custom.json]
+//!                        [--channels K] [--capacity analyzed|unbounded|N]
+//!                        [--trace OUT.json] [--json] (stall-cause breakdown,
+//!                        measured vs idealized b_eff, utilization tracks)
 //!   dfg                  derive Table-5 due dates from the accelerator DFGs
 //!   e2e                  end-to-end pipeline [--workload helmholtz|matmul]
 //!                        [--wa W] [--wb W] [--algo ...] [--no-xla] [--cosim]
-//!                        [--chunk-bytes N] (stream the transfer as whole-cycle
-//!                        tiles of ~N bytes through a bounded-memory session)
+//!                        [--timing hbm2|ideal|custom.json] (timed cosim +
+//!                        measured b_eff) [--chunk-bytes N] (stream the transfer
+//!                        as whole-cycle tiles of ~N bytes through a
+//!                        bounded-memory session)
 //!   serve                threaded server demo [--workers N] [--requests N] [--batch B]
 //!                        [--channels K] [--cosim] [--engine auto|compiled|coalesced]
 //!                        [--stream] (persistent sessions + admission control;
@@ -27,6 +34,8 @@
 //!   stats                serve a demo workload and dump coordinator telemetry
 //!                        [--requests N] [--workers N] [--channels K]
 //!                        [--format prom|json] [--trace OUT.json]
+//!                        [--timing hbm2|ideal|custom.json] (timed capacity
+//!                        accounting + stall-cause counters via cosim)
 //!   perf                 quick hot-path perf summary (see EXPERIMENTS.md §Perf)
 //!
 //! Problem-file positionals also accept the builtin names `paper`,
@@ -67,6 +76,7 @@ fn main() -> Result<()> {
         Some("layout") => cmd_layout(&args),
         Some("codegen") => cmd_codegen(&args),
         Some("cosim") => cmd_cosim(&args),
+        Some("profile") => cmd_profile(&args),
         Some("dfg") => cmd_dfg(),
         Some("e2e") => cmd_e2e(&args),
         Some("serve") => cmd_serve(&args),
@@ -90,14 +100,16 @@ usage: iris <subcommand> [options]
   codegen FILE.json [--host] [--hls] [--write] [--rust] [--algo KIND] [--out DIR]
   cosim FILE.json [--algo KIND] [--capacity analyzed|unbounded|N] [--seed S]
         [--trace OUT.json]
+  profile FILE.json [--algo KIND] [--timing hbm2|ideal|custom.json] [--channels K]
+          [--capacity analyzed|unbounded|N] [--trace OUT.json] [--json]
   e2e [--workload helmholtz|matmul] [--wa W --wb W] [--algo KIND] [--no-xla] [--cosim]
-      [--chunk-bytes N]
+      [--timing hbm2|ideal|custom.json] [--chunk-bytes N]
   serve [--workers N] [--requests N] [--batch B] [--channels K] [--cosim]
         [--engine auto|compiled|coalesced]
         [--stream [--clients N] [--tile-cycles T]]
   dse [--lo W] [--hi W]
   stats [--requests N] [--workers N] [--channels K] [--format prom|json]
-        [--trace OUT.json]
+        [--trace OUT.json] [--timing hbm2|ideal|custom.json]
   channels [FILE.json] [--max-k K]   multi-channel partition sweep (all strategies)
 
 FILE.json also accepts builtin problems: paper | helmholtz | matmul
@@ -364,6 +376,50 @@ fn cmd_cosim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `iris profile`: run the timed read co-simulator over a problem's
+/// layout (per channel when `--channels K > 1`) and report where every
+/// bus cycle went — the measured-bandwidth companion to `iris cosim`'s
+/// bit-exactness check.
+fn cmd_profile(args: &Args) -> Result<()> {
+    use iris::cosim::{BusTiming, Capacity};
+    let problem = load_problem_arg(args)?;
+    let kind = parse_kind(args.opt_str("algo", "iris"))?;
+    let timing = BusTiming::from_arg(args.opt_str("timing", "hbm2"))?;
+    let k = (args.opt_u64("channels", 1)? as usize).max(1);
+    let capacity = match args.opt_str("capacity", "analyzed") {
+        "analyzed" => Capacity::Analyzed,
+        "unbounded" => Capacity::Unbounded,
+        n => {
+            let d: u64 = n
+                .parse()
+                .map_err(|_| anyhow!("--capacity takes analyzed|unbounded|N, got '{n}'"))?;
+            Capacity::Fixed(vec![d; problem.arrays.len()])
+        }
+    };
+    let report = iris::obs::profile_problem(&problem, kind, k, &timing, &capacity)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!(
+            "profiling '{}' layout under {} timing ({} channel(s), m={})",
+            kind.name(),
+            if timing.is_ideal() { "ideal" } else { "timed" },
+            report.channels.len(),
+            problem.m()
+        );
+        print!("{}", report.render());
+    }
+    if let Some(path) = args.opt("trace") {
+        let mut ct = iris::obs::ChromeTrace::new();
+        for ch in &report.channels {
+            ct.add_profile(&ch.name, &ch.profile, 64);
+        }
+        std::fs::write(path, ct.to_string_compact())?;
+        println!("bus trace ({} events) written to {path} — open in Perfetto/chrome://tracing", ct.len());
+    }
+    Ok(())
+}
+
 fn cmd_dfg() -> Result<()> {
     println!("Inverse Helmholtz DFG → due dates (Table 5):");
     let p = dfg::helmholtz_dfg().derive_problem(BusConfig::alveo_u280())?;
@@ -383,6 +439,10 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     let kind = parse_kind(args.opt_str("algo", "iris"))?;
     let mut cfg = PipelineConfig::new(workload, kind);
     cfg.cosim = args.flag("cosim");
+    if let Some(t) = args.opt("timing") {
+        cfg.cosim = true;
+        cfg.timing = Some(iris::cosim::BusTiming::from_arg(t)?);
+    }
     if let Some(s) = args.opt("chunk-bytes") {
         let bytes: u64 = s
             .parse()
@@ -542,20 +602,33 @@ fn cmd_dse(args: &Args) -> Result<()> {
 }
 
 fn cmd_stats(args: &Args) -> Result<()> {
+    use iris::coordinator::server::ServerConfig;
     let requests = args.opt_u64("requests", 16)?;
     let workers = args.opt_u64("workers", 2)? as usize;
     let channels = args.opt_u64("channels", 1)? as usize;
+    let timing = match args.opt("timing") {
+        Some(t) => Some(iris::cosim::BusTiming::from_arg(t)?),
+        None => None,
+    };
+    // A timing model only feeds the stall-cause counters through the
+    // cosim validation pass, so --timing implies per-request cosim.
+    let cosim = timing.is_some();
     let trace_path = args.opt("trace");
     let tracer = iris::obs::global();
     if trace_path.is_some() {
         tracer.set_enabled(true);
     }
-    let server = LayoutServer::start(workers, 8);
+    let server = LayoutServer::with_config(ServerConfig {
+        workers,
+        max_batch: 8,
+        timing,
+        ..ServerConfig::default()
+    });
     let rxs: Vec<_> = (0..requests)
         .map(|seed| {
             let p = pipeline::synthetic_problem(8, seed);
             let data = pipeline::synthetic_data(&p, seed);
-            let mut b = TransferRequest::builder(p, data);
+            let mut b = TransferRequest::builder(p, data).cosim(cosim);
             if channels > 1 {
                 b = b.channels(channels.min(8));
             }

@@ -68,8 +68,25 @@ impl Engine for InstrumentedEngine {
         let busy_ns = t0.elapsed().as_nanos() as u64;
         let bytes = lines_bytes(&lines);
         let payload_bits = problem.total_bits();
-        let capacity_bits: u64 = lines.channels.iter().map(|c| c.bits).sum();
-        obs::global_telemetry().record_engine(
+        let telemetry = obs::global_telemetry();
+        // Capacity under the installed timing model: a channel carrying
+        // `bits` occupies `bits / m` line slots, and `capacity_bits`
+        // charges the timed cycles those slots really cost. Channels
+        // whose bit count is not line-aligned (foreign word sizes) fall
+        // back to the idealized raw count.
+        let m = layout.m as u64;
+        let capacity_bits: u64 = lines
+            .channels
+            .iter()
+            .map(|c| {
+                if m > 0 && c.bits % m == 0 {
+                    telemetry.capacity_bits(c.bits / m, m)
+                } else {
+                    c.bits
+                }
+            })
+            .sum();
+        telemetry.record_engine(
             &self.inner.name(),
             bytes,
             busy_ns.max(1),

@@ -16,7 +16,7 @@
 //! fields); this module provides the line-format helpers it shares with
 //! tests.
 
-use crate::cosim::CycleTimeline;
+use crate::cosim::{ChannelProfile, CycleCause, CycleTimeline};
 use crate::obs::span::{SpanKind, SpanRecord};
 use crate::util::json::Json;
 use std::fmt::Write as _;
@@ -108,6 +108,32 @@ impl ChromeTrace {
                 e.set("s", Json::Str("g".to_string()));
                 self.events.push(e);
             }
+        }
+    }
+
+    /// Export a timed run's [`ChannelProfile`]: a `"<prefix> util"`
+    /// counter track (data-beat fraction per `window`-cycle chunk) and a
+    /// `"<prefix> bus"` counter track with one series per
+    /// [`CycleCause`] (cycles of that cause in the chunk — the stall
+    /// lanes). Time axis: 1 µs = 1 bus cycle, matching
+    /// [`ChromeTrace::add_cosim_timeline`].
+    pub fn add_profile(&mut self, prefix: &str, profile: &ChannelProfile, window: usize) {
+        let w = window.max(1);
+        let util_track = format!("{prefix} util");
+        let bus_track = format!("{prefix} bus");
+        for (i, chunk) in profile.causes.chunks(w).enumerate() {
+            let ts = (i * w) as f64;
+            let beats = chunk.iter().filter(|c| **c == CycleCause::DataBeat).count();
+            let util = beats as f64 / chunk.len() as f64;
+            self.counter(&util_track, ts, &[("utilization".to_string(), util)]);
+            let series: Vec<(String, f64)> = CycleCause::ALL
+                .iter()
+                .map(|&cause| {
+                    let n = chunk.iter().filter(|&&c| c == cause).count();
+                    (cause.label().to_string(), n as f64)
+                })
+                .collect();
+            self.counter(&bus_track, ts, &series);
         }
     }
 
@@ -212,6 +238,41 @@ mod tests {
             .collect();
         assert_eq!(stalls.len(), 1);
         assert_eq!(stalls[0].get("ts").and_then(|t| t.as_f64()), Some(1.0));
+    }
+
+    #[test]
+    fn profile_exports_util_and_stall_lane_counters() {
+        let mut pr = ChannelProfile::default();
+        for _ in 0..3 {
+            pr.record(CycleCause::DataBeat);
+        }
+        pr.record(CycleCause::BurstBreak);
+        pr.record(CycleCause::FifoStall);
+        pr.record(CycleCause::Idle);
+        let mut ct = ChromeTrace::new();
+        ct.add_profile("read", &pr, 3);
+        // 6 cycles in windows of 3 → 2 util counters + 2 bus counters.
+        assert_eq!(ct.len(), 4);
+        let j = ct.to_json();
+        let evs = match j.get("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            _ => panic!("traceEvents missing"),
+        };
+        let utils: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("read util"))
+            .collect();
+        assert_eq!(utils.len(), 2);
+        let first = utils[0].get("args").unwrap();
+        assert_eq!(first.get("utilization").and_then(|v| v.as_f64()), Some(1.0));
+        let lanes: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("read bus"))
+            .collect();
+        let second = lanes[1].get("args").unwrap();
+        assert_eq!(second.get("burst_break").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(second.get("fifo_stall").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(second.get("data_beat").and_then(|v| v.as_f64()), Some(0.0));
     }
 
     #[test]

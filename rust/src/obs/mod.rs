@@ -31,16 +31,24 @@
 //! with spans plus byte-accurate telemetry; `engine::engines_for` wraps
 //! every registered engine, so the differential harness doubles as proof
 //! that spans balance and counters reconcile with bytes actually moved.
+//!
+//! [`profile`] sits on top of the timed co-simulators
+//! (`cosim::BusTiming`): per-channel stall-cause breakdowns with a hard
+//! cycle-conservation invariant, utilization timelines, and measured
+//! bandwidth efficiency — the `iris profile` CLI and the DSE
+//! measured-b_eff objective both build on [`profile::profile_problem`].
 
 pub mod engine_wrap;
 pub mod export;
 pub mod hist;
+pub mod profile;
 pub mod span;
 pub mod telemetry;
 
 pub use engine_wrap::InstrumentedEngine;
 pub use export::ChromeTrace;
 pub use hist::{Histogram, HistogramSnapshot};
+pub use profile::{profile_problem, ChannelBreakdown, StallBreakdown};
 pub use span::{SpanKind, SpanRecord, Tracer};
 pub use telemetry::{FlowSnapshot, Telemetry};
 

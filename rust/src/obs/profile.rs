@@ -1,0 +1,385 @@
+//! Bandwidth profiling: stall-cause breakdowns and utilization
+//! timelines on top of the timed co-simulators.
+//!
+//! The static `b_eff` metric (paper Table 6/7) charges a layout for the
+//! padding it carries but assumes the bus moves one line every cycle.
+//! [`crate::cosim::BusTiming`] drops that assumption; this module turns
+//! the resulting per-cycle [`ChannelProfile`]s into the reports the rest
+//! of the stack consumes:
+//!
+//! - [`StallBreakdown`] — per-channel and aggregate cycle counts by
+//!   [`CycleCause`], with *measured* bandwidth efficiency
+//!   (payload over what the held bus could have moved) next to the
+//!   idealized figure, a conservation check (`Σ causes = Σ cycles`,
+//!   zero unattributed), a rendered table, and a JSON form.
+//! - [`profile_problem`] — the one-call driver: lay a problem out
+//!   (partitioned over `k` channels when `k > 1`), run the timed read
+//!   co-simulator per channel, and collect the breakdown. This backs the
+//!   `iris profile` CLI, the coordinator's profile report, and the DSE
+//!   measured-bandwidth objective.
+//!
+//! Chrome-trace export of the same data (windowed utilization and
+//! stall-cause counter tracks) lives in
+//! [`ChromeTrace::add_profile`](crate::obs::ChromeTrace::add_profile).
+
+use crate::bus::partition::{partition_opts, PartitionStrategy};
+use crate::cosim::{BusTiming, Capacity, ChannelProfile, CycleCause, ReadCosim};
+use crate::layout::{Layout, LayoutKind};
+use crate::model::Problem;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// One channel's share of a profiled run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelBreakdown {
+    /// `ch<i>`, matching the telemetry channel naming.
+    pub name: String,
+    /// Payload bits this channel carries.
+    pub payload_bits: u64,
+    /// Bus lines of the channel's layout (= idealized cycles).
+    pub bus_cycles: u64,
+    /// Total simulated cycles (lines + stalls + timing penalties +
+    /// drain-tail idle).
+    pub total_cycles: u64,
+    /// Per-cycle cause classification.
+    pub profile: ChannelProfile,
+}
+
+impl ChannelBreakdown {
+    /// Measured bandwidth efficiency of this channel.
+    pub fn measured_beff(&self, m: u64) -> f64 {
+        self.profile.measured_beff(self.payload_bits, m)
+    }
+
+    /// Idealized bandwidth efficiency: payload over the 1-line/cycle
+    /// window (`payload / (lines · m)`).
+    pub fn idealized_beff(&self, m: u64) -> f64 {
+        let cap = self.bus_cycles * m;
+        if cap == 0 {
+            0.0
+        } else {
+            self.payload_bits as f64 / cap as f64
+        }
+    }
+}
+
+/// Aggregate stall-cause report of one profiled run: every simulated
+/// channel-cycle attributed to exactly one [`CycleCause`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StallBreakdown {
+    /// Bus width in bits (shared by all channels).
+    pub m: u64,
+    /// Layout kind that was profiled.
+    pub kind: LayoutKind,
+    /// Timing model the run was measured under.
+    pub timing: BusTiming,
+    /// Per-channel breakdowns, in channel order.
+    pub channels: Vec<ChannelBreakdown>,
+}
+
+impl StallBreakdown {
+    /// Aggregate cycle counts indexed by [`CycleCause::index`].
+    pub fn counts(&self) -> [u64; 6] {
+        let mut acc = [0u64; 6];
+        for ch in &self.channels {
+            for (a, c) in acc.iter_mut().zip(ch.profile.counts.iter()) {
+                *a += c;
+            }
+        }
+        acc
+    }
+
+    /// Aggregate count for one cause.
+    pub fn count(&self, cause: CycleCause) -> u64 {
+        self.counts()[cause.index()]
+    }
+
+    /// Total simulated channel-cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.channels.iter().map(|c| c.total_cycles).sum()
+    }
+
+    /// Total payload bits across channels.
+    pub fn payload_bits(&self) -> u64 {
+        self.channels.iter().map(|c| c.payload_bits).sum()
+    }
+
+    /// Channel-cycles the bus was held (non-idle) across channels.
+    pub fn bus_held_cycles(&self) -> u64 {
+        self.channels.iter().map(|c| c.profile.bus_held_cycles()).sum()
+    }
+
+    /// Aggregate measured bandwidth efficiency:
+    /// `Σ payload / (Σ held-cycles · m)`.
+    pub fn measured_beff(&self) -> f64 {
+        let cap = self.bus_held_cycles() * self.m;
+        if cap == 0 {
+            0.0
+        } else {
+            self.payload_bits() as f64 / cap as f64
+        }
+    }
+
+    /// Aggregate idealized bandwidth efficiency:
+    /// `Σ payload / (Σ lines · m)` — the 1-line/cycle ceiling the
+    /// measured figure is compared against. Measured never exceeds it
+    /// (held cycles ⊇ line cycles).
+    pub fn idealized_beff(&self) -> f64 {
+        let lines: u64 = self.channels.iter().map(|c| c.bus_cycles).sum();
+        let cap = lines * self.m;
+        if cap == 0 {
+            0.0
+        } else {
+            self.payload_bits() as f64 / cap as f64
+        }
+    }
+
+    /// The conservation invariant over every channel: per-channel cause
+    /// counts and per-cycle records both sum to that channel's simulated
+    /// cycles — zero unattributed cycles anywhere in the report.
+    pub fn verify_conservation(&self) -> Result<()> {
+        for ch in &self.channels {
+            ch.profile
+                .verify_conservation(ch.total_cycles)
+                .map_err(|e| anyhow::anyhow!("{}: {e}", ch.name))?;
+        }
+        Ok(())
+    }
+
+    /// Per-channel utilization timelines: `(name, data-beat fraction
+    /// per window-cycle chunk)`.
+    pub fn utilization(&self, window: usize) -> Vec<(String, Vec<f64>)> {
+        self.channels
+            .iter()
+            .map(|c| (c.name.clone(), c.profile.utilization(window)))
+            .collect()
+    }
+
+    /// Human-readable table: one row per channel plus a total row, one
+    /// column per [`CycleCause`], then measured vs idealized b_eff.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<8} {:>8} {:>8} {:>9} {:>11} {:>12} {:>8} {:>10} {:>8} {:>9} {:>9}",
+            "channel",
+            "lines",
+            "cycles",
+            "data_beat",
+            "burst_break",
+            "row_activate",
+            "refresh",
+            "fifo_stall",
+            "idle",
+            "b_meas",
+            "b_ideal"
+        );
+        for ch in &self.channels {
+            let c = &ch.profile.counts;
+            let _ = writeln!(
+                out,
+                "{:<8} {:>8} {:>8} {:>9} {:>11} {:>12} {:>8} {:>10} {:>8} {:>9.4} {:>9.4}",
+                ch.name,
+                ch.bus_cycles,
+                ch.total_cycles,
+                c[0],
+                c[1],
+                c[2],
+                c[3],
+                c[4],
+                c[5],
+                ch.measured_beff(self.m),
+                ch.idealized_beff(self.m)
+            );
+        }
+        let t = self.counts();
+        let lines: u64 = self.channels.iter().map(|c| c.bus_cycles).sum();
+        let _ = writeln!(
+            out,
+            "{:<8} {:>8} {:>8} {:>9} {:>11} {:>12} {:>8} {:>10} {:>8} {:>9.4} {:>9.4}",
+            "total",
+            lines,
+            self.total_cycles(),
+            t[0],
+            t[1],
+            t[2],
+            t[3],
+            t[4],
+            t[5],
+            self.measured_beff(),
+            self.idealized_beff()
+        );
+        out
+    }
+
+    /// JSON form (the `iris profile` output document).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("m", Json::Num(self.m as f64));
+        o.set("kind", Json::Str(self.kind.name().to_string()));
+        o.set("timing", self.timing.to_json());
+        let mut chans = Vec::with_capacity(self.channels.len());
+        for ch in &self.channels {
+            let mut c = Json::obj();
+            c.set("name", Json::Str(ch.name.clone()));
+            c.set("payload_bits", Json::Num(ch.payload_bits as f64));
+            c.set("bus_cycles", Json::Num(ch.bus_cycles as f64));
+            c.set("total_cycles", Json::Num(ch.total_cycles as f64));
+            let mut counts = Json::obj();
+            for cause in CycleCause::ALL {
+                counts.set(cause.label(), Json::Num(ch.profile.count(cause) as f64));
+            }
+            c.set("cycles_by_cause", counts);
+            c.set("measured_beff", Json::Num(ch.measured_beff(self.m)));
+            c.set("idealized_beff", Json::Num(ch.idealized_beff(self.m)));
+            chans.push(c);
+        }
+        o.set("channels", Json::Arr(chans));
+        let mut totals = Json::obj();
+        let t = self.counts();
+        for cause in CycleCause::ALL {
+            totals.set(cause.label(), Json::Num(t[cause.index()] as f64));
+        }
+        o.set("cycles_by_cause", totals);
+        o.set("total_cycles", Json::Num(self.total_cycles() as f64));
+        o.set("measured_beff", Json::Num(self.measured_beff()));
+        o.set("idealized_beff", Json::Num(self.idealized_beff()));
+        o
+    }
+}
+
+/// Lay `problem` out as `kind` (partitioned over `k` channels when
+/// `k > 1`), run the timed read co-simulator per channel, and collect
+/// the [`StallBreakdown`]. Conservation is verified before the report
+/// is returned. `capacity` bounds the per-array FIFOs; a
+/// [`Capacity::Fixed`] vector is indexed by the *original* array order
+/// and split per channel alongside the arrays.
+pub fn profile_problem(
+    problem: &Problem,
+    kind: LayoutKind,
+    k: usize,
+    timing: &BusTiming,
+    capacity: &Capacity,
+) -> Result<StallBreakdown> {
+    timing.validate()?;
+    let m = problem.m() as u64;
+    let (problems, layouts, members) = if k <= 1 {
+        let l = crate::baselines::generate(kind, problem);
+        let all: Vec<usize> = (0..problem.arrays.len()).collect();
+        (vec![problem.clone()], vec![Arc::new(l)], vec![all])
+    } else {
+        let pl = partition_opts(problem, k, PartitionStrategy::Lpt, |p| {
+            Arc::new(crate::baselines::generate(kind, p))
+        })?;
+        (pl.problems, pl.layouts, pl.members)
+    };
+    let mut channels = Vec::with_capacity(problems.len());
+    for (c, ((p, l), ms)) in problems.iter().zip(&layouts).zip(&members).enumerate() {
+        let cap = match capacity {
+            Capacity::Fixed(caps) => Capacity::Fixed(ms.iter().map(|&j| caps[j]).collect()),
+            other => other.clone(),
+        };
+        let trace = run_channel(l, p, cap, timing)?;
+        let profile = trace
+            .profile
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("ch{c}: timed run lost its profile"))?;
+        channels.push(ChannelBreakdown {
+            name: format!("ch{c}"),
+            payload_bits: p.total_bits(),
+            bus_cycles: trace.bus_cycles,
+            total_cycles: trace.total_cycles,
+            profile,
+        });
+    }
+    let report = StallBreakdown {
+        m,
+        kind,
+        timing: timing.clone(),
+        channels,
+    };
+    report.verify_conservation()?;
+    Ok(report)
+}
+
+fn run_channel(
+    layout: &Arc<Layout>,
+    problem: &Problem,
+    capacity: Capacity,
+    timing: &BusTiming,
+) -> Result<crate::cosim::ReadTrace> {
+    ReadCosim::new(layout, problem)
+        .with_capacity(capacity)
+        .with_timing(timing.clone())
+        .run_structural()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{helmholtz_problem, paper_example};
+
+    #[test]
+    fn ideal_profile_matches_the_idealized_figure() {
+        let p = paper_example();
+        let t = BusTiming::ideal();
+        let r = profile_problem(&p, LayoutKind::Iris, 1, &t, &Capacity::Unbounded).unwrap();
+        r.verify_conservation().unwrap();
+        assert_eq!(r.channels.len(), 1);
+        assert_eq!(r.count(CycleCause::FifoStall), 0);
+        assert_eq!(r.count(CycleCause::BurstBreak), 0);
+        assert!((r.measured_beff() - r.idealized_beff()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hbm2_profile_loses_cycles_and_renders() {
+        let p = paper_example();
+        let t = BusTiming::hbm2();
+        let r = profile_problem(&p, LayoutKind::Iris, 1, &t, &Capacity::Analyzed).unwrap();
+        assert!(r.count(CycleCause::BurstBreak) > 0);
+        assert!(r.measured_beff() < r.idealized_beff());
+        let table = r.render();
+        assert!(table.contains("burst_break"), "{table}");
+        assert!(table.contains("total"), "{table}");
+        let text = r.to_json().to_string_compact();
+        let back = crate::util::json::parse(&text).unwrap();
+        let meas = back.get("measured_beff").and_then(|v| v.as_f64()).unwrap();
+        assert!((meas - r.measured_beff()).abs() < 1e-9);
+        let chans = back.get("channels").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(chans.len(), 1);
+    }
+
+    #[test]
+    fn partitioned_profile_covers_every_channel_and_conserves() {
+        let p = helmholtz_problem();
+        let t = BusTiming::hbm2();
+        let r = profile_problem(&p, LayoutKind::Iris, 3, &t, &Capacity::Unbounded).unwrap();
+        assert_eq!(r.channels.len(), 3);
+        r.verify_conservation().unwrap();
+        // Payload is conserved across the partition.
+        assert_eq!(r.payload_bits(), p.total_bits());
+        assert!(r.measured_beff() <= r.idealized_beff() + 1e-12);
+        let util = r.utilization(64);
+        assert_eq!(util.len(), 3);
+        assert!(util.iter().all(|(_, u)| !u.is_empty()));
+    }
+
+    #[test]
+    fn fixed_caps_split_per_channel_and_stall_cycles_appear() {
+        // Starve one array's FIFO: the profile must attribute FIFO-stall
+        // cycles (and conservation must still hold).
+        let p = helmholtz_problem();
+        let kind = LayoutKind::DueAlignedNaive;
+        let l = crate::baselines::generate(kind, &p);
+        let fa = crate::layout::fifo::FifoAnalysis::compute(&l, &p);
+        let mut caps = fa.depth.clone();
+        let iu = p.array_index("u").unwrap();
+        caps[iu] = caps[iu].saturating_sub(1);
+        let t = BusTiming::hbm2();
+        let r = profile_problem(&p, kind, 1, &t, &Capacity::Fixed(caps)).unwrap();
+        assert!(r.count(CycleCause::FifoStall) > 0);
+        r.verify_conservation().unwrap();
+    }
+}

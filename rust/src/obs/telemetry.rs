@@ -12,6 +12,7 @@
 //! Flows are keyed by engine name ("compiled", "coalesced",
 //! "multichannel", …) or by channel index for multi-channel transfers.
 
+use crate::cosim::BusTiming;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -97,6 +98,9 @@ impl FlowSnapshot {
 pub struct Telemetry {
     engines: Mutex<BTreeMap<String, Counter>>,
     channels: Mutex<Vec<Counter>>,
+    /// Active bus timing model for capacity accounting. `None` (the
+    /// default) keeps the idealized `cycles × m` denominator.
+    timing: Mutex<Option<BusTiming>>,
 }
 
 impl std::fmt::Debug for Telemetry {
@@ -104,11 +108,37 @@ impl std::fmt::Debug for Telemetry {
         f.debug_struct("Telemetry")
             .field("engines", &self.engines.lock().unwrap().len())
             .field("channels", &self.channels.lock().unwrap().len())
+            .field("timing", &*self.timing.lock().unwrap())
             .finish()
     }
 }
 
 impl Telemetry {
+    /// Install (or clear) the bus timing model capacity accounting
+    /// assumes. With a non-ideal model installed,
+    /// [`Telemetry::capacity_bits`] charges the *timed* cycles a real
+    /// channel needs for the window, so achieved b_eff is measured
+    /// against the bandwidth the bus can actually deliver rather than
+    /// the idealized 1-line/cycle ceiling.
+    pub fn set_timing(&self, timing: Option<BusTiming>) {
+        *self.timing.lock().unwrap() = timing;
+    }
+
+    /// The installed timing model, if any.
+    pub fn timing(&self) -> Option<BusTiming> {
+        self.timing.lock().unwrap().clone()
+    }
+
+    /// Capacity bits offered by a `cycles`-line window of an `m`-bit
+    /// channel under the installed timing model: `cycles × m` by default
+    /// (or under [`BusTiming::ideal`]), timed cycles × `m` otherwise.
+    pub fn capacity_bits(&self, cycles: u64, m: u64) -> u64 {
+        match &*self.timing.lock().unwrap() {
+            Some(t) if !t.is_ideal() => t.timed_cycles(cycles, m) * m,
+            _ => cycles * m,
+        }
+    }
+
     /// Credit one transfer to `engine`.
     pub fn record_engine(
         &self,
@@ -187,6 +217,7 @@ impl Telemetry {
     pub fn reset(&self) {
         self.engines.lock().unwrap().clear();
         self.channels.lock().unwrap().clear();
+        *self.timing.lock().unwrap() = None;
     }
 }
 
@@ -235,6 +266,28 @@ mod tests {
         let parsed = crate::util::json::parse(&j.to_string_compact()).unwrap();
         let back = FlowSnapshot::from_json(&parsed).unwrap();
         assert_eq!(&back, snap);
+    }
+
+    #[test]
+    fn capacity_accounting_follows_the_installed_timing_model() {
+        let t = Telemetry::default();
+        // Default and explicit-ideal models keep the idealized window.
+        assert_eq!(t.capacity_bits(100, 512), 100 * 512);
+        t.set_timing(Some(BusTiming::ideal()));
+        assert_eq!(t.capacity_bits(100, 512), 100 * 512);
+        // A real model inflates the denominator: 100 lines at burst 64
+        // with a 4-cycle re-arm cost two bursts = 100 + 2 × 4 cycles.
+        let timing = BusTiming {
+            burst_beats: 64,
+            burst_break_cycles: 4,
+            ..BusTiming::ideal()
+        };
+        t.set_timing(Some(timing.clone()));
+        assert_eq!(t.capacity_bits(100, 512), 108 * 512);
+        assert_eq!(t.timing(), Some(timing));
+        t.reset();
+        assert_eq!(t.timing(), None);
+        assert_eq!(t.capacity_bits(100, 512), 100 * 512);
     }
 
     #[test]

@@ -62,7 +62,15 @@ fn surface() -> String {
 fn obs_surface() -> String {
     surface_of(
         "rust/src/obs",
-        &["mod.rs", "span.rs", "hist.rs", "telemetry.rs", "export.rs", "engine_wrap.rs"],
+        &[
+            "mod.rs",
+            "span.rs",
+            "hist.rs",
+            "telemetry.rs",
+            "export.rs",
+            "engine_wrap.rs",
+            "profile.rs",
+        ],
     )
 }
 
@@ -124,7 +132,15 @@ fn obs_api_surface_has_the_load_bearing_items() {
         "telemetry.rs: pub fn b_eff(",
         "export.rs: pub struct ChromeTrace {",
         "export.rs: pub fn add_cosim_timeline(",
+        "export.rs: pub fn add_profile(",
         "engine_wrap.rs: pub struct InstrumentedEngine {",
+        "telemetry.rs: pub fn set_timing(",
+        "telemetry.rs: pub fn capacity_bits(",
+        "profile.rs: pub struct StallBreakdown {",
+        "profile.rs: pub struct ChannelBreakdown {",
+        "profile.rs: pub fn profile_problem(",
+        "profile.rs: pub fn verify_conservation(",
+        "profile.rs: pub fn utilization(",
     ] {
         assert!(s.contains(needle), "missing from obs surface: {needle}\n{s}");
     }
@@ -159,7 +175,10 @@ fn coordinator_api_surface_has_the_load_bearing_items() {
         "mod.rs: pub fn snapshot(",
         "pipeline.rs: pub fn parse(",
         "pipeline.rs: pub fn with_chunking(",
+        "pipeline.rs: pub fn with_timing(",
         "pipeline.rs: pub struct StreamStats {",
+        "mod.rs: pub fn record_bus_profile(",
+        "mod.rs: pub fn bus_measured_beff(",
     ] {
         assert!(s.contains(needle), "missing from coordinator surface: {needle}\n{s}");
     }

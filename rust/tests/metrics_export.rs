@@ -49,6 +49,17 @@ fn seeded_metrics() -> Metrics {
     m.in_flight_add(4096);
     m.in_flight_add(4096);
     m.in_flight_sub(4096);
+    // One timed-cosim profile: 8 data beats, 1 burst break, 1 FIFO
+    // stall, 1 idle → 10 held cycles of an m=64 bus carrying 512
+    // payload bits, so measured b_eff lands on exactly 0.8.
+    let mut profile = iris::cosim::ChannelProfile::default();
+    for _ in 0..8 {
+        profile.record(iris::cosim::CycleCause::DataBeat);
+    }
+    profile.record(iris::cosim::CycleCause::BurstBreak);
+    profile.record(iris::cosim::CycleCause::FifoStall);
+    profile.record(iris::cosim::CycleCause::Idle);
+    m.record_bus_profile(&profile, 512, 64);
     m
 }
 
@@ -113,11 +124,28 @@ fn prometheus_exposition_is_structurally_complete() {
         "iris_active_sessions 1",
         "iris_sessions_total 2",
         "iris_sessions_rejected_total 1",
+        "# TYPE iris_stall_cycles_total counter",
+        "iris_stall_cycles_total{cause=\"data_beat\"} 8",
+        "iris_stall_cycles_total{cause=\"burst_break\"} 1",
+        "iris_stall_cycles_total{cause=\"row_activate\"} 0",
+        "iris_stall_cycles_total{cause=\"refresh\"} 0",
+        "iris_stall_cycles_total{cause=\"fifo_stall\"} 1",
+        "iris_stall_cycles_total{cause=\"idle\"} 1",
+        "# TYPE iris_bus_measured_beff gauge",
+        "iris_bus_measured_beff 0.8\n",
+        "# TYPE iris_tracer_spans_started_total counter",
+        "iris_tracer_spans_started_total",
+        "iris_tracer_spans_finished_total",
+        "# TYPE iris_tracer_dropped_total counter",
+        "iris_tracer_dropped_total",
     ] {
         assert!(text.contains(needle), "missing '{needle}' in:\n{text}");
     }
     // Every kind label is present, zero or not (stable dashboard shape).
     assert_eq!(text.matches("iris_errors_total{kind=").count(), 8);
+    // Every cause label is present, zero or not — a dashboard can rely
+    // on the full stall-attribution shape before the first timed run.
+    assert_eq!(text.matches("iris_stall_cycles_total{cause=").count(), 6);
 }
 
 #[test]

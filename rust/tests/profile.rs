@@ -1,0 +1,168 @@
+//! Property suite for the cycle-level bandwidth profiler (the timed
+//! cosim + stall-attribution tentpole), covering its acceptance
+//! criteria on randomized problems:
+//!
+//! * conservation — every simulated channel-cycle of a timed run is
+//!   attributed to exactly one [`CycleCause`], so the per-cause counts
+//!   sum to the total timed cycles on every problem, including bus
+//!   widths not divisible by 64 and multi-channel (`k > 1`) partitions;
+//! * measured ≤ idealized — the measured bandwidth efficiency under any
+//!   timing model never exceeds the idealized one-line-per-cycle figure
+//!   the paper's `b_eff` metric reports;
+//! * ideal degenerates exactly — with [`BusTiming::ideal`] the timed
+//!   read co-simulator is cycle- and bit-identical to the untimed one,
+//!   and its measured b_eff equals the layout's static `b_eff`.
+
+use iris::baselines;
+use iris::cosim::{BusTiming, Capacity, CycleCause, ReadCosim};
+use iris::engine::differential::seeded_data;
+use iris::layout::metrics::LayoutMetrics;
+use iris::layout::LayoutKind;
+use iris::obs::profile_problem;
+use iris::pack::PackPlan;
+use iris::testing::gen::{GenStats, ProblemGen};
+use iris::util::rng::Rng;
+
+/// Random problems biased toward awkward bus geometry: widths that are
+/// not multiples of 64 next to the aligned ones, and at least two
+/// arrays so multi-channel partitions are always feasible.
+fn awkward_gen() -> ProblemGen {
+    ProblemGen {
+        bus_widths: vec![24, 40, 64, 72, 100, 200, 256],
+        min_arrays: 2,
+        max_arrays: 6,
+        max_width: 40,
+        max_depth: 96,
+        max_due: 120,
+        cap_prob: 0.2,
+        ..ProblemGen::default()
+    }
+}
+
+fn kind_for(case: u64) -> LayoutKind {
+    match case % 4 {
+        0 => LayoutKind::Iris,
+        1 => LayoutKind::PackedNaive,
+        2 => LayoutKind::ElementNaive,
+        _ => LayoutKind::DueAlignedNaive,
+    }
+}
+
+#[test]
+fn timed_profiles_conserve_cycles_and_never_beat_the_ideal() {
+    let g = awkward_gen();
+    let mut rng = Rng::new(0x0C51_000A);
+    let mut stats = GenStats::default();
+    let timing = BusTiming::hbm2();
+    for case in 0..24u64 {
+        let p = g.generate_counted(&mut rng, &mut stats);
+        let kind = kind_for(case);
+        let k = 1 + (case as usize % 3).min(p.arrays.len() - 1);
+        let r = profile_problem(&p, kind, k, &timing, &Capacity::Unbounded)
+            .unwrap_or_else(|e| panic!("case {case} kind {} m={}: {e:#}", kind.name(), p.m()));
+        // The report's own invariant plus the raw per-channel identity:
+        // cause counts sum to the simulated cycles, zero unattributed.
+        r.verify_conservation().unwrap();
+        assert_eq!(r.channels.len(), k, "case {case}");
+        for ch in &r.channels {
+            assert_eq!(ch.profile.total_cycles(), ch.total_cycles, "case {case} {}", ch.name);
+            let by_cause: u64 = CycleCause::ALL.iter().map(|&c| ch.profile.count(c)).sum();
+            assert_eq!(by_cause, ch.total_cycles, "case {case} {}", ch.name);
+            // Per-channel: a held bus can never move more than it held.
+            let m = p.m() as u64;
+            assert!(
+                ch.measured_beff(m) <= ch.idealized_beff(m) + 1e-12,
+                "case {case} {}: measured {} > idealized {}",
+                ch.name,
+                ch.measured_beff(m),
+                ch.idealized_beff(m)
+            );
+        }
+        // Payload is conserved across the partition, and the aggregate
+        // measured figure respects the idealized ceiling too.
+        assert_eq!(r.payload_bits(), p.total_bits(), "case {case}");
+        assert!(r.measured_beff() <= r.idealized_beff() + 1e-12, "case {case}");
+        // Timing penalties are real: any channel whose line stream spans
+        // more than one burst must have paid at least one burst re-arm.
+        for ch in &r.channels {
+            if ch.bus_cycles > timing.burst_beats as u64 {
+                assert!(
+                    ch.profile.count(CycleCause::BurstBreak) > 0,
+                    "case {case} {}: {} lines crossed no burst boundary",
+                    ch.name,
+                    ch.bus_cycles
+                );
+            }
+        }
+    }
+    stats.assert_healthy("profile conservation");
+}
+
+#[test]
+fn ideal_timing_is_bit_and_cycle_identical_to_the_untimed_cosim() {
+    let g = awkward_gen();
+    let mut rng = Rng::new(0x0C51_000B);
+    let mut stats = GenStats::default();
+    for case in 0..16u64 {
+        let p = g.generate_counted(&mut rng, &mut stats);
+        let kind = kind_for(case);
+        let l = baselines::generate(kind, &p);
+        let data = seeded_data(&p, case ^ 0x1D_EA1);
+        let refs: Vec<&[u64]> = data.iter().map(|v| v.as_slice()).collect();
+        let buf = PackPlan::compile(&l, &p).pack(&refs).unwrap();
+        let untimed = ReadCosim::new(&l, &p)
+            .with_capacity(Capacity::Analyzed)
+            .run(&buf)
+            .unwrap();
+        let ideal = ReadCosim::new(&l, &p)
+            .with_capacity(Capacity::Analyzed)
+            .with_timing(BusTiming::ideal())
+            .run(&buf)
+            .unwrap();
+        assert_eq!(ideal.streams, untimed.streams, "case {case}");
+        assert_eq!(ideal.total_cycles, untimed.total_cycles, "case {case}");
+        assert_eq!(ideal.bus_cycles, untimed.bus_cycles, "case {case}");
+        assert_eq!(ideal.stall_cycles, untimed.stall_cycles, "case {case}");
+        assert_eq!(ideal.peak_backlog, untimed.peak_backlog, "case {case}");
+        assert_eq!(ideal.peak_ports, untimed.peak_ports, "case {case}");
+        assert_eq!(ideal.stream_completion, untimed.stream_completion, "case {case}");
+        // The untimed run records no profile; the ideal-timed run does,
+        // and it contains no timing penalties at all.
+        assert!(untimed.profile.is_none(), "case {case}");
+        let pr = ideal.profile.as_ref().expect("timed run records a profile");
+        pr.verify_conservation(ideal.total_cycles).unwrap();
+        for cause in [CycleCause::BurstBreak, CycleCause::RowActivate, CycleCause::Refresh] {
+            assert_eq!(pr.count(cause), 0, "case {case}: ideal bus paid {cause:?}");
+        }
+        // Under ideal timing the measured efficiency IS the paper's
+        // static b_eff: the held window is exactly the line stream.
+        let metrics = LayoutMetrics::compute(&l, &p);
+        let measured = pr.measured_beff(p.total_bits(), p.m() as u64);
+        assert!(
+            (measured - metrics.b_eff).abs() < 1e-12,
+            "case {case}: measured {measured} != static {}",
+            metrics.b_eff
+        );
+    }
+    stats.assert_healthy("profile ideal-degeneracy");
+}
+
+#[test]
+fn starved_fifos_surface_as_attributed_stall_cycles() {
+    // Squeeze one array's FIFO below its analyzed depth: the profile
+    // must attribute the lost cycles to `fifo_stall` (not lump them
+    // into idle or lose them), and conservation must still hold.
+    let p = iris::model::helmholtz_problem();
+    let kind = LayoutKind::DueAlignedNaive;
+    let l = baselines::generate(kind, &p);
+    let fa = iris::layout::fifo::FifoAnalysis::compute(&l, &p);
+    let mut caps = fa.depth.clone();
+    let iu = p.array_index("u").unwrap();
+    caps[iu] = caps[iu].saturating_sub(1);
+    let r = profile_problem(&p, kind, 1, &BusTiming::hbm2(), &Capacity::Fixed(caps)).unwrap();
+    r.verify_conservation().unwrap();
+    assert!(r.count(CycleCause::FifoStall) > 0);
+    // The stalls push measured strictly below idealized (on top of the
+    // burst/row/refresh penalties every hbm2 run pays).
+    assert!(r.measured_beff() < r.idealized_beff());
+}
